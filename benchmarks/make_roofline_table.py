@@ -1,0 +1,68 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from results/dryrun JSONs.
+
+  PYTHONPATH=src python benchmarks/make_roofline_table.py [--mesh 16x16]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def load(results_dir):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b:.0f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--consensus", action="store_true")
+    args = ap.parse_args()
+
+    recs = [
+        r for r in load(args.results)
+        if r["mesh"] == args.mesh and bool(r.get("consensus")) == args.consensus
+    ]
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    recs.sort(key=lambda r: (r["arch"], shapes.index(r["shape"]) if r["shape"] in shapes else 9))
+
+    print("| arch | shape | policy | compute s | memory s | collective s | dominant "
+          "| MODEL/HLO flops | bytes/dev | coll bytes/dev | temp GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | SKIP: {r.get('reason','')[:40]} | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | ERROR | — | — | — | — |")
+            continue
+        rf = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        temp = r.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9
+        print(
+            f"| {r['arch']} | {r['shape']} | {r.get('policy','tp')} "
+            f"| {rf['compute_s']:.3f} | {rf['memory_s']:.3f} | {rf['collective_s']:.3f} "
+            f"| **{rf['dominant'][:-2]}** "
+            f"| {'' if ratio is None else format(ratio, '.2f')} "
+            f"| {fmt_bytes(r['bytes_per_device'])} "
+            f"| {fmt_bytes(r['collective_bytes']['total'])} "
+            f"| {temp:.1f} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: FedECADO vs FedAvg on a synthetic non-IID problem in ~1 min.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Builds a 10-class synthetic dataset, partitions it across 20 clients with a
+Dirichlet(0.1) skew, trains a small MLP with both algorithms under
+heterogeneous client compute, and prints the accuracy trajectories.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import make_classification
+from repro.fed import FedSim, FedSimConfig, HeteroConfig, dirichlet_partition
+
+
+def main():
+    data = make_classification(2048, dim=32, n_classes=10, seed=0)
+    parts = dirichlet_partition(data["y"], 20, alpha=0.1, seed=0)
+    print(f"client sizes: {[len(p) for p in parts]}")
+
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params0 = {
+        "w0": jax.random.normal(k1, (32, 48)) / np.sqrt(32),
+        "b0": jnp.zeros((48,)),
+        "w1": jax.random.normal(k2, (48, 10)) / np.sqrt(48),
+        "b1": jnp.zeros((10,)),
+    }
+
+    def fwd(p, x):
+        return jnp.tanh(x @ p["w0"] + p["b0"]) @ p["w1"] + p["b1"]
+
+    def loss_fn(p, batch):
+        lp = jax.nn.log_softmax(fwd(p, batch["x"]))
+        return -jnp.mean(jnp.take_along_axis(lp, batch["y"][:, None].astype(jnp.int32), -1))
+
+    def eval_fn(p):
+        pred = jnp.argmax(fwd(p, jnp.asarray(data["x"])), -1)
+        return {"acc": float(jnp.mean(pred == jnp.asarray(data["y"])))}
+
+    for alg in ("fedecado", "fedavg"):
+        cfg = FedSimConfig(
+            algorithm=alg, n_clients=20, participation=0.25, rounds=40,
+            batch_size=32, steps_per_epoch=3,
+            hetero=HeteroConfig(1e-3, 1e-2, 1, 5),
+            seed=1, eval_every=10,
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
+        hist = sim.run()
+        traj = " ".join(f"r{r}:{m['acc']:.3f}" for r, m in hist["metrics"])
+        print(f"{alg:10s} {traj}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Serving demo: prefill + batched decode on a reduced assigned-arch config —
+the same serve_step the dry-run lowers for decode_32k / long_500k.
+
+  PYTHONPATH=src python examples/serve_demo.py --arch mixtral-8x7b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

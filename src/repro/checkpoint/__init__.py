@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import load_pytree, restore_server_state, save_pytree, save_server_state
+
+__all__ = ["save_pytree", "load_pytree", "save_server_state", "restore_server_state"]

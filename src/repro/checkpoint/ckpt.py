@@ -1,0 +1,62 @@
+"""Flat-npz pytree checkpointing (no orbax in this container).
+
+Pytrees are flattened to ``path/to/leaf`` keys. Server state (FedECADO flow
+variables + gains + clocks) round-trips losslessly; restore validates
+structure against a template.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+_SEP = "|"
+
+
+def _flatten_with_paths(tree: Pytree, convert_bf16: bool = True):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if convert_bf16 and arr.dtype == jnp.bfloat16:
+            arr = arr.astype(np.float32)  # npz can't store bf16; restore recasts
+        out[key] = arr
+    return out, treedef
+
+
+def save_pytree(path: str, tree: Pytree) -> None:
+    flat, _ = _flatten_with_paths(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load_pytree(path: str, template: Pytree) -> Pytree:
+    """Restore into the structure of ``template`` (shape/dtype validated)."""
+    with np.load(path) as zf:
+        flat_t, treedef = _flatten_with_paths(template, convert_bf16=False)
+        leaves = []
+        for key, tmpl in flat_t.items():
+            if key not in zf:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = zf[key]
+            if arr.shape != tmpl.shape:
+                raise ValueError(
+                    f"leaf {key!r}: checkpoint shape {arr.shape} != template {tmpl.shape}"
+                )
+            leaves.append(jnp.asarray(arr, tmpl.dtype))
+    flat_template, treedef = jax.tree.flatten(template)
+    return jax.tree.unflatten(jax.tree.structure(template), leaves)
+
+
+def save_server_state(path: str, state) -> None:
+    save_pytree(path, state._asdict())
+
+
+def restore_server_state(path: str, template) -> Any:
+    d = load_pytree(path, template._asdict())
+    return type(template)(**d)

@@ -1,0 +1,18 @@
+from repro.configs.base import ArchConfig, AttentionConfig, MoEConfig, SSMConfig, reduced
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.shapes import (
+    ALL_SHAPES,
+    DECODE_32K,
+    InputShape,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    get_shape,
+)
+
+__all__ = [
+    "ArchConfig", "AttentionConfig", "MoEConfig", "SSMConfig", "reduced",
+    "ARCH_IDS", "get_config", "get_smoke_config",
+    "ALL_SHAPES", "InputShape", "get_shape",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]

@@ -1,0 +1,27 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual MLP
+[hf:Snowflake/snowflake-arctic-base].
+
+Dense-MoE hybrid: every layer has a dense residual MLP running in parallel
+with a 128-expert top-2 MoE FFN.
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, MoEConfig, reduced
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    d_ff=4864,
+    vocab_size=32000,
+    attention=AttentionConfig(num_heads=56, num_kv_heads=8, head_dim=128),
+    moe=MoEConfig(
+        num_experts=128, top_k=2, expert_d_ff=4864, dense_residual_d_ff=4864
+    ),
+    moe_pattern="all",
+    source="hf:Snowflake/snowflake-arctic-base",
+    long_context="skip",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return reduced(CONFIG)

@@ -1,0 +1,214 @@
+"""Architecture configuration dataclasses.
+
+Every assigned architecture gets one ``<arch>.py`` module exporting ``CONFIG``
+(the exact full-scale spec, citation in ``source``) and ``smoke_config()``
+(a reduced variant of the same family: <=2 layers, d_model<=512, <=4 experts)
+for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    # d_ff of each expert (may differ from the dense d_ff).
+    expert_d_ff: int
+    # Arctic-style dense residual MLP running in parallel with the experts.
+    dense_residual_d_ff: int = 0
+    # Router options
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    # Sliding-window size; 0 = full attention.
+    sliding_window: int = 0
+    # Gemma-2 style: every other layer is local (sliding window) when
+    # ``alternate_local_global`` is set; ``sliding_window`` then applies to the
+    # local layers only.
+    alternate_local_global: bool = False
+    logit_softcap: float = 0.0  # 0 = disabled
+    rope_theta: float = 10_000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective SSM (for jamba) / xLSTM sizing."""
+    state_dim: int = 16       # per-channel SSM state (mamba d_state)
+    conv_width: int = 4
+    expand: int = 2           # inner dim = expand * d_model
+    dt_rank: int = 0          # 0 -> ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    d_ff: int                        # dense FFN width (0 for pure-SSM xLSTM)
+    vocab_size: int
+    attention: Optional[AttentionConfig]
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # Layer pattern, tiled to num_layers. Tokens: "attn" (attn+mlp block),
+    # "mamba" (mamba+mlp block), "mlstm", "slstm".
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    # Which layers get MoE FFN instead of dense: "all", "none", or "every_2"
+    moe_pattern: str = "none"
+    # Encoder-decoder (whisper): number of encoder layers (decoder = num_layers).
+    encoder_layers: int = 0
+    # Modality frontend stub: "none" | "vq_image" | "audio_conv"
+    frontend: str = "none"
+    # Gemma-2 final-logit softcap
+    final_logit_softcap: float = 0.0
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    activation: str = "silu"         # silu | gelu
+    gated_mlp: bool = True           # SwiGLU-style (3 mats) vs classic (2 mats)
+    max_seq_len: int = 1 << 20
+    source: str = ""                 # citation
+    # long_500k support: "native" (ssm / windowed), "windowed" (we cap full
+    # attention layers with sliding window for this shape), "skip".
+    long_context: str = "skip"
+
+    @property
+    def has_moe(self) -> bool:
+        return self.moe is not None and self.moe_pattern != "none"
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Expand layer_pattern to exactly num_layers entries."""
+        pat = self.layer_pattern
+        reps = -(-self.num_layers // len(pat))
+        return tuple((pat * reps)[: self.num_layers])
+
+    def moe_layers(self) -> Tuple[bool, ...]:
+        """Per-layer flag: does this layer use the MoE FFN?"""
+        if self.moe is None or self.moe_pattern == "none":
+            return (False,) * self.num_layers
+        if self.moe_pattern == "all":
+            return (True,) * self.num_layers
+        if self.moe_pattern == "every_2":
+            return tuple(i % 2 == 1 for i in range(self.num_layers))
+        raise ValueError(f"unknown moe_pattern {self.moe_pattern!r}")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks), for roofline."""
+        d = self.d_model
+        n = 0
+        n += self.vocab_size * d                      # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d                  # lm head
+        for kind, use_moe in zip(self.layer_kinds(), self.moe_layers()):
+            n += self._block_params(kind, use_moe)
+        if self.encoder_layers:
+            # encoder blocks (attn+mlp, never MoE) + decoder cross-attention
+            n += self.encoder_layers * self._block_params("attn", False)
+            n += self.num_layers * (self._attn_params() + self.d_model)
+        return n
+
+    def _attn_params(self) -> int:
+        a = self.attention
+        d = self.d_model
+        qd = a.num_heads * a.head_dim
+        kvd = a.num_kv_heads * a.head_dim
+        p = d * qd + 2 * d * kvd + qd * d
+        if a.qkv_bias:
+            p += qd + 2 * kvd
+        return p
+
+    def _mlp_params(self, d_ff: int) -> int:
+        mats = 3 if self.gated_mlp else 2
+        return mats * self.d_model * d_ff
+
+    def _block_params(self, kind: str, use_moe: bool) -> int:
+        d = self.d_model
+        p = 2 * d  # 2 norms
+        if kind == "attn":
+            p += self._attn_params()
+            p += self._ffn_params(use_moe)
+        elif kind == "mamba":
+            s = self.ssm or SSMConfig()
+            inner = s.expand * d
+            dt_rank = s.dt_rank or -(-d // 16)
+            p += d * inner * 2            # in_proj (x and z)
+            p += inner * s.conv_width     # depthwise conv
+            p += inner * (dt_rank + 2 * s.state_dim)  # x -> dt,B,C
+            p += dt_rank * inner          # dt proj
+            p += inner * s.state_dim      # A
+            p += inner                    # D
+            p += inner * d                # out proj
+            p += self._ffn_params(use_moe)
+        elif kind in ("mlstm", "slstm"):
+            a = self.attention
+            qd = a.num_heads * a.head_dim
+            # qkv + i/f/o gates + out proj (xLSTM-style block, simplified)
+            p += 3 * d * qd + 3 * d * a.num_heads + qd * d
+            # xLSTM uses projected up/down FFN inside block
+            p += 2 * d * (2 * d)
+        return p
+
+    def _ffn_params(self, use_moe: bool) -> int:
+        if use_moe and self.moe is not None:
+            m = self.moe
+            p = self.d_model * m.num_experts                 # router
+            p += m.num_experts * 3 * self.d_model * m.expert_d_ff
+            if m.dense_residual_d_ff:
+                p += 3 * self.d_model * m.dense_residual_d_ff
+            return p
+        return self._mlp_params(self.d_ff)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top-k experts)."""
+        if not self.has_moe:
+            return self.param_count()
+        m = self.moe
+        full_ffn = m.num_experts * 3 * self.d_model * m.expert_d_ff
+        act_ffn = m.top_k * 3 * self.d_model * m.expert_d_ff
+        n_moe = sum(self.moe_layers())
+        return self.param_count() - n_moe * (full_ffn - act_ffn)
+
+
+def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """Produce a smoke-test-sized variant of the same family."""
+    d_model = min(cfg.d_model, 256)
+    a = cfg.attention
+    attn = None
+    if a is not None:
+        heads = min(a.num_heads, 4)
+        kv = max(1, min(a.num_kv_heads, heads))
+        while heads % kv:
+            kv -= 1
+        attn = dataclasses.replace(
+            a, num_heads=heads, num_kv_heads=kv, head_dim=max(8, d_model // heads),
+            sliding_window=min(a.sliding_window, 64) if a.sliding_window else 0,
+        )
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(
+            moe, num_experts=min(moe.num_experts, 4), top_k=min(moe.top_k, 2),
+            expert_d_ff=min(moe.expert_d_ff, 128),
+            dense_residual_d_ff=min(moe.dense_residual_d_ff, 128),
+        )
+    kw = dict(
+        num_layers=2,
+        d_model=d_model,
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 512),
+        attention=attn,
+        moe=moe,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        max_seq_len=2048,
+    )
+    kw.update(overrides)
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,25 @@
+"""chameleon-34b [vlm] — early-fusion VLM, VQ image tokens [arXiv:2405.09818].
+
+The vision side is a VQ tokenizer: images become discrete tokens in the SAME
+vocabulary as text (early fusion), so the backbone is a standard dense decoder
+with a 65536 vocab. The VQ codec is the stubbed modality frontend.
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, reduced
+
+CONFIG = ArchConfig(
+    name="chameleon-34b",
+    family="vlm",
+    num_layers=48,
+    d_model=8192,
+    d_ff=22016,
+    vocab_size=65536,
+    attention=AttentionConfig(num_heads=64, num_kv_heads=8, head_dim=128),
+    layer_pattern=("attn",),
+    frontend="vq_image",
+    source="arXiv:2405.09818",
+    long_context="skip",  # pure full attention
+)
+
+
+def smoke_config() -> ArchConfig:
+    return reduced(CONFIG)

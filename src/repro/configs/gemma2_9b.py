@@ -1,0 +1,31 @@
+"""gemma2-9b [dense] — local/global alternating attention, logit softcaps
+[arXiv:2408.00118]. Local layers use a 4096 sliding window; global layers are
+full attention. long_500k decode runs: local layers carry a windowed cache,
+global layers attend the full 512k cache (linear per decoded token).
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, reduced
+
+CONFIG = ArchConfig(
+    name="gemma2-9b",
+    family="dense",
+    num_layers=42,
+    d_model=3584,
+    d_ff=14336,
+    vocab_size=256000,
+    attention=AttentionConfig(
+        num_heads=16, num_kv_heads=8, head_dim=256,
+        sliding_window=4096, alternate_local_global=True,
+        logit_softcap=50.0,
+    ),
+    # pattern length 2: position 0 = local (sliding window), 1 = global
+    layer_pattern=("attn", "attn"),
+    final_logit_softcap=30.0,
+    activation="gelu",
+    tie_embeddings=True,
+    source="arXiv:2408.00118",
+    long_context="windowed",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return reduced(CONFIG)

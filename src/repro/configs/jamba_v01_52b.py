@@ -1,0 +1,32 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e top-2
+[arXiv:2403.19887].
+
+Jamba block structure: every 8 layers contain 1 attention layer and 7 Mamba
+layers; MoE replaces the MLP on every other layer (e=2 in the paper).
+For ``long_500k`` decode, the attention layers run with a 4096 sliding window
+(deployment configuration — the Mamba state is O(1), attention cache is capped;
+recorded in DESIGN.md).
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, MoEConfig, SSMConfig, reduced
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    d_ff=14336,
+    vocab_size=65536,
+    attention=AttentionConfig(num_heads=32, num_kv_heads=8, head_dim=128),
+    moe=MoEConfig(num_experts=16, top_k=2, expert_d_ff=14336),
+    ssm=SSMConfig(state_dim=16, conv_width=4, expand=2),
+    layer_pattern=(
+        "mamba", "mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba",
+    ),
+    moe_pattern="every_2",
+    source="arXiv:2403.19887",
+    long_context="windowed",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return reduced(CONFIG, num_layers=2, layer_pattern=("mamba", "attn"))

@@ -1,0 +1,25 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention
+[arXiv:2401.04088]. SWA(4096) -> long_500k decode runs natively with a
+windowed KV cache.
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, MoEConfig, reduced
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    d_ff=14336,
+    vocab_size=32000,
+    attention=AttentionConfig(
+        num_heads=32, num_kv_heads=8, head_dim=128, sliding_window=4096
+    ),
+    moe=MoEConfig(num_experts=8, top_k=2, expert_d_ff=14336),
+    moe_pattern="all",
+    source="arXiv:2401.04088",
+    long_context="native",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return reduced(CONFIG)

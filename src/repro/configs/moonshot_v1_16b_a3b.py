@@ -1,0 +1,25 @@
+"""moonshot-v1-16b-a3b [dense tag, MoE arch] — Moonlight-16B-A3B
+[hf:moonshotai/Moonlight-16B-A3B].
+
+DeepSeek-V3-style fine-grained MoE: 64 routed experts, top-6, tiny expert
+d_ff=1408, MHA with kv=16 (no GQA compression).
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, MoEConfig, reduced
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="dense",
+    num_layers=48,
+    d_model=2048,
+    d_ff=1408,
+    vocab_size=163840,
+    attention=AttentionConfig(num_heads=16, num_kv_heads=16, head_dim=128),
+    moe=MoEConfig(num_experts=64, top_k=6, expert_d_ff=1408),
+    moe_pattern="all",
+    source="hf:moonshotai/Moonlight-16B-A3B",
+    long_context="skip",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return reduced(CONFIG)

@@ -1,0 +1,20 @@
+"""qwen1.5-32b [dense] — QKV bias [hf:Qwen/Qwen1.5-0.5B family scaled]."""
+from repro.configs.base import ArchConfig, AttentionConfig, reduced
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    d_ff=27392,
+    vocab_size=152064,
+    attention=AttentionConfig(
+        num_heads=40, num_kv_heads=40, head_dim=128, qkv_bias=True
+    ),
+    source="hf:Qwen/Qwen1.5-0.5B",
+    long_context="skip",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return reduced(CONFIG)

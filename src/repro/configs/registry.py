@@ -1,0 +1,34 @@
+"""--arch registry: maps arch ids to full configs and smoke configs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import ArchConfig
+
+_MODULES: Dict[str, str] = {
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "qwen1.5-32b": "repro.configs.qwen15_32b",
+    "xlstm-1.3b": "repro.configs.xlstm_13b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "whisper-base": "repro.configs.whisper_base",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).smoke_config()

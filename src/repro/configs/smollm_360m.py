@@ -1,0 +1,23 @@
+"""smollm-360m [dense] — llama-arch small [hf:HuggingFaceTB/SmolLM-135M family].
+
+15 heads: not divisible by the 16-way model axis -> sharding falls back to
+head_dim (64/16=4), exercising the non-divisible-head sharding rule.
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, reduced
+
+CONFIG = ArchConfig(
+    name="smollm-360m",
+    family="dense",
+    num_layers=32,
+    d_model=960,
+    d_ff=2560,
+    vocab_size=49152,
+    attention=AttentionConfig(num_heads=15, num_kv_heads=5, head_dim=64),
+    tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-135M",
+    long_context="skip",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return reduced(CONFIG, attention=AttentionConfig(num_heads=3, num_kv_heads=1, head_dim=64))

@@ -1,0 +1,36 @@
+"""whisper-base [audio] — encoder-decoder, conv frontend stubbed
+[arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is the stubbed modality frontend:
+``input_specs`` provides precomputed frame embeddings (B, T_enc, d_model).
+The decoder (self-attn + cross-attn) is implemented in full; decode shapes run
+the decoder serve_step with a cached encoder output. Full attention both sides
+-> long_500k skipped.
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, reduced
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,               # decoder layers
+    encoder_layers=6,
+    d_model=512,
+    d_ff=2048,
+    vocab_size=51865,
+    attention=AttentionConfig(num_heads=8, num_kv_heads=8, head_dim=64),
+    norm="layernorm",
+    activation="gelu",
+    gated_mlp=False,
+    frontend="audio_conv",
+    source="arXiv:2212.04356",
+    long_context="skip",
+)
+
+# Whisper encoder operates on 1500 frames (30 s); for the assigned shapes the
+# encoder length is capped at this value while the decoder consumes the
+# assigned seq_len.
+ENCODER_FRAMES = 1500
+
+
+def smoke_config() -> ArchConfig:
+    return reduced(CONFIG)

@@ -1,0 +1,27 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+Attention-free recurrent architecture: alternating mLSTM (matrix-memory,
+parallelizable linear-attention-like) and sLSTM (scalar-memory, sequential)
+blocks. d_ff=0: the xLSTM block carries its own up/down projection.
+O(1) decode state -> native long_500k support.
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, reduced
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    d_ff=0,
+    vocab_size=50304,
+    attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=512),
+    layer_pattern=(
+        "mlstm", "mlstm", "mlstm", "mlstm", "mlstm", "mlstm", "mlstm", "slstm",
+    ),  # 7:1 mLSTM:sLSTM, period 8 divides 48 layers
+    source="arXiv:2405.04517",
+    long_context="native",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return reduced(CONFIG, layer_pattern=("mlstm", "slstm"))

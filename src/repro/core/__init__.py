@@ -1,0 +1,19 @@
+from repro.core.consensus import ConsensusConfig, adaptive_be_step, be_step, lte
+from repro.core.ecado import ecado_round
+from repro.core.fedecado import RoundStats, server_round, set_gains
+from repro.core.flow import ServerState, init_server_state
+from repro.core.gamma import gamma, gamma_leaf, gamma_stacked
+from repro.core.sensitivity import (
+    hutchinson_diag,
+    hutchinson_scalar,
+    hvp,
+    make_gain,
+)
+
+__all__ = [
+    "ConsensusConfig", "be_step", "adaptive_be_step", "lte",
+    "server_round", "set_gains", "RoundStats", "ecado_round",
+    "ServerState", "init_server_state",
+    "gamma", "gamma_leaf", "gamma_stacked",
+    "hutchinson_scalar", "hutchinson_diag", "hvp", "make_gain",
+]

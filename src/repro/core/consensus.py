@@ -1,0 +1,198 @@
+"""FedECADO consensus: Backward-Euler central step with closed-form
+arrowhead (Schur) solve, local-truncation-error estimate, and the Algorithm-1
+adaptive step-size backtracking loop.
+
+Sign convention (documented in DESIGN.md): the paper's eqs. (5)-(7) carry a
+sign inconsistency — taking (5) ẋ_c = Σ I_L and (6) ẋ_i = −∇f_i − I_L as
+written, linear stability of the coupled system requires L·İ_L = x_i − x_c
+(eq. 7 flipped). We implement that stable orientation; with it the fixed
+point is x_i = x_c, I_i = −∇f_i(x_c), Σ_i I_i = 0 — a critical point of the
+global objective, exactly as the paper intends.
+
+BE system per synchronous time point τ→τ+Δt (all elementwise over params;
+client axis A stacked on the leading dim):
+
+  x_c⁺ = x_c + Δt·(Σ_a I_a⁺ + S_frozen)
+  I_a⁺ = I_a + (Δt/L)·(Γ_a(τ+Δt) − (I_a⁺ − J_a)·g⁻¹_a − x_c⁺)
+
+Closed form (arrowhead Schur complement — the TPU-native replacement for the
+paper's LU factorization, DESIGN.md §2):
+
+  d_a  = 1 + (Δt/L)·g⁻¹_a
+  u_a  = (I_a + (Δt/L)·(Γ_a⁺ + J_a·g⁻¹_a)) / d_a
+  w_a  = (Δt/L) / d_a
+  x_c⁺ = (x_c + Δt·(Σ_a u_a + S_frozen)) / (1 + Δt·Σ_a w_a)
+  I_a⁺ = u_a − w_a·x_c⁺
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gamma import gamma_stacked
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusConfig:
+    L: float = 1.0                 # inductance hyperparameter
+    delta: float = 1e-3            # LTE tolerance (Algorithm 1)
+    dt_init: float = 0.1           # initial central step
+    dt_max: float = 10.0
+    max_backtracks: int = 8
+    max_substeps: int = 64         # cap on BE steps per round
+    use_kernels: bool = False      # fuse Γ+BE with the Pallas kernel path
+
+
+def _bcast(v: jax.Array, like: jax.Array) -> jax.Array:
+    """(A,) -> (A, 1, 1, ...) to broadcast against (A, ...) leaves."""
+    return v.reshape((-1,) + (1,) * (like.ndim - 1))
+
+
+def be_step(
+    x_c: Pytree,
+    I_a: Pytree,
+    J_a: Pytree,
+    gamma_a: Pytree,
+    g_inv: jax.Array,
+    S_frozen: Pytree,
+    dt: jax.Array,
+    L: float,
+):
+    """One Backward-Euler consensus solve. Returns (x_c_new, I_a_new).
+
+    Leaves: x_c (...); I_a/J_a/gamma_a (A, ...); g_inv (A,) scalar gains (or
+    a pytree of (A, ...) diagonal gains); S_frozen (...) = Σ_{inactive} I_i.
+    """
+    r = dt / L
+    diag_gains = not isinstance(g_inv, jax.Array)
+
+    def per_leaf(xc, Ia, Ja, Ga, Sf, gi):
+        gib = gi if diag_gains else _bcast(gi, Ia)
+        d = 1.0 + r * gib
+        u = (Ia + r * (Ga + Ja * gib)) / d
+        w = r / d
+        num = xc + dt * (jnp.sum(u, axis=0) + Sf)
+        den = 1.0 + dt * jnp.sum(w * jnp.ones_like(Ia), axis=0)
+        xc_new = num / den
+        I_new = u - w * xc_new[None]
+        return xc_new, I_new
+
+    leaves_xc, treedef = jax.tree.flatten(x_c)
+    leaves_I = treedef.flatten_up_to(I_a)
+    leaves_J = treedef.flatten_up_to(J_a)
+    leaves_G = treedef.flatten_up_to(gamma_a)
+    leaves_S = treedef.flatten_up_to(S_frozen)
+    leaves_g = treedef.flatten_up_to(g_inv) if diag_gains else [g_inv] * len(leaves_xc)
+
+    outs = [
+        per_leaf(xc, Ia, Ja, Ga, Sf, gi)
+        for xc, Ia, Ja, Ga, Sf, gi in zip(
+            leaves_xc, leaves_I, leaves_J, leaves_G, leaves_S, leaves_g
+        )
+    ]
+    x_c_new = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    I_new = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return x_c_new, I_new
+
+
+def _flow_rhs(x_c, I_a, J_a, gamma_a, g_inv, L):
+    """İ_a = (Γ_a − (I_a − J_a)·g⁻¹ − x_c) / L, per leaf."""
+    diag_gains = not isinstance(g_inv, jax.Array)
+
+    def per_leaf(xc, Ia, Ja, Ga, gi):
+        gib = gi if diag_gains else _bcast(gi, Ia)
+        return (Ga - (Ia - Ja) * gib - xc[None]) / L
+
+    if diag_gains:
+        return jax.tree.map(per_leaf, x_c, I_a, J_a, gamma_a, g_inv)
+    return jax.tree.map(lambda xc, Ia, Ja, Ga: per_leaf(xc, Ia, Ja, Ga, g_inv),
+                        x_c, I_a, J_a, gamma_a)
+
+
+def lte(
+    x_c, I_a, x_c_new, I_new, J_a, gamma_tau, gamma_new, g_inv, dt, L
+) -> jax.Array:
+    """max|ε_BE| over both eq. 29 (central) and eq. 30 (flow) terms."""
+    # ε_C = (Δt/2)·|Σ_a I⁺ − Σ_a I|  (frozen flows cancel)
+    eps_c = jax.tree.map(
+        lambda a, b: jnp.max(jnp.abs(jnp.sum(b - a, axis=0))), I_a, I_new
+    )
+    # ε_L = (Δt/2)·|İ(τ+Δt) − İ(τ)|
+    rhs_old = _flow_rhs(x_c, I_a, J_a, gamma_tau, g_inv, L)
+    rhs_new = _flow_rhs(x_c_new, I_new, J_a, gamma_new, g_inv, L)
+    eps_l = jax.tree.map(lambda a, b: jnp.max(jnp.abs(b - a)), rhs_old, rhs_new)
+    m = jnp.maximum(
+        jnp.max(jnp.stack(jax.tree.leaves(eps_c))),
+        jnp.max(jnp.stack(jax.tree.leaves(eps_l))),
+    )
+    return (dt / 2.0) * m
+
+
+class StepResult(NamedTuple):
+    x_c: Pytree
+    I_a: Pytree
+    dt_used: jax.Array
+    eps: jax.Array
+    n_backtracks: jax.Array
+
+
+def adaptive_be_step(
+    x_c: Pytree,
+    I_a: Pytree,
+    J_a: Pytree,
+    x_prev_a: Pytree,
+    x_new_a: Pytree,
+    T_a: jax.Array,
+    g_inv,
+    S_frozen: Pytree,
+    tau: jax.Array,
+    dt0: jax.Array,
+    ccfg: ConsensusConfig,
+) -> StepResult:
+    """Algorithm 1: backtrack Δt until max|ε_BE| ≤ δ, then take the BE step.
+
+    ``x_prev_a``/``x_new_a``/``T_a`` feed the Γ operator at trial times.
+    """
+    use_kernel = ccfg.use_kernels and isinstance(g_inv, jax.Array)
+    if use_kernel:
+        # Fused Pallas path: Γ + BE Schur + LTE in one pass over parameters.
+        # (The kernel assumes round-start client states == broadcast x_c,
+        # which is how x_prev_a is constructed in fedecado.server_round.)
+        from repro.kernels.ops import fused_consensus_step
+
+        def trial(dt):
+            xc_n, I_n, eps = fused_consensus_step(
+                x_c, S_frozen, I_a, J_a, x_new_a, T_a, g_inv, dt, tau, ccfg.L,
+            )
+            return xc_n, I_n, eps
+
+    else:
+        gamma_tau = gamma_stacked(x_prev_a, x_new_a, T_a, tau)
+
+        def trial(dt):
+            g_new = gamma_stacked(x_prev_a, x_new_a, T_a, tau + dt)
+            xc_n, I_n = be_step(x_c, I_a, J_a, g_new, g_inv, S_frozen, dt, ccfg.L)
+            eps = lte(x_c, I_a, xc_n, I_n, J_a, gamma_tau, g_new, g_inv, dt, ccfg.L)
+            return xc_n, I_n, eps
+
+    def cond(carry):
+        dt, _, _, eps, k = carry
+        return (eps > ccfg.delta) & (k < ccfg.max_backtracks)
+
+    def body(carry):
+        dt, _, _, eps, k = carry
+        # Algorithm 1 line 3: Δt ← Δt · δ / max|ε|  (with a safety factor)
+        dt = jnp.maximum(dt * 0.9 * ccfg.delta / jnp.maximum(eps, 1e-30), 1e-12)
+        xc_n, I_n, eps = trial(dt)
+        return dt, xc_n, I_n, eps, k + 1
+
+    xc0, I0, eps0 = trial(dt0)
+    dt, xc_n, I_n, eps, k = jax.lax.while_loop(
+        cond, body, (dt0, xc0, I0, eps0, jnp.zeros((), jnp.int32))
+    )
+    return StepResult(xc_n, I_n, dt, eps, k)

@@ -1,0 +1,40 @@
+"""Plain ECADO (Agarwal & Pileggi 2023) — the synchronous, full-participation
+ancestor of FedECADO. Kept as an ablation baseline: identical circuit model
+and BE arrowhead solve, but
+
+  * every client participates each round,
+  * all clients share one window T (identical lr/epochs), so Γ degenerates to
+    the endpoint value (no multi-rate synchronization needed),
+  * gains are uniform (no p_i data weighting).
+
+This is exactly what FedECADO §4 argues breaks under heterogeneity; the
+benchmarks compare both to quantify the paper's two contributions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.consensus import ConsensusConfig
+from repro.core.fedecado import server_round
+from repro.core.flow import ServerState
+
+
+def ecado_round(
+    state: ServerState,
+    x_new_all,                 # leaves (n, ...) — FULL participation
+    T: jax.Array,              # scalar shared window
+    ccfg: ConsensusConfig,
+):
+    n = jax.tree.leaves(x_new_all)[0].shape[0]
+    T_a = jnp.full((n,), T, jnp.float32)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # uniform gains: overwrite whatever per-client gains exist
+    uniform = state._replace(
+        g_inv=(
+            jnp.ones((n,), jnp.float32) * jnp.mean(state.g_inv)
+            if isinstance(state.g_inv, jax.Array)
+            else state.g_inv
+        )
+    )
+    return server_round(uniform, x_new_all, T_a, idx, ccfg)

@@ -1,0 +1,131 @@
+"""FedECADO Algorithm 2 — the central-agent multi-rate round.
+
+Per communication round:
+  1. Active clients simulate their local ODE for window T_i = Σ_k Δt_i^k
+     (client side lives in fed/client.py) and send x_i(T_i), T_i.
+  2. The server integrates the central ODE over the synchronous window
+     τ ∈ [0, max_i T_i]: at each BE time point, client states are estimated
+     with Γ (interp/extrap), Δt is chosen by the Algorithm-1 LTE backtracking,
+     and the arrowhead system (eq. 28) is solved in closed Schur form.
+  3. Flow variables of the active cohort are written back; the new central
+     state is broadcast for the next round.
+
+``server_round`` is a single jittable function; in the distributed runtime it
+is pjit-ed with the client axis sharded over the mesh (launch/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.consensus import ConsensusConfig, adaptive_be_step
+from repro.core.flow import (
+    ServerState,
+    broadcast_clients,
+    put_rows,
+    take_rows,
+    tree_sum_clients,
+)
+
+Pytree = Any
+
+
+class RoundStats(NamedTuple):
+    n_substeps: jax.Array
+    n_backtracks: jax.Array
+    final_dt: jax.Array
+    max_eps: jax.Array
+    tau_end: jax.Array
+
+
+def server_round(
+    state: ServerState,
+    x_new_a: Pytree,
+    T_a: jax.Array,
+    active_idx: jax.Array,
+    ccfg: ConsensusConfig,
+) -> tuple:
+    """One FedECADO consensus round (steps 12-16 of Algorithm 2).
+
+    x_new_a: active-client final states, leaves (A, ...) fp32.
+    T_a: (A,) client simulation windows. active_idx: (A,) int32 client ids.
+    """
+    A = T_a.shape[0]
+    x_c = state.x_c
+    J_a = take_rows(state.I, active_idx)              # prev-round flows
+    # Σ of frozen (inactive) flow variables: total minus active rows
+    S_all = tree_sum_clients(state.I)
+    S_frozen = jax.tree.map(
+        lambda s, j: s - jnp.sum(j, axis=0), S_all, J_a
+    )
+    g_inv_a = (
+        jnp.take(state.g_inv, active_idx, axis=0)
+        if isinstance(state.g_inv, jax.Array)
+        else take_rows(state.g_inv, active_idx)
+    )
+    # clients start each round from the broadcast central state
+    x_prev_a = broadcast_clients(x_c, A)
+    T_max = jnp.max(T_a)
+
+    def cond(carry):
+        x_c, I_a, tau, dt, stats = carry
+        return (tau < T_max) & (stats[0] < ccfg.max_substeps)
+
+    def body(carry):
+        x_c, I_a, tau, dt, stats = carry
+        n_sub, n_back, _, max_eps = stats
+        dt = jnp.minimum(dt, ccfg.dt_max)
+        res = adaptive_be_step(
+            x_c, I_a, J_a, x_prev_a, x_new_a, T_a, g_inv_a, S_frozen,
+            tau, dt, ccfg,
+        )
+        # warm-start the next step; gently grow when LTE is slack
+        grow = jnp.where(res.eps < 0.5 * ccfg.delta, 1.5, 1.0)
+        new_dt = jnp.minimum(res.dt_used * grow, ccfg.dt_max)
+        stats = (
+            n_sub + 1,
+            n_back + res.n_backtracks,
+            res.dt_used,
+            jnp.maximum(max_eps, res.eps),
+        )
+        return res.x_c, res.I_a, tau + res.dt_used, new_dt, stats
+
+    stats0 = (
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        state.dt_last,
+        jnp.zeros((), jnp.float32),
+    )
+    x_c_f, I_a_f, tau_f, dt_f, stats = jax.lax.while_loop(
+        cond, body, (x_c, J_a, jnp.zeros((), jnp.float32), state.dt_last, stats0)
+    )
+
+    new_state = ServerState(
+        x_c=x_c_f,
+        I=put_rows(state.I, active_idx, I_a_f),
+        g_inv=state.g_inv,
+        t=state.t + tau_f,
+        dt_last=dt_f,
+        round=state.round + 1,
+    )
+    rstats = RoundStats(
+        n_substeps=stats[0], n_backtracks=stats[1],
+        final_dt=stats[2], max_eps=stats[3], tau_end=tau_f,
+    )
+    return new_state, rstats
+
+
+def set_gains(state: ServerState, g_inv, idx: Optional[jax.Array] = None) -> ServerState:
+    """Install (inverse) sensitivity gains 1/Ḡ_th for all or selected clients."""
+    if idx is None:
+        return state._replace(g_inv=g_inv)
+    if isinstance(state.g_inv, jax.Array):
+        return state._replace(g_inv=state.g_inv.at[idx].set(g_inv))
+    return state._replace(g_inv=put_rows(state.g_inv, idx, g_inv))
+
+
+make_server_round = lambda ccfg: partial(server_round, ccfg=ccfg)

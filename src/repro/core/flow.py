@@ -1,0 +1,60 @@
+"""FedECADO server state: central params, per-client flow variables, gains.
+
+The flow variables I_L^i are parameter-shaped integral-controller states, one
+per client (like SCAFFOLD control variates). They are stored stacked on a
+leading client axis so the consensus math is batched elementwise — and, in
+the distributed runtime, sharded over the mesh client/data axis.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class ServerState(NamedTuple):
+    x_c: Pytree          # central params (fp32)
+    I: Pytree            # flow variables, leaves (n_clients, ...)
+    g_inv: Any           # (n_clients,) fp32 scalar inverse gains, or diag pytree
+    t: jax.Array         # global continuous time
+    dt_last: jax.Array   # adaptive step memory (warm-start for Algorithm 1)
+    round: jax.Array     # communication round counter
+
+
+def init_server_state(params: Pytree, n_clients: int, dt_init: float = 0.1) -> ServerState:
+    x_c = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    I = jax.tree.map(lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32), params)
+    g_inv = jnp.ones((n_clients,), jnp.float32)
+    return ServerState(
+        x_c=x_c,
+        I=I,
+        g_inv=g_inv,
+        t=jnp.zeros((), jnp.float32),
+        dt_last=jnp.asarray(dt_init, jnp.float32),
+        round=jnp.zeros((), jnp.int32),
+    )
+
+
+def take_rows(tree: Pytree, idx: jax.Array) -> Pytree:
+    """Gather client rows: leaves (n, ...) -> (A, ...)."""
+    return jax.tree.map(lambda l: jnp.take(l, idx, axis=0), tree)
+
+
+def put_rows(tree: Pytree, idx: jax.Array, rows: Pytree) -> Pytree:
+    """Scatter client rows back: leaves (n, ...) <- (A, ...) at idx."""
+    return jax.tree.map(lambda l, r: l.at[idx].set(r), tree, rows)
+
+
+def tree_sum_clients(tree: Pytree) -> Pytree:
+    """Σ over the leading client axis of every leaf."""
+    return jax.tree.map(lambda l: jnp.sum(l, axis=0), tree)
+
+
+def broadcast_clients(tree: Pytree, n: int) -> Pytree:
+    """x -> stacked (n, ...) copies."""
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), tree
+    )

@@ -1,0 +1,39 @@
+"""The Γ linear interpolation/extrapolation operator (paper eq. 23).
+
+Γ(x_i(·), τ) estimates client i's state at an arbitrary synchronous time τ
+from two known samples — here the round-start state x_i(t0) (the broadcast
+central state) and the end-of-window state x_i(t0 + T_i). For τ ≤ T_i this
+interpolates; for τ > T_i (the client finished early) it extrapolates along
+the same line. Both Theorem-1 properties (additivity, homogeneity) hold by
+construction; tests/test_gamma.py checks them with hypothesis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gamma_leaf(x_prev: jax.Array, x_new: jax.Array, T: jax.Array, tau: jax.Array) -> jax.Array:
+    """Elementwise Γ for one tensor. T, tau are scalars (relative to t0=0)."""
+    frac = tau / jnp.maximum(T, 1e-12)
+    return x_prev + (x_new - x_prev) * frac
+
+
+def gamma(x_prev, x_new, T, tau):
+    """Γ over pytrees. ``x_prev``/``x_new``: matching pytrees; ``T`` scalar
+    per-client window; ``tau`` scalar synchronous time."""
+    return jax.tree.map(lambda a, b: gamma_leaf(a, b, T, tau), x_prev, x_new)
+
+
+def gamma_stacked(x_prev, x_new, T, tau):
+    """Γ where every leaf carries a leading client axis and ``T`` is (A,).
+
+    x_prev/x_new leaves: (A, ...); T: (A,); tau: scalar. Broadcasting aligns
+    T against the client axis.
+    """
+
+    def leaf(a, b):
+        frac = (tau / jnp.maximum(T, 1e-12)).reshape((-1,) + (1,) * (a.ndim - 1))
+        return a + (b - a) * frac.astype(a.dtype)
+
+    return jax.tree.map(leaf, x_prev, x_new)

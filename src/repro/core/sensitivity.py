@@ -1,0 +1,86 @@
+"""Aggregate sensitivity model Ḡ_th^i = 1/Δt_ref + p_i·H̄_i (paper eq. 42).
+
+The paper precomputes H̄_i by averaging the local Hessian over client data —
+infeasible to materialize at transformer scale, so (DESIGN.md §2) we estimate
+it stochastically with Hutchinson probes through Hessian-vector products:
+
+  scalar mode: h̄ ≈ tr(H)/n_params  (one gain per client — keeps the
+               arrowhead consensus solve exact with scalar Schur terms)
+  diag mode:   h̄ ≈ E[v ⊙ Hv], v ~ Rademacher  (per-parameter gains; the
+               Schur solve stays exact because everything is elementwise)
+
+Gains are clipped to be positive: negative curvature directions would turn
+the proportional controller into positive feedback.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _rademacher_like(key, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    vs = [
+        (jax.random.bernoulli(k, 0.5, l.shape).astype(jnp.float32) * 2.0 - 1.0)
+        for k, l in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, vs)
+
+
+def hvp(loss_fn: Callable, params, batch, v):
+    """Hessian-vector product via forward-over-reverse."""
+    grad_fn = lambda p: jax.grad(loss_fn)(p, batch)
+    _, hv = jax.jvp(grad_fn, (params,), (v,))
+    return hv
+
+
+def hutchinson_scalar(loss_fn: Callable, params, batch, key, n_probes: int = 2) -> jax.Array:
+    """tr(H)/n_params estimate (fp32 scalar)."""
+    n_params = sum(int(l.size) for l in jax.tree.leaves(params))
+
+    def one(k):
+        v = _rademacher_like(k, params)
+        hv = hvp(loss_fn, params, batch, v)
+        dots = jax.tree.map(
+            lambda a, b: jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32)), v, hv
+        )
+        return sum(jax.tree.leaves(dots))
+
+    keys = jax.random.split(key, n_probes)
+    tr = jnp.mean(jnp.stack([one(k) for k in keys]))
+    return tr / n_params
+
+
+def hutchinson_diag(loss_fn: Callable, params, batch, key, n_probes: int = 2):
+    """E[v ⊙ Hv] diagonal estimate (pytree, fp32)."""
+
+    def one(k):
+        v = _rademacher_like(k, params)
+        hv = hvp(loss_fn, params, batch, v)
+        return jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) * b.astype(jnp.float32), v, hv
+        )
+
+    keys = jax.random.split(key, n_probes)
+    acc = one(keys[0])
+    for k in keys[1:]:
+        nxt = one(k)
+        acc = jax.tree.map(jnp.add, acc, nxt)
+    return jax.tree.map(lambda a: a / n_probes, acc)
+
+
+def make_gain(h_bar, p_i, dt_ref: float, h_floor: float = 0.0):
+    """Ḡ_th^i = 1/Δt_ref + p_i·max(h̄, floor)   (eq. 42).
+
+    ``h_bar``: scalar or diag pytree; ``p_i``: scalar data fraction.
+    Returns the same structure as ``h_bar``.
+    """
+    if isinstance(h_bar, (jnp.ndarray, jax.Array, float, int)):
+        return 1.0 / dt_ref + p_i * jnp.maximum(jnp.asarray(h_bar, jnp.float32), h_floor)
+    return jax.tree.map(
+        lambda h: 1.0 / dt_ref + p_i * jnp.maximum(h, h_floor), h_bar
+    )

@@ -1,0 +1,7 @@
+from repro.data.pipeline import ClientDataLoader, shard_batch
+from repro.data.synthetic import lm_batches, make_classification, make_lm_stream
+
+__all__ = [
+    "make_classification", "make_lm_stream", "lm_batches",
+    "ClientDataLoader", "shard_batch",
+]

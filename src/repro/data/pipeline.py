@@ -1,0 +1,33 @@
+"""Sharded batching helpers for the distributed runtime."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def shard_batch(batch: Dict[str, np.ndarray], sharding) -> Dict[str, jax.Array]:
+    """Device-put a host batch with the given NamedSharding (batch axis)."""
+    return {k: jax.device_put(jnp.asarray(v), sharding) for k, v in batch.items()}
+
+
+class ClientDataLoader:
+    """Per-client minibatch iterator over a partition of a host dataset."""
+
+    def __init__(self, data: Dict[str, np.ndarray], idx: np.ndarray, batch_size: int, seed: int = 0):
+        self.data = data
+        self.idx = idx
+        self.bs = batch_size
+        self.rng = np.random.RandomState(seed)
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        while True:
+            sel = self.rng.choice(self.idx, self.bs, replace=len(self.idx) < self.bs)
+            yield {k: jnp.asarray(v[sel]) for k, v in self.data.items()}
+
+    def stacked(self, n_steps: int) -> Dict[str, jnp.ndarray]:
+        it = iter(self)
+        batches = [next(it) for _ in range(n_steps)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)

@@ -1,0 +1,66 @@
+"""Synthetic, learnable datasets (repro band 2/5: CIFAR is simulated).
+
+``make_classification`` builds a CIFAR-like multi-class problem from a random
+teacher MLP: inputs x ~ N(0, I_d); labels = argmax(teacher(x)). A trained
+student can reach high accuracy, so federated-method *orderings* (the paper's
+claim) are measurable; absolute CIFAR numbers are out of scope on CPU.
+
+``make_lm_stream`` builds deterministic token streams (Zipf unigrams with a
+planted bigram structure) for the transformer examples.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def make_classification(
+    n_samples: int = 4096,
+    dim: int = 32,
+    n_classes: int = 10,
+    teacher_hidden: int = 64,
+    seed: int = 0,
+    label_noise: float = 0.0,
+) -> Dict[str, np.ndarray]:
+    rng = np.random.RandomState(seed)
+    W1 = rng.normal(size=(dim, teacher_hidden)) / np.sqrt(dim)
+    W2 = rng.normal(size=(teacher_hidden, n_classes)) / np.sqrt(teacher_hidden)
+    x = rng.normal(size=(n_samples, dim)).astype(np.float32)
+    h = np.tanh(x @ W1)
+    logits = h @ W2
+    y = np.argmax(logits, axis=-1).astype(np.int32)
+    if label_noise > 0:
+        flip = rng.rand(n_samples) < label_noise
+        y[flip] = rng.randint(0, n_classes, flip.sum())
+    return {"x": x, "y": y}
+
+
+def make_lm_stream(
+    n_tokens: int = 1 << 16,
+    vocab: int = 512,
+    seed: int = 0,
+    zipf_a: float = 1.2,
+) -> np.ndarray:
+    """Zipf unigrams + deterministic planted bigram successor table."""
+    rng = np.random.RandomState(seed)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = ranks ** (-zipf_a)
+    probs /= probs.sum()
+    successor = rng.permutation(vocab)  # planted structure: 70% t -> succ[t]
+    toks = np.empty(n_tokens, np.int32)
+    toks[0] = rng.choice(vocab, p=probs)
+    u = rng.rand(n_tokens)
+    draws = rng.choice(vocab, size=n_tokens, p=probs)
+    for t in range(1, n_tokens):
+        toks[t] = successor[toks[t - 1]] if u[t] < 0.7 else draws[t]
+    return toks
+
+
+def lm_batches(stream: np.ndarray, batch: int, seq: int, seed: int = 0):
+    """Yield {"tokens": (B, S)} windows forever."""
+    rng = np.random.RandomState(seed)
+    n = len(stream) - seq - 1
+    while True:
+        starts = rng.randint(0, n, size=batch)
+        yield {"tokens": np.stack([stream[s : s + seq] for s in starts])}

@@ -1,0 +1,18 @@
+from repro.fed.baselines import fedavg_aggregate, fednova_aggregate, fedprox_aggregate
+from repro.fed.client import (
+    ClientOutput,
+    HeteroConfig,
+    fedecado_client_sim,
+    fedprox_client,
+    sgd_client,
+)
+from repro.fed.partition import data_fractions, dirichlet_partition, iid_partition
+from repro.fed.server import ALGORITHMS, FedSim, FedSimConfig
+
+__all__ = [
+    "FedSim", "FedSimConfig", "ALGORITHMS",
+    "HeteroConfig", "ClientOutput",
+    "fedecado_client_sim", "sgd_client", "fedprox_client",
+    "fedavg_aggregate", "fednova_aggregate", "fedprox_aggregate",
+    "dirichlet_partition", "iid_partition", "data_fractions",
+]

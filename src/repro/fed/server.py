@@ -1,0 +1,263 @@
+"""Federated-learning simulation driver.
+
+Runs any of {fedecado, ecado, fedavg, fedprox, fednova} over a dataset
+partitioned across n clients with configurable participation, non-IID
+Dirichlet skew, and heterogeneous computation (lr_i, e_i per eqs. 43-44).
+Used by the paper-reproduction experiments, examples/ and benchmarks/.
+
+Data fractions p_i are normalized as p̂_i = n·p_i (mean 1) so local update
+magnitudes stay on the same timescale as the unweighted baselines; this is a
+global rescale of the objective (recorded in DESIGN.md) and leaves the
+optimum of Σ p_i f_i unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ConsensusConfig,
+    init_server_state,
+    make_gain,
+    hutchinson_scalar,
+    server_round,
+    set_gains,
+)
+from repro.fed.baselines import fedavg_aggregate, fednova_aggregate
+from repro.fed.client import HeteroConfig, fedecado_client_sim, fedprox_client, sgd_client
+from repro.fed.partition import data_fractions
+
+Pytree = Any
+
+ALGORITHMS = ("fedecado", "ecado", "fedavg", "fedprox", "fednova")
+
+
+@dataclasses.dataclass
+class FedSimConfig:
+    algorithm: str = "fedecado"
+    n_clients: int = 100
+    participation: float = 0.1
+    rounds: int = 100
+    batch_size: int = 32
+    steps_per_epoch: int = 5
+    # heterogeneity: if None, every client uses (lr_fixed, epochs_fixed)
+    hetero: Optional[HeteroConfig] = None
+    lr_fixed: float = 5e-3
+    epochs_fixed: int = 2
+    mu: float = 0.1                     # FedProx proximal weight
+    consensus: ConsensusConfig = dataclasses.field(default_factory=ConsensusConfig)
+    dt_ref: float = 0.05                # Δt_ref in Ḡ_th = 1/Δt_ref + p·h̄
+    hutchinson_probes: int = 2
+    # "scalar": Ḡ_th^i is one gain per client (tr(H)/n estimate);
+    # "diag": per-parameter gains via the Hutchinson diagonal (eq. 42 with a
+    # diagonal H̄ — the Schur solve stays exact elementwise)
+    sensitivity: str = "scalar"
+    # paper §4.2: the sensitivity model "can be periodically updated";
+    # 0 = precompute once before training (the paper's §5 setting)
+    gain_update_every: int = 0
+    seed: int = 0
+    eval_every: int = 5
+
+
+class FedSim:
+    """Simulates federated training of a (small) model on CPU."""
+
+    def __init__(
+        self,
+        loss_fn: Callable,                 # loss_fn(params, batch) -> scalar
+        params0: Pytree,
+        data: Dict[str, np.ndarray],       # {"x": (N, ...), "y": (N,)}
+        partitions: Sequence[np.ndarray],  # per-client index arrays
+        cfg: FedSimConfig,
+        eval_fn: Optional[Callable] = None,  # eval_fn(params) -> dict metrics
+    ):
+        assert cfg.algorithm in ALGORITHMS, cfg.algorithm
+        self.loss_fn = loss_fn
+        self.cfg = cfg
+        self.data = data
+        self.partitions = list(partitions)
+        self.n = cfg.n_clients
+        assert len(self.partitions) == self.n
+        self.eval_fn = eval_fn
+        self.rng = np.random.RandomState(cfg.seed)
+
+        p = data_fractions(self.partitions)
+        self.p_hat = (p * self.n).astype(np.float32)   # mean-1 normalization
+
+        self.params = jax.tree.map(lambda l: l.astype(jnp.float32), params0)
+        self.state = None
+        if cfg.algorithm in ("fedecado", "ecado"):
+            self.state = init_server_state(self.params, self.n, cfg.consensus.dt_init)
+            self._install_gains()
+
+        self._jit_cache: Dict[Any, Callable] = {}
+        self._round_fn = jax.jit(
+            partial(server_round, ccfg=cfg.consensus), static_argnums=()
+        )
+
+    # ------------------------------------------------------------------
+    def _install_gains(self, round_idx: int = 0):
+        """(Re)compute Ḡ_th per client (paper §4.2, eq. 42). By default
+        precomputed once before training (the paper's §5 setting); with
+        ``gain_update_every > 0`` re-estimated periodically."""
+        cfg = self.cfg
+        if cfg.algorithm == "ecado":
+            g = jnp.ones((self.n,), jnp.float32) / (1.0 / cfg.dt_ref)
+            self.state = set_gains(self.state, g)
+            return
+        key = jax.random.PRNGKey(cfg.seed + 17 + round_idx)
+        params = self.state.x_c if round_idx else self.params
+
+        if cfg.sensitivity == "diag":
+            from repro.core import hutchinson_diag
+
+            hfn = jax.jit(
+                lambda p, b, k: hutchinson_diag(
+                    self.loss_fn, p, b, k, cfg.hutchinson_probes
+                )
+            )
+            g_rows = []
+            for i in range(self.n):
+                batch = self._client_batch(i, cfg.batch_size)
+                diag = hfn(params, batch, jax.random.fold_in(key, i))
+                G_i = jax.tree.map(
+                    lambda h, p_i=float(self.p_hat[i]): 1.0 / cfg.dt_ref
+                    + p_i * jnp.maximum(h, 0.0),
+                    diag,
+                )
+                g_rows.append(jax.tree.map(lambda g: 1.0 / g, G_i))
+            g_inv = jax.tree.map(lambda *rows: jnp.stack(rows), *g_rows)
+            self.state = set_gains(self.state, g_inv)
+            return
+
+        h_bars = np.zeros((self.n,), np.float32)
+        hfn = jax.jit(
+            lambda p, b, k: hutchinson_scalar(
+                self.loss_fn, p, b, k, cfg.hutchinson_probes
+            )
+        )
+        for i in range(self.n):
+            batch = self._client_batch(i, cfg.batch_size)
+            h = hfn(params, batch, jax.random.fold_in(key, i))
+            h_bars[i] = float(np.maximum(h, 0.0))
+        G = 1.0 / cfg.dt_ref + self.p_hat * h_bars          # eq. 42
+        self.state = set_gains(self.state, jnp.asarray(1.0 / G, jnp.float32))
+        self.h_bars = h_bars
+
+    # ------------------------------------------------------------------
+    def _client_batch(self, i: int, bs: int):
+        idx = self.partitions[i]
+        sel = self.rng.choice(idx, size=min(bs, len(idx)), replace=len(idx) < bs)
+        return {k: jnp.asarray(v[sel]) for k, v in self.data.items()}
+
+    def _client_batches(self, i: int, n_steps: int):
+        bs = self.cfg.batch_size
+        out = [self._client_batch(i, bs) for _ in range(n_steps)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *out)
+
+    # ------------------------------------------------------------------
+    def _client_fn(self, kind: str, n_steps: int) -> Callable:
+        key = (kind, n_steps)
+        if key not in self._jit_cache:
+            if kind == "fedecado":
+                fn = jax.jit(
+                    lambda x0, I, batches, lr, p: fedecado_client_sim(
+                        self.loss_fn, x0, I, batches, lr, p
+                    )
+                )
+            elif kind == "fedprox":
+                fn = jax.jit(
+                    lambda x0, batches, lr, mu: fedprox_client(
+                        self.loss_fn, x0, batches, lr, mu
+                    )
+                )
+            else:  # sgd
+                fn = jax.jit(
+                    lambda x0, batches, lr: sgd_client(self.loss_fn, x0, batches, lr)
+                )
+            self._jit_cache[key] = fn
+        return self._jit_cache[key]
+
+    # ------------------------------------------------------------------
+    def run(self, rounds: Optional[int] = None) -> Dict[str, list]:
+        cfg = self.cfg
+        rounds = rounds or cfg.rounds
+        A = max(1, int(round(cfg.participation * self.n)))
+        if cfg.algorithm == "ecado":
+            A = self.n  # full participation by definition
+        history: Dict[str, list] = {"round": [], "loss": [], "metrics": []}
+
+        for rnd in range(rounds):
+            if (
+                cfg.gain_update_every
+                and rnd
+                and rnd % cfg.gain_update_every == 0
+                and cfg.algorithm == "fedecado"
+            ):
+                self._install_gains(round_idx=rnd)
+            idx = np.sort(self.rng.choice(self.n, A, replace=False))
+            if cfg.hetero is not None and cfg.algorithm != "ecado":
+                lrs, eps = cfg.hetero.sample(self.rng, A)
+            else:
+                lrs = np.full(A, cfg.lr_fixed, np.float32)
+                eps = np.full(A, cfg.epochs_fixed, np.int64)
+
+            x_news, Ts, taus, losses = [], [], [], []
+            x_c = self.state.x_c if self.state is not None else self.params
+            for j, i in enumerate(idx):
+                n_steps = int(eps[j]) * cfg.steps_per_epoch
+                batches = self._client_batches(int(i), n_steps)
+                if cfg.algorithm in ("fedecado", "ecado"):
+                    I_i = jax.tree.map(lambda l: l[int(i)], self.state.I)
+                    p_i = float(self.p_hat[int(i)]) if cfg.algorithm == "fedecado" else 1.0
+                    out = self._client_fn("fedecado", n_steps)(
+                        x_c, I_i, batches, float(lrs[j]), p_i
+                    )
+                    x_news.append(out.x_new)
+                    Ts.append(float(out.T))
+                    losses.append(float(out.loss))
+                elif cfg.algorithm == "fedprox":
+                    x_new, loss = self._client_fn("fedprox", n_steps)(
+                        x_c, batches, float(lrs[j]), cfg.mu
+                    )
+                    x_news.append(x_new)
+                    losses.append(float(loss))
+                else:  # fedavg, fednova
+                    x_new, loss = self._client_fn("sgd", n_steps)(
+                        x_c, batches, float(lrs[j])
+                    )
+                    x_news.append(x_new)
+                    losses.append(float(loss))
+                taus.append(n_steps)
+
+            x_new_a = jax.tree.map(lambda *xs: jnp.stack(xs), *x_news)
+            p_a = jnp.asarray(self.p_hat[idx], jnp.float32)
+
+            if cfg.algorithm in ("fedecado", "ecado"):
+                self.state, _stats = self._round_fn(
+                    self.state,
+                    x_new_a,
+                    jnp.asarray(Ts, jnp.float32),
+                    jnp.asarray(idx, jnp.int32),
+                )
+            elif cfg.algorithm == "fednova":
+                self.params = fednova_aggregate(
+                    self.params, x_new_a, p_a, jnp.asarray(taus, jnp.float32)
+                )
+            else:  # fedavg / fedprox
+                self.params = fedavg_aggregate(self.params, x_new_a, p_a)
+
+            history["round"].append(rnd)
+            history["loss"].append(float(np.mean(losses)))
+            if self.eval_fn is not None and (rnd % cfg.eval_every == 0 or rnd == rounds - 1):
+                m = self.eval_fn(self.current_params())
+                history["metrics"].append((rnd, m))
+        return history
+
+    def current_params(self) -> Pytree:
+        return self.state.x_c if self.state is not None else self.params

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the paper's perf-critical hot spots.
+
+consensus.py  — fused Γ + BE Schur solve + LTE (the FedECADO server step)
+gamma.py      — standalone Γ interpolation/extrapolation
+hutchinson.py — fused sensitivity probe accumulate (v ⊙ Hv + trace)
+ssm_scan.py   — VMEM-resident selective scan (Mamba/jamba hot loop)
+ops.py        — jit'd pytree wrappers (kernel ↔ ref dispatch)
+ref.py        — pure-jnp oracles (tests assert allclose in interpret mode)
+"""
+from repro.kernels.ops import (
+    fused_consensus_step,
+    gamma_op,
+    hutchinson_op,
+    ravel_stacked,
+    ravel_tree,
+    unravel_stacked,
+    unravel_tree,
+)
+
+__all__ = [
+    "fused_consensus_step", "gamma_op", "hutchinson_op",
+    "ravel_tree", "unravel_tree", "ravel_stacked", "unravel_stacked",
+]

@@ -1,0 +1,40 @@
+"""Standalone Γ interpolation/extrapolation kernel (Pallas TPU).
+
+out[a, :] = (x_c + (x_new[a] − x_c)·(τ/T_a)) · mask[a] — one fused read/write
+pass per tile (the jnp version materializes the broadcast difference first).
+Used when the server evaluates client states at probe time points outside the
+BE solve (e.g. diagnostics, Γ-based drift metrics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_D = 1024
+
+
+def _gamma_kernel(scal_ref, T_ref, mask_ref, xc_ref, xnew_ref, out_ref):
+    tau = scal_ref[0]
+    frac = (tau / jnp.maximum(T_ref[:], 1e-12))[:, None]
+    xc = xc_ref[:]
+    out_ref[:, :] = (xc[None] + (xnew_ref[:, :] - xc[None]) * frac) * mask_ref[:][:, None]
+
+
+def gamma_call(x_c, x_new, T, tau, mask, *, interpret: bool = True, tile_d: int = TILE_D):
+    A, D = x_new.shape
+    assert D % tile_d == 0, (D, tile_d)
+    scal = jnp.stack([jnp.asarray(tau, jnp.float32), jnp.zeros((), jnp.float32)])
+    full = lambda s: pl.BlockSpec(s, lambda i: (0,) * len(s))
+    return pl.pallas_call(
+        _gamma_kernel,
+        grid=(D // tile_d,),
+        in_specs=[
+            full((2,)), full((A,)), full((A,)),
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
+            pl.BlockSpec((A, tile_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((A, tile_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((A, D), jnp.float32),
+        interpret=interpret,
+    )(scal, T, mask, x_c, x_new)

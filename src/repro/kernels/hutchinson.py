@@ -1,0 +1,40 @@
+"""Fused Hutchinson probe accumulation kernel (Pallas TPU).
+
+Given a Rademacher probe v and its HVP hv (both flattened), fuses the
+diagonal accumulate acc += v⊙hv with the per-tile partial trace Σ v⊙hv in a
+single read pass (the jnp version reads v/hv twice: once for the product,
+once for the reduction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_D = 1024
+
+
+def _hutch_kernel(v_ref, hv_ref, acc_ref, acc_out, tr_out):
+    prod = v_ref[:] * hv_ref[:]
+    acc_out[:] = acc_ref[:] + prod
+    tr_out[0] = jnp.sum(prod)
+
+
+def hutchinson_call(v, hv, acc, *, interpret: bool = True, tile_d: int = TILE_D):
+    """Returns (acc + v*hv, trace_partial_sums (n_tiles,))."""
+    (D,) = v.shape
+    assert D % tile_d == 0, (D, tile_d)
+    n_tiles = D // tile_d
+    tiled = pl.BlockSpec((tile_d,), lambda i: (i,))
+    acc_new, tr = pl.pallas_call(
+        _hutch_kernel,
+        grid=(n_tiles,),
+        in_specs=[tiled, tiled, tiled],
+        out_specs=[tiled, pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((D,), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(v, hv, acc)
+    return acc_new, tr

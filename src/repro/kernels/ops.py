@@ -1,0 +1,166 @@
+"""jit'd dispatch wrappers: pytree ↔ flat (A, D) raveling, padding to kernel
+tiles, and kernel-vs-reference selection.
+
+``interpret`` is chosen from the backend: on CPU the Pallas kernels execute
+in interpret mode (Python evaluation of the kernel body — the correctness
+target for this container); on TPU they compile for real.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.consensus import TILE_D, consensus_call
+from repro.kernels.gamma import gamma_call
+from repro.kernels.hutchinson import hutchinson_call
+
+Pytree = Any
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# pytree raveling
+# ---------------------------------------------------------------------------
+
+
+def ravel_tree(tree: Pytree, tile: int = TILE_D) -> Tuple[jax.Array, Any]:
+    """Flatten + concat leaves (fp32) and zero-pad D to a tile multiple.
+
+    Returns (flat (D,), meta) where meta unravels back.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+    D = flat.shape[0]
+    pad = (-D) % tile
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, (treedef, shapes, sizes, D)
+
+
+def unravel_tree(flat: jax.Array, meta) -> Pytree:
+    treedef, shapes, sizes, D = meta
+    flat = flat[:D]
+    out, off = [], 0
+    for shape, size in zip(shapes, sizes):
+        out.append(flat[off : off + size].reshape(shape))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def ravel_stacked(tree: Pytree, tile: int = TILE_D) -> Tuple[jax.Array, Any]:
+    """Leaves (A, ...) -> (A, D) with the same layout as ravel_tree."""
+    leaves, treedef = jax.tree.flatten(tree)
+    A = leaves[0].shape[0]
+    shapes = [l.shape[1:] for l in leaves]
+    sizes = [l[0].size for l in leaves]
+    flat = jnp.concatenate(
+        [l.astype(jnp.float32).reshape(A, -1) for l in leaves], axis=1
+    )
+    D = flat.shape[1]
+    pad = (-D) % tile
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat, (treedef, shapes, sizes, D)
+
+
+def unravel_stacked(flat: jax.Array, meta) -> Pytree:
+    treedef, shapes, sizes, D = meta
+    A = flat.shape[0]
+    flat = flat[:, :D]
+    out, off = [], 0
+    for shape, size in zip(shapes, sizes):
+        out.append(flat[:, off : off + size].reshape((A,) + shape))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# fused consensus step over pytrees
+# ---------------------------------------------------------------------------
+
+
+def fused_consensus_step(
+    x_c: Pytree,
+    S_frozen: Pytree,
+    I_a: Pytree,
+    J_a: Pytree,
+    x_new_a: Pytree,
+    T: jax.Array,
+    g_inv: jax.Array,
+    dt: jax.Array,
+    tau: jax.Array,
+    L: float,
+    use_kernel: bool = True,
+):
+    """Γ + BE Schur + LTE in one fused pass. Scalar gains only (g_inv (A,)).
+
+    Returns (x_c_new tree, I_new tree, eps scalar = max(eps_c, eps_l)).
+    """
+    xc_flat, meta = ravel_tree(x_c)
+    sf_flat, _ = ravel_tree(S_frozen)
+    I_flat, smeta = ravel_stacked(I_a)
+    J_flat, _ = ravel_stacked(J_a)
+    xn_flat, _ = ravel_stacked(x_new_a)
+    A = I_flat.shape[0]
+    mask = jnp.ones((A,), jnp.float32)
+
+    if use_kernel:
+        xc_new, I_new, eps_c, eps_l = consensus_call(
+            xc_flat, sf_flat, I_flat, J_flat, xn_flat,
+            T.astype(jnp.float32), g_inv.astype(jnp.float32), mask,
+            jnp.asarray(dt, jnp.float32), jnp.asarray(tau, jnp.float32), float(L),
+            interpret=_interpret(),
+        )
+    else:
+        xc_new, I_new, eps_c, eps_l = _consensus_ref_call(
+            xc_flat, sf_flat, I_flat, J_flat, xn_flat,
+            T.astype(jnp.float32), g_inv.astype(jnp.float32), mask,
+            jnp.asarray(dt, jnp.float32), jnp.asarray(tau, jnp.float32), float(L),
+        )
+    return (
+        unravel_tree(xc_new, meta),
+        unravel_stacked(I_new, smeta),
+        jnp.maximum(eps_c, eps_l),
+    )
+
+
+def _consensus_ref_call(xc, sf, I, J, xn, T, g_inv, mask, dt, tau, L, **kw):
+    return ref.consensus_ref(xc, sf, I, J, xn, T, g_inv, mask, dt, tau, L)
+
+
+def gamma_op(x_c: Pytree, x_new_a: Pytree, T: jax.Array, tau, use_kernel: bool = True):
+    """Γ over pytrees via the kernel: returns stacked tree (A, ...)."""
+    xc_flat, _ = ravel_tree(x_c)
+    xn_flat, smeta = ravel_stacked(x_new_a)
+    A = xn_flat.shape[0]
+    mask = jnp.ones((A,), jnp.float32)
+    if use_kernel:
+        out = gamma_call(
+            xc_flat, xn_flat, T.astype(jnp.float32), jnp.asarray(tau, jnp.float32),
+            mask, interpret=_interpret(),
+        )
+    else:
+        out = ref.gamma_ref(xc_flat, xn_flat, T, jnp.asarray(tau, jnp.float32), mask)
+    return unravel_stacked(out, smeta)
+
+
+def hutchinson_op(v: Pytree, hv: Pytree, acc: Pytree, use_kernel: bool = True):
+    """Fused diag accumulate + trace. Returns (acc_new tree, trace scalar)."""
+    v_flat, meta = ravel_tree(v)
+    hv_flat, _ = ravel_tree(hv)
+    acc_flat, _ = ravel_tree(acc)
+    if use_kernel:
+        acc_new, tr = hutchinson_call(v_flat, hv_flat, acc_flat, interpret=_interpret())
+        trace = jnp.sum(tr)
+    else:
+        acc_new, trace = ref.hutchinson_ref(v_flat, hv_flat, acc_flat)
+    return unravel_tree(acc_new, meta), trace

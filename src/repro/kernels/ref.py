@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these).
+
+Shapes (flattened parameter dimension D, cohort A):
+  x_c, S_frozen:     (D,)
+  I, J, x_new:       (A, D)
+  T, g_inv, mask:    (A,)   mask: 1.0 = real client row, 0.0 = padding
+  dt, tau:           scalars;  L: python float
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gamma_ref(x_c, x_new, T, tau, mask):
+    """Γ with round-start state = broadcast central state: (A, D)."""
+    frac = (tau / jnp.maximum(T, 1e-12))[:, None]
+    return (x_c[None] + (x_new - x_c[None]) * frac) * mask[:, None]
+
+
+def consensus_ref(x_c, S_frozen, I, J, x_new, T, g_inv, mask, dt, tau, L):
+    """Fused Γ + BE arrowhead Schur solve + LTE terms.
+
+    Returns (x_c_new (D,), I_new (A, D), eps_c scalar, eps_l scalar) where
+    eps are the *unscaled-by-(dt/2)* raw max-abs terms scaled inside, i.e.
+    already multiplied by dt/2 (paper eqs. 29-30).
+    """
+    r = dt / L
+    m = mask[:, None]
+    frac_new = ((tau + dt) / jnp.maximum(T, 1e-12))[:, None]
+    frac_old = (tau / jnp.maximum(T, 1e-12))[:, None]
+    gamma_new = x_c[None] + (x_new - x_c[None]) * frac_new
+    gamma_old = x_c[None] + (x_new - x_c[None]) * frac_old
+
+    gi = g_inv[:, None]
+    d = 1.0 + r * gi
+    u = (I + r * (gamma_new + J * gi)) / d * m
+    w = (r / d) * m
+    den = 1.0 + dt * jnp.sum(w)
+    num = x_c + dt * (jnp.sum(u, axis=0) + S_frozen)
+    x_c_new = num / den
+    I_new = (u - w * x_c_new[None]) * m
+
+    rhs_old = (gamma_old - (I - J) * gi - x_c[None]) / L * m
+    rhs_new = (gamma_new - (I_new - J) * gi - x_c_new[None]) / L * m
+    eps_l = (dt / 2.0) * jnp.max(jnp.abs(rhs_new - rhs_old))
+    eps_c = (dt / 2.0) * jnp.max(jnp.abs(jnp.sum((I_new - I) * m, axis=0)))
+    return x_c_new, I_new, eps_c, eps_l
+
+
+def hutchinson_ref(v, hv, acc):
+    """Fused probe accumulate: acc += v*hv; partial trace = sum(v*hv)."""
+    prod = v * hv
+    return acc + prod, jnp.sum(prod)
+
+
+def ssm_scan_ref(dt, B_t, C_t, u, a_log, d_skip, h0):
+    """Selective-scan oracle (lax.scan). Shapes as kernels/ssm_scan.py."""
+    import jax
+
+    A = -jnp.exp(a_log)                                    # (inner, N)
+
+    def step(h, xs):
+        dt_t, b_t, c_t, u_t = xs                           # (B,inner),(B,N)...
+        dA = jnp.exp(dt_t[..., None] * A)
+        h = h * dA + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bin,bn->bi", h, c_t) + d_skip * u_t
+        return h, y
+
+    xs = (
+        dt.transpose(1, 0, 2), B_t.transpose(1, 0, 2),
+        C_t.transpose(1, 0, 2), u.transpose(1, 0, 2),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h

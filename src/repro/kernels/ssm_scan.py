@@ -1,0 +1,87 @@
+"""Pallas selective-scan (Mamba SSM) kernel — TPU target.
+
+The XLA lowering of the Mamba recurrence streams the (B, inner, N) state and
+per-step dA/dBu intermediates through HBM every token (jamba train_4k memory
+term: 225 s, §Roofline). This kernel is the TPU analogue of Mamba's fused
+CUDA kernel insight: hold the state block in VMEM for the whole sequence and
+write only y back.
+
+Blocking: grid over (batch, inner-tiles). Each instance scans the full
+sequence with ``fori_loop``, carrying h (TILE_I, N) in VMEM scratch.
+VMEM per instance: dt/u/y (S, TILE_I) + B/C (S, N) fp32 ≈ 3·S·TILE_I·4
+(S=4096, TILE_I=128 -> ~6.3 MiB) — fits the ~16 MiB budget.
+HBM traffic/layer: read dt,B,C,u + write y ≈ 5·S·inner·4 bytes vs
+~2·S·inner·N·4 for the streamed scan: a ~N/2.5 ≈ 6.4x cut for N=16, and the
+per-step dA/dBu materializations disappear entirely.
+
+Validated in interpret mode against ref.ssm_scan_ref (the lax.scan oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_I = 128
+
+
+def _ssm_scan_kernel(dt_ref, b_ref, c_ref, u_ref, a_ref, d_ref, h0_ref,
+                     y_ref, hout_ref):
+    """One (batch, inner-tile) instance.
+
+    dt/u/y: (S, TILE_I); b/c: (S, N); a: (TILE_I, N); d: (TILE_I,);
+    h0/hout: (TILE_I, N).
+    """
+    S = dt_ref.shape[1]
+    A = -jnp.exp(a_ref[:, :])                     # (ti, N)
+    d_skip = d_ref[:]
+
+    def step(t, h):
+        dt_t = dt_ref[0, t, :]                    # (ti,)
+        u_t = u_ref[0, t, :]
+        b_t = b_ref[0, t, :]                      # (N,)
+        c_t = c_ref[0, t, :]
+        dA = jnp.exp(dt_t[:, None] * A)           # (ti, N)
+        h = h * dA + (dt_t * u_t)[:, None] * b_t[None, :]
+        y_ref[0, t, :] = jnp.sum(h * c_t[None, :], axis=1) + d_skip * u_t
+        return h
+
+    h = jax.lax.fori_loop(0, S, step, h0_ref[0, :, :])
+    hout_ref[0, :, :] = h
+
+
+def ssm_scan_call(dt, B_t, C_t, u, a_log, d_skip, h0, *, interpret: bool = True,
+                  tile_i: int = TILE_I):
+    """dt, u: (B, S, inner); B_t, C_t: (B, S, N); a_log: (inner, N);
+    d_skip: (inner,); h0: (B, inner, N).
+    Returns (y (B, S, inner), h_final (B, inner, N)). fp32 throughout.
+    """
+    Bsz, S, inner = dt.shape
+    N = B_t.shape[-1]
+    assert inner % tile_i == 0, (inner, tile_i)
+    n_tiles = inner // tile_i
+
+    grid = (Bsz, n_tiles)
+    y, h_final = pl.pallas_call(
+        _ssm_scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S, tile_i), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, S, N), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, S, N), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, S, tile_i), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((tile_i, N), lambda b, i: (i, 0)),
+            pl.BlockSpec((tile_i,), lambda b, i: (i,)),
+            pl.BlockSpec((1, tile_i, N), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, tile_i), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, tile_i, N), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, inner), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, inner, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dt, B_t, C_t, u, a_log, d_skip, h0)
+    return y, h_final

@@ -1,0 +1,5 @@
+from repro.launch.mesh import batch_axes, data_axis_size, make_production_mesh, model_axis_size
+
+__all__ = [
+    "make_production_mesh", "batch_axes", "model_axis_size", "data_axis_size",
+]

@@ -1,0 +1,426 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+# The dry-run (and only the dry-run) needs 512 placeholder host devices to
+# build the production meshes. Smoke tests / benches see 1 device.
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_SHAPES, ARCH_IDS, get_config, get_shape
+from repro.core import ConsensusConfig, init_server_state
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.roofline import (
+    model_flops,
+    parse_collective_bytes,
+    roofline_terms,
+)
+from repro.launch.shardings import (
+    batch_specs,
+    cache_specs,
+    fsdp_batch_axes,
+    fsdp_param_specs,
+    param_specs,
+    stacked_specs,
+    use_fsdp,
+)
+from repro.launch.steps import (
+    make_client_train_step,
+    make_consensus_step,
+    make_decode_step,
+    make_prefill_step,
+)
+from repro.models import batch_spec, init_cache, init_params
+
+DTYPE = jnp.bfloat16
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree
+    )
+
+
+def _named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _mem_analysis(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        live = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+        out["peak_bytes_per_device_est"] = int(live)
+    return out
+
+
+def build_specs(arch: str, shape_name: str, mesh):
+    """(step_fn, arg ShapeDtypeStructs, in_shardings, donate) for a combo."""
+    from repro.models import policy as policy_mod
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(partial(init_params, cfg=cfg, dtype=DTYPE), key)
+    fsdp = use_fsdp(cfg, shape.global_batch, shape.kind, mesh)
+    if fsdp:
+        p_specs = fsdp_param_specs(params_shape, mesh)
+        b_axes = fsdp_batch_axes(mesh)
+    else:
+        p_specs = param_specs(params_shape, mesh)
+        b_axes = None
+
+    # sharding-policy context BEFORE any tracing of the step:
+    # pin the residual stream's batch sharding at block boundaries, and
+    # select the expert-local shard_map MoE dispatch on TP meshes (H2)
+    policy_name = "fsdp" if fsdp else "tp"
+    if shape.kind in ("train", "prefill"):
+        axes = tuple(mesh.axis_names) if fsdp else batch_axes(mesh)
+        if shape.global_batch % int(np.prod([mesh.shape[a] for a in axes])) == 0:
+            policy_mod.set_activation_spec(P(axes, None, None))
+        else:
+            policy_mod.set_activation_spec(None)
+    else:
+        policy_mod.set_activation_spec(None)
+    if cfg.has_moe and not fsdp:
+        policy_mod.set_moe_shard((mesh, "model"))
+    else:
+        policy_mod.set_moe_shard(None)
+    # H4: zero-padded attention heads for awkward MHA head counts on TP
+    # full-sequence shapes (qwen 40H -> 48): shards the O(S^2) attention
+    a = cfg.attention
+    M = mesh.shape["model"]
+    if (
+        not fsdp and a is not None and shape.kind in ("train", "prefill")
+        and a.num_heads == a.num_kv_heads and a.num_heads % M != 0
+        and -(-a.num_heads // M) * M <= a.num_heads * 1.25
+    ):
+        vH = -(-a.num_heads // M) * M
+        ba_attn = batch_axes(mesh)
+        policy_mod.set_head_pad((vH, P(ba_attn, None, "model", None)))
+    else:
+        policy_mod.set_head_pad(None)
+
+    if shape.kind == "train":
+        bspec = batch_spec(cfg, shape.global_batch, shape.seq_len, DTYPE)
+        b_specs = batch_specs(cfg, bspec, mesh, axes=b_axes)
+        step = make_client_train_step(cfg)
+        args = (
+            params_shape,
+            params_shape,                      # I_i, flow variables
+            bspec,
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        in_sh = (
+            _named(p_specs, mesh), _named(p_specs, mesh),
+            _named(b_specs, mesh), NamedSharding(mesh, P()),
+        )
+        out_sh = (NamedSharding(mesh, P()), _named(p_specs, mesh))
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        bspec = batch_spec(cfg, shape.global_batch, shape.seq_len, DTYPE)
+        b_specs = batch_specs(cfg, bspec, mesh, axes=b_axes)
+        step = make_prefill_step(cfg, max_len=shape.seq_len)
+        # derive the cache structure from the step itself (whisper prefill
+        # includes the cross-attention K/V in its output cache); trace under
+        # the mesh so sharding constraints in the model resolve
+        with mesh:
+            cache_shape = jax.eval_shape(step, params_shape, bspec)[1]
+        c_specs = cache_specs(cache_shape, cfg, mesh)
+        args = (params_shape, bspec)
+        in_sh = (_named(p_specs, mesh), _named(b_specs, mesh))
+        out_sh = (
+            NamedSharding(mesh, P(batch_axes(mesh), None)),
+            _named(c_specs, mesh),
+        )
+        donate = ()
+    else:  # decode shapes always use the tensor-parallel policy
+        fsdp = False
+        long_mode = shape.name == "long_500k"
+        cache_builder = partial(
+            init_cache, cfg, shape.global_batch, shape.seq_len, DTYPE,
+            long_mode=long_mode,
+        )
+        if cfg.encoder_layers:
+            cache_builder = partial(
+                init_cache, cfg, shape.global_batch, shape.seq_len, DTYPE,
+                enc_len=1536, long_mode=long_mode,
+            )
+        cache_shape = jax.eval_shape(cache_builder)
+        c_specs = cache_specs(cache_shape, cfg, mesh)
+        step = make_decode_step(cfg, max_len=shape.seq_len)
+        ba = batch_axes(mesh)
+        bsz = shape.global_batch
+        tok_spec = P(ba) if bsz % np.prod([mesh.shape[a] for a in ba]) == 0 else P(None)
+        args = (
+            params_shape,
+            cache_shape,
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        in_sh = (
+            _named(p_specs, mesh), _named(c_specs, mesh),
+            NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()),
+        )
+        out_sh = (
+            NamedSharding(mesh, tok_spec),
+            _named(c_specs, mesh),
+        )
+        donate = (1,)
+    return step, args, in_sh, out_sh, donate, ("fsdp" if fsdp else "tp")
+
+
+def build_consensus_specs(
+    arch: str, mesh, n_clients: int = 64, cohort: int = 16, flat: bool = False
+):
+    """Dry-run of the FedECADO server round itself (the paper's technique).
+
+    ``flat``: use the beyond-paper collective-free layout (shard the
+    parameter dim over all axes, client axis local) — EXPERIMENTS §Perf H3.
+    """
+    cfg = get_config(arch)
+    key = jax.random.PRNGKey(0)
+    # fp32 server master copies
+    params_shape = jax.eval_shape(
+        partial(init_params, cfg=cfg, dtype=jnp.float32), key
+    )
+    state_shape = jax.eval_shape(
+        partial(init_server_state, n_clients=n_clients), params_shape
+    )
+    if flat:
+        from repro.launch.shardings import consensus_flat_specs
+
+        p_specs = consensus_flat_specs(params_shape, mesh, stacked=False)
+        st_specs = consensus_flat_specs(params_shape, mesh, stacked=True)
+    else:
+        p_specs = param_specs(params_shape, mesh)
+        st_specs = stacked_specs(params_shape, mesh, count=n_clients)
+    ba = batch_axes(mesh)
+
+    state_specs = type(state_shape)(
+        x_c=p_specs,
+        I=st_specs,
+        g_inv=P(None),
+        t=P(), dt_last=P(), round=P(),
+    )
+    x_new_shape = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((cohort,) + l.shape, jnp.float32),
+        params_shape,
+    )
+    ccfg = ConsensusConfig(max_substeps=8, max_backtracks=2)
+    step = make_consensus_step(ccfg)
+    args = (
+        state_shape,
+        x_new_shape,
+        jax.ShapeDtypeStruct((cohort,), jnp.float32),
+        jax.ShapeDtypeStruct((cohort,), jnp.int32),
+    )
+    in_sh = (
+        _named(state_specs, mesh),
+        _named(st_specs if flat else stacked_specs(params_shape, mesh, count=cohort), mesh),
+        NamedSharding(mesh, P(None)),
+        NamedSharding(mesh, P(None)),
+    )
+    from repro.core.fedecado import RoundStats
+
+    scalar_sh = NamedSharding(mesh, P())
+    out_sh = (
+        _named(state_specs, mesh),
+        RoundStats(scalar_sh, scalar_sh, scalar_sh, scalar_sh, scalar_sh),
+    )
+    donate = (0,)
+    return step, args, in_sh, out_sh, donate
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    consensus: bool = False,
+    out_dir: Optional[str] = None,
+    hlo_dir: Optional[str] = None,
+    consensus_flat: bool = False,
+) -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (
+        "__consensus_flat" if (consensus and consensus_flat)
+        else "__consensus" if consensus else ""
+    )
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "consensus": consensus, "status": "ok",
+    }
+    if shape_name == "long_500k" and cfg.long_context == "skip" and not consensus:
+        rec["status"] = "skipped"
+        rec["reason"] = "pure full-attention architecture (DESIGN.md §5)"
+        _save(rec, tag, out_dir)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        from repro.models import policy as policy_mod
+
+        if consensus:
+            step, args, in_sh, out_sh, donate = build_consensus_specs(
+                arch, mesh, flat=consensus_flat
+            )
+            rec["policy"] = "flat" if consensus_flat else "tp"
+            policy_mod.set_activation_spec(None)
+            policy_mod.set_moe_shard(None)
+            policy_mod.set_head_pad(None)
+        else:
+            step, args, in_sh, out_sh, donate, policy = build_specs(arch, shape_name, mesh)
+            rec["policy"] = policy
+        with mesh:
+            jitted = jax.jit(
+                step, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=donate,
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        # trip-count-aware per-device costs (launch/hlocost.py); XLA's own
+        # cost_analysis counts while bodies once and is kept for reference
+        from repro.launch import hlocost
+
+        hc = hlocost.analyze(hlo)
+        flops = hc["flops"]
+        nbytes = hc["bytes"]
+        coll_total = hc["collective_bytes"]
+        mem = _mem_analysis(compiled)
+
+        rec.update(
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_device=flops,
+            bytes_per_device=nbytes,
+            collective_bytes={
+                k.replace("coll_", ""): v
+                for k, v in hc.items() if k.startswith("coll_")
+            } | {"total": coll_total},
+            unknown_trip_counts=hc.get("unknown_trip_counts", 0),
+            xla_once_counted={
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+            memory=mem,
+            roofline=roofline_terms(flops, nbytes, coll_total),
+        )
+        if not consensus:
+            n_chips = int(np.prod(list(mesh.shape.values())))
+            mf = model_flops(cfg, shape)
+            rec["model_flops_global"] = mf
+            rec["model_flops_per_device"] = mf / n_chips
+            rec["useful_flops_ratio"] = (
+                (mf / n_chips) / flops if flops else None
+            )
+        if hlo_dir:
+            os.makedirs(hlo_dir, exist_ok=True)
+            with open(os.path.join(hlo_dir, tag + ".hlo.txt"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    _save(rec, tag, out_dir)
+    return rec
+
+
+def _save(rec, tag, out_dir):
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", choices=list(ARCH_IDS) + ["all"], default="all")
+    ap.add_argument("--shape", choices=[s.name for s in ALL_SHAPES] + ["all"], default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--consensus", action="store_true",
+                    help="lower the FedECADO server round instead of the model step")
+    ap.add_argument("--consensus-flat", action="store_true",
+                    help="beyond-paper collective-free consensus layout (H3)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in ALL_SHAPES] if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                tag = f"{arch}__{shape}__{mesh_name}" + (
+                    "__consensus_flat" if (args.consensus and args.consensus_flat)
+                    else "__consensus" if args.consensus else ""
+                )
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                t0 = time.time()
+                rec = run_one(
+                    arch, shape, mp, consensus=args.consensus,
+                    out_dir=args.out, hlo_dir=args.hlo_dir,
+                    consensus_flat=args.consensus_flat,
+                )
+                dt = time.time() - t0
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (
+                        f"dom={r['dominant']} bound={r['bound_s']:.4f}s "
+                        f"flops={rec['flops_per_device']:.3g}"
+                    )
+                elif status == "error":
+                    extra = rec["error"][:160]
+                print(f"[{status}] {tag} ({dt:.1f}s) {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Serving driver: prefill a batch of prompts, then decode tokens.
+
+Runs a reduced ``--arch`` config on CPU; the decode step is the same
+``serve_step`` the dry-run lowers for decode_32k / long_500k.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import build_cross_cache, decode_step, init_params, make_batch
+from repro.models.transformer import _encode, prefill_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="smollm-360m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    batch = make_batch(key, cfg, args.batch, args.prompt_len)
+
+    t0 = time.time()
+    logits, cache = prefill_step(params, batch, cfg, max_len=args.max_len)
+    if cfg.encoder_layers:
+        cache["cross"] = build_cross_cache(
+            params, _encode(params, batch["frames"], cfg), cfg
+        )
+    print(f"prefill {args.batch}x{args.prompt_len}: {time.time()-t0:.2f}s")
+
+    step = jax.jit(
+        lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, max_len=args.max_len)
+    )
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(args.tokens):
+        logits, cache = step(params, cache, tok, jnp.int32(args.prompt_len + i))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out_tokens.append(tok)
+    dt = time.time() - t0
+    toks = jnp.stack(out_tokens, axis=1)
+    print(f"decoded {args.tokens} tokens/seq in {dt:.2f}s "
+          f"({args.tokens * args.batch / dt:.1f} tok/s total)")
+    print("sample:", toks[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

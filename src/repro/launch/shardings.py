@@ -1,0 +1,282 @@
+"""Sharding rules: map every parameter / batch / cache leaf to a
+PartitionSpec on the production mesh.
+
+Rules (DESIGN.md §5):
+  * block params carry a leading scan-period axis — never sharded
+  * attention projections: shard heads over "model" if divisible, else
+    head_dim, else replicate (smollm 15H -> head_dim; GQA kv=8 < 16 -> kv dh)
+  * FFN: d_ff over "model" (column-parallel up / row-parallel down)
+  * MoE: experts over "model" if divisible (jamba 16, moonshot 64,
+    arctic 128), else expert d_ff (mixtral 8e)
+  * embeddings / lm head: vocab over "model"
+  * batch (and the federated client cohort axis): over ("pod","data")
+  * FedECADO flow variables: client axis over ("pod","data"), inner dims
+    inherit the parameter spec
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import batch_axes, model_axis_size
+
+Pytree = Any
+
+# leaf-name -> candidate shard dims (negative, from the right), tried in order
+_RULES: Dict[Tuple[str, int], Tuple[int, ...]] = {
+    # (name, ndim-after-stripping-period-axis): candidate dims
+    # NEVER shard head_dim: it contracts inside the attention einsums and
+    # forces an all-reduce of (B,H,cq,ck) logits per chunk pair (measured:
+    # 27s collective term on smollm train_4k — EXPERIMENTS.md §Perf it.2).
+    ("embed", 2): (-2, -1),        # (V, d): vocab first
+    ("lm_head", 2): (-1,),         # (d, V)
+    ("wq", 3): (-2, -3),           # (d, H, dh): heads, else d (row-parallel)
+    ("wk", 3): (-2, -3),
+    ("wv", 3): (-2, -3),
+    ("bq", 2): (-2,),              # replicate when heads don't divide
+    ("bk", 2): (-2,),
+    ("bv", 2): (-2,),
+    ("wo", 3): (-3,),              # (H, dh, d): heads, else replicate
+    ("w_gate", 2): (-1,),          # mlp (d, f)
+    ("w_up", 2): (-1,),
+    ("w_down", 2): (-2,),          # (f, d)
+    ("w_gate", 3): (-3, -1),       # moe (E, d, f)
+    ("w_up", 3): (-3, -1),
+    ("w_down", 3): (-3, -2),       # (E, f, d)
+    ("router", 2): (),
+    # mamba
+    ("w_in", 2): (-1,),            # (d, 2*inner)
+    ("conv_w", 2): (-1,),
+    ("conv_b", 1): (-1,),
+    ("w_x_dbc", 2): (-2,),         # (inner, k) row-parallel
+    ("w_dt", 2): (-1,),
+    ("dt_bias", 1): (-1,),
+    ("a_log", 2): (-2,),
+    ("d_skip", 1): (-1,),
+    ("w_out", 2): (-2,),           # (inner, d)
+    # xlstm
+    ("w_in", 4): (-2,),            # slstm (d, H, dh, 4)
+    ("b_in", 3): (-2,),
+    ("r", 3): (-2,),
+    ("w_if", 3): (),
+    ("b_if", 2): (),
+    ("scale", 1): (),
+    ("bias", 1): (),
+}
+
+_PERIOD_STACKED_ROOTS = ("blocks", "enc_blocks")
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if k is None:
+            k = getattr(p, "idx", None)
+        out.append(str(k))
+    return tuple(out)
+
+
+def leaf_spec(path, leaf, mesh) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    M = model_axis_size(mesh)
+    stacked = names[0] in _PERIOD_STACKED_ROOTS
+    shape = leaf.shape
+    eff_shape = shape[1:] if stacked else shape
+    ndim = len(eff_shape)
+
+    cands = _RULES.get((name, ndim))
+    if cands is None:
+        # fallback: replicate small leaves; shard largest divisible dim
+        if leaf.size < (1 << 17):
+            cands = ()
+        else:
+            order = sorted(range(ndim), key=lambda i: -eff_shape[i])
+            cands = tuple(i - ndim for i in order)
+
+    spec = [None] * len(shape)
+    for c in cands:
+        if eff_shape[c] % M == 0:
+            spec[len(shape) + c] = "model"
+            break
+    return P(*spec)
+
+
+def param_specs(params_shape: Pytree, mesh) -> Pytree:
+    """PartitionSpec pytree for a parameter (shape) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: leaf_spec(path, leaf, mesh), params_shape
+    )
+
+
+# ---------------------------------------------------------------------------
+# FSDP-style policy: batch over BOTH mesh axes, params sharded for storage
+# only (XLA inserts per-layer all-gathers). Used when tensor parallelism is
+# structurally awkward (attention heads % model-axis != 0) and the model is
+# small enough to re-gather per step (DESIGN.md §5 / EXPERIMENTS §Perf it.3).
+# ---------------------------------------------------------------------------
+
+
+def use_fsdp(cfg: ArchConfig, global_batch: int, kind: str, mesh) -> bool:
+    a = cfg.attention
+    if a is None:
+        return False
+    M = model_axis_size(mesh)
+    awkward = (a.num_heads % M != 0)
+    total_chips = 1
+    for ax in mesh.axis_names:
+        total_chips *= mesh.shape[ax]
+    fits = cfg.param_count() * 2 <= 80e9          # <=80 GB bf16 re-gather
+    return (
+        awkward and fits and kind in ("train", "prefill")
+        and global_batch % total_chips == 0
+    )
+
+
+def fsdp_param_specs(params_shape: Pytree, mesh) -> Pytree:
+    """Storage sharding: largest mesh-divisible dim of each leaf."""
+    M = model_axis_size(mesh)
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        if leaf.size < (1 << 14):
+            return P(*([None] * len(shape)))
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        s = [None] * len(shape)
+        for i in order:
+            if shape[i] % M == 0:
+                s[i] = "model"
+                break
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def fsdp_batch_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)  # ("pod","data","model") / ("data","model")
+
+
+def consensus_flat_specs(params_shape: Pytree, mesh, stacked: bool = False) -> Pytree:
+    """Beyond-paper consensus layout (EXPERIMENTS §Perf H3): the FedECADO
+    server step is elementwise over parameters, so shard the largest
+    parameter dim over ALL mesh axes jointly and keep the client axis LOCAL.
+    Every Γ/BE/Schur op then runs collective-free; only the scalar LTE maxima
+    are reduced. (The paper's LU view hides this: the arrowhead system is
+    D independent (A+1)-systems, so D is the natural parallel axis.)"""
+    all_axes = tuple(mesh.axis_names)
+    n_all = _axes_size(mesh, all_axes)
+
+    def spec(path, leaf):
+        # leaf is a PARAM-shaped ShapeDtypeStruct; ``stacked`` prepends the
+        # (local) client axis of the stacked state trees
+        dims = leaf.shape
+        s = [None] * len(dims)
+        order = sorted(range(len(dims)), key=lambda i: -dims[i])
+        for i in order:
+            if dims[i] % n_all == 0:
+                s[i] = all_axes
+                break
+        else:
+            # fall back to the model axis for small/odd leaves
+            for i in order:
+                if dims[i] % model_axis_size(mesh) == 0:
+                    s[i] = "model"
+                    break
+        if stacked:
+            s = [None] + s  # client axis local
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def param_shardings(params_shape: Pytree, mesh) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh)
+    )
+
+
+def stacked_specs(params_shape: Pytree, mesh, count: Optional[int] = None) -> Pytree:
+    """Specs for client-stacked trees (FedECADO I, x_new): leading client
+    axis over the batch axes (falling back to "data" then replicated when
+    ``count`` doesn't divide), inner dims per the parameter rule."""
+    ba = batch_axes(mesh)
+    if count is not None:
+        for cand in (ba, ("data",), ()):
+            if cand and count % _axes_size(mesh, cand) == 0:
+                ba = cand
+                break
+        else:
+            ba = None
+        if ba == ():
+            ba = None
+    base = param_specs(params_shape, mesh)
+    return jax.tree.map(lambda s: P(ba, *s), base)
+
+
+def batch_specs(
+    cfg: ArchConfig, batch_shape: Dict[str, Any], mesh, axes: Optional[tuple] = None
+) -> Dict[str, P]:
+    ba = axes if axes is not None else batch_axes(mesh)
+    out = {}
+    for k, v in batch_shape.items():
+        nb = getattr(v, "ndim", None) or len(v.shape)
+        bsz = v.shape[0]
+        axis0 = ba if bsz % _axes_size(mesh, ba) == 0 else None
+        out[k] = P(axis0, *([None] * (nb - 1)))
+    return out
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_specs(cache_shape: Pytree, cfg: ArchConfig, mesh) -> Pytree:
+    """Specs for the decode cache: batch over ("pod","data") when divisible
+    (decode_32k), else shard the cache width (long_500k, batch=1); heads /
+    head_dim / inner dims over "model" when divisible."""
+    ba = batch_axes(mesh)
+    D = _axes_size(mesh, ba)
+    M = model_axis_size(mesh)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape  # leading period axis at 0, batch at 1
+        s: list = [None] * len(shape)
+        batch_ok = shape[1] % D == 0
+        if batch_ok:
+            s[1] = ba
+        if name in ("k", "v"):           # (per, B, W, Hkv, dh)
+            if shape[3] % M == 0:
+                s[3] = "model"
+            elif shape[4] % M == 0:
+                s[4] = "model"
+            if not batch_ok and shape[2] % D == 0:
+                s[2] = ba                # long_500k: shard the window
+        elif name == "conv":             # (per, B, cw-1, inner)
+            if shape[3] % M == 0:
+                s[3] = "model"
+        elif name == "ssm":              # (per, B, inner, N)
+            if shape[2] % M == 0:
+                s[2] = "model"
+        elif name == "C":                # (per, B, H, dk, dv)
+            if shape[3] % M == 0:
+                s[3] = "model"
+            elif shape[4] % M == 0:
+                s[4] = "model"
+        elif name in ("n", "h", "c"):    # (per, B, H, dk)
+            if len(shape) > 3 and shape[3] % M == 0:
+                s[3] = "model"
+        elif name == "m":                # (per, B, H)
+            pass
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)

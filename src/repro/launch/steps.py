@@ -1,0 +1,69 @@
+"""Step functions lowered by the dry-run and used by train/serve drivers.
+
+``client_train_step`` is the FedECADO client Forward-Euler step (paper eq. 9):
+one fwd+bwd plus the flow-variable term — the training workload every client
+executes per local step. ``prefill_step``/``decode_step`` are the serving
+workloads. ``consensus_step`` is the paper's server update (lowered separately
+in the dry-run's --consensus mode).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import ConsensusConfig, server_round
+from repro.models import decode_step as _decode
+from repro.models import loss_fn as _loss
+from repro.models.transformer import prefill_step as _prefill
+
+Pytree = Any
+
+
+def make_client_train_step(cfg: ArchConfig):
+    """(params, I_i, batch, lr) -> (loss, new_params).
+
+    Flow variables are carried in the parameter dtype (bf16 on TPU) on the
+    client; the server consensus keeps its fp32 master copies (DESIGN.md).
+    """
+
+    def step(params, I_i, batch, lr):
+        loss, grads = jax.value_and_grad(partial(_loss, cfg=cfg))(params, batch)
+
+        def upd(p, g, i):
+            return (
+                p.astype(jnp.float32)
+                - lr * (g.astype(jnp.float32) + i.astype(jnp.float32))
+            ).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, grads, I_i)
+        return loss, new_params
+
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int, long_mode: bool = False):
+    def step(params, batch):
+        return _prefill(params, batch, cfg, max_len=max_len, long_mode=long_mode)
+
+    return step
+
+
+def make_decode_step(cfg: ArchConfig, max_len: int):
+    def step(params, cache, token, pos):
+        return _decode(params, cache, token, pos, cfg, max_len=max_len)
+
+    return step
+
+
+def make_consensus_step(ccfg: ConsensusConfig):
+    """(state, x_new_a, T_a, active_idx) -> (state, stats): the FedECADO
+    server round (multi-rate BE integration over the synchronous window)."""
+
+    def step(state, x_new_a, T_a, active_idx):
+        return server_round(state, x_new_a, T_a, active_idx, ccfg)
+
+    return step

@@ -1,0 +1,14 @@
+from repro.models.transformer import (
+    build_cross_cache,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+)
+from repro.models.frontends import batch_spec, make_batch
+
+__all__ = [
+    "init_params", "forward", "loss_fn", "init_cache", "decode_step",
+    "build_cross_cache", "batch_spec", "make_batch",
+]

@@ -1,0 +1,49 @@
+"""Stub modality frontends — the ONE sanctioned carve-out (see task spec).
+
+For [vlm] and [audio] architectures the modality encoder (VQ image tokenizer /
+mel+conv feature extractor) is NOT implemented; instead these helpers produce
+the embeddings it would emit, with the right shapes/dtypes, so the language
+backbone consumes exactly what it would in production.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+# chameleon: fraction of the sequence that is VQ image tokens in a mixed batch
+VLM_IMAGE_TOKENS = 1024          # one 32x32 VQ grid
+WHISPER_ENC_FRAMES = 1500        # 30 s of audio at 50 Hz post-conv
+
+
+def batch_spec(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for a full-sequence (train/prefill) batch."""
+    spec: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+    }
+    if cfg.frontend == "vq_image":
+        n_img = min(VLM_IMAGE_TOKENS, seq_len)
+        spec["image_embeds"] = jax.ShapeDtypeStruct((batch, n_img, cfg.d_model), dtype)
+        spec["image_positions"] = jax.ShapeDtypeStruct((batch, n_img), jnp.int32)
+    elif cfg.frontend == "audio_conv":
+        spec["frames"] = jax.ShapeDtypeStruct((batch, WHISPER_ENC_FRAMES, cfg.d_model), dtype)
+    return spec
+
+
+def make_batch(key, cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Concrete random batch matching ``batch_spec`` (smoke tests/examples)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    out: Dict[str, jax.Array] = {
+        "tokens": jax.random.randint(k1, (batch, seq_len), 0, cfg.vocab_size, jnp.int32),
+    }
+    if cfg.frontend == "vq_image":
+        n_img = min(VLM_IMAGE_TOKENS, seq_len)
+        out["image_embeds"] = jax.random.normal(k2, (batch, n_img, cfg.d_model), dtype) * 0.02
+        out["image_positions"] = jnp.tile(jnp.arange(n_img, dtype=jnp.int32)[None], (batch, 1))
+    elif cfg.frontend == "audio_conv":
+        enc_len = min(WHISPER_ENC_FRAMES, 64 if seq_len <= 128 else WHISPER_ENC_FRAMES)
+        out["frames"] = jax.random.normal(k3, (batch, enc_len, cfg.d_model), dtype) * 0.02
+    return out

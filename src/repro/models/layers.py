@@ -1,0 +1,531 @@
+"""Core transformer layers: norms, RoPE, GQA attention (chunked online-softmax),
+gated/classic MLP. Pure functions over param pytrees (dicts of jnp arrays).
+
+Attention is implemented flash-style in pure JAX: a static python loop over
+query chunks with exact (causal/window-clipped) KV ranges, and an inner
+``lax.scan`` over KV chunks carrying online-softmax statistics in fp32. This
+keeps peak memory at O(chunk^2) instead of O(S^2) so 32k prefill lowers with a
+sane memory footprint, and gives honest near-S^2/2 causal FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, AttentionConfig
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ArchConfig, dtype) -> dict:
+    p = {"scale": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, cfg: ArchConfig, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        y = y * (1.0 + p["scale"].astype(jnp.float32))
+    else:  # layernorm
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        y = y * (1.0 + p["scale"].astype(jnp.float32)) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positional embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embeddings. x: (..., S, H, dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    # angles: positions (.., S) -> (.., S, half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    # broadcast to (.., S, 1, half) over heads
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(positions: jax.Array, d_model: int, dtype) -> jax.Array:
+    """(S,) -> (S, d_model) classic transformer sinusoids (whisper-style)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, dtype) -> dict:
+    a = cfg.attention
+    d = cfg.d_model
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    qd, kvd = a.num_heads * a.head_dim, a.num_kv_heads * a.head_dim
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(kq, (d, a.num_heads, a.head_dim)) * scale).astype(dtype),
+        "wk": (jax.random.normal(kk, (d, a.num_kv_heads, a.head_dim)) * scale).astype(dtype),
+        "wv": (jax.random.normal(kv_, (d, a.num_kv_heads, a.head_dim)) * scale).astype(dtype),
+        "wo": (jax.random.normal(ko, (a.num_heads, a.head_dim, d)) * (1.0 / math.sqrt(qd))).astype(dtype),
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((a.num_heads, a.head_dim), dtype)
+        p["bk"] = jnp.zeros((a.num_kv_heads, a.head_dim), dtype)
+        p["bv"] = jnp.zeros((a.num_kv_heads, a.head_dim), dtype)
+    return p
+
+
+def _qkv(p: dict, x: jax.Array, a: AttentionConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if a.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _chunk_attend(q, k, v, *, q_pos, kv_start, softcap, scale, causal, window):
+    """One (q_chunk, kv_chunk) online-softmax partial, fp32 stats.
+
+    q: (B, cq, Hkv, G, dh); k/v: (B, ck, Hkv, dh); q_pos: (cq,) absolute.
+    Returns (m, l, acc) partials for this kv chunk.
+    """
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", q, k).astype(jnp.float32) * scale
+    logits = _softcap(logits, softcap)
+    kv_pos = kv_start + jnp.arange(k.shape[1])
+    mask = jnp.ones((q_pos.shape[0], k.shape[1]), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window:
+        mask &= kv_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    m = jnp.max(logits, axis=-1)                    # (B,H,G,cq)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqs,bshk->bhgqk", p.astype(v.dtype), v).astype(jnp.float32)
+    return m, l, acc
+
+
+def _merge_partials(m1, l1, a1, m2, l2, a2):
+    m = jnp.maximum(m1, m2)
+    e1 = jnp.exp(m1 - m)
+    e2 = jnp.exp(m2 - m)
+    return m, l1 * e1 + l2 * e2, a1 * e1[..., None] + a2 * e2[..., None]
+
+
+def _chunk_ranges(i, q_chunk, kv_chunk, Skvp, q_offset, causal, window):
+    """Static KV range [lo, lo + nkv*kv_chunk) for q chunk i."""
+    q_lo = i * q_chunk
+    hi = Skvp if not causal else min(Skvp, q_offset + q_lo + q_chunk)
+    lo = 0
+    if window:
+        lo = max(0, q_offset + q_lo - window - kv_chunk + 1)
+        lo = (lo // kv_chunk) * kv_chunk
+    hi = -(-max(hi, 1) // kv_chunk) * kv_chunk
+    hi = min(hi, Skvp)
+    nkv = max((hi - lo) // kv_chunk, 1)
+    return q_lo, lo, nkv
+
+
+def _pad_to(x, S, axis=1):
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, S - x.shape[axis])
+    return jnp.pad(x, pad) if S != x.shape[axis] else x
+
+
+def _kv_chunks(kp, lo, nkv, kv_chunk):
+    ks = jax.lax.dynamic_slice_in_dim(kp, lo, nkv * kv_chunk, axis=1)
+    B, _, Hkv, dh = ks.shape
+    return ks.reshape(B, nkv, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+
+
+def _flash_fwd_chunk(qi, kp, vp, i, *, q_chunk, kv_chunk, Skvp, q_offset,
+                     causal, window, softcap, scale):
+    """Online-softmax forward for one q chunk. Returns (out, lse)."""
+    B, _, Hkv, G, dh = qi.shape
+    q_lo, lo, nkv = _chunk_ranges(i, q_chunk, kv_chunk, Skvp, q_offset, causal, window)
+    q_pos = q_offset + q_lo + jnp.arange(q_chunk)
+    ks = _kv_chunks(kp, lo, nkv, kv_chunk)
+    vs = _kv_chunks(vp, lo, nkv, kv_chunk)
+    starts = lo + kv_chunk * jnp.arange(nkv)
+
+    def body(carry, xs):
+        m0, l0, a0 = carry
+        kc, vc, start = xs
+        m1, l1, a1 = _chunk_attend(
+            qi, kc, vc, q_pos=q_pos, kv_start=start,
+            softcap=softcap, scale=scale, causal=causal, window=window,
+        )
+        return _merge_partials(m0, l0, a0, m1, l1, a1), None
+
+    m0 = jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, q_chunk, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, starts))
+    out = acc / jnp.maximum(l[..., None], 1e-30)           # (B,Hkv,G,cq,dh)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))               # (B,Hkv,G,cq)
+    return out, lse
+
+
+def _flash_impl(q, k, v, causal, window, softcap, q_offset, q_chunk, kv_chunk):
+    """Forward pass; returns (out (B,Sq,Hq,dh), lse (B,Hkv,G,Sqp))."""
+    B, Sq, Hq, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    Sqp = -(-Sq // q_chunk) * q_chunk
+    Skvp = -(-Skv // kv_chunk) * kv_chunk
+    qp = _pad_to(q, Sqp).reshape(B, Sqp // q_chunk, q_chunk, Hkv, G, dh)
+    kp = _pad_to(k, Skvp)
+    vp = _pad_to(v, Skvp)
+
+    outs, lses = [], []
+    for i in range(Sqp // q_chunk):
+        out, lse = _flash_fwd_chunk(
+            qp[:, i], kp, vp, i, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            Skvp=Skvp, q_offset=q_offset, causal=causal, window=window,
+            softcap=softcap, scale=scale,
+        )
+        outs.append(out.transpose(0, 3, 1, 2, 4))          # (B,cq,Hkv,G,dh)
+        lses.append(lse)
+    o = jnp.concatenate(outs, axis=1)[:, :Sq]
+    lse = jnp.concatenate(lses, axis=-1)                   # (B,Hkv,G,Sqp)
+    return o.reshape(B, Sq, Hq, dh).astype(q.dtype), lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, do, causal, window, softcap,
+                    q_offset, q_chunk, kv_chunk):
+    """Flash backward: recompute probabilities per (q,kv) chunk pair from the
+    saved logsumexp — no O(S^2) residuals. Standard Dao-style dq/dk/dv."""
+    B, Sq, Hq, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    Sqp = -(-Sq // q_chunk) * q_chunk
+    Skvp = -(-Skv // kv_chunk) * kv_chunk
+    nq = Sqp // q_chunk
+    qp = _pad_to(q, Sqp).reshape(B, nq, q_chunk, Hkv, G, dh)
+    op = _pad_to(out, Sqp).reshape(B, nq, q_chunk, Hkv, G, dh)
+    dop = _pad_to(do, Sqp).reshape(B, nq, q_chunk, Hkv, G, dh)
+    kp = _pad_to(k, Skvp)
+    vp = _pad_to(v, Skvp)
+
+    dq = jnp.zeros((B, nq, q_chunk, Hkv, G, dh), jnp.float32)
+    dk = jnp.zeros((B, Skvp, Hkv, dh), jnp.float32)
+    dv = jnp.zeros((B, Skvp, Hkv, dh), jnp.float32)
+
+    for i in range(nq):
+        qi = qp[:, i]
+        oi = op[:, i].astype(jnp.float32)
+        doi = dop[:, i].astype(jnp.float32)
+        lse_i = lse[..., i * q_chunk : (i + 1) * q_chunk]  # (B,Hkv,G,cq)
+        Di = jnp.sum(oi * doi, axis=-1)                    # (B,cq,Hkv,G)
+        Di = Di.transpose(0, 2, 3, 1)                      # (B,Hkv,G,cq)
+        q_lo, lo, nkv = _chunk_ranges(i, q_chunk, kv_chunk, Skvp, q_offset, causal, window)
+        q_pos = q_offset + q_lo + jnp.arange(q_chunk)
+        ks = _kv_chunks(kp, lo, nkv, kv_chunk)
+        vs = _kv_chunks(vp, lo, nkv, kv_chunk)
+        starts = lo + kv_chunk * jnp.arange(nkv)
+
+        def body(dq_acc, xs, qi=qi, doi=doi, lse_i=lse_i, Di=Di, q_pos=q_pos):
+            kc, vc, start = xs
+            z = jnp.einsum("bqhgk,bshk->bhgqs", qi, kc).astype(jnp.float32) * scale
+            s = _softcap(z, softcap)
+            kv_pos = start + jnp.arange(kc.shape[1])
+            mask = jnp.ones((q_pos.shape[0], kc.shape[1]), dtype=bool)
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            if window:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            p = jnp.exp(s - lse_i[..., None])              # (B,H,G,cq,ck)
+            dv_c = jnp.einsum("bhgqs,bqhgk->bshk", p, doi)
+            dp = jnp.einsum("bqhgk,bshk->bhgqs", doi.astype(vc.dtype), vc).astype(jnp.float32)
+            ds = p * (dp - Di[..., None])
+            if softcap and softcap > 0:
+                ds = ds * (1.0 - jnp.square(jnp.tanh(z / softcap)))
+            ds = ds * scale
+            dq_c = jnp.einsum("bhgqs,bshk->bqhgk", ds, kc.astype(jnp.float32))
+            dk_c = jnp.einsum("bhgqs,bqhgk->bshk", ds, qi.astype(jnp.float32))
+            return dq_acc + dq_c, (dk_c, dv_c)
+
+        dq_i = jnp.zeros((B, q_chunk, Hkv, G, dh), jnp.float32)
+        dq_i, (dk_parts, dv_parts) = jax.lax.scan(body, dq_i, (ks, vs, starts))
+        dq = dq.at[:, i].set(dq_i)
+        span = nkv * kv_chunk
+        dk_upd = dk_parts.transpose(1, 0, 2, 3, 4).reshape(B, span, Hkv, dh)
+        dv_upd = dv_parts.transpose(1, 0, 2, 3, 4).reshape(B, span, Hkv, dh)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, lo, span, axis=1) + dk_upd, lo, axis=1
+        )
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, lo, span, axis=1) + dv_upd, lo, axis=1
+        )
+
+    dq = dq.reshape(B, Sqp, Hkv, G, dh)[:, :Sq].reshape(B, Sq, Hq, dh)
+    return dq.astype(q.dtype), dk[:, :Skv].astype(k.dtype), dv[:, :Skv].astype(v.dtype)
+
+
+@partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def _flash_attention(q, k, v, causal, window, softcap, q_offset, q_chunk, kv_chunk):
+    out, _ = _flash_impl(q, k, v, causal, window, softcap, q_offset, q_chunk, kv_chunk)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, window, softcap, q_offset, q_chunk, kv_chunk):
+    out, lse = _flash_impl(q, k, v, causal, window, softcap, q_offset, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, window, softcap, q_offset, q_chunk, kv_chunk, res, do):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(
+        q, k, v, out, lse, do, causal, window, softcap, q_offset, q_chunk, kv_chunk
+    )
+
+
+_flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style chunked attention with an exact-recompute custom VJP.
+
+    q: (B, Sq, Hq, dh); k, v: (B, Skv, Hkv, dh). Returns (B, Sq, Hq, dh).
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill: 0).
+    Static python loop over q chunks -> exact causal/window KV ranges (honest
+    ~S^2/2 FLOPs); inner ``lax.scan`` over KV chunks.
+
+    The custom VJP recomputes per-chunk probabilities from the saved
+    logsumexp instead of letting XLA save stacked fp32 logits for every
+    (q, kv) chunk pair — without it, a 4k train step wants ~43 GB of
+    per-device scratch (EXPERIMENTS.md §Perf iteration 1). Set
+    REPRO_ATTN_IMPL=xla to get the naive autodiff path back.
+    """
+    import os as _os
+
+    if _os.environ.get("REPRO_ATTN_IMPL", "flash") == "xla":
+        out, _ = _flash_impl(q, k, v, causal, window, softcap, q_offset, q_chunk, kv_chunk)
+        return out
+    return _flash_attention(
+        q, k, v, causal, window, softcap, q_offset, q_chunk, kv_chunk
+    )
+
+
+def attention_forward(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    is_local: bool = False,
+    kv_override: Optional[tuple] = None,
+    return_kv: bool = False,
+):
+    """Full attention sub-layer for train/prefill (no cache). x: (B,S,d).
+
+    ``is_local``: this layer uses the sliding window (gemma2 alternation or
+    uniform SWA). ``kv_override``: (k, v, kv_positions) for cross-attention.
+    ``return_kv``: also return the (post-RoPE) k, v for prefill cache capture.
+    """
+    a = cfg.attention
+    q, k, v = _qkv(p, x, a)
+    if kv_override is not None:
+        k, v, _ = kv_override
+        q = rope(q, positions, a.rope_theta) if cfg.norm == "rmsnorm" else q
+        out = chunked_attention(q, k, v, causal=False, softcap=a.logit_softcap)
+    else:
+        if cfg.norm == "rmsnorm":  # rope family (whisper uses absolute)
+            q = rope(q, positions, a.rope_theta)
+            k = rope(k, positions, a.rope_theta)
+        window = a.sliding_window if (is_local and a.sliding_window) else 0
+
+        from repro.models import policy as policy_mod
+
+        pad = policy_mod.get_head_pad()
+        if pad is not None and a.num_heads == a.num_kv_heads:
+            # H4: zero-pad the head axis to a mesh-divisible count so the
+            # O(S^2) einsums shard over "model" (padded heads attend
+            # uniformly but are sliced away before wo — exact).
+            vH, spec = pad
+            H = a.num_heads
+            def padh(t):
+                t = jnp.pad(t, ((0, 0), (0, 0), (0, vH - H), (0, 0)))
+                return jax.lax.with_sharding_constraint(t, spec)
+            out = chunked_attention(
+                padh(q), padh(k), padh(v), causal=causal, window=window,
+                softcap=a.logit_softcap,
+            )[:, :, :H]
+        else:
+            out = chunked_attention(
+                q, k, v, causal=causal, window=window, softcap=a.logit_softcap
+            )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def decode_attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    is_local: bool = False,
+    window_cache: bool = False,
+) -> tuple:
+    """Single-token decode. x: (B,1,d); caches: (B,W,Hkv,dh); pos: scalar int.
+
+    Returns (out (B,1,d), new_k_cache, new_v_cache). With ``window_cache`` the
+    cache is a ring buffer of size W; otherwise W >= pos+1 (full cache).
+    """
+    a = cfg.attention
+    q, k, v = _qkv(p, x, a)
+    if cfg.norm == "rmsnorm":
+        pos_arr = jnp.asarray(pos)[None]
+        q = rope(q, pos_arr, a.rope_theta)
+        k = rope(k, pos_arr, a.rope_theta)
+    W = k_cache.shape[1]
+    slot = jnp.mod(pos, W) if window_cache else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+
+    B, _, Hq, dh = q.shape
+    Hkv = a.num_kv_heads
+    G = Hq // Hkv
+    qh = q.reshape(B, Hkv, G, dh)
+    logits = jnp.einsum("bhgk,bshk->bhgs", qh, k_cache).astype(jnp.float32)
+    logits = logits / math.sqrt(dh)
+    logits = _softcap(logits, a.logit_softcap)
+
+    idx = jnp.arange(W)
+    if window_cache:
+        # ring buffer: entry at slot s holds absolute position derived from pos
+        abs_pos = jnp.where(idx <= slot, pos - slot + idx, pos - slot - W + idx)
+        valid = abs_pos >= 0
+    else:
+        abs_pos = idx
+        valid = idx <= pos
+    if is_local and a.sliding_window:
+        valid &= abs_pos > pos - a.sliding_window
+    logits = jnp.where(valid[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshk->bhgk", probs.astype(v_cache.dtype), v_cache)
+    out = out.reshape(B, 1, Hq, dh)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def _act(name: str):
+    return jax.nn.silu if name == "silu" else jax.nn.gelu
+
+
+def init_mlp(key, cfg: ArchConfig, d_ff: int, dtype) -> dict:
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_up": (jax.random.normal(k1, (d, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, d)) * s_out).astype(dtype),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = (jax.random.normal(k3, (d, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    up = x @ p["w_up"]
+    if cfg.gated_mlp:
+        up = _act(cfg.activation)(x @ p["w_gate"]) * up
+    else:
+        up = _act(cfg.activation)(up)
+    return up @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"embed": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(k2, (cfg.d_model, cfg.vocab_size))
+            * (1.0 / math.sqrt(cfg.d_model))
+        ).astype(dtype)
+    return p
+
+
+def embed_tokens(p: dict, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.tie_embeddings:  # gemma-style sqrt(d) scaling for tied embeddings
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def lm_logits(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embed"])
+    else:
+        logits = x @ p["lm_head"]
+    logits = _softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits

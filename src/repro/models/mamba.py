@@ -1,0 +1,191 @@
+"""Selective SSM (Mamba) block for the Jamba hybrid architecture.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel's
+fuse-and-recompute trick becomes (a) a chunked ``lax.scan`` over time with
+``jax.checkpoint`` per chunk so the O(S * inner * d_state) state history is
+never materialized for the backward pass, and (b) a single-step state update
+for decode (O(1) memory -> native long_500k support).
+
+State per layer: conv ring (B, inner, conv_width-1) + SSM state (B, inner, N).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+
+CHUNK = 256  # time chunk for remat
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm or SSMConfig()
+    inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return inner, dt_rank, s.state_dim
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> dict:
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    inner, dt_rank, N = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    si = 1.0 / math.sqrt(d)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 2 * inner)) * si).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, inner)) * (1.0 / math.sqrt(s.conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((inner,), dtype),
+        "w_x_dbc": (jax.random.normal(ks[2], (inner, dt_rank + 2 * N)) * (1.0 / math.sqrt(inner))).astype(dtype),
+        "w_dt": (jax.random.normal(ks[3], (dt_rank, inner)) * (1.0 / math.sqrt(dt_rank))).astype(dtype),
+        "dt_bias": jnp.full((inner,), -4.6, dtype),   # softplus^-1(0.01)
+        # A stored as log of negated diagonal: A = -exp(a_log), (inner, N)
+        "a_log": jnp.log(
+            jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (inner, 1))
+        ).astype(jnp.float32),
+        "d_skip": jnp.ones((inner,), jnp.float32),
+        "w_out": (jax.random.normal(ks[4], (inner, d)) * (1.0 / math.sqrt(inner))).astype(dtype),
+    }
+
+
+def _ssm_inputs(p: dict, u: jax.Array, cfg: ArchConfig):
+    """u: (B, S, inner) post-conv activations -> dt, B_t, C_t (fp32)."""
+    _, dt_rank, N = _dims(cfg)
+    dbc = u @ p["w_x_dbc"]
+    dt_low, B_t, C_t = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_low @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                       # (B,S,inner)
+    return dt, B_t.astype(jnp.float32), C_t.astype(jnp.float32)
+
+
+def _scan_chunk(a_log, d_skip, dt, B_t, C_t, u, h0):
+    """Sequential scan over one time chunk. Shapes: dt,u (B,c,inner);
+    B_t,C_t (B,c,N); h0 (B,inner,N). Returns (y (B,c,inner), h)."""
+    A = -jnp.exp(a_log)                                    # (inner, N)
+
+    def step(h, xs):
+        dt_t, B_tt, C_tt, u_t = xs                         # (B,inner),(B,N),(B,N),(B,inner)
+        dA = jnp.exp(dt_t[..., None] * A)                  # (B,inner,N)
+        dBu = dt_t[..., None] * B_tt[:, None, :] * u_t[..., None]
+        h = h * dA + dBu
+        y = jnp.einsum("bin,bn->bi", h, C_tt) + d_skip * u_t
+        return h, y
+
+    xs = (
+        dt.transpose(1, 0, 2),
+        B_t.transpose(1, 0, 2),
+        C_t.transpose(1, 0, 2),
+        u.transpose(1, 0, 2),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h
+
+
+def apply_mamba(
+    p: dict, x: jax.Array, cfg: ArchConfig, return_state: bool = False,
+    impl: str = "scan",
+):
+    """Training/prefill forward, full sequence. x: (B, S, d) -> (B, S, d).
+    With ``return_state``: also return the decode cache after position S-1.
+
+    ``impl="kernel"`` uses the Pallas VMEM-resident selective scan
+    (kernels/ssm_scan.py) for the recurrence — the TPU deployment path
+    (inference/no-grad; the chunked-remat scan below remains the
+    differentiable default). Both match to fp32 round-off (tests)."""
+    s = cfg.ssm or SSMConfig()
+    B, S, d = x.shape
+    inner, _, N = _dims(cfg)
+    xz = x @ p["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)                       # (B,S,inner) each
+
+    # causal depthwise conv
+    pad = s.conv_width - 1
+    up = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+    u_conv = sum(
+        up[:, i : i + S] * p["conv_w"][i] for i in range(s.conv_width)
+    ) + p["conv_b"]
+    u_conv = jax.nn.silu(u_conv)
+
+    dt, B_t, C_t = _ssm_inputs(p, u_conv, cfg)
+    uf = u_conv.astype(jnp.float32)
+
+    if impl == "kernel":
+        from repro.kernels.ssm_scan import ssm_scan_call
+
+        h0 = jnp.zeros((B, inner, N), jnp.float32)
+        y, h_final = ssm_scan_call(
+            dt, B_t, C_t, uf, p["a_log"], p["d_skip"], h0,
+            interpret=jax.default_backend() != "tpu",
+            tile_i=min(128, inner),
+        )
+        y = y.astype(x.dtype) * jax.nn.silu(z)
+        out = y @ p["w_out"]
+        if return_state:
+            conv_state = u[:, S - (s.conv_width - 1):, :].astype(x.dtype)
+            return out, {"conv": conv_state, "ssm": h_final}
+        return out
+
+    # chunked scan with remat: never materialize (S, B, inner, N)
+    c = min(CHUNK, S)
+    pad_t = (-S) % c
+    if pad_t:
+        dt = jnp.pad(dt, ((0, 0), (0, pad_t), (0, 0)))
+        B_t = jnp.pad(B_t, ((0, 0), (0, pad_t), (0, 0)))
+        C_t = jnp.pad(C_t, ((0, 0), (0, pad_t), (0, 0)))
+        uf = jnp.pad(uf, ((0, 0), (0, pad_t), (0, 0)))
+    n_chunks = (S + pad_t) // c
+
+    def chunk_body(h, xs):
+        dt_c, B_c, C_c, u_c = xs
+        y, h = jax.checkpoint(_scan_chunk, static_argnums=())(
+            p["a_log"], p["d_skip"], dt_c, B_c, C_c, u_c, h
+        )
+        return h, y
+
+    def split_chunks(t):  # (B, S, f) -> (n_chunks, B, c, f)
+        return t.reshape(B, n_chunks, c, t.shape[-1]).transpose(1, 0, 2, 3)
+
+    h0 = jnp.zeros((B, inner, N), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        chunk_body, h0, (split_chunks(dt), split_chunks(B_t), split_chunks(C_t), split_chunks(uf))
+    )
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * c, inner)[:, :S]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    if return_state:
+        # padded tail steps have dt=0 -> exp(0·A)=1, dBu=0: h_final is exact
+        conv_state = u[:, S - (s.conv_width - 1):, :].astype(x.dtype)
+        return out, {"conv": conv_state, "ssm": h_final}
+    return out
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm or SSMConfig()
+    inner, _, N = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, inner), dtype),
+        "ssm": jnp.zeros((batch, inner, N), jnp.float32),
+    }
+
+
+def decode_mamba(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig) -> tuple:
+    """One-token decode. x: (B, 1, d) -> (y (B, 1, d), new cache)."""
+    s = cfg.ssm or SSMConfig()
+    xz = x @ p["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)                       # (B,1,inner)
+    window = jnp.concatenate([cache["conv"], u], axis=1)   # (B,cw,inner)
+    u_conv = jnp.einsum("bci,ci->bi", window, p["conv_w"]) + p["conv_b"]
+    u_conv = jax.nn.silu(u_conv)[:, None]                  # (B,1,inner)
+
+    dt, B_t, C_t = _ssm_inputs(p, u_conv, cfg)
+    A = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A)
+    dBu = dt[:, 0, :, None] * B_t[:, 0, None, :] * u_conv[:, 0, :, None].astype(jnp.float32)
+    h = cache["ssm"] * dA + dBu
+    y = jnp.einsum("bin,bn->bi", h, C_t[:, 0]) + p["d_skip"] * u_conv[:, 0].astype(jnp.float32)
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    new_cache = {"conv": window[:, 1:], "ssm": h}
+    return y @ p["w_out"], new_cache

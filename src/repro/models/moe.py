@@ -1,0 +1,261 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with sort-based,
+capacity-bounded dispatch (Switch/MaxText style, no (T,E,C) one-hot einsum).
+
+Dispatch pipeline (all jnp, SPMD-friendly):
+  router logits -> top-k -> flatten (T*k,) assignments -> argsort by expert ->
+  rank-within-expert via bincount/cumsum -> scatter into (E, C, d) buffer ->
+  grouped einsum over experts -> gather back -> weighted combine.
+
+FLOPs are ~capacity_factor * top_k * T * d * d_ff * 3 * 2 — the honest active
+compute, not the E/top_k dense blowup. The (E, C, d) buffer carries the
+expert-parallel sharding; the scatter/gather across the token-sharded /
+expert-sharded boundary is where XLA inserts the all-to-all.
+
+Arctic-style ``dense_residual_d_ff`` adds a dense MLP in parallel.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import policy as policy_mod
+from repro.models.layers import _act, apply_mlp, init_mlp
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    kr, ke1, ke2, ke3, kd = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(m.expert_d_ff)
+    p = {
+        "router": (jax.random.normal(kr, (d, m.num_experts)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ke1, (m.num_experts, d, m.expert_d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ke2, (m.num_experts, d, m.expert_d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ke3, (m.num_experts, m.expert_d_ff, d)) * s_out).astype(dtype),
+    }
+    if m.dense_residual_d_ff:
+        p["dense"] = init_mlp(kd, cfg, m.dense_residual_d_ff, dtype)
+    return p
+
+
+def capacity(num_tokens: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(m.top_k * num_tokens * m.capacity_factor / m.num_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar fp32).
+
+    Two dispatch paths:
+      * global (single device / FSDP): sort-based capacity dispatch below.
+      * expert-local shard_map (TP meshes, set via models.policy): activations
+        are replicated over the "model" axis in the TP layout, so each model
+        rank selects the tokens routed to ITS experts locally and the only
+        collective is one psum of the (B, S, d) output — replacing the
+        full-size (T·k, d) scatter all-reduces XLA emits for the global path
+        (349 s -> ~1 s collective on moonshot train_4k; EXPERIMENTS §Perf H2).
+    """
+    shard = policy_mod.get_moe_shard()
+    if shard is not None:
+        mesh, axis = shard
+        n_ba = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                n_ba *= mesh.shape[a]
+        if x.shape[0] % n_ba == 0:  # long_500k decode (B=1): fall back
+            return _apply_moe_shardmap(p, x, cfg, mesh, axis)
+    return _apply_moe_global(p, x, cfg)
+
+
+def _apply_moe_global(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple:
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    C = capacity(T, cfg)
+    xf = x.reshape(T, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)       # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )                                                           # renormalize
+
+    # --- load-balance aux loss (Switch): E * mean(frac_tokens * frac_probs)
+    top1 = expert_ids[:, 0]
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top1, m.num_experts, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = m.num_experts * jnp.sum(frac_tokens * frac_probs) * m.aux_loss_weight
+
+    # --- sort-based dispatch
+    e_flat = expert_ids.reshape(-1)                             # (T*k,)
+    tok_flat = jnp.repeat(jnp.arange(T), m.top_k)               # token of slot
+    w_flat = gate_vals.reshape(-1)
+
+    sort_idx = jnp.argsort(e_flat)                              # stable
+    e_sorted = e_flat[sort_idx]
+    counts = jnp.bincount(e_flat, length=m.num_experts)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * m.top_k) - starts[e_sorted]           # rank in expert
+    keep = rank < C
+    dest = jnp.where(keep, e_sorted * C + rank, E_C := m.num_experts * C)
+
+    src_tok = tok_flat[sort_idx]
+    buf = jnp.zeros((E_C + 1, d), x.dtype)
+    buf = buf.at[dest].set(xf[src_tok] * keep[:, None].astype(x.dtype))
+    buf = buf[:E_C].reshape(m.num_experts, C, d)
+    buf = policy_mod.constrain_moe_buffer(buf)  # expert-parallel layout pin
+
+    # --- grouped expert FFN
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    gate = _act(cfg.activation)(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", gate * up, p["w_down"])
+    out_buf = policy_mod.constrain_moe_buffer(out_buf)
+
+    # --- combine
+    out_buf = out_buf.reshape(E_C, d)
+    y_sorted = jnp.where(
+        keep[:, None], out_buf[jnp.where(keep, dest, 0)], 0.0
+    ).astype(jnp.float32)
+    w_sorted = w_flat[sort_idx]
+    y = jnp.zeros((T, d), jnp.float32)
+    y = y.at[src_tok].add(y_sorted * w_sorted[:, None])
+
+    if m.dense_residual_d_ff:
+        y = y + apply_mlp(p["dense"], xf, cfg).astype(jnp.float32)
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# expert-local shard_map dispatch (H2)
+# ---------------------------------------------------------------------------
+
+
+def _moe_local_block(p_loc, xf, cfg, e_lo, E_loc, C):
+    """Process the tokens routed to this rank's expert slice.
+
+    xf: (T, d) LOCAL batch shard (replicated over the model axis).
+    p_loc: router full (d, E); w_* local slices (E_loc, d, f) [or full E with
+    a d_ff slice when experts don't divide the axis]. Returns the PARTIAL
+    (T, d) output (tokens routed elsewhere contribute 0) and the aux loss.
+    """
+    m = cfg.moe
+    T, d = xf.shape
+    logits = xf.astype(jnp.float32) @ p_loc["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    top1 = expert_ids[:, 0]
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, m.num_experts, dtype=jnp.float32), 0)
+    aux = m.num_experts * jnp.sum(frac_tokens * jnp.mean(probs, 0)) * m.aux_loss_weight
+
+    e_flat = expert_ids.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(T), m.top_k)
+    w_flat = gate_vals.reshape(-1)
+    # map to local expert index; non-local slots -> dump bucket E_loc
+    local = (e_flat >= e_lo) & (e_flat < e_lo + E_loc)
+    e_loc = jnp.where(local, e_flat - e_lo, E_loc)
+
+    sort_idx = jnp.argsort(e_loc)
+    e_sorted = e_loc[sort_idx]
+    counts = jnp.bincount(e_loc, length=E_loc + 1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(e_loc.shape[0]) - starts[e_sorted]
+    keep = (rank < C) & (e_sorted < E_loc)
+    E_C = E_loc * C
+    dest = jnp.where(keep, e_sorted * C + rank, E_C)
+
+    src_tok = tok_flat[sort_idx]
+    buf = jnp.zeros((E_C + 1, d), xf.dtype)
+    buf = buf.at[dest].set(xf[src_tok] * keep[:, None].astype(xf.dtype))
+    buf = buf[:E_C].reshape(E_loc, C, d)
+
+    up = jnp.einsum("ecd,edf->ecf", buf, p_loc["w_up"])
+    gate = _act(cfg.activation)(jnp.einsum("ecd,edf->ecf", buf, p_loc["w_gate"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", gate * up, p_loc["w_down"]).reshape(E_C, d)
+
+    y_sorted = jnp.where(keep[:, None], out_buf[jnp.where(keep, dest, 0)], 0.0)
+    y = jnp.zeros((T, d), jnp.float32)
+    y = y.at[src_tok].add(y_sorted.astype(jnp.float32) * w_flat[sort_idx][:, None])
+    return y, aux
+
+
+def _apply_moe_shardmap(p, x, cfg, mesh, axis):
+    m = cfg.moe
+    # pin the input to the activation layout so shard_map sees a clean
+    # model-axis-replicated operand
+    x = policy_mod.constrain(x)
+    in_dtype = x.dtype
+    # XLA's CPU AllReducePromotion pass crashes ("invalid binary instruction
+    # opcode copy") on the bf16 copy-reducer all-reduce shard_map emits at its
+    # boundary for bf16 operands; carry the boundary in f32 (converts fuse).
+    if x.dtype == jnp.bfloat16:
+        x = x.astype(jnp.float32)
+    B, S, d = x.shape
+    T = B * S
+    M = mesh.shape[axis]
+    from jax.sharding import PartitionSpec as P
+
+    expert_sharded = m.num_experts % M == 0
+    if expert_sharded:
+        E_loc = m.num_experts // M
+        w_spec = P(axis, None, None)
+    else:
+        # experts don't divide the axis: shard every expert's d_ff instead;
+        # each rank processes ALL experts on its f-slice (partial sums)
+        E_loc = m.num_experts
+        w_spec = P(None, None, axis)
+
+    p_specs = {
+        "router": P(None, None),
+        "w_gate": w_spec,
+        "w_up": w_spec,
+        "w_down": P(axis, None, None) if expert_sharded else P(None, axis, None),
+    }
+    if "dense" in p:
+        p_specs["dense"] = {"w_up": P(None, axis), "w_down": P(axis, None)}
+        if "w_gate" in p["dense"]:
+            p_specs["dense"]["w_gate"] = P(None, axis)
+
+    # FULL-manual shard_map: with the batch axes left automatic the region
+    # sees the GLOBAL token axis and XLA re-partitions the sort/scatter with
+    # (T·k, d) data-axis all-reduces — the exact pathology H2 removes.
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_ba = 1
+    for a in ba:
+        n_ba *= mesh.shape[a]
+    # per-expert capacity for a LOCAL batch shard
+    C = capacity(max(T // n_ba, 1), cfg)
+
+    def local_fn(p_loc, x_loc):
+        xf = x_loc.reshape(-1, d)
+        if expert_sharded:
+            e_lo = jax.lax.axis_index(axis) * E_loc
+        else:
+            e_lo = 0
+        y, aux = _moe_local_block(p_loc, xf, cfg, e_lo, E_loc, C)
+        if "dense" in p_loc:
+            y = y + apply_mlp(p_loc["dense"], xf, cfg).astype(jnp.float32)
+        y = jax.lax.psum(y, axis)
+        # aux: mean over the global batch; psum also hands shard_map an
+        # additive replication proof (its copy-reducer all-reduce fallback
+        # crashes XLA's CPU AllReducePromotion pass on narrow dtypes)
+        aux = jax.lax.psum(aux, ba + (axis,)) / (mesh.shape[axis] * n_ba)
+        return y.reshape(x_loc.shape), aux  # fp32 at the boundary
+
+    fn = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(p_specs, P(ba, None, None)),
+        out_specs=(P(ba, None, None), P()),
+        check_vma=False,
+    )
+    y, aux = fn(p, x)
+    return y.astype(in_dtype), aux

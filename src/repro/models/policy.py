@@ -1,0 +1,69 @@
+"""Activation-sharding policy context.
+
+The launcher sets the residual-stream PartitionSpec before lowering; the
+transformer stack applies ``with_sharding_constraint`` at block boundaries so
+the SPMD partitioner cannot silently re-shard the batch axis (observed: FSDP
+batch sharding over ("data","model") degraded back to 16-way without pins —
+EXPERIMENTS.md §Perf iteration 3).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_ACT_SPEC: Optional[object] = None  # PartitionSpec for (B, S, d) activations
+_MOE_BUFFER_SPEC: Optional[object] = None  # PartitionSpec for (E, C, d)
+# (mesh, axis_name) for expert-local shard_map MoE dispatch (H2), or None
+_MOE_SHARD: Optional[tuple] = None
+# (virtual_heads, PartitionSpec for (B,S,H,dh)) — zero-pad awkward head
+# counts so the O(S^2) attention einsums shard on the model axis (H4), or None
+_HEAD_PAD: Optional[tuple] = None
+
+
+def set_head_pad(pad) -> None:
+    global _HEAD_PAD
+    _HEAD_PAD = pad
+
+
+def get_head_pad():
+    return _HEAD_PAD
+
+
+def set_moe_shard(mesh_and_axis) -> None:
+    global _MOE_SHARD
+    _MOE_SHARD = mesh_and_axis
+
+
+def get_moe_shard():
+    return _MOE_SHARD
+
+
+def set_activation_spec(spec) -> None:
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def get_activation_spec():
+    return _ACT_SPEC
+
+
+def set_moe_buffer_spec(spec) -> None:
+    global _MOE_BUFFER_SPEC
+    _MOE_BUFFER_SPEC = spec
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    """Apply the active constraint to a (B, S, d) activation, if any."""
+    if _ACT_SPEC is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+
+
+def constrain_moe_buffer(buf: jax.Array) -> jax.Array:
+    """Pin the (E, C, d) MoE dispatch buffer to the expert-parallel layout
+    (H2 hillclimb: without the pin the SPMD partitioner all-gathers the full
+    token activations to every model rank per MoE layer)."""
+    if _MOE_BUFFER_SPEC is None:
+        return buf
+    return jax.lax.with_sharding_constraint(buf, _MOE_BUFFER_SPEC)

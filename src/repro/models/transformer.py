@@ -1,0 +1,582 @@
+"""Composable decoder stack builder.
+
+A model is a sequence of ``num_layers`` blocks whose kinds follow
+``cfg.layer_pattern`` (tiled). Parameters for position ``j`` in the pattern
+are STACKED across pattern periods (leading axis ``n_periods``) and the stack
+is applied with ``jax.lax.scan`` over periods — one HLO body regardless of
+depth, which keeps lowering tractable for the 48-layer full-size configs.
+
+Block kinds: "attn" (attention + FFN), "mamba" (SSM + FFN), "mlstm"/"slstm"
+(xLSTM cells, self-contained FFN). Decoder blocks grow a cross-attention
+sub-layer when ``cfg.encoder_layers > 0`` (whisper).
+
+Entry points: ``init_params``, ``forward`` (train/prefill full-sequence),
+``loss_fn``, ``init_cache`` + ``decode_step`` (single-token serve).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import policy as policy_mod
+from repro.models import mamba as mamba_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    attention_forward,
+    decode_attention,
+    embed_tokens,
+    init_attention,
+    init_embed,
+    init_mlp,
+    init_norm,
+    lm_logits,
+    sinusoidal_pos_emb,
+)
+from repro.models.moe import apply_moe, init_moe
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Structure helpers
+# ---------------------------------------------------------------------------
+
+
+def pattern_info(cfg: ArchConfig):
+    pat = cfg.layer_pattern
+    P = len(pat)
+    if cfg.num_layers % P:
+        raise ValueError(
+            f"{cfg.name}: num_layers={cfg.num_layers} not divisible by "
+            f"pattern length {P}"
+        )
+    n_periods = cfg.num_layers // P
+    moe_flags = cfg.moe_layers()[:P]  # parity is period-invariant (P even or moe 'all')
+    return pat, P, n_periods, moe_flags
+
+
+def is_local_layer(cfg: ArchConfig, j: int) -> bool:
+    """Does pattern position j use the sliding window?"""
+    a = cfg.attention
+    if a is None or not a.sliding_window:
+        return False
+    if a.alternate_local_global:
+        return j % 2 == 0
+    return True  # uniform SWA (mixtral, jamba long-context mode)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ArchConfig, kind: str, use_moe: bool, cross: bool, dtype) -> Params:
+    ks = iter(jax.random.split(key, 8))
+    p: Params = {"norm1": init_norm(cfg, dtype)}
+    if kind == "attn":
+        p["attn"] = init_attention(next(ks), cfg, dtype)
+        p["norm2"] = init_norm(cfg, dtype)
+        p["ffn"] = (
+            init_moe(next(ks), cfg, dtype) if use_moe else init_mlp(next(ks), cfg, cfg.d_ff, dtype)
+        )
+        if cross:
+            p["cross_norm"] = init_norm(cfg, dtype)
+            p["cross_attn"] = init_attention(next(ks), cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(next(ks), cfg, dtype)
+        p["norm2"] = init_norm(cfg, dtype)
+        p["ffn"] = (
+            init_moe(next(ks), cfg, dtype) if use_moe else init_mlp(next(ks), cfg, cfg.d_ff, dtype)
+        )
+    elif kind == "mlstm":
+        p["cell"] = xlstm_mod.init_mlstm(next(ks), cfg, dtype)
+    elif kind == "slstm":
+        p["cell"] = xlstm_mod.init_slstm(next(ks), cfg, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    pat, P, n_periods, moe_flags = pattern_info(cfg)
+    k_embed, k_blocks, k_enc = jax.random.split(key, 3)
+    cross = cfg.encoder_layers > 0
+
+    blocks = []
+    for j in range(P):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, j), n_periods)
+        per = [
+            _init_block(keys[r], cfg, pat[j], moe_flags[j], cross, dtype)
+            for r in range(n_periods)
+        ]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+
+    params: Params = {
+        "embed": init_embed(k_embed, cfg, dtype),
+        "blocks": blocks,
+        "final_norm": init_norm(cfg, dtype),
+    }
+    if cross:
+        keys = jax.random.split(k_enc, cfg.encoder_layers)
+        enc = [_init_block(keys[r], cfg, "attn", False, False, dtype) for r in range(cfg.encoder_layers)]
+        params["enc_blocks"] = [jax.tree.map(lambda *xs: jnp.stack(xs), *enc)]
+        params["enc_norm"] = init_norm(cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    kind: str,
+    use_moe: bool,
+    j: int,
+    *,
+    positions: jax.Array,
+    causal: bool,
+    cross_kv: Optional[tuple] = None,
+):
+    """One block, full sequence. Returns (x, aux_loss)."""
+    x = policy_mod.constrain(x)
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("mlstm", "slstm"):
+        h = apply_norm(p["norm1"], x, cfg)
+        cell = xlstm_mod.apply_mlstm if kind == "mlstm" else xlstm_mod.apply_slstm
+        return x + cell(p["cell"], h, cfg), aux
+
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        h = attention_forward(
+            p["attn"], h, cfg, positions=positions, causal=causal,
+            is_local=is_local_layer(cfg, j),
+        )
+    else:  # mamba
+        h = mamba_mod.apply_mamba(p["mamba"], h, cfg)
+    x = x + h
+
+    if cross_kv is not None and "cross_attn" in p:
+        h = apply_norm(p["cross_norm"], x, cfg)
+        h = attention_forward(
+            p["cross_attn"], h, cfg, positions=positions, causal=False,
+            kv_override=cross_kv,
+        )
+        x = x + h
+
+    h = apply_norm(p["norm2"], x, cfg)
+    if use_moe:
+        h, aux = apply_moe(p["ffn"], h, cfg)
+    else:
+        h = apply_mlp(p["ffn"], h, cfg)
+    return x + h, aux
+
+
+def _apply_stack(
+    blocks,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    positions,
+    causal: bool,
+    cross_kv=None,
+    pattern=None,
+    moe_flags=None,
+    remat: bool = True,
+):
+    pat = pattern if pattern is not None else pattern_info(cfg)[0]
+    flags = moe_flags if moe_flags is not None else pattern_info(cfg)[3]
+
+    def period(x, period_params):
+        aux = jnp.zeros((), jnp.float32)
+        for j, p in enumerate(period_params):
+            x, a = _apply_block(
+                p, x, cfg, pat[j], flags[j], j,
+                positions=positions, causal=causal, cross_kv=cross_kv,
+            )
+            aux = aux + a
+        return x, aux
+
+    body = jax.checkpoint(period) if remat else period
+
+    def scan_body(carry, period_params):
+        x, aux = carry
+        x, a = body(x, period_params)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)), tuple(blocks))
+    return x, aux
+
+
+def _encode(params: Params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, T_enc, d)."""
+    T = frames.shape[1]
+    pos = jnp.arange(T)
+    x = frames + sinusoidal_pos_emb(pos, cfg.d_model, frames.dtype)
+    x, _ = _apply_stack(
+        params["enc_blocks"], x, cfg, positions=pos, causal=False,
+        pattern=("attn",), moe_flags=(False,),
+    )
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig):
+    """Full-sequence forward. Returns (logits fp32 (B,S,V), aux_loss).
+
+    batch: {"tokens": (B,S)} plus modality extras:
+      vlm:   "image_embeds" (B,S_img,d), "image_positions" (B,S_img) int32
+      audio: "frames" (B,T_enc,d)
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    if cfg.frontend == "vq_image" and "image_embeds" in batch:
+        # early fusion: splice precomputed patch/VQ embeddings into the stream
+        bidx = jnp.arange(B)[:, None]
+        x = x.at[bidx, batch["image_positions"]].set(
+            batch["image_embeds"].astype(x.dtype)
+        )
+
+    positions = jnp.arange(S)
+    cross_kv = None
+    if cfg.encoder_layers:
+        x = x + sinusoidal_pos_emb(positions, cfg.d_model, x.dtype)
+        enc = _encode(params, batch["frames"], cfg)
+        # precompute is per-block inside attention (kv_override projects there)
+        cross_kv = enc
+
+    if cross_kv is not None:
+        x, aux = _apply_stack_cross(params, x, cfg, positions, cross_kv)
+    else:
+        x, aux = _apply_stack(params["blocks"], x, cfg, positions=positions, causal=True)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    return lm_logits(params["embed"], x, cfg), aux
+
+
+def _apply_stack_cross(params, x, cfg, positions, enc):
+    """Decoder stack with cross-attention: K/V projected per block from enc."""
+    pat, P, n_periods, moe_flags = pattern_info(cfg)
+
+    def period(x, period_params):
+        aux = jnp.zeros((), jnp.float32)
+        for j, p in enumerate(period_params):
+            kc = jnp.einsum("btd,dhk->bthk", enc, p["cross_attn"]["wk"])
+            vc = jnp.einsum("btd,dhk->bthk", enc, p["cross_attn"]["wv"])
+            x, a = _apply_block(
+                p, x, cfg, pat[j], moe_flags[j], j,
+                positions=positions, causal=True, cross_kv=(kc, vc, None),
+            )
+            aux = aux + a
+        return x, aux
+
+    body = jax.checkpoint(period)
+
+    def scan_body(carry, pp):
+        x, aux = carry
+        x, a = body(x, pp)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), tuple(params["blocks"])
+    )
+    return x, aux
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig):
+    """Next-token cross-entropy (+ MoE aux). Returns scalar fp32."""
+    logits, aux = forward(params, batch, cfg)
+    targets = batch.get("labels")
+    auto_shift = targets is None
+    if auto_shift:
+        targets = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if "loss_mask" in batch:
+        mask = batch["loss_mask"].astype(ll.dtype)
+    elif auto_shift:  # exclude the (padded) final position
+        S = ll.shape[1]
+        mask = (jnp.arange(S) < S - 1).astype(ll.dtype)[None, :] * jnp.ones_like(ll)
+    else:
+        mask = jnp.ones_like(ll)
+    ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill (inference: full sequence -> last logits + decode cache)
+# ---------------------------------------------------------------------------
+
+
+def _to_cache_layout(k: jax.Array, W: int) -> jax.Array:
+    """Fit (B, S, H, dh) prefill K/V into a width-W cache (pad or ring-roll)."""
+    S = k.shape[1]
+    if W >= S:
+        return jnp.pad(k, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+    last = k[:, S - W:]
+    return jnp.roll(last, shift=(S - W) % W, axis=1)
+
+
+def prefill_step(
+    params: Params,
+    batch: Dict[str, jax.Array],
+    cfg: ArchConfig,
+    max_len: Optional[int] = None,
+    long_mode: bool = False,
+):
+    """Inference prefill: run the full prompt, return (last-token logits
+    (B, V) fp32, decode cache ready for ``decode_step`` at pos=S)."""
+    pat, P, n_periods, moe_flags = pattern_info(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if cfg.frontend == "vq_image" and "image_embeds" in batch:
+        bidx = jnp.arange(B)[:, None]
+        x = x.at[bidx, batch["image_positions"]].set(batch["image_embeds"].astype(x.dtype))
+    positions = jnp.arange(S)
+
+    cross_cache = None
+    enc = None
+    if cfg.encoder_layers:
+        x = x + sinusoidal_pos_emb(positions, cfg.d_model, x.dtype)
+        enc = _encode(params, batch["frames"], cfg)
+        cross_cache = build_cross_cache(params, enc, cfg)
+
+    def period(carry, xs):
+        x = carry
+        if cross_cache is not None:
+            period_params, cross_j = xs
+        else:
+            (period_params,) = xs
+            cross_j = None
+        caches = []
+        for j in range(P):
+            p = period_params[j]
+            kind = pat[j]
+            h = apply_norm(p["norm1"], x, cfg)
+            if kind == "attn":
+                y, (k, v) = attention_forward(
+                    p["attn"], h, cfg, positions=positions, causal=True,
+                    is_local=is_local_layer(cfg, j), return_kv=True,
+                )
+                W = cache_window(cfg, j, max_len, long_mode)
+                cj = {"k": _to_cache_layout(k, W), "v": _to_cache_layout(v, W)}
+            elif kind == "mamba":
+                y, cj = mamba_mod.apply_mamba(p["mamba"], h, cfg, return_state=True)
+            elif kind == "mlstm":
+                y, cj = xlstm_mod.apply_mlstm(p["cell"], h, cfg, return_state=True)
+            else:
+                y, cj = xlstm_mod.apply_slstm(p["cell"], h, cfg, return_state=True)
+            x = x + y
+            if kind in ("mlstm", "slstm"):
+                caches.append(cj)
+                continue
+            if cross_j is not None and "cross_attn" in p:
+                hh = apply_norm(p["cross_norm"], x, cfg)
+                hh = attention_forward(
+                    p["cross_attn"], hh, cfg, positions=positions, causal=False,
+                    kv_override=(cross_j["k"], cross_j["v"], None),
+                )
+                x = x + hh
+            h2 = apply_norm(p["norm2"], x, cfg)
+            if moe_flags[j]:
+                h2, _ = apply_moe(p["ffn"], h2, cfg)
+            else:
+                h2 = apply_mlp(p["ffn"], h2, cfg)
+            x = x + h2
+            caches.append(cj)
+        return x, tuple(caches)
+
+    xs = (tuple(params["blocks"]),)
+    if cross_cache is not None:
+        xs = xs + (cross_cache,)
+    x, block_caches = jax.lax.scan(period, x, xs)
+    x = apply_norm(params["final_norm"], x[:, -1:], cfg)
+    logits = lm_logits(params["embed"], x, cfg)[:, 0]
+    cache: Dict[str, Any] = {"blocks": list(block_caches)}
+    if cross_cache is not None:
+        cache["cross"] = cross_cache
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+LONG_MODE_WINDOW = 4096  # cap for full-attention layers in "windowed" long serve
+
+
+def cache_window(cfg: ArchConfig, j: int, max_len: int, long_mode: bool = False) -> int:
+    """KV-cache capacity for pattern position j at a given context length."""
+    a = cfg.attention
+    if a is None:
+        return max_len
+    if a.sliding_window and is_local_layer(cfg, j):
+        return min(a.sliding_window, max_len)
+    if long_mode and cfg.long_context == "windowed" and not a.alternate_local_global:
+        # e.g. jamba long-context deployment: cap attention layers (DESIGN.md)
+        return min(LONG_MODE_WINDOW, max_len)
+    return max_len
+
+
+def init_cache(
+    cfg: ArchConfig,
+    batch: int,
+    max_len: int,
+    dtype=jnp.float32,
+    enc_len: int = 0,
+    long_mode: bool = False,
+) -> Dict[str, Any]:
+    """Build an (empty) decode cache pytree, stacked per pattern position."""
+    pat, P, n_periods, _ = pattern_info(cfg)
+    a = cfg.attention
+
+    def stacked(make):
+        per = [make() for _ in range(n_periods)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    blocks = []
+    for j, kind in enumerate(pat):
+        if kind == "attn":
+            W = cache_window(cfg, j, max_len, long_mode)
+            c = stacked(lambda W=W: {
+                "k": jnp.zeros((batch, W, a.num_kv_heads, a.head_dim), dtype),
+                "v": jnp.zeros((batch, W, a.num_kv_heads, a.head_dim), dtype),
+            })
+        elif kind == "mamba":
+            c = stacked(lambda: mamba_mod.init_mamba_cache(cfg, batch, dtype))
+        elif kind == "mlstm":
+            c = stacked(lambda: xlstm_mod.init_mlstm_cache(cfg, batch))
+        else:
+            c = stacked(lambda: xlstm_mod.init_slstm_cache(cfg, batch))
+        blocks.append(c)
+    cache: Dict[str, Any] = {"blocks": blocks}
+    if cfg.encoder_layers and enc_len:
+        # cross-attention K/V per decoder block (projected once at prefill)
+        cache["cross"] = [
+            stacked(lambda: {
+                "k": jnp.zeros((batch, enc_len, a.num_kv_heads, a.head_dim), dtype),
+                "v": jnp.zeros((batch, enc_len, a.num_kv_heads, a.head_dim), dtype),
+            })
+            for _ in range(1)
+        ][0]
+    return cache
+
+
+def _decode_block(p, cache_j, x, cfg, kind, use_moe, j, pos, max_len, cross_j=None):
+    if kind in ("mlstm", "slstm"):
+        h = apply_norm(p["norm1"], x, cfg)
+        fn = xlstm_mod.decode_mlstm if kind == "mlstm" else xlstm_mod.decode_slstm
+        y, new_c = fn(p["cell"], h, cache_j, cfg)
+        return x + y, new_c
+
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        W = cache_j["k"].shape[1]
+        y, nk, nv = decode_attention(
+            p["attn"], h, cfg, k_cache=cache_j["k"], v_cache=cache_j["v"],
+            pos=pos, is_local=is_local_layer(cfg, j),
+            window_cache=W < max_len,
+        )
+        new_c = {"k": nk, "v": nv}
+    else:  # mamba
+        y, new_c = mamba_mod.decode_mamba(p["mamba"], h, cache_j, cfg)
+    x = x + y
+
+    if cross_j is not None and "cross_attn" in p:
+        h = apply_norm(p["cross_norm"], x, cfg)
+        a = cfg.attention
+        B = x.shape[0]
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"])
+        if a.qkv_bias:
+            q = q + p["cross_attn"]["bq"]
+        Hq, dh = a.num_heads, a.head_dim
+        G = Hq // a.num_kv_heads
+        qh = q.reshape(B, a.num_kv_heads, G, dh)
+        lg = jnp.einsum("bhgk,bshk->bhgs", qh, cross_j["k"]).astype(jnp.float32)
+        pr = jax.nn.softmax(lg / math.sqrt(dh), axis=-1)
+        o = jnp.einsum("bhgs,bshk->bhgk", pr.astype(cross_j["v"].dtype), cross_j["v"])
+        o = o.reshape(B, 1, Hq, dh)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["cross_attn"]["wo"])
+
+    h = apply_norm(p["norm2"], x, cfg)
+    if use_moe:
+        h, _ = apply_moe(p["ffn"], h, cfg)
+    else:
+        h = apply_mlp(p["ffn"], h, cfg)
+    return x + h, new_c
+
+
+def build_cross_cache(params: Params, enc: jax.Array, cfg: ArchConfig):
+    """Project encoder output into per-decoder-block cross K/V (whisper)."""
+
+    def project(block_params):
+        k = jnp.einsum("btd,dhk->bthk", enc, block_params["cross_attn"]["wk"])
+        v = jnp.einsum("btd,dhk->bthk", enc, block_params["cross_attn"]["wv"])
+        return {"k": k, "v": v}
+
+    # vmap over the stacked period axis of pattern position 0 (whisper P=1)
+    return jax.vmap(project)(params["blocks"][0])
+
+
+def decode_step(
+    params: Params,
+    cache: Dict[str, Any],
+    token: jax.Array,
+    pos: jax.Array,
+    cfg: ArchConfig,
+    max_len: Optional[int] = None,
+):
+    """One-token serve step. token: (B,) int32; pos: scalar int32 (context
+    length so far). ``max_len``: serving context capacity — caches narrower
+    than this are treated as ring buffers. Returns (logits (B,V) fp32, cache).
+    """
+    pat, P, n_periods, moe_flags = pattern_info(cfg)
+    if max_len is None:
+        widths = [c["k"].shape[2] for c in cache["blocks"] if isinstance(c, dict) and "k" in c]
+        max_len = max(widths) if widths else cfg.max_seq_len
+    x = embed_tokens(params["embed"], token[:, None], cfg)
+    if cfg.encoder_layers:
+        x = x + sinusoidal_pos_emb(jnp.asarray(pos)[None], cfg.d_model, x.dtype)
+
+    cross = cache.get("cross")
+
+    def scan_body(x, xs):
+        if cross is not None:
+            period_params, period_cache, cross_cache = xs
+        else:
+            period_params, period_cache = xs
+            cross_cache = None
+        new_cache = []
+        for j in range(P):
+            p = period_params[j]
+            cj = period_cache[j]
+            cross_j = cross_cache if (cross_cache is not None and "cross_attn" in p) else None
+            x, nc = _decode_block(
+                p, cj, x, cfg, pat[j], moe_flags[j], j, pos, max_len, cross_j
+            )
+            new_cache.append(nc)
+        return x, tuple(new_cache)
+
+    xs = (tuple(params["blocks"]), tuple(cache["blocks"]))
+    if cross is not None:
+        xs = xs + (cross,)
+    x, new_blocks = jax.lax.scan(scan_body, x, xs)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params["embed"], x, cfg)[:, 0]
+    new_cache = dict(cache)
+    new_cache["blocks"] = list(new_blocks)
+    return logits, new_cache

@@ -1,0 +1,309 @@
+"""xLSTM blocks (mLSTM matrix-memory + sLSTM scalar-memory) [arXiv:2405.04517].
+
+TPU adaptation: recurrences run as chunked ``lax.scan`` over time with
+``jax.checkpoint`` per chunk (same policy as mamba.py) so the backward pass
+recomputes in-chunk states instead of materializing (S, B, H, dk, dv).
+
+Simplifications vs the paper (recorded in DESIGN.md):
+  * sLSTM uses diagonal recurrent gate connections (r ⊙ h_{t-1}) instead of
+    full per-head recurrent matrices — keeps the scalar-memory exponential
+    gating semantics at O(d) recurrent params.
+  * Both blocks use the exp-gating + m-stabilizer formulation.
+
+Decode is a single-step state update: O(1) per token -> native long_500k.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+CHUNK = 256
+
+
+def _dims(cfg: ArchConfig):
+    a = cfg.attention  # reused for head geometry (H, head_dim)
+    return a.num_heads, a.head_dim
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    H, dh = _dims(cfg)
+    qd = H * dh
+    ks = jax.random.split(key, 8)
+    si = 1.0 / math.sqrt(d)
+    return {
+        "wq": (jax.random.normal(ks[0], (d, H, dh)) * si).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, H, dh)) * si).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, H, dh)) * si).astype(dtype),
+        "w_if": (jax.random.normal(ks[3], (d, H, 2)) * si).astype(jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((H, 1)), jnp.full((H, 1), 3.0)], axis=-1
+        ).astype(jnp.float32),                       # forget bias ~ remember
+        "wo": (jax.random.normal(ks[4], (H, dh, d)) * (1.0 / math.sqrt(qd))).astype(dtype),
+        "w_up": (jax.random.normal(ks[5], (d, 2 * d)) * si).astype(dtype),
+        "w_down": (jax.random.normal(ks[6], (2 * d, d)) * (1.0 / math.sqrt(2 * d))).astype(dtype),
+    }
+
+
+def _mlstm_chunk(qc, kc, vc, gc, state):
+    """One remat chunk. qc/kc/vc: (B,c,H,dh); gc: (B,c,H,2) raw gate logits.
+    state: (C (B,H,dk,dv), n (B,H,dk), m (B,H))."""
+    C0, n0, m0 = state
+
+    def step(carry, xs):
+        C, n, m = carry
+        q, k, v, g = xs                                # (B,H,dh)...(B,H,2)
+        i_t, f_t = g[..., 0], g[..., 1]
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        i_s = jnp.exp(i_t - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * (
+            k[..., :, None] * v[..., None, :]
+        )
+        n = f_s[..., None] * n + i_s[..., None] * k
+        num = jnp.einsum("bhkv,bhk->bhv", C, q)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (qc, kc, vc, gc))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 0, 2, 3), (C, n, m)         # (B,c,H,dv)
+
+
+CHUNKWISE = 64  # chunkwise-parallel block length (matmul form)
+
+
+def _mlstm_chunkwise_block(qc, kc, vc, gc, state):
+    """Chunkwise-parallel mLSTM (EXPERIMENTS.md §Perf hillclimb H1).
+
+    Exact algebraic regrouping of the sequential recurrence: with
+    F_t = Σ_{r<=t} log σ(f_r) (in-chunk cumulative forget),
+    g_s = i_s − F_s, and stabilizer M_t = max(m0, cummax_{s<=t} g_s):
+
+      C_t ∝ Σ_{s<=t} exp(g_s − M_t)·k_s v_sᵀ + exp(m0 − M_t)·C0
+      h_t = [ (q_t·k_s)·exp(g_s − M_t) ]_{s<=t} V + exp(m0 − M_t)·q_t C0
+
+    i.e. a (c, c) masked matmul per chunk — the C matrix is read/written
+    once per CHUNKWISE tokens instead of every token (HBM traffic ÷c) and
+    the inner products hit the MXU. Matches the sequential scan to fp32
+    round-off (tests/test_models.py::test_mlstm_chunkwise_equals_sequential).
+
+    qc/kc/vc: (B, c, H, dh) fp32; gc: (B, c, H, 2) raw gate logits.
+    state: (C (B,H,dk,dv), n (B,H,dk), m0 (B,H)).
+    """
+    C0, n0, m0 = state
+    i_t = gc[..., 0]                                   # (B,c,H)
+    logf = jax.nn.log_sigmoid(gc[..., 1])
+    F = jnp.cumsum(logf, axis=1)                       # (B,c,H)
+    g = i_t - F
+    M = jnp.maximum(
+        jax.lax.cummax(g, axis=1), m0[:, None, :]
+    )                                                  # (B,c,H) = M_t
+    w_s = g                                            # log source weights
+    # intra-chunk: S[t,s] = (q_t·k_s)·exp(g_s − M_t), s <= t
+    qk = jnp.einsum("bthk,bshk->bhts", qc, kc)         # (B,H,c,c)
+    c_len = qc.shape[1]
+    causal = jnp.tril(jnp.ones((c_len, c_len), bool))
+    lw = w_s.transpose(0, 2, 1)[:, :, None, :] - M.transpose(0, 2, 1)[:, :, :, None]
+    D = jnp.where(causal[None, None], jnp.exp(lw), 0.0)
+    S = qk * D
+    num = jnp.einsum("bhts,bshv->bthv", S, vc)         # (B,c,H,dv)
+    inter_scale = jnp.exp(m0[:, None, :] - M)          # (B,c,H)
+    num = num + inter_scale[..., None] * jnp.einsum("bthk,bhkv->bthv", qc, C0)
+    nvec = jnp.einsum("bhts,bshk->bthk", D, kc)        # Σ exp(g_s−M_t) k_s
+    nvec = nvec + inter_scale[..., None] * n0[:, None]
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bthk,bthk->bth", nvec, qc)), 1.0
+    )
+    h = num / den[..., None]
+
+    # chunk-end state (t = c): M_c = M[:, -1], scale sources by exp(g_s − M_c)
+    M_c = M[:, -1]                                     # (B,H)
+    src = jnp.exp(g - M_c[:, None, :])                 # (B,c,H)
+    C_new = jnp.einsum("bsh,bshk,bshv->bhkv", src, kc, vc)
+    end_scale = jnp.exp(m0 - M_c)
+    C_new = C_new + end_scale[..., None, None] * C0
+    n_new = jnp.einsum("bsh,bshk->bhk", src, kc) + end_scale[..., None] * n0
+    m_new = F[:, -1] + M_c                             # m_c = F_c + M_c
+    return h, (C_new, n_new, m_new)
+
+
+def apply_mlstm(
+    p: dict, x: jax.Array, cfg: ArchConfig, return_state: bool = False,
+    impl: str = "chunkwise",
+):
+    B, S, d = x.shape
+    H, dh = _dims(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).astype(jnp.float32) / math.sqrt(dh)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"]).astype(jnp.float32)
+    g = jnp.einsum("bsd,dhg->bshg", x.astype(jnp.float32), p["w_if"]) + p["b_if"]
+
+    c = min(CHUNKWISE if impl == "chunkwise" else CHUNK, S)
+    pad = (-S) % c
+    if pad:
+        q, k, v, g = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v, g))
+        # padded steps: force forget=keep, input=-inf so state is unchanged
+        gpad_mask = jnp.arange(S + pad) < S
+        g = jnp.where(gpad_mask[None, :, None, None], g, jnp.array([-1e30, 30.0]))
+    n_chunks = (S + pad) // c
+
+    def split(t):
+        return t.reshape(B, n_chunks, c, *t.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+    block = _mlstm_chunkwise_block if impl == "chunkwise" else _mlstm_chunk
+
+    def body(state, xs):
+        qc, kc, vc, gc = xs
+        hs, state = jax.checkpoint(block)(qc, kc, vc, gc, state)
+        return state, hs
+
+    state0 = (
+        jnp.zeros((B, H, dh, dh), jnp.float32),
+        jnp.zeros((B, H, dh), jnp.float32),
+        jnp.zeros((B, H), jnp.float32),
+    )
+    state_f, hs = jax.lax.scan(body, state0, (split(q), split(k), split(v), split(g)))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * c, H, dh)[:, :S]
+    y = jnp.einsum("bshk,hkd->bsd", h.astype(x.dtype), p["wo"])
+    y = jax.nn.gelu(y @ p["w_up"]) @ p["w_down"]
+    if return_state:
+        # padded steps were forced to (i=-inf, f=+30): state passes through
+        return y, {"C": state_f[0], "n": state_f[1], "m": state_f[2]}
+    return y
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int) -> dict:
+    H, dh = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def decode_mlstm(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig) -> tuple:
+    """x: (B,1,d) -> (y (B,1,d), cache)."""
+    H, dh = _dims(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).astype(jnp.float32) / math.sqrt(dh)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"]).astype(jnp.float32)
+    g = jnp.einsum("bsd,dhg->bshg", x.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    (state, h) = _mlstm_step_single(
+        q[:, 0], k[:, 0], v[:, 0], g[:, 0], (cache["C"], cache["n"], cache["m"])
+    )
+    y = jnp.einsum("bhk,hkd->bd", h.astype(x.dtype), p["wo"])[:, None]
+    y = jax.nn.gelu(y @ p["w_up"]) @ p["w_down"]
+    return y, {"C": state[0], "n": state[1], "m": state[2]}
+
+
+def _mlstm_step_single(q, k, v, g, state):
+    C, n, m = state
+    i_t, f_t = g[..., 0], g[..., 1]
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    C = f_s[..., None, None] * C + i_s[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = f_s[..., None] * n + i_s[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    return (C, n, m_new), num / den[..., None]
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    H, dh = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    si = 1.0 / math.sqrt(d)
+    return {
+        # input projections for cell input z and gates i, f, o
+        "w_in": (jax.random.normal(ks[0], (d, H, dh, 4)) * si).astype(dtype),
+        "b_in": jnp.zeros((H, dh, 4), jnp.float32),
+        # diagonal recurrent connections per gate
+        "r": (jax.random.normal(ks[1], (H, dh, 4)) * 0.1).astype(jnp.float32),
+        "wo": (jax.random.normal(ks[2], (H, dh, d)) * (1.0 / math.sqrt(H * dh))).astype(dtype),
+        "w_up": (jax.random.normal(ks[3], (d, 2 * d)) * si).astype(dtype),
+        "w_down": (jax.random.normal(ks[4], (2 * d, d)) * (1.0 / math.sqrt(2 * d))).astype(dtype),
+    }
+
+
+def _slstm_chunk(zc, state, r):
+    """zc: (B,c,H,dh,4) pre-activations; state: (h,c_,n,m) each (B,H,dh)."""
+
+    def step(carry, z_t):
+        h, c_, n, m = carry
+        pre = z_t + r * h[..., None]                   # (B,H,dh,4)
+        z = jnp.tanh(pre[..., 0])
+        i_t = pre[..., 1]
+        logf = jax.nn.log_sigmoid(pre[..., 2])
+        o = jax.nn.sigmoid(pre[..., 3])
+        m_new = jnp.maximum(logf + m, i_t)
+        i_s = jnp.exp(i_t - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_ = f_s * c_ + i_s * z
+        n = f_s * n + i_s
+        h = o * c_ / jnp.maximum(n, 1.0)
+        return (h, c_, n, m_new), h
+
+    state, hs = jax.lax.scan(step, state, zc.transpose(1, 0, 2, 3, 4))
+    return hs.transpose(1, 0, 2, 3), state
+
+
+def apply_slstm(p: dict, x: jax.Array, cfg: ArchConfig, return_state: bool = False):
+    B, S, d = x.shape
+    H, dh = _dims(cfg)
+    z = jnp.einsum("bsd,dhkg->bshkg", x, p["w_in"]).astype(jnp.float32) + p["b_in"]
+
+    c = min(CHUNK, S)
+    pad = (-S) % c
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        mask = jnp.arange(S + pad) < S
+        neutral = jnp.array([0.0, -1e30, 30.0, 0.0])
+        z = jnp.where(mask[None, :, None, None, None], z, neutral)
+    n_chunks = (S + pad) // c
+    zc = z.reshape(B, n_chunks, c, H, dh, 4).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(state, z_chunk):
+        hs, state = jax.checkpoint(_slstm_chunk)(z_chunk, state, p["r"])
+        return state, hs
+
+    state0 = tuple(jnp.zeros((B, H, dh), jnp.float32) for _ in range(4))
+    state_f, hs = jax.lax.scan(body, state0, zc)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * c, H, dh)[:, :S]
+    y = jnp.einsum("bshk,hkd->bsd", h.astype(x.dtype), p["wo"])
+    y = jax.nn.gelu(y @ p["w_up"]) @ p["w_down"]
+    if return_state:
+        return y, dict(zip(("h", "c", "n", "m"), state_f))
+    return y
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int) -> dict:
+    H, dh = _dims(cfg)
+    return {k: jnp.zeros((batch, H, dh), jnp.float32) for k in ("h", "c", "n", "m")}
+
+
+def decode_slstm(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig) -> tuple:
+    z = jnp.einsum("bsd,dhkg->bshkg", x, p["w_in"]).astype(jnp.float32) + p["b_in"]
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    hs, state = _slstm_chunk(z, state, p["r"])
+    y = jnp.einsum("bshk,hkd->bsd", hs.astype(x.dtype), p["wo"])
+    y = jax.nn.gelu(y @ p["w_up"]) @ p["w_down"]
+    return y, dict(zip(("h", "c", "n", "m"), state))

@@ -1,0 +1,14 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    apply_updates,
+    cosine_schedule,
+    momentum,
+    sgd,
+)
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adam", "adamw",
+    "apply_updates", "cosine_schedule",
+]

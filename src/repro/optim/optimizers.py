@@ -1,0 +1,106 @@
+"""Minimal functional optimizer library (no optax in this container).
+
+Optimizer = (init(params) -> state, update(grads, state, params) ->
+(updates, state)). ``apply_updates`` adds updates to params. Used by client
+local training and by the centralized train driver in launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[..., tuple]
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def _tree_zeros(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return _tree_zeros(params)
+
+    def update(grads, state, params=None):
+        m = jax.tree.map(lambda v, g: beta * v + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda v, g: -lr * (beta * v + g.astype(jnp.float32)), m, grads
+            )
+        else:
+            upd = jax.tree.map(lambda v: -lr * v, m)
+        return upd, m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+    count: jax.Array
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return AdamState(_tree_zeros(params), _tree_zeros(params), jnp.zeros((), jnp.int32))
+
+    def update(grads, state: AdamState, params=None):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+        )
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def u(m, v, p):
+            upd = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                upd = upd - lr * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        if weight_decay:
+            upds = jax.tree.map(u, mu, nu, params)
+        else:
+            upds = jax.tree.map(lambda m, v: u(m, v, None), mu, nu)
+        return upds, AdamState(mu, nu, count)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

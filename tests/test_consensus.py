@@ -1,0 +1,202 @@
+"""Unit + property tests of the BE consensus core: the closed-form Schur
+solve vs a dense arrowhead solve, LTE behaviour, Algorithm-1 backtracking,
+contraction toward the fixed point, and frozen-client handling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ConsensusConfig,
+    adaptive_be_step,
+    be_step,
+    init_server_state,
+    lte,
+    server_round,
+    set_gains,
+)
+from repro.core.flow import broadcast_clients
+from repro.core.gamma import gamma_stacked
+
+
+def _dense_arrowhead_solve(x_c, I, J, gamma, g_inv, S_frozen, dt, L):
+    """Reference: assemble and solve the (A+1)x(A+1) arrowhead system of
+    eq. 28 (stable orientation) per scalar parameter element."""
+    A = I.shape[0]
+    r = dt / L
+    M = np.zeros((A + 1, A + 1))
+    rhs = np.zeros(A + 1)
+    for i in range(A):
+        M[i, i] = 1.0 + r * g_inv[i]
+        M[i, A] = r
+        rhs[i] = I[i] + r * (gamma[i] + J[i] * g_inv[i])
+    M[A, :A] = -dt
+    M[A, A] = 1.0
+    rhs[A] = x_c + dt * S_frozen
+    sol = np.linalg.solve(M, rhs)
+    return sol[A], sol[:A]
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    A=st.integers(1, 6),
+    dt=st.floats(float(np.float32(1e-4)), 1.0, width=32),
+    L=st.floats(float(np.float32(0.1)), 10.0, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_schur_solve_matches_dense(A, dt, L, seed):
+    rng = np.random.RandomState(seed)
+    x_c = {"w": jnp.float32(rng.randn())}
+    I = rng.randn(A).astype(np.float32)
+    J = rng.randn(A).astype(np.float32)
+    gam = rng.randn(A).astype(np.float32)
+    g_inv = rng.uniform(0.01, 1.0, A).astype(np.float32)
+    Sf = np.float32(rng.randn() * 0.1)
+
+    xc_new, I_new = be_step(
+        x_c,
+        {"w": jnp.asarray(I)[:, None].squeeze(-1)},
+        {"w": jnp.asarray(J)},
+        {"w": jnp.asarray(gam)},
+        jnp.asarray(g_inv),
+        {"w": jnp.asarray(Sf)},
+        jnp.float32(dt),
+        float(L),
+    )
+    xc_ref, I_ref = _dense_arrowhead_solve(
+        float(x_c["w"]), I, J, gam, g_inv, float(Sf), dt, L
+    )
+    np.testing.assert_allclose(float(xc_new["w"]), xc_ref, rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(I_new["w"]), I_ref, rtol=2e-4, atol=1e-5)
+
+
+def test_fixed_point_is_stationary():
+    """At x_i = x_c, I = J, Σ I = 0 and Γ constant, the BE step is a no-op."""
+    A, D = 3, 4
+    x_c = {"w": jnp.ones((D,))}
+    I = jnp.stack([jnp.full((D,), 1.0), jnp.full((D,), -0.5), jnp.full((D,), -0.5)])
+    gam = jnp.broadcast_to(x_c["w"], (A, D))  # clients sit at the central state
+    g_inv = jnp.full((A,), 0.1)
+    Sf = {"w": jnp.zeros((D,))}
+    xc_new, I_new = be_step(
+        x_c, {"w": I}, {"w": I}, {"w": gam}, g_inv, Sf, jnp.float32(0.05), 1.0
+    )
+    np.testing.assert_allclose(xc_new["w"], x_c["w"], rtol=1e-6)
+    np.testing.assert_allclose(I_new["w"], I, rtol=1e-5, atol=1e-6)
+
+
+def test_lte_zero_at_fixed_point():
+    A, D = 2, 3
+    x_c = {"w": jnp.ones((D,))}
+    I = {"w": jnp.stack([jnp.full((D,), 0.3), jnp.full((D,), -0.3)])}
+    gam = {"w": jnp.broadcast_to(x_c["w"], (A, D))}
+    g_inv = jnp.full((A,), 0.1)
+    eps = lte(x_c, I, x_c, I, I, gam, gam, g_inv, jnp.float32(0.1), 1.0)
+    assert float(eps) < 1e-7
+
+
+def test_adaptive_step_backtracks_to_tolerance():
+    """A huge initial dt must be backtracked until max|ε| <= δ."""
+    rng = np.random.RandomState(0)
+    A, D = 4, 8
+    x_c = {"w": jnp.zeros((D,))}
+    x_new = {"w": jnp.asarray(rng.randn(A, D), jnp.float32)}
+    x_prev = broadcast_clients(x_c, A)
+    I = {"w": jnp.asarray(rng.randn(A, D) * 0.1, jnp.float32)}
+    T = jnp.asarray(rng.uniform(0.01, 0.1, A), jnp.float32)
+    g_inv = jnp.asarray(rng.uniform(0.01, 0.3, A), jnp.float32)
+    Sf = {"w": jnp.zeros((D,))}
+    ccfg = ConsensusConfig(delta=1e-4, max_backtracks=16)
+    res = adaptive_be_step(
+        x_c, I, I, x_prev, x_new, T, g_inv, Sf,
+        jnp.float32(0.0), jnp.float32(100.0), ccfg,
+    )
+    assert float(res.eps) <= ccfg.delta * 1.0001
+    assert int(res.n_backtracks) >= 1
+    assert float(res.dt_used) < 100.0
+
+
+def test_quadratic_convergence_partial_participation():
+    """End-to-end: heterogeneous quadratic clients converge to the weighted
+    optimum under 40% participation (the paper's core claim, miniature)."""
+    n, dim, A = 10, 4, 4
+    key = jax.random.PRNGKey(0)
+    a = jax.random.uniform(key, (n,), minval=0.5, maxval=2.0)
+    c = jax.random.normal(jax.random.PRNGKey(1), (n, dim))
+    p = jnp.ones((n,)) / n
+    xstar = jnp.sum(p[:, None] * a[:, None] * c, 0) / jnp.sum(p * a)
+
+    ccfg = ConsensusConfig(L=1.0, delta=1e-3, dt_init=0.1, max_substeps=32)
+    state = init_server_state({"w": jnp.zeros((dim,))}, n)
+    state = set_gains(state, 1.0 / (1.0 / 0.05 + p * a))
+    rng = np.random.RandomState(0)
+    round_fn = jax.jit(lambda s, x, T, i: server_round(s, x, T, i, ccfg))
+    for _ in range(150):
+        idx = np.sort(rng.choice(n, A, replace=False))
+        lr = rng.uniform(1e-2, 5e-2, A)
+        ep = rng.randint(2, 8, A)
+        xs, Ts = [], []
+        for j in range(A):
+            i = int(idx[j])
+            x = state.x_c["w"]
+            I = state.I["w"][i]
+            for _e in range(int(ep[j])):
+                x = x - lr[j] * (p[i] * a[i] * (x - c[i]) + I)
+            xs.append(x)
+            Ts.append(lr[j] * ep[j])
+        state, _ = round_fn(
+            state, {"w": jnp.stack(xs)}, jnp.asarray(Ts, jnp.float32),
+            jnp.asarray(idx, jnp.int32),
+        )
+    err = float(jnp.linalg.norm(state.x_c["w"] - xstar))
+    err0 = float(jnp.linalg.norm(xstar))
+    assert err < 0.1 * err0, (err, err0)
+
+
+def test_frozen_clients_contribute_constant_flow():
+    """Inactive clients' flow variables enter ẋ_c but stay frozen."""
+    n, D = 5, 3
+    state = init_server_state({"w": jnp.zeros((D,))}, n)
+    # seed nonzero flows for clients 3, 4 (they stay inactive)
+    I0 = state.I["w"].at[3].set(1.0).at[4].set(-0.25)
+    state = state._replace(I=({"w": I0}))
+    idx = jnp.asarray([0, 1], jnp.int32)
+    x_new = {"w": jnp.zeros((2, D))}
+    T = jnp.asarray([0.05, 0.05])
+    ccfg = ConsensusConfig(max_substeps=4)
+    new_state, _ = server_round(state, x_new, T, idx, ccfg)
+    # frozen rows unchanged
+    np.testing.assert_allclose(new_state.I["w"][3], I0[3], rtol=1e-6)
+    np.testing.assert_allclose(new_state.I["w"][4], I0[4], rtol=1e-6)
+    # their net positive flow pushed x_c up (ẋ_c = ΣI > 0)
+    assert float(jnp.mean(new_state.x_c["w"])) > 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_contraction_property(seed):
+    """Theorem 1 (empirical): two different central states contract toward
+    each other under the SAME fixed-Δt BE consensus step (Δt small enough
+    that Γ interpolates, not extrapolates)."""
+    rng = np.random.RandomState(seed)
+    A, D = 3, 5
+    x_new = {"w": jnp.asarray(rng.randn(A, D), jnp.float32)}
+    T = jnp.asarray(rng.uniform(0.1, 0.2, A), jnp.float32)
+    g_inv = jnp.asarray(rng.uniform(0.05, 0.2, A), jnp.float32)
+    Sf = {"w": jnp.zeros((D,))}
+    dt = jnp.float32(0.04)  # < min(T): interpolation regime
+    tau = jnp.float32(0.0)
+
+    def one_step(xc_val):
+        x_c = {"w": jnp.asarray(xc_val, jnp.float32)}
+        I = {"w": jnp.zeros((A, D), jnp.float32)}
+        gam = gamma_stacked(broadcast_clients(x_c, A), x_new, T, tau + dt)
+        xc_n, _ = be_step(x_c, I, I, gam, g_inv, Sf, dt, 1.0)
+        return np.asarray(xc_n["w"])
+
+    x0a = rng.randn(D)
+    x0b = rng.randn(D) + 1.0
+    xa = one_step(x0a)
+    xb = one_step(x0b)
+    assert np.linalg.norm(xa - xb) <= np.linalg.norm(x0a - x0b) + 1e-6

@@ -1,0 +1,213 @@
+"""Federated runtime tests: partitioning, client sims, baselines, and the
+end-to-end ordering claim (FedECADO >= baselines on heterogeneous non-IID)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ConsensusConfig
+from repro.data import make_classification
+from repro.fed import (
+    FedSim,
+    FedSimConfig,
+    HeteroConfig,
+    data_fractions,
+    dirichlet_partition,
+    fedavg_aggregate,
+    fednova_aggregate,
+    fedecado_client_sim,
+    iid_partition,
+    sgd_client,
+)
+
+
+# ---------------------------------------------------------------------------
+# partitioning
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_clients=st.integers(2, 20),
+    alpha=st.floats(0.05, 10.0),
+    seed=st.integers(0, 1000),
+)
+def test_dirichlet_partition_is_a_partition(n_clients, alpha, seed):
+    labels = np.random.RandomState(seed).randint(0, 7, size=500)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 500
+    assert len(np.unique(allidx)) == 500  # disjoint and complete
+    p = data_fractions(parts)
+    np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-5)
+
+
+def test_dirichlet_skew_increases_with_small_alpha():
+    labels = np.random.RandomState(0).randint(0, 10, size=5000)
+
+    def skew(alpha):
+        parts = dirichlet_partition(labels, 20, alpha, seed=1)
+        # mean per-client label entropy (lower = more skew)
+        ents = []
+        for part in parts:
+            cnt = np.bincount(labels[part], minlength=10) + 1e-9
+            q = cnt / cnt.sum()
+            ents.append(-(q * np.log(q)).sum())
+        return np.mean(ents)
+
+    assert skew(0.05) < skew(100.0)
+
+
+# ---------------------------------------------------------------------------
+# clients
+# ---------------------------------------------------------------------------
+
+
+def _quad_loss(p, batch):
+    return 0.5 * jnp.sum(jnp.square(p["w"] - batch["c"]))
+
+
+def test_fedecado_client_integrates_flow_term():
+    """With zero gradient, the FE client step must integrate ẋ = −I."""
+    x0 = {"w": jnp.zeros((3,))}
+    I = {"w": jnp.ones((3,))}
+    batches = {"c": jnp.zeros((5, 3))}  # c=0 -> grad = x; starts at 0
+    out = fedecado_client_sim(
+        lambda p, b: 0.0 * _quad_loss(p, b), x0, I, batches, lr=0.1, p_i=1.0
+    )
+    # x after 5 steps of x <- x - 0.1*I = -0.5
+    np.testing.assert_allclose(out.x_new["w"], -0.5 * np.ones(3), rtol=1e-6)
+    np.testing.assert_allclose(float(out.T), 0.5, rtol=1e-6)
+
+
+def test_sgd_client_descends():
+    x0 = {"w": jnp.ones((3,)) * 5.0}
+    batches = {"c": jnp.zeros((30, 3))}
+    x, loss = sgd_client(_quad_loss, x0, batches, lr=0.1)
+    # 30 steps of x <- 0.9 x: ||x|| = 5*sqrt(3)*0.9^30 ~= 0.37
+    assert float(jnp.linalg.norm(x["w"])) < 1.0
+
+
+def test_hetero_sampling_ranges():
+    h = HeteroConfig(1e-4, 1e-3, 1, 10)
+    rng = np.random.RandomState(0)
+    lr, ep = h.sample(rng, 1000)
+    assert lr.min() >= 1e-4 and lr.max() <= 1e-3
+    assert ep.min() >= 1 and ep.max() <= 10
+
+
+# ---------------------------------------------------------------------------
+# aggregation baselines
+# ---------------------------------------------------------------------------
+
+
+def test_fedavg_weighted_mean():
+    x_c = {"w": jnp.zeros((2,))}
+    x_new = {"w": jnp.asarray([[1.0, 1.0], [3.0, 3.0]])}
+    p = jnp.asarray([1.0, 3.0])
+    out = fedavg_aggregate(x_c, x_new, p)
+    np.testing.assert_allclose(out["w"], [2.5, 2.5], rtol=1e-6)
+
+
+def test_fednova_normalizes_objective_inconsistency():
+    """A client that took 10x more steps must NOT dominate the update."""
+    x_c = {"w": jnp.zeros((1,))}
+    # client 0 moved 10x further because it ran 10x longer
+    x_new = {"w": jnp.asarray([[10.0], [1.0]])}
+    tau = jnp.asarray([10.0, 1.0])
+    p = jnp.asarray([1.0, 1.0])
+    out = fednova_aggregate(x_c, x_new, p, tau)
+    # normalized deltas are both 1.0; tau_eff = 5.5 -> update 5.5
+    np.testing.assert_allclose(out["w"], [5.5], rtol=1e-6)
+    # fedavg would have given 5.5 too here only by coincidence of mean;
+    # check the normalized property instead: both clients contribute equally
+    out2 = fednova_aggregate(x_c, {"w": jnp.asarray([[20.0], [1.0]])}, p, jnp.asarray([20.0, 1.0]))
+    np.testing.assert_allclose(out2["w"], [10.5], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end ordering (the paper's claim at miniature scale)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mlp_problem():
+    data = make_classification(1536, dim=16, n_classes=4, seed=0)
+    parts = dirichlet_partition(data["y"], 12, alpha=0.3, seed=0)
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params0 = {
+        "w0": jax.random.normal(k1, (16, 32)) / 4.0,
+        "b0": jnp.zeros((32,)),
+        "w1": jax.random.normal(k2, (32, 4)) / np.sqrt(32),
+        "b1": jnp.zeros((4,)),
+    }
+
+    def fwd(p, x):
+        return jnp.tanh(x @ p["w0"] + p["b0"]) @ p["w1"] + p["b1"]
+
+    def loss_fn(p, batch):
+        lp = jax.nn.log_softmax(fwd(p, batch["x"]))
+        return -jnp.mean(
+            jnp.take_along_axis(lp, batch["y"][:, None].astype(jnp.int32), -1)
+        )
+
+    def eval_fn(p):
+        pred = jnp.argmax(fwd(p, jnp.asarray(data["x"])), -1)
+        return {"acc": float(jnp.mean(pred == jnp.asarray(data["y"])))}
+
+    return data, parts, params0, loss_fn, eval_fn
+
+
+@pytest.mark.slow
+def test_fedecado_beats_fedavg_on_heterogeneous_noniid(mlp_problem):
+    data, parts, params0, loss_fn, eval_fn = mlp_problem
+    accs = {}
+    for alg in ("fedecado", "fedavg"):
+        cfg = FedSimConfig(
+            algorithm=alg, n_clients=12, participation=0.33, rounds=25,
+            batch_size=32, steps_per_epoch=3,
+            hetero=HeteroConfig(1e-3, 1e-2, 1, 5), seed=3, eval_every=25,
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
+        hist = sim.run()
+        accs[alg] = hist["metrics"][-1][1]["acc"]
+    # the paper's qualitative claim: FedECADO >= FedAvg under heterogeneity
+    assert accs["fedecado"] >= accs["fedavg"] - 0.02, accs
+
+
+def test_all_algorithms_run_one_round(mlp_problem):
+    data, parts, params0, loss_fn, eval_fn = mlp_problem
+    for alg in ("fedecado", "ecado", "fedavg", "fedprox", "fednova"):
+        cfg = FedSimConfig(
+            algorithm=alg, n_clients=12, participation=0.25, rounds=2,
+            batch_size=16, steps_per_epoch=2, seed=0, eval_every=2,
+            consensus=ConsensusConfig(max_substeps=8),
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
+        hist = sim.run()
+        assert len(hist["loss"]) == 2
+        assert np.isfinite(hist["loss"][-1])
+
+
+def test_diag_sensitivity_and_gain_refresh(mlp_problem):
+    """eq. 42 variants: per-parameter (diagonal) gains and periodic Ḡ_th
+    refresh both run and learn."""
+    from repro.core import ConsensusConfig
+
+    data, parts, params0, loss_fn, eval_fn = mlp_problem
+    for sens, refresh in (("diag", 0), ("scalar", 3)):
+        cfg = FedSimConfig(
+            algorithm="fedecado", n_clients=12, participation=0.25, rounds=6,
+            batch_size=16, steps_per_epoch=2, seed=0, eval_every=6,
+            consensus=ConsensusConfig(L=0.01, max_substeps=8),
+            sensitivity=sens, gain_update_every=refresh,
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
+        hist = sim.run()
+        assert np.isfinite(hist["loss"][-1])
+        if sens == "diag":
+            # diag gains live as a pytree of (n, ...) leaves
+            import jax as _jax
+            assert not isinstance(sim.state.g_inv, _jax.Array)

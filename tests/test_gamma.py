@@ -1,0 +1,91 @@
+"""Property tests (hypothesis) for the Γ operator — the two linearity
+properties the Theorem-1 proof relies on, plus interpolation/extrapolation
+correctness and the Lemma-1 monotonicity."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gamma import gamma_leaf, gamma_stacked
+
+import numpy as _np
+
+floats = st.floats(-1e3, 1e3, allow_nan=False, width=32)
+pos_floats = st.floats(
+    float(_np.float32(0.001)), 1e3, allow_nan=False, width=32
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    x1=floats, x2=floats, y1=floats, y2=floats,
+    T=pos_floats, tau=st.floats(0.0, 2e3, allow_nan=False, width=32),
+)
+def test_gamma_additivity(x1, x2, y1, y2, T, tau):
+    """Γ(y+z, τ) = Γ(y, τ) + Γ(z, τ) (up to fp32 cancellation, which scales
+    with the extrapolation factor τ/T)."""
+    a = gamma_leaf(jnp.float32(x1 + y1), jnp.float32(x2 + y2), T, tau)
+    b = gamma_leaf(jnp.float32(x1), jnp.float32(x2), T, tau) + gamma_leaf(
+        jnp.float32(y1), jnp.float32(y2), T, tau
+    )
+    scale = (abs(x1) + abs(x2) + abs(y1) + abs(y2) + 1.0) * (1.0 + tau / T)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5 * scale)
+
+
+@settings(max_examples=200, deadline=None)
+@given(x1=floats, x2=floats, alpha=floats, T=pos_floats,
+       tau=st.floats(0.0, 2e3, allow_nan=False, width=32))
+def test_gamma_homogeneity(x1, x2, alpha, T, tau):
+    """Γ(αy, τ) = αΓ(y, τ)."""
+    a = gamma_leaf(jnp.float32(alpha * x1), jnp.float32(alpha * x2), T, tau)
+    b = alpha * gamma_leaf(jnp.float32(x1), jnp.float32(x2), T, tau)
+    scale = (abs(alpha) + 1.0) * (abs(x1) + abs(x2) + 1.0) * (1.0 + tau / T)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5 * scale)
+
+
+@settings(max_examples=100, deadline=None)
+@given(x1=floats, x2=floats, T=pos_floats)
+def test_gamma_endpoints(x1, x2, T):
+    np.testing.assert_allclose(gamma_leaf(jnp.float32(x1), jnp.float32(x2), T, 0.0), x1, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(gamma_leaf(jnp.float32(x1), jnp.float32(x2), T, T), x2, rtol=1e-4, atol=1e-2)
+
+
+@settings(max_examples=100, deadline=None)
+@given(x1=floats, x2=floats, T=pos_floats, frac=st.floats(0.0, 1.0, width=32))
+def test_gamma_interpolation_bounds(x1, x2, T, frac):
+    """For τ in [0, T], Γ lies between the endpoints."""
+    tau = frac * T
+    g = float(gamma_leaf(jnp.float32(x1), jnp.float32(x2), T, tau))
+    lo, hi = min(x1, x2), max(x1, x2)
+    assert lo - 1e-2 - 1e-4 * abs(lo) <= g <= hi + 1e-2 + 1e-4 * abs(hi)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.lists(
+        st.tuples(floats, floats, pos_floats), min_size=2, max_size=5
+    ),
+    tau=st.floats(0.0, 100.0, width=32),
+)
+def test_gamma_monotonicity_lemma1(data, tau):
+    """Lemma 1: X(T_i) > Y(T_i) for all i (and same at t0) => Γ(X) > Γ(Y)."""
+    xp = jnp.asarray([d[0] for d in data], jnp.float32)
+    T = jnp.asarray([d[2] for d in data], jnp.float32)
+    gap = 1.0 + jnp.abs(xp)  # strictly positive separation
+    xn = jnp.asarray([d[1] for d in data], jnp.float32)
+    g_hi = gamma_stacked(
+        {"w": (xp + gap)[:, None]}, {"w": (xn + gap)[:, None]}, T, tau
+    )["w"]
+    g_lo = gamma_stacked({"w": xp[:, None]}, {"w": xn[:, None]}, T, tau)["w"]
+    assert bool(jnp.all(g_hi >= g_lo))
+
+
+def test_gamma_stacked_matches_leaf():
+    xp = jnp.arange(6, dtype=jnp.float32).reshape(3, 2)
+    xn = xp * 2 + 1
+    T = jnp.asarray([0.5, 1.0, 2.0])
+    tau = 0.75
+    out = gamma_stacked({"w": xp}, {"w": xn}, T, tau)["w"]
+    for i in range(3):
+        np.testing.assert_allclose(
+            out[i], gamma_leaf(xp[i], xn[i], T[i], tau), rtol=1e-6
+        )

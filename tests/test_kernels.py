@@ -1,0 +1,176 @@
+"""Per-kernel tests: shape/dtype sweeps asserting allclose against the
+ref.py pure-jnp oracles (interpret=True executes the Pallas bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.consensus import consensus_call
+from repro.kernels.gamma import gamma_call
+from repro.kernels.hutchinson import hutchinson_call
+from repro.kernels.ops import (
+    fused_consensus_step,
+    ravel_stacked,
+    ravel_tree,
+    unravel_stacked,
+    unravel_tree,
+)
+
+
+def _mk(rng, A, D):
+    return dict(
+        x_c=jnp.asarray(rng.randn(D), jnp.float32),
+        S_frozen=jnp.asarray(rng.randn(D) * 0.1, jnp.float32),
+        I=jnp.asarray(rng.randn(A, D) * 0.1, jnp.float32),
+        J=jnp.asarray(rng.randn(A, D) * 0.1, jnp.float32),
+        x_new=jnp.asarray(rng.randn(A, D), jnp.float32),
+        T=jnp.asarray(rng.uniform(0.01, 0.2, A), jnp.float32),
+        g_inv=jnp.asarray(rng.uniform(0.01, 0.5, A), jnp.float32),
+        mask=jnp.ones((A,), jnp.float32),
+    )
+
+
+@pytest.mark.parametrize("A", [1, 3, 8, 17])
+@pytest.mark.parametrize("D,tile", [(1024, 1024), (4096, 1024), (2048, 512)])
+def test_consensus_kernel_shape_sweep(A, D, tile):
+    rng = np.random.RandomState(A * 1000 + D)
+    m = _mk(rng, A, D)
+    dt, tau, L = jnp.float32(0.05), jnp.float32(0.02), 1.0
+    k = consensus_call(
+        m["x_c"], m["S_frozen"], m["I"], m["J"], m["x_new"],
+        m["T"], m["g_inv"], m["mask"], dt, tau, L,
+        interpret=True, tile_d=tile,
+    )
+    r = ref.consensus_ref(
+        m["x_c"], m["S_frozen"], m["I"], m["J"], m["x_new"],
+        m["T"], m["g_inv"], m["mask"], dt, tau, L,
+    )
+    np.testing.assert_allclose(k[0], r[0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(k[1], r[1], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(k[2], r[2], rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(k[3], r[3], rtol=1e-4, atol=1e-7)
+
+
+def test_consensus_kernel_masked_rows_are_inert():
+    """Padded (mask=0) client rows must not affect x_c or eps."""
+    rng = np.random.RandomState(0)
+    A, D = 4, 1024
+    m = _mk(rng, A, D)
+    dt, tau, L = jnp.float32(0.05), jnp.float32(0.02), 1.0
+    full = consensus_call(
+        m["x_c"], m["S_frozen"], m["I"], m["J"], m["x_new"],
+        m["T"], m["g_inv"], m["mask"], dt, tau, L, interpret=True,
+    )
+    # add 2 garbage rows with mask 0
+    pad = lambda t: jnp.concatenate([t, 99.0 * jnp.ones((2,) + t.shape[1:], t.dtype)])
+    mask2 = jnp.concatenate([m["mask"], jnp.zeros((2,))])
+    padded = consensus_call(
+        m["x_c"], m["S_frozen"], pad(m["I"]), pad(m["J"]), pad(m["x_new"]),
+        pad(m["T"]), pad(m["g_inv"]), mask2, dt, tau, L, interpret=True,
+    )
+    np.testing.assert_allclose(full[0], padded[0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(full[1], padded[1][:A], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(full[2], padded[2], rtol=1e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("A,D", [(2, 1024), (5, 3072)])
+def test_gamma_kernel_vs_ref(A, D):
+    rng = np.random.RandomState(1)
+    xc = jnp.asarray(rng.randn(D), jnp.float32)
+    xn = jnp.asarray(rng.randn(A, D), jnp.float32)
+    T = jnp.asarray(rng.uniform(0.01, 0.2, A), jnp.float32)
+    mask = jnp.ones((A,), jnp.float32)
+    for tau in (0.0, 0.05, 0.5):
+        k = gamma_call(xc, xn, T, jnp.float32(tau), mask, interpret=True)
+        r = ref.gamma_ref(xc, xn, T, jnp.float32(tau), mask)
+        np.testing.assert_allclose(k, r, rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("D", [1024, 8192])
+def test_hutchinson_kernel_vs_ref(D):
+    rng = np.random.RandomState(2)
+    v = jnp.asarray(rng.choice([-1.0, 1.0], D), jnp.float32)
+    hv = jnp.asarray(rng.randn(D), jnp.float32)
+    acc = jnp.asarray(rng.randn(D) * 0.1, jnp.float32)
+    ka, kt = hutchinson_call(v, hv, acc, interpret=True)
+    ra, rt = ref.hutchinson_ref(v, hv, acc)
+    np.testing.assert_allclose(ka, ra, rtol=1e-6)
+    np.testing.assert_allclose(jnp.sum(kt), rt, rtol=1e-5)
+
+
+def test_ravel_roundtrip():
+    rng = np.random.RandomState(3)
+    tree = {
+        "a": jnp.asarray(rng.randn(7, 5), jnp.float32),
+        "b": {"c": jnp.asarray(rng.randn(13), jnp.float32)},
+    }
+    flat, meta = ravel_tree(tree)
+    assert flat.shape[0] % 1024 == 0
+    back = unravel_tree(flat, meta)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(x, y)
+
+    stacked = jax.tree.map(lambda l: jnp.stack([l, l * 2, l * 3]), tree)
+    flat2, meta2 = ravel_stacked(stacked)
+    back2 = unravel_stacked(flat2, meta2)
+    for x, y in zip(jax.tree.leaves(stacked), jax.tree.leaves(back2)):
+        np.testing.assert_allclose(x, y)
+
+
+def test_fused_step_matches_core_reference():
+    """ops.fused_consensus_step == core.be_step + core.lte on pytrees."""
+    from repro.core.consensus import be_step, lte
+    from repro.core.gamma import gamma_stacked
+
+    rng = np.random.RandomState(4)
+    tree = {"w": jnp.asarray(rng.randn(13, 7), jnp.float32),
+            "b": jnp.asarray(rng.randn(5), jnp.float32)}
+    A = 3
+    stk = lambda t, s: jax.tree.map(
+        lambda l: jnp.stack([l * (i + 1) * s for i in range(A)]), t
+    )
+    I_a, J_a, xn_a = stk(tree, 0.1), stk(tree, 0.07), stk(tree, 0.9)
+    Sf = jax.tree.map(lambda l: l * 0.01, tree)
+    T = jnp.asarray([0.05, 0.08, 0.02])
+    gi = jnp.asarray([0.1, 0.05, 0.2])
+    dt, tau = jnp.float32(0.03), jnp.float32(0.01)
+
+    xc_k, I_k, eps_k = fused_consensus_step(
+        tree, Sf, I_a, J_a, xn_a, T, gi, dt, tau, 1.0, use_kernel=True
+    )
+    x_prev = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (A,) + l.shape), tree)
+    g_new = gamma_stacked(x_prev, xn_a, T, tau + dt)
+    g_old = gamma_stacked(x_prev, xn_a, T, tau)
+    xc_r, I_r = be_step(tree, I_a, J_a, g_new, gi, Sf, dt, 1.0)
+    eps_r = lte(tree, I_a, xc_r, I_r, J_a, g_old, g_new, gi, dt, 1.0)
+    for a, b in zip(jax.tree.leaves(xc_k), jax.tree.leaves(xc_r)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(I_k), jax.tree.leaves(I_r)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(eps_k, eps_r, rtol=1e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("B,S,inner,N,tile", [
+    (1, 32, 128, 16, 128), (2, 64, 256, 16, 128), (2, 96, 512, 8, 256),
+])
+def test_ssm_scan_kernel_vs_ref(B, S, inner, N, tile):
+    """Pallas selective-scan (VMEM-resident state) vs the lax.scan oracle."""
+    from repro.kernels.ssm_scan import ssm_scan_call
+    from repro.kernels.ref import ssm_scan_ref
+
+    rng = np.random.RandomState(B * 100 + S)
+    dt = jnp.asarray(np.abs(rng.randn(B, S, inner)) * 0.05, jnp.float32)
+    Bt = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    Ct = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    u = jnp.asarray(rng.randn(B, S, inner), jnp.float32)
+    a_log = jnp.asarray(
+        np.log(np.tile(np.arange(1, N + 1, dtype=np.float32), (inner, 1)))
+    )
+    d = jnp.ones((inner,), jnp.float32)
+    h0 = jnp.asarray(rng.randn(B, inner, N) * 0.1, jnp.float32)
+    yk, hk = ssm_scan_call(dt, Bt, Ct, u, a_log, d, h0, interpret=True, tile_i=tile)
+    yr, hr = ssm_scan_ref(dt, Bt, Ct, u, a_log, d, h0)
+    np.testing.assert_allclose(yk, yr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(hk, hr, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,237 @@
+"""Model-layer tests: flash attention vs naive oracle, prefill/decode
+consistency, MoE dispatch invariants, Mamba/xLSTM state equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ArchConfig, AttentionConfig, MoEConfig
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.models.layers import _flash_attention, chunked_attention
+from repro.models.moe import apply_moe, capacity, init_moe
+from repro.models.transformer import prefill_step
+
+
+def _naive_attention(q, k, v, causal, window, softcap):
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qh = q.reshape(B, Sq, Hkv, G, dh)
+    lg = jnp.einsum("bqhgk,bshk->bhgqs", qh, k) / np.sqrt(dh)
+    if softcap:
+        lg = softcap * jnp.tanh(lg / softcap)
+    qpos, kpos = jnp.arange(Sq), jnp.arange(k.shape[1])
+    m = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= kpos[None, :] > qpos[:, None] - window
+    lg = jnp.where(m[None, None, None], lg, -1e30)
+    p = jax.nn.softmax(lg, -1)
+    return jnp.einsum("bhgqs,bshk->bqhgk", p, v).reshape(B, Sq, Hq, dh)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    causal=st.booleans(),
+    window=st.sampled_from([0, 16, 48]),
+    softcap=st.sampled_from([0.0, 30.0]),
+)
+def test_flash_attention_property(seed, causal, window, softcap):
+    rng = np.random.RandomState(seed)
+    B, S, Hkv, G, dh = 1, 96, 2, 2, 8
+    q = jnp.asarray(rng.randn(B, S, Hkv * G, dh), jnp.float32) * 0.4
+    k = jnp.asarray(rng.randn(B, S, Hkv, dh), jnp.float32) * 0.4
+    v = jnp.asarray(rng.randn(B, S, Hkv, dh), jnp.float32) * 0.4
+    out = chunked_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        q_chunk=32, kv_chunk=16,
+    )
+    ref = _naive_attention(q, k, v, causal, window, softcap)
+    np.testing.assert_allclose(out, ref, rtol=5e-4, atol=5e-5)
+
+
+def test_flash_gradients_match_naive():
+    rng = np.random.RandomState(0)
+    B, S, Hkv, G, dh = 2, 64, 2, 3, 8
+    q = jnp.asarray(rng.randn(B, S, Hkv * G, dh), jnp.float32) * 0.3
+    k = jnp.asarray(rng.randn(B, S, Hkv, dh), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(B, S, Hkv, dh), jnp.float32) * 0.3
+    f1 = lambda q, k, v: jnp.sum(
+        jnp.sin(_flash_attention(q, k, v, True, 0, 0.0, 0, 32, 32))
+    )
+    f2 = lambda q, k, v: jnp.sum(jnp.sin(_naive_attention(q, k, v, True, 0, 0.0)))
+    g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def _moe_cfg(E=4, k=2, cf=2.0):
+    return ArchConfig(
+        name="t", family="moe", num_layers=2, d_model=32, d_ff=64,
+        vocab_size=64,
+        attention=AttentionConfig(num_heads=2, num_kv_heads=2, head_dim=16),
+        moe=MoEConfig(num_experts=E, top_k=k, expert_d_ff=48, capacity_factor=cf),
+        moe_pattern="all",
+    )
+
+
+def test_moe_output_shape_and_aux():
+    cfg = _moe_cfg()
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    y, aux = apply_moe(p, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(aux)) and float(aux) >= 0
+
+
+def test_moe_capacity_drop():
+    """With capacity_factor << 1 some tokens are dropped, none corrupted."""
+    cfg = _moe_cfg(cf=0.25)
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    y, _ = apply_moe(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_dense_equivalence_top1_single_expert():
+    """1 expert, top-1, ample capacity == plain MLP through that expert."""
+    cfg = _moe_cfg(E=1, k=1, cf=4.0)
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32)) * 0.5
+    y, _ = apply_moe(p, x, cfg)
+    up = x.reshape(8, 32) @ p["w_up"][0]
+    gate = jax.nn.silu(x.reshape(8, 32) @ p["w_gate"][0])
+    ref = (gate * up) @ p["w_down"][0]
+    np.testing.assert_allclose(y.reshape(8, 32), ref, rtol=2e-3, atol=1e-4)
+
+
+def test_moe_grads_flow_to_router():
+    cfg = _moe_cfg()
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+
+    def loss(p):
+        y, aux = apply_moe(p, x, cfg)
+        return jnp.sum(jnp.square(y)) + aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.sum(jnp.abs(g["router"]))) > 0
+    assert float(jnp.sum(jnp.abs(g["w_up"]))) > 0
+
+
+def test_capacity_rounding():
+    cfg = _moe_cfg(E=4, k=2, cf=1.25)
+    c = capacity(1000, cfg)
+    assert c % 8 == 0 and c >= 1000 * 2 * 1.25 / 4
+
+
+# ---------------------------------------------------------------------------
+# recurrent blocks: chunked-scan == single-shot decode chain
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S", [24, 64, 200])
+def test_mlstm_chunkwise_equals_sequential(S):
+    """H1 hillclimb: the chunkwise-parallel (matmul-form) mLSTM is an exact
+    algebraic regrouping of the sequential scan."""
+    from repro.models.xlstm import apply_mlstm, init_mlstm
+
+    cfg = get_smoke_config("xlstm-1.3b")
+    p = init_mlstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, S, cfg.d_model)) * 0.5
+    y1, s1 = apply_mlstm(p, x, cfg, return_state=True, impl="sequential")
+    y2, s2 = apply_mlstm(p, x, cfg, return_state=True, impl="chunkwise")
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-5)
+    for k in ("C", "n", "m"):
+        np.testing.assert_allclose(s1[k], s2[k], rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "xlstm-1.3b"])
+def test_recurrent_prefill_equals_decode_chain(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    B, S = 1, 24
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    full, _ = forward(params, {"tokens": toks}, cfg)
+    cache = init_cache(cfg, B, 32)
+    outs = []
+    for t in range(S):
+        lg, cache = decode_step(params, cache, toks[:, t], jnp.int32(t), cfg, max_len=32)
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(dec, full, rtol=1e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "gemma2-9b", "whisper-base"])
+def test_prefill_then_decode_consistency(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    B, S, W = 2, 16, 32
+    toks = jax.random.randint(key, (B, S + 2), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": toks[:, :S]}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(key, (B, 8, cfg.d_model)) * 0.02
+    lg, cache = prefill_step(params, batch, cfg, max_len=W)
+    if cfg.encoder_layers:
+        from repro.models import build_cross_cache
+        from repro.models.transformer import _encode
+        cache["cross"] = build_cross_cache(params, _encode(params, batch["frames"], cfg), cfg)
+    # continue decoding; cross-check against scratch decode
+    cache2 = init_cache(cfg, B, W)
+    if cfg.encoder_layers:
+        cache2["cross"] = cache["cross"]
+    for t in range(S):
+        lg2, cache2 = decode_step(params, cache2, toks[:, t], jnp.int32(t), cfg, max_len=W)
+    np.testing.assert_allclose(lg, lg2, rtol=1e-3, atol=2e-3)
+
+
+def test_sliding_window_restricts_context():
+    """With window W, logits at position t >= W must not depend on token 0."""
+    cfg = get_smoke_config("mixtral-8x7b")
+    assert cfg.attention.sliding_window > 0
+    W = cfg.attention.sliding_window  # 64 in the smoke config
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    S = W + 16
+    toks = jax.random.randint(key, (1, S), 0, cfg.vocab_size, jnp.int32)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    l1, _ = forward(params, {"tokens": toks}, cfg)
+    l2, _ = forward(params, {"tokens": toks2}, cfg)
+    # positions beyond the window (plus depth-L propagation margin: 2 layers
+    # of window-W attention can reach back 2W) — use the last position with
+    # S = W+16 < 2W so depth propagation CAN reach; instead check a pure
+    # 1-layer property via direct attention call:
+    from repro.models.layers import chunked_attention
+    q = jax.random.normal(key, (1, S, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, S, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, S, 2, 8))
+    v2 = v.at[0, 0].set(v[0, 0] + 10.0)
+    o1 = chunked_attention(q, k, v, causal=True, window=W, q_chunk=32, kv_chunk=32)
+    o2 = chunked_attention(q, k, v2, causal=True, window=W, q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(o1[0, W:], o2[0, W:], rtol=1e-5, atol=1e-6)
+    assert float(jnp.max(jnp.abs(o1[0, 0] - o2[0, 0]))) > 1e-3
+
+
+def test_mamba_kernel_impl_matches_scan():
+    """The Pallas VMEM-resident selective scan == the chunked lax.scan."""
+    from repro.models.mamba import apply_mamba, init_mamba
+
+    cfg = get_smoke_config("jamba-v0.1-52b")
+    p = init_mamba(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.5
+    y1, s1 = apply_mamba(p, x, cfg, return_state=True, impl="scan")
+    y2, s2 = apply_mamba(p, x, cfg, return_state=True, impl="kernel")
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(s1["ssm"], s2["ssm"], rtol=1e-5, atol=1e-6)

@@ -1,0 +1,157 @@
+"""Substrate tests: optimizers, checkpointing, data pipeline, sensitivity."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_pytree, restore_server_state, save_pytree, save_server_state
+from repro.core import hutchinson_diag, hutchinson_scalar, init_server_state, make_gain
+from repro.data import ClientDataLoader, lm_batches, make_classification, make_lm_stream
+from repro.optim import adam, apply_updates, cosine_schedule, momentum, sgd
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def _rosenbrock_ish(p):
+    return jnp.sum(jnp.square(p["w"] - 3.0)) + 0.5 * jnp.sum(jnp.square(p["b"]))
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.1), lambda: momentum(0.05), lambda: adam(0.1)
+])
+def test_optimizers_converge_on_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.zeros((4,)), "b": jnp.ones((3,))}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(_rosenbrock_ish)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(_rosenbrock_ish(params)) < 1e-2
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    np.testing.assert_allclose(float(lr(jnp.int32(10))), 1.0, rtol=1e-5)
+    assert float(lr(jnp.int32(100))) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_pytree_checkpoint_roundtrip():
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save_pytree(path, tree)
+        back = load_pytree(path, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32)
+        )
+        assert x.dtype == y.dtype
+
+
+def test_server_state_checkpoint_roundtrip():
+    state = init_server_state({"w": jnp.ones((3,))}, n_clients=4)
+    state = state._replace(t=jnp.float32(1.5), round=jnp.int32(7))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "state.npz")
+        save_server_state(path, state)
+        back = restore_server_state(path, init_server_state({"w": jnp.ones((3,))}, 4))
+    assert float(back.t) == 1.5
+    assert int(back.round) == 7
+    np.testing.assert_allclose(back.x_c["w"], state.x_c["w"])
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"a": jnp.ones((3,))}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "c.npz")
+        save_pytree(path, tree)
+        with pytest.raises(ValueError):
+            load_pytree(path, {"a": jnp.ones((4,))})
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_classification_learnable():
+    data = make_classification(512, dim=8, n_classes=3, seed=0)
+    assert data["x"].shape == (512, 8)
+    assert set(np.unique(data["y"])) <= set(range(3))
+    # a linear probe should beat chance on teacher-generated labels
+    from numpy.linalg import lstsq
+    Y = np.eye(3)[data["y"]]
+    W, *_ = lstsq(data["x"], Y, rcond=None)
+    acc = (np.argmax(data["x"] @ W, -1) == data["y"]).mean()
+    assert acc > 0.4  # chance = 1/3
+
+
+def test_lm_stream_planted_structure():
+    toks = make_lm_stream(20_000, vocab=64, seed=0)
+    # successor structure: P(next == succ(cur)) ~ 0.7
+    # estimate by the most common successor per token
+    succ_hits = 0
+    from collections import Counter, defaultdict
+    nxt = defaultdict(Counter)
+    for a, b in zip(toks[:-1], toks[1:]):
+        nxt[a][b] += 1
+    top_mass = np.mean(
+        [c.most_common(1)[0][1] / sum(c.values()) for c in nxt.values() if sum(c.values()) > 20]
+    )
+    assert top_mass > 0.5
+
+
+def test_client_dataloader_stacking():
+    data = {"x": np.arange(100, dtype=np.float32)[:, None], "y": np.arange(100)}
+    dl = ClientDataLoader(data, np.arange(50), batch_size=8, seed=0)
+    stacked = dl.stacked(4)
+    assert stacked["x"].shape == (4, 8, 1)
+    assert stacked["y"].shape == (4, 8)
+
+
+# ---------------------------------------------------------------------------
+# sensitivity (Hutchinson)
+# ---------------------------------------------------------------------------
+
+
+def test_hutchinson_trace_on_known_quadratic():
+    """f = 0.5 x^T D x -> H = diag(D); tr(H)/n estimated by probes."""
+    D = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    loss = lambda p, b: 0.5 * jnp.sum(D * jnp.square(p["x"]))
+    params = {"x": jnp.ones((4,))}
+    est = hutchinson_scalar(loss, params, {}, jax.random.PRNGKey(0), n_probes=16)
+    np.testing.assert_allclose(float(est), 2.5, rtol=1e-4)  # exact: probes cancel
+
+
+def test_hutchinson_diag_on_known_quadratic():
+    D = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    loss = lambda p, b: 0.5 * jnp.sum(D * jnp.square(p["x"]))
+    params = {"x": jnp.ones((4,))}
+    diag = hutchinson_diag(loss, params, {}, jax.random.PRNGKey(0), n_probes=8)
+    np.testing.assert_allclose(diag["x"], D, rtol=1e-4)  # diag H exact for v in {-1,1}
+
+
+@settings(max_examples=20, deadline=None)
+@given(p_i=st.floats(0.01, 2.0), h=st.floats(-5.0, 50.0), dt_ref=st.floats(0.01, 1.0))
+def test_make_gain_positive_and_monotone(p_i, h, dt_ref):
+    g = float(make_gain(jnp.float32(h), p_i, dt_ref))
+    assert g >= 1.0 / dt_ref - 1e-5          # clipped curvature cannot reduce G
+    g2 = float(make_gain(jnp.float32(max(h, 0) + 1.0), p_i, dt_ref))
+    assert g2 >= g                            # more curvature -> bigger gain
