@@ -9,6 +9,8 @@ System benches:
   consensus_step      — fused Pallas kernel vs jnp reference (µs/call)
   gamma_kernel        — Γ kernel vs reference
   adaptive_overhead   — Algorithm-1 substeps/backtracks per round vs δ
+  engine              — sequential vs vectorized execution backend
+                        rounds/sec at n_clients ∈ {10, 100, 500}
   roofline_summary    — per (arch x shape) terms from results/dryrun JSONs
 
 Prints ``name,us_per_call,derived`` CSV rows.
@@ -240,6 +242,54 @@ def adaptive_overhead_bench():
         )
 
 
+def engine_bench(rounds=10, sizes=(10, 100, 500)):
+    """Multi-rate execution engine: sequential (one jit dispatch per client,
+    the seed hot path) vs vectorized (whole cohort in one vmap-over-scan
+    dispatch) rounds/sec, full participation, heterogeneous e_i/lr_i in the
+    cross-device regime (many clients, small local batches) where the
+    Python-bound per-client dispatch dominates the seed hot path."""
+    from repro.fed import FedSim, FedSimConfig, HeteroConfig, iid_partition
+
+    data, params0, loss_fn, _ = _mlp_problem(n=16384, dim=32, classes=10, seed=0)
+    for n in sizes:
+        parts = iid_partition(len(data["y"]), n, seed=0)
+        rps = {}
+        for backend in ("sequential", "vectorized"):
+            cfg = FedSimConfig(
+                algorithm="fedecado", n_clients=n, participation=1.0,
+                rounds=rounds, batch_size=8, steps_per_epoch=1,
+                hetero=HeteroConfig(1e-3, 1e-2, 1, 5), seed=0,
+                eval_every=1 << 30, backend=backend,
+            )
+            sim = FedSim(loss_fn, params0, data, parts, cfg)
+            sim.run(1)                       # warm the jit caches
+            if backend == "sequential":
+                # one warm-up round only covers the (kind, n_steps) jit
+                # variants that round happened to draw; prime the rest so
+                # first-compile cost stays out of the timed region
+                from repro.sim import CohortPlan
+
+                h = cfg.hetero
+                for e in range(h.epochs_min, h.epochs_max + 1):
+                    ns = e * cfg.steps_per_epoch
+                    sim.backend.run_cohort(sim, CohortPlan(
+                        rnd=-1, idx=np.asarray([0]),
+                        lrs=np.asarray([1e-3], np.float32),
+                        epochs=np.asarray([e]), n_steps=np.asarray([ns]),
+                        batch_idx=[np.zeros((ns, cfg.batch_size), np.int64)],
+                    ))
+            t0 = time.perf_counter()
+            sim.run(rounds)
+            rps[backend] = rounds / (time.perf_counter() - t0)
+        speed = rps["vectorized"] / rps["sequential"]
+        _row(
+            f"engine_seq_round_us_n{n}",
+            1e6 / rps["sequential"],
+            f"seq_rps={rps['sequential']:.3f};vec_rps={rps['vectorized']:.3f};"
+            f"speedup={speed:.1f}x",
+        )
+
+
 def roofline_summary(results_dir="results/dryrun"):
     """Echo the dry-run roofline terms as CSV (no compute)."""
     paths = sorted(glob.glob(os.path.join(results_dir, "*.json")))
@@ -268,7 +318,7 @@ def main() -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="subset: table1,table2,fig6,kernels,adaptive,roofline")
+                    help="subset: table1,table2,fig6,kernels,adaptive,engine,roofline")
     ap.add_argument("--rounds", type=int, default=40)
     args = ap.parse_args()
     sel = set(args.only.split(",")) if args.only else None
@@ -282,6 +332,8 @@ def main() -> None:
         gamma_kernel_bench()
     if want("adaptive"):
         adaptive_overhead_bench()
+    if want("engine"):
+        engine_bench()
     if want("table1"):
         table1_noniid(rounds=args.rounds)
     if want("table2"):

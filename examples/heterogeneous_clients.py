@@ -20,6 +20,16 @@ def main():
     ap.add_argument("--clients", type=int, default=25)
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument(
+        "--backend", choices=("sequential", "vectorized", "event"),
+        default="vectorized",
+        help="execution engine (repro/sim): vectorized = whole cohort in one "
+        "dispatch; event = async arrivals with staleness (fedecado only)",
+    )
+    ap.add_argument(
+        "--event-horizon", type=float, default=0.75,
+        help="event backend: quantile of in-flight windows absorbed per round",
+    )
     args = ap.parse_args()
 
     data = make_classification(2048, dim=32, n_classes=10, seed=0)
@@ -47,11 +57,16 @@ def main():
     results = {a: [] for a in ("fedecado", "fednova", "fedprox", "fedavg")}
     for rep in range(args.repeats):
         for alg in results:
+            # the event scheduler only has flow dynamics for fedecado/ecado
+            backend = args.backend
+            if backend == "event" and alg not in ("fedecado", "ecado"):
+                backend = "vectorized"
             cfg = FedSimConfig(
                 algorithm=alg, n_clients=args.clients, participation=0.2,
                 rounds=args.rounds, batch_size=32, steps_per_epoch=3,
                 hetero=HeteroConfig(1e-3, 1e-2, 1, 5),
                 seed=200 + rep, eval_every=args.rounds,
+                backend=backend, event_horizon=args.event_horizon,
             )
             sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
             hist = sim.run()

@@ -18,7 +18,9 @@ _SEP = "|"
 
 
 def _flatten_with_paths(tree: Pytree, convert_bf16: bool = True):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists in newer jax; tree_util's
+    # spelling works across the versions this repo supports
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)

@@ -199,6 +199,12 @@ def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
             moe, num_experts=min(moe.num_experts, 4), top_k=min(moe.top_k, 2),
             expert_d_ff=min(moe.expert_d_ff, 128),
             dense_residual_d_ff=min(moe.dense_residual_d_ff, 128),
+            # dropless at smoke shapes (C >= worst-case per-expert load):
+            # capacity drops depend on batch composition, so prefill-vs-decode
+            # logit consistency only holds without them — and the real Mixtral
+            # router is dropless anyway. Production capacity_factor is kept in
+            # the full config; the drop path has its own test with a tiny cf.
+            capacity_factor=max(moe.capacity_factor, float(moe.num_experts)),
         )
     kw = dict(
         num_layers=2,

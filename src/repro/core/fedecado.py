@@ -26,9 +26,8 @@ from repro.core.consensus import ConsensusConfig, adaptive_be_step
 from repro.core.flow import (
     ServerState,
     broadcast_clients,
+    gather_active,
     put_rows,
-    take_rows,
-    tree_sum_clients,
 )
 
 Pytree = Any
@@ -56,17 +55,7 @@ def server_round(
     """
     A = T_a.shape[0]
     x_c = state.x_c
-    J_a = take_rows(state.I, active_idx)              # prev-round flows
-    # Σ of frozen (inactive) flow variables: total minus active rows
-    S_all = tree_sum_clients(state.I)
-    S_frozen = jax.tree.map(
-        lambda s, j: s - jnp.sum(j, axis=0), S_all, J_a
-    )
-    g_inv_a = (
-        jnp.take(state.g_inv, active_idx, axis=0)
-        if isinstance(state.g_inv, jax.Array)
-        else take_rows(state.g_inv, active_idx)
-    )
+    J_a, S_frozen, g_inv_a = gather_active(state, active_idx)
     # clients start each round from the broadcast central state
     x_prev_a = broadcast_clients(x_c, A)
     T_max = jnp.max(T_a)

@@ -53,6 +53,23 @@ def tree_sum_clients(tree: Pytree) -> Pytree:
     return jax.tree.map(lambda l: jnp.sum(l, axis=0), tree)
 
 
+def gather_active(state: ServerState, active_idx: jax.Array):
+    """Active-cohort views for a consensus solve: previous-round flows J_a,
+    the frozen-flow sum S_frozen = Σ_{inactive} I_i, and the active gains
+    (scalar (A,) or diag pytree rows). Shared by the synchronous round
+    (core/fedecado.py) and the event scheduler (sim/events.py) so the
+    flow-freezing bookkeeping cannot drift between the two."""
+    J_a = take_rows(state.I, active_idx)
+    S_all = tree_sum_clients(state.I)
+    S_frozen = jax.tree.map(lambda s, j: s - jnp.sum(j, axis=0), S_all, J_a)
+    g_inv_a = (
+        jnp.take(state.g_inv, active_idx, axis=0)
+        if isinstance(state.g_inv, jax.Array)
+        else take_rows(state.g_inv, active_idx)
+    )
+    return J_a, S_frozen, g_inv_a
+
+
 def broadcast_clients(tree: Pytree, n: int) -> Pytree:
     """x -> stacked (n, ...) copies."""
     return jax.tree.map(

@@ -1,7 +1,9 @@
 from repro.fed.baselines import fedavg_aggregate, fednova_aggregate, fedprox_aggregate
 from repro.fed.client import (
+    CLIENT_KINDS,
     ClientOutput,
     HeteroConfig,
+    client_step,
     fedecado_client_sim,
     fedprox_client,
     sgd_client,
@@ -11,7 +13,7 @@ from repro.fed.server import ALGORITHMS, FedSim, FedSimConfig
 
 __all__ = [
     "FedSim", "FedSimConfig", "ALGORITHMS",
-    "HeteroConfig", "ClientOutput",
+    "HeteroConfig", "ClientOutput", "CLIENT_KINDS", "client_step",
     "fedecado_client_sim", "sgd_client", "fedprox_client",
     "fedavg_aggregate", "fednova_aggregate", "fedprox_aggregate",
     "dirichlet_partition", "iid_partition", "data_fractions",

@@ -45,23 +45,62 @@ class ClientOutput(NamedTuple):
     loss: jax.Array      # last minibatch loss
 
 
+CLIENT_KINDS = ("fedecado", "fedprox", "sgd")
+
+
+def client_step(loss_fn: Callable, kind: str, mu: float = 0.0) -> Callable:
+    """The one local FE/SGD update shared by every execution backend.
+
+    Returns ``step(x, batch, x0, I_i, lr, p_i) -> (x_new, loss)``:
+
+      x ← x − lr·(p_i·∇f_i(x) + extra(x))
+
+    where ``extra`` is the kind-specific gradient addend — the flow variable
+    I_i (fedecado), the proximal pull μ(x − x0) (fedprox), or zero (sgd).
+    The sequential client sims below and the vectorized cohort runner in
+    ``repro/sim/vectorized.py`` both call exactly this function, so the two
+    backends execute identical per-step arithmetic (DESIGN.md §5).
+    """
+    assert kind in CLIENT_KINDS, kind
+    if kind == "fedecado":
+        extra = lambda x, x0, I_i: I_i
+    elif kind == "fedprox":
+        extra = lambda x, x0, I_i: jax.tree.map(
+            lambda a, b: mu * (a.astype(jnp.float32) - b.astype(jnp.float32)),
+            x, x0,
+        )
+    else:  # sgd
+        extra = lambda x, x0, I_i: jax.tree.map(
+            lambda l: jnp.zeros_like(l, jnp.float32), x
+        )
+
+    def step(x, batch, x0, I_i, lr, p_i):
+        g = jax.grad(loss_fn)(x, batch)
+        g = jax.tree.map(lambda gg: p_i * gg.astype(jnp.float32), g)
+        g = jax.tree.map(jnp.add, g, extra(x, x0, I_i))
+        x = jax.tree.map(lambda xx, gg: xx - lr * gg, x, g)
+        loss = loss_fn(x, batch)
+        return x, loss
+
+    return step
+
+
 def _sgd_like_steps(
     loss_fn: Callable,
     x0: Pytree,
     batches,                 # (n_steps, ...) stacked minibatch pytree
     lr: float,
-    extra_grad: Callable,    # fn(x, x0) -> pytree added to the gradient
+    kind: str,
     p_i: float,
+    I_i: Optional[Pytree] = None,
+    mu: float = 0.0,
 ):
-    def step(x, batch):
-        g = jax.grad(loss_fn)(x, batch)
-        g = jax.tree.map(lambda gg: p_i * gg.astype(jnp.float32), g)
-        g = jax.tree.map(jnp.add, g, extra_grad(x, x0))
-        x = jax.tree.map(lambda xx, gg: xx - lr * gg, x, g)
-        loss = loss_fn(x, batch)
-        return x, loss
+    step = client_step(loss_fn, kind, mu)
 
-    x, losses = jax.lax.scan(step, x0, batches)
+    def scan_step(x, batch):
+        return step(x, batch, x0, I_i, lr, p_i)
+
+    x, losses = jax.lax.scan(scan_step, x0, batches)
     return x, losses[-1]
 
 
@@ -74,8 +113,7 @@ def fedecado_client_sim(
     p_i: float,
 ) -> ClientOutput:
     """FE integration of ẋ_i = −p_i∇f_i(x_i) − I_i for n_steps × Δt_i=lr."""
-    extra = lambda x, x0_: I_i
-    x, loss = _sgd_like_steps(loss_fn, x0, batches, lr, extra, p_i)
+    x, loss = _sgd_like_steps(loss_fn, x0, batches, lr, "fedecado", p_i, I_i=I_i)
     n_steps = jax.tree.leaves(batches)[0].shape[0]
     return ClientOutput(
         x_new=x,
@@ -87,16 +125,11 @@ def fedecado_client_sim(
 
 def sgd_client(loss_fn, x0, batches, lr, p_i: float = 1.0):
     """Vanilla local SGD (FedAvg / FedNova client)."""
-    zero = jax.tree.map(lambda l: jnp.zeros_like(l, jnp.float32), x0)
-    extra = lambda x, x0_: zero
-    x, loss = _sgd_like_steps(loss_fn, x0, batches, lr, extra, p_i)
+    x, loss = _sgd_like_steps(loss_fn, x0, batches, lr, "sgd", p_i)
     return x, loss
 
 
 def fedprox_client(loss_fn, x0, batches, lr, mu: float, p_i: float = 1.0):
     """FedProx: local SGD with proximal pull μ(x − x_global)."""
-    extra = lambda x, x0_: jax.tree.map(
-        lambda a, b: mu * (a.astype(jnp.float32) - b.astype(jnp.float32)), x, x0_
-    )
-    x, loss = _sgd_like_steps(loss_fn, x0, batches, lr, extra, p_i)
+    x, loss = _sgd_like_steps(loss_fn, x0, batches, lr, "fedprox", p_i, mu=mu)
     return x, loss

@@ -5,6 +5,14 @@ partitioned across n clients with configurable participation, non-IID
 Dirichlet skew, and heterogeneous computation (lr_i, e_i per eqs. 43-44).
 Used by the paper-reproduction experiments, examples/ and benchmarks/.
 
+Client execution is delegated to the multi-rate engine in ``repro/sim``
+behind the ``ExecutionBackend`` interface — ``FedSimConfig.backend`` picks
+``sequential`` (per-client dispatch, the numerical reference oracle),
+``vectorized`` (whole cohort in one vmap-over-scan dispatch), or ``event``
+(continuous-time scheduler with straggler staleness). All host-side
+randomness for a round is rolled into a ``CohortPlan`` up front so every
+backend consumes identical cohorts/batches (DESIGN.md §5).
+
 Data fractions p_i are normalized as p̂_i = n·p_i (mean 1) so local update
 magnitudes stay on the same timescale as the unweighted baselines; this is a
 global rescale of the objective (recorded in DESIGN.md) and leaves the
@@ -29,7 +37,7 @@ from repro.core import (
     set_gains,
 )
 from repro.fed.baselines import fedavg_aggregate, fednova_aggregate
-from repro.fed.client import HeteroConfig, fedecado_client_sim, fedprox_client, sgd_client
+from repro.fed.client import HeteroConfig
 from repro.fed.partition import data_fractions
 
 Pytree = Any
@@ -62,6 +70,15 @@ class FedSimConfig:
     gain_update_every: int = 0
     seed: int = 0
     eval_every: int = 5
+    # --- multi-rate execution engine (repro/sim, DESIGN.md §5) ---
+    backend: str = "sequential"     # sequential | vectorized | event
+    # event backend: quantile of in-flight windows absorbed per round
+    # (< 1.0 leaves stragglers in the queue -> mid-round returns next round)
+    event_horizon: float = 1.0
+    event_max_waves: int = 4        # BE sync groups per round
+    # fuse the fedavg/fedprox/fednova cohort aggregation with the Pallas
+    # batched-aggregation kernel (kernels/batch_agg.py)
+    agg_kernels: bool = False
 
 
 class FedSim:
@@ -95,10 +112,12 @@ class FedSim:
             self.state = init_server_state(self.params, self.n, cfg.consensus.dt_init)
             self._install_gains()
 
-        self._jit_cache: Dict[Any, Callable] = {}
         self._round_fn = jax.jit(
             partial(server_round, ccfg=cfg.consensus), static_argnums=()
         )
+        from repro.sim.engine import get_backend  # lazy: sim imports fed.client
+
+        self.backend = get_backend(cfg)
 
     # ------------------------------------------------------------------
     def _install_gains(self, round_idx: int = 0):
@@ -155,33 +174,73 @@ class FedSim:
         sel = self.rng.choice(idx, size=min(bs, len(idx)), replace=len(idx) < bs)
         return {k: jnp.asarray(v[sel]) for k, v in self.data.items()}
 
-    def _client_batches(self, i: int, n_steps: int):
-        bs = self.cfg.batch_size
-        out = [self._client_batch(i, bs) for _ in range(n_steps)]
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *out)
+    # ------------------------------------------------------------------
+    def _draw_plan(self, rnd: int, A: int):
+        """Roll ALL host randomness for one round into a CohortPlan: cohort
+        choice, lr_i/e_i heterogeneity, and per-step minibatch indices — in
+        exactly the rng-consumption order of the seed sequential loop, so
+        histories are reproducible across backends (and with the seed)."""
+        from repro.sim.engine import CohortPlan
+
+        cfg = self.cfg
+        idx = np.sort(self.rng.choice(self.n, A, replace=False))
+        if cfg.hetero is not None and cfg.algorithm != "ecado":
+            lrs, eps = cfg.hetero.sample(self.rng, A)
+        else:
+            lrs = np.full(A, cfg.lr_fixed, np.float32)
+            eps = np.full(A, cfg.epochs_fixed, np.int64)
+        n_steps = eps.astype(np.int64) * cfg.steps_per_epoch
+
+        bs = cfg.batch_size
+        batch_idx = []
+        for j, i in enumerate(idx):
+            part = self.partitions[int(i)]
+            sel = [
+                self.rng.choice(part, size=min(bs, len(part)), replace=len(part) < bs)
+                for _ in range(int(n_steps[j]))
+            ]
+            batch_idx.append(np.stack(sel))
+        return CohortPlan(
+            rnd=rnd, idx=idx, lrs=lrs, epochs=np.asarray(eps),
+            n_steps=np.asarray(n_steps), batch_idx=batch_idx,
+        )
 
     # ------------------------------------------------------------------
-    def _client_fn(self, kind: str, n_steps: int) -> Callable:
-        key = (kind, n_steps)
-        if key not in self._jit_cache:
-            if kind == "fedecado":
-                fn = jax.jit(
-                    lambda x0, I, batches, lr, p: fedecado_client_sim(
-                        self.loss_fn, x0, I, batches, lr, p
-                    )
+    def _apply_round(self, plan, result) -> Dict[str, Any]:
+        """Server aggregation shared by the sequential/vectorized backends
+        (the event backend interleaves its own consensus integration)."""
+        cfg = self.cfg
+        x_new_a = result.x_new_a
+        p_a = jnp.asarray(self.p_hat[plan.idx], jnp.float32)
+
+        if cfg.algorithm in ("fedecado", "ecado"):
+            self.state, _stats = self._round_fn(
+                self.state,
+                x_new_a,
+                jnp.asarray(result.Ts, jnp.float32),
+                jnp.asarray(plan.idx, jnp.int32),
+            )
+        elif cfg.algorithm == "fednova":
+            tau_a = jnp.asarray(result.taus, jnp.float32)
+            if cfg.agg_kernels:
+                from repro.kernels import batched_aggregate
+
+                p = p_a / jnp.maximum(jnp.sum(p_a), 1e-12)
+                tau_eff = jnp.sum(p * tau_a)
+                self.params = batched_aggregate(
+                    self.params, x_new_a, p / jnp.maximum(tau_a, 1.0), tau_eff
                 )
-            elif kind == "fedprox":
-                fn = jax.jit(
-                    lambda x0, batches, lr, mu: fedprox_client(
-                        self.loss_fn, x0, batches, lr, mu
-                    )
-                )
-            else:  # sgd
-                fn = jax.jit(
-                    lambda x0, batches, lr: sgd_client(self.loss_fn, x0, batches, lr)
-                )
-            self._jit_cache[key] = fn
-        return self._jit_cache[key]
+            else:
+                self.params = fednova_aggregate(self.params, x_new_a, p_a, tau_a)
+        else:  # fedavg / fedprox
+            if cfg.agg_kernels:
+                from repro.kernels import batched_aggregate
+
+                w = p_a / jnp.maximum(jnp.sum(p_a), 1e-12)
+                self.params = batched_aggregate(self.params, x_new_a, w)
+            else:
+                self.params = fedavg_aggregate(self.params, x_new_a, p_a)
+        return {"loss": float(np.mean(result.losses))}
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None) -> Dict[str, list]:
@@ -200,60 +259,11 @@ class FedSim:
                 and cfg.algorithm == "fedecado"
             ):
                 self._install_gains(round_idx=rnd)
-            idx = np.sort(self.rng.choice(self.n, A, replace=False))
-            if cfg.hetero is not None and cfg.algorithm != "ecado":
-                lrs, eps = cfg.hetero.sample(self.rng, A)
-            else:
-                lrs = np.full(A, cfg.lr_fixed, np.float32)
-                eps = np.full(A, cfg.epochs_fixed, np.int64)
-
-            x_news, Ts, taus, losses = [], [], [], []
-            x_c = self.state.x_c if self.state is not None else self.params
-            for j, i in enumerate(idx):
-                n_steps = int(eps[j]) * cfg.steps_per_epoch
-                batches = self._client_batches(int(i), n_steps)
-                if cfg.algorithm in ("fedecado", "ecado"):
-                    I_i = jax.tree.map(lambda l: l[int(i)], self.state.I)
-                    p_i = float(self.p_hat[int(i)]) if cfg.algorithm == "fedecado" else 1.0
-                    out = self._client_fn("fedecado", n_steps)(
-                        x_c, I_i, batches, float(lrs[j]), p_i
-                    )
-                    x_news.append(out.x_new)
-                    Ts.append(float(out.T))
-                    losses.append(float(out.loss))
-                elif cfg.algorithm == "fedprox":
-                    x_new, loss = self._client_fn("fedprox", n_steps)(
-                        x_c, batches, float(lrs[j]), cfg.mu
-                    )
-                    x_news.append(x_new)
-                    losses.append(float(loss))
-                else:  # fedavg, fednova
-                    x_new, loss = self._client_fn("sgd", n_steps)(
-                        x_c, batches, float(lrs[j])
-                    )
-                    x_news.append(x_new)
-                    losses.append(float(loss))
-                taus.append(n_steps)
-
-            x_new_a = jax.tree.map(lambda *xs: jnp.stack(xs), *x_news)
-            p_a = jnp.asarray(self.p_hat[idx], jnp.float32)
-
-            if cfg.algorithm in ("fedecado", "ecado"):
-                self.state, _stats = self._round_fn(
-                    self.state,
-                    x_new_a,
-                    jnp.asarray(Ts, jnp.float32),
-                    jnp.asarray(idx, jnp.int32),
-                )
-            elif cfg.algorithm == "fednova":
-                self.params = fednova_aggregate(
-                    self.params, x_new_a, p_a, jnp.asarray(taus, jnp.float32)
-                )
-            else:  # fedavg / fedprox
-                self.params = fedavg_aggregate(self.params, x_new_a, p_a)
+            plan = self._draw_plan(rnd, A)
+            rec = self.backend.run_round(self, plan)
 
             history["round"].append(rnd)
-            history["loss"].append(float(np.mean(losses)))
+            history["loss"].append(rec["loss"])
             if self.eval_fn is not None and (rnd % cfg.eval_every == 0 or rnd == rounds - 1):
                 m = self.eval_fn(self.current_params())
                 history["metrics"].append((rnd, m))

@@ -2,12 +2,14 @@
 
 consensus.py  — fused Γ + BE Schur solve + LTE (the FedECADO server step)
 gamma.py      — standalone Γ interpolation/extrapolation
+batch_agg.py  — masked weighted cohort aggregation (fedavg/fednova step)
 hutchinson.py — fused sensitivity probe accumulate (v ⊙ Hv + trace)
 ssm_scan.py   — VMEM-resident selective scan (Mamba/jamba hot loop)
 ops.py        — jit'd pytree wrappers (kernel ↔ ref dispatch)
 ref.py        — pure-jnp oracles (tests assert allclose in interpret mode)
 """
 from repro.kernels.ops import (
+    batched_aggregate,
     fused_consensus_step,
     gamma_op,
     hutchinson_op,
@@ -18,6 +20,6 @@ from repro.kernels.ops import (
 )
 
 __all__ = [
-    "fused_consensus_step", "gamma_op", "hutchinson_op",
+    "batched_aggregate", "fused_consensus_step", "gamma_op", "hutchinson_op",
     "ravel_tree", "unravel_tree", "ravel_stacked", "unravel_stacked",
 ]

@@ -1,0 +1,59 @@
+"""Batched cohort-aggregation kernel (Pallas TPU).
+
+The fedavg/fedprox/fednova server step is a masked weighted reduction over
+the cohort axis:
+
+  out[d] = x_c[d] + scale · Σ_a w_a·mask_a·(x_new[a, d] − x_c[d])
+
+The jnp baseline materializes the (A, D) broadcast difference before
+reducing; this kernel fuses broadcast, weighting, and the Σ_a reduction in
+one read of each (A, TILE_D) tile and one write of the (TILE_D,) output —
+the aggregation is purely memory-bound, so the fusion is the whole win.
+``scale`` carries FedNova's effective step τ_eff (1.0 for FedAvg); the
+caller folds p̂ normalization and any 1/τ_a factors into ``w``.
+
+Blocking mirrors kernels/consensus.py: grid over D tiles, the whole cohort
+axis resident per tile. Validated on CPU in interpret mode against
+kernels/ref.py::batch_agg_ref (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_D = 1024
+
+
+def _batch_agg_kernel(scal_ref, w_ref, mask_ref, xc_ref, xnew_ref, out_ref):
+    scale = scal_ref[0]
+    w = (w_ref[:] * mask_ref[:])[:, None]
+    xc = xc_ref[:]
+    delta = jnp.sum(w * (xnew_ref[:, :] - xc[None]), axis=0)
+    out_ref[:] = xc + scale * delta
+
+
+def batch_agg_call(
+    x_c, x_new, w, mask, scale, *, interpret: bool = True, tile_d: int = TILE_D
+):
+    """out (D,) = x_c + scale·Σ_a w_a·mask_a·(x_new[a] − x_c).
+
+    x_c (D,); x_new (A, D); w, mask (A,); scale scalar. Caller guarantees
+    D % tile_d == 0 (kernels/ops.py pads).
+    """
+    A, D = x_new.shape
+    assert D % tile_d == 0, (D, tile_d)
+    scal = jnp.stack([jnp.asarray(scale, jnp.float32), jnp.zeros((), jnp.float32)])
+    full = lambda s: pl.BlockSpec(s, lambda i: (0,) * len(s))
+    return pl.pallas_call(
+        _batch_agg_kernel,
+        grid=(D // tile_d,),
+        in_specs=[
+            full((2,)), full((A,)), full((A,)),
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
+            pl.BlockSpec((A, tile_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((D,), jnp.float32),
+        interpret=interpret,
+    )(scal, w, mask, x_c, x_new)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.batch_agg import batch_agg_call
 from repro.kernels.consensus import TILE_D, consensus_call
 from repro.kernels.gamma import gamma_call
 from repro.kernels.hutchinson import hutchinson_call
@@ -151,6 +152,41 @@ def gamma_op(x_c: Pytree, x_new_a: Pytree, T: jax.Array, tau, use_kernel: bool =
     else:
         out = ref.gamma_ref(xc_flat, xn_flat, T, jnp.asarray(tau, jnp.float32), mask)
     return unravel_stacked(out, smeta)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def _batch_agg_flat(xc_flat, xn_flat, w, mask, scale, use_kernel: bool):
+    if use_kernel:
+        return batch_agg_call(
+            xc_flat, xn_flat, w, mask, scale, interpret=_interpret()
+        )
+    return ref.batch_agg_ref(xc_flat, xn_flat, w, mask, scale)
+
+
+def batched_aggregate(
+    x_c: Pytree,
+    x_new_a: Pytree,
+    w: jax.Array,
+    scale=1.0,
+    use_kernel: bool = True,
+) -> Pytree:
+    """Cohort aggregation x_c + scale·Σ_a w_a·(x_a − x_c) over pytrees via
+    the fused Pallas kernel (fedavg: w = p̂/Σp̂, scale 1; fednova: w = p̃/τ_a,
+    scale τ_eff). The zero-padded tail of the raveled parameter vector is
+    harmless here (0 + scale·Σ w·0 = 0), so no mask beyond cohort padding is
+    needed."""
+    xc_flat, meta = ravel_tree(x_c)
+    xn_flat, _ = ravel_stacked(x_new_a)
+    A = xn_flat.shape[0]
+    out = _batch_agg_flat(
+        xc_flat,
+        xn_flat,
+        w.astype(jnp.float32),
+        jnp.ones((A,), jnp.float32),
+        jnp.asarray(scale, jnp.float32),
+        use_kernel,
+    )
+    return unravel_tree(out, meta)
 
 
 def hutchinson_op(v: Pytree, hv: Pytree, acc: Pytree, use_kernel: bool = True):

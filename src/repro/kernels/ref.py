@@ -47,6 +47,12 @@ def consensus_ref(x_c, S_frozen, I, J, x_new, T, g_inv, mask, dt, tau, L):
     return x_c_new, I_new, eps_c, eps_l
 
 
+def batch_agg_ref(x_c, x_new, w, mask, scale):
+    """Masked weighted cohort aggregation: (D,) = x_c + scale·Σ_a w̃_a·Δ_a."""
+    wm = (w * mask)[:, None]
+    return x_c + scale * jnp.sum(wm * (x_new - x_c[None]), axis=0)
+
+
 def hutchinson_ref(v, hv, acc):
     """Fused probe accumulate: acc += v*hv; partial trace = sum(v*hv)."""
     prod = v * hv

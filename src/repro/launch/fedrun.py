@@ -19,7 +19,6 @@ down to host devices so it executes on CPU.
 """
 import argparse
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +29,7 @@ from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core import ConsensusConfig, init_server_state, server_round, set_gains
 from repro.data import make_lm_stream
 from repro.models import init_params, loss_fn
+from repro.sim.vectorized import build_cohort_runner
 
 
 def main() -> None:
@@ -62,24 +62,13 @@ def main() -> None:
     def stacked_sh(tree):
         return jax.tree.map(lambda _: NamedSharding(mesh, P("data")), tree)
 
-    # --- cohort local training: vmap over the client axis, pjit over mesh
-    def one_client(x0, I_i, batches, lr):
-        def step(x, batch):
-            g = jax.grad(lf)(x, batch)
-            x = jax.tree.map(
-                lambda xx, gg, ii: xx - lr * (gg + ii), x, g, I_i
-            )
-            return x, lf(x, batch)
-
-        x, losses = jax.lax.scan(step, x0, batches)
-        return x, losses[-1]
-
-    @partial(jax.jit, donate_argnums=())
-    def cohort_train(x_c, I_a, batches_a, lrs):
-        x0 = jax.tree.map(
-            lambda l: jnp.broadcast_to(l[None], (args.cohort,) + l.shape), x_c
-        )
-        return jax.vmap(one_client)(x0, I_a, batches_a, lrs)
+    # --- cohort local training: the multi-rate engine's vectorized runner
+    # (vmap over the client axis), pjit over the mesh — the same code path
+    # FedSim's "vectorized" backend uses, so launch/ and fed/ share one
+    # local-integration implementation (DESIGN.md §5.1)
+    cohort_train = build_cohort_runner(lf, kind="fedecado")
+    ones_cohort = jnp.ones((args.cohort,), jnp.float32)
+    full_steps = jnp.full((args.cohort,), args.steps, jnp.int32)
 
     round_fn = jax.jit(lambda s, x, T, i: server_round(s, x, T, i, ccfg))
 
@@ -103,7 +92,7 @@ def main() -> None:
             batches_a = {"tokens": jax.device_put(jnp.asarray(toks), cax)}
             I_a = jax.tree.map(lambda l: l[jnp.asarray(idx)], state.I)
             x_new_a, losses = cohort_train(
-                state.x_c, I_a, batches_a, jnp.asarray(lrs)
+                state.x_c, I_a, batches_a, jnp.asarray(lrs), ones_cohort, full_steps
             )
             T_a = jnp.asarray(lrs * args.steps, jnp.float32)
             state, stats = round_fn(

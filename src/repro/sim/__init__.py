@@ -1,0 +1,22 @@
+"""Multi-rate client execution engine (DESIGN.md §5).
+
+engine.py     — CohortPlan/CohortResult, ExecutionBackend, sequential oracle
+vectorized.py — whole-cohort vmap-over-scan runner with per-client step masks
+events.py     — continuous-time event scheduler with straggler staleness
+"""
+from repro.sim.engine import (
+    BACKENDS,
+    CohortPlan,
+    CohortResult,
+    ExecutionBackend,
+    SequentialBackend,
+    get_backend,
+)
+from repro.sim.events import EventBackend, InFlight
+from repro.sim.vectorized import VectorizedBackend, build_cohort_runner
+
+__all__ = [
+    "BACKENDS", "CohortPlan", "CohortResult", "ExecutionBackend",
+    "SequentialBackend", "VectorizedBackend", "EventBackend", "InFlight",
+    "build_cohort_runner", "get_backend",
+]

@@ -1,0 +1,183 @@
+"""Multi-rate client execution engine — backend protocol + sequential oracle.
+
+FedECADO's defining mechanism is multi-rate integration: every client
+advances its own local ODE over its own window T_i = e_i·lr_i·steps and the
+server synchronizes the cohort in continuous time. This module gives that
+mechanism a dedicated subsystem with three interchangeable execution
+backends behind one ``ExecutionBackend`` interface:
+
+  sequential  — one jit dispatch per client (the seed behaviour, kept
+                verbatim as the numerical reference oracle);
+  vectorized  — the whole cohort in a single ``vmap``-over-``lax.scan``
+                dispatch with per-client step masks (sim/vectorized.py);
+  event       — a continuous-time event scheduler that advances clients
+                asynchronously between Backward-Euler synchronization
+                points and supports staleness (sim/events.py).
+
+The round is split into two phases so the backends stay composable:
+
+  1. ``FedSim._draw_plan`` rolls ALL host-side randomness (cohort choice,
+     lr_i/e_i heterogeneity, minibatch indices) into a ``CohortPlan``.
+     Because the plan is drawn once by shared code, every backend sees
+     byte-identical inputs — backend equivalence then reduces to the local
+     integration arithmetic, which lives in one place
+     (fed/client.py::client_step).
+  2. ``ExecutionBackend.run_round`` executes the cohort and applies the
+     server aggregation (``FedSim._apply_round``); the event backend
+     overrides the whole round to interleave arrivals with BE sync steps.
+
+Padding/masking semantics of the vectorized path are documented in
+DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class CohortPlan:
+    """Host-side randomness for one communication round, drawn up front.
+
+    ``batch_idx[j]`` holds client j's minibatch data indices, shape
+    (n_steps_j, bs_j) — bs_j = min(batch_size, |partition_j|), matching the
+    sequential seed semantics (sampling with replacement iff the partition
+    is smaller than the batch size).
+    """
+    rnd: int
+    idx: np.ndarray                 # (A,) participating client ids
+    lrs: np.ndarray                 # (A,) float32 local learning rates Δt_i
+    epochs: np.ndarray              # (A,) int local epoch counts e_i
+    n_steps: np.ndarray             # (A,) int e_i · steps_per_epoch
+    batch_idx: List[np.ndarray]     # per client (n_steps_j, bs_j) indices
+
+    @property
+    def cohort_size(self) -> int:
+        return len(self.idx)
+
+    def windows(self) -> np.ndarray:
+        """(A,) float32 continuous-time windows T_i = lr_i · n_steps_i."""
+        return np.asarray(
+            [np.float32(float(lr) * int(ns)) for lr, ns in zip(self.lrs, self.n_steps)],
+            np.float32,
+        )
+
+
+@dataclasses.dataclass
+class CohortResult:
+    """Local-integration outputs for one cohort, in plan order."""
+    x_new_a: Pytree                 # stacked final client states, leaves (A, ...)
+    Ts: List[float]                 # per-client windows T_i (fedecado/ecado)
+    taus: List[int]                 # per-client local step counts
+    losses: List[float]             # per-client last-minibatch losses
+
+
+class ExecutionBackend:
+    """How a round's cohort is executed. Subclasses override ``run_cohort``
+    (local integration only) or ``run_round`` (the whole round, for
+    schedulers that interleave aggregation with client arrivals)."""
+
+    name = "base"
+
+    def run_cohort(self, sim, plan: CohortPlan) -> CohortResult:
+        raise NotImplementedError
+
+    def run_round(self, sim, plan: CohortPlan) -> Dict[str, Any]:
+        result = self.run_cohort(sim, plan)
+        return sim._apply_round(plan, result)
+
+
+class SequentialBackend(ExecutionBackend):
+    """Reference oracle: one jitted ``lax.scan`` dispatch per client, exactly
+    the seed ``FedSim.run`` inner loop. Slow (Python-bound) but simple; the
+    vectorized backend is tested bit-for-bit against it."""
+
+    name = "sequential"
+
+    def __init__(self):
+        self._jit_cache: Dict[Tuple, Any] = {}
+
+    # -- per-kind jitted client fns (moved verbatim from the seed FedSim) --
+    def _client_fn(self, sim, kind: str, n_steps: int):
+        from repro.fed.client import fedecado_client_sim, fedprox_client, sgd_client
+
+        key = (kind, n_steps)
+        if key not in self._jit_cache:
+            if kind == "fedecado":
+                fn = jax.jit(
+                    lambda x0, I, batches, lr, p: fedecado_client_sim(
+                        sim.loss_fn, x0, I, batches, lr, p
+                    )
+                )
+            elif kind == "fedprox":
+                fn = jax.jit(
+                    lambda x0, batches, lr, mu: fedprox_client(
+                        sim.loss_fn, x0, batches, lr, mu
+                    )
+                )
+            else:  # sgd
+                fn = jax.jit(
+                    lambda x0, batches, lr: sgd_client(sim.loss_fn, x0, batches, lr)
+                )
+            self._jit_cache[key] = fn
+        return self._jit_cache[key]
+
+    def run_cohort(self, sim, plan: CohortPlan) -> CohortResult:
+        cfg = sim.cfg
+        x_c = sim.state.x_c if sim.state is not None else sim.params
+        x_news, Ts, taus, losses = [], [], [], []
+        for j, i in enumerate(plan.idx):
+            n_steps = int(plan.n_steps[j])
+            batches = {
+                k: jnp.asarray(v[plan.batch_idx[j]]) for k, v in sim.data.items()
+            }
+            if cfg.algorithm in ("fedecado", "ecado"):
+                I_i = jax.tree.map(lambda l: l[int(i)], sim.state.I)
+                p_i = float(sim.p_hat[int(i)]) if cfg.algorithm == "fedecado" else 1.0
+                out = self._client_fn(sim, "fedecado", n_steps)(
+                    x_c, I_i, batches, float(plan.lrs[j]), p_i
+                )
+                x_news.append(out.x_new)
+                Ts.append(float(out.T))
+                losses.append(float(out.loss))
+            elif cfg.algorithm == "fedprox":
+                x_new, loss = self._client_fn(sim, "fedprox", n_steps)(
+                    x_c, batches, float(plan.lrs[j]), cfg.mu
+                )
+                x_news.append(x_new)
+                losses.append(float(loss))
+            else:  # fedavg, fednova
+                x_new, loss = self._client_fn(sim, "sgd", n_steps)(
+                    x_c, batches, float(plan.lrs[j])
+                )
+                x_news.append(x_new)
+                losses.append(float(loss))
+            taus.append(n_steps)
+
+        x_new_a = jax.tree.map(lambda *xs: jnp.stack(xs), *x_news)
+        return CohortResult(x_new_a=x_new_a, Ts=Ts, taus=taus, losses=losses)
+
+
+BACKENDS = ("sequential", "vectorized", "event")
+
+
+def get_backend(cfg) -> ExecutionBackend:
+    """Instantiate the execution backend named by ``cfg.backend``."""
+    from repro.sim.events import EventBackend
+    from repro.sim.vectorized import VectorizedBackend
+
+    if cfg.backend == "sequential":
+        return SequentialBackend()
+    if cfg.backend == "vectorized":
+        return VectorizedBackend()
+    if cfg.backend == "event":
+        return EventBackend(
+            horizon_quantile=cfg.event_horizon, max_waves=cfg.event_max_waves
+        )
+    raise ValueError(f"unknown backend {cfg.backend!r}; choose from {BACKENDS}")

@@ -1,0 +1,237 @@
+"""Continuous-time event scheduler: asynchronous arrivals between BE syncs.
+
+``server_round`` (core/fedecado.py) assumes the whole cohort finishes
+together: the server waits for every endpoint, then integrates the central
+ODE over [0, max_i T_i] in one go. Real federations are not like that —
+clients with small windows T_i = e_i·lr_i·steps return early, stragglers
+late, some only in the *next* round. This module replaces the implicit
+barrier with an event queue:
+
+  * every dispatched client is an ``InFlight`` record carrying its Γ
+    anchors (round-start state x_prev, endpoint x_new) and its remaining
+    window;
+  * a round processes arrivals in time order, grouped into at most
+    ``max_waves`` waves; between consecutive wave boundaries the server
+    runs adaptive Backward-Euler steps (Algorithm 1) with the active set =
+    clients arrived *so far* (finished clients keep contributing through Γ
+    extrapolation, exactly as in the synchronous round) while the flows of
+    everyone else stay frozen in S_frozen;
+  * the round horizon is the ``horizon_quantile`` q of the in-flight
+    remaining windows. Clients beyond the horizon are STALE: they stay in
+    the queue and return mid-round next time, their Γ anchor re-based to
+    the centrally integrated time τ_end = max(arrived T_rem) (the line
+    through (Γ(τ_end), x_new) over the remaining window is the same line,
+    so re-anchoring is exact — Theorem 1's linearity) — no recomputation,
+    no dropped work.
+
+With q = 1.0 every client arrives in-round and the trajectory matches the
+synchronous semantics up to wave granularity. The Σ_i I_i = 0 fixed-point
+invariant of the consensus solve is preserved by construction: each wave's
+BE solve sees Σ_active I_a + S_frozen = Σ_all I_i, so a state at the
+critical point stays there no matter how arrivals are sliced
+(tests/test_engine.py::test_event_staleness_preserves_flow_invariant).
+
+Only the fedecado/ecado algorithms have flow dynamics to schedule; the
+averaging baselines raise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.consensus import adaptive_be_step
+from repro.core.flow import gather_active, put_rows
+from repro.sim.engine import CohortPlan, ExecutionBackend
+from repro.sim.vectorized import VectorizedBackend
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class InFlight:
+    """A dispatched client that has not yet been absorbed by the server."""
+    cid: int
+    x_prev: Pytree      # Γ anchor at the start of the remaining window
+    x_new: Pytree       # local endpoint x_i(T_i)
+    T_rem: float        # remaining continuous-time window
+    stale_rounds: int = 0
+
+
+def _stack(trees: List[Pytree]) -> Pytree:
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+
+class EventBackend(ExecutionBackend):
+    """Event-driven FedECADO round with straggler staleness."""
+
+    name = "event"
+
+    def __init__(self, horizon_quantile: float = 1.0, max_waves: int = 4):
+        assert 0.0 < horizon_quantile <= 1.0, horizon_quantile
+        self.horizon_quantile = horizon_quantile
+        self.max_waves = max(1, int(max_waves))
+        self.pending: List[InFlight] = []
+        self._cohort = VectorizedBackend()
+        self._abe = None            # jitted adaptive BE step, built lazily
+        self.last_round_stats: dict = {}
+
+    # ------------------------------------------------------------------
+    def _be_fn(self, sim):
+        if self._abe is None:
+            # the fused-kernel BE path assumes Γ anchors equal the current
+            # broadcast x_c (how the synchronous round constructs x_prev_a);
+            # stale flights here carry re-based anchors, so always use the
+            # explicit-anchor path regardless of ConsensusConfig.use_kernels
+            ccfg = dataclasses.replace(sim.cfg.consensus, use_kernels=False)
+            self._abe = jax.jit(partial(adaptive_be_step, ccfg=ccfg))
+        return self._abe
+
+    def _integrate_window(
+        self, sim, flights: List[InFlight], tau0: float, tau1: float
+    ) -> tuple:
+        """Adaptive-BE integrate the central ODE over [tau0, tau1] with the
+        given arrived clients active; mutates ``sim.state``. Returns
+        (substeps taken, τ actually reached) — the two differ from the
+        request when ``max_substeps`` caps a stiff window, and the caller
+        must continue from the reached τ, not the nominal boundary."""
+        if tau1 <= tau0 + 1e-12:
+            return 0, tau0
+        state = sim.state
+        ccfg = sim.cfg.consensus
+        idx = jnp.asarray([f.cid for f in flights], jnp.int32)
+        x_prev_a = _stack([f.x_prev for f in flights])
+        x_new_a = _stack([f.x_new for f in flights])
+        T_a = jnp.asarray([f.T_rem for f in flights], jnp.float32)
+        J_a, S_frozen, g_inv_a = gather_active(state, idx)
+
+        be = self._be_fn(sim)
+        x_c, I_a = state.x_c, J_a
+        tau, dt = float(tau0), float(state.dt_last)
+        n_sub = 0
+        while tau < tau1 - 1e-9 and n_sub < ccfg.max_substeps:
+            dt0 = min(dt, ccfg.dt_max, tau1 - tau)
+            res = be(
+                x_c, I_a, J_a, x_prev_a, x_new_a, T_a, g_inv_a, S_frozen,
+                jnp.asarray(tau, jnp.float32), jnp.asarray(dt0, jnp.float32),
+            )
+            x_c, I_a = res.x_c, res.I_a
+            used = float(res.dt_used)
+            tau += used
+            grow = 1.5 if float(res.eps) < 0.5 * ccfg.delta else 1.0
+            dt = min(used * grow, ccfg.dt_max)
+            n_sub += 1
+
+        sim.state = state._replace(
+            x_c=x_c,
+            I=put_rows(state.I, idx, I_a),
+            dt_last=jnp.asarray(dt, jnp.float32),
+            t=state.t + jnp.asarray(tau - tau0, jnp.float32),
+        )
+        return n_sub, tau
+
+    # ------------------------------------------------------------------
+    def run_round(self, sim, plan: CohortPlan):
+        cfg = sim.cfg
+        if cfg.algorithm not in ("fedecado", "ecado"):
+            raise ValueError(
+                "the event backend schedules flow dynamics and only supports "
+                f"fedecado/ecado, got {cfg.algorithm!r}"
+            )
+
+        # 1. local integration for the newly dispatched cohort (batched).
+        # A client still in flight from a previous round is busy and cannot
+        # be re-dispatched (it would put the same flow row in two scheduler
+        # records and double-count it in the S_frozen bookkeeping), so busy
+        # draws are dropped from the plan BEFORE any local work runs.
+        busy = {f.cid for f in self.pending}
+        keep = [j for j in range(plan.cohort_size) if int(plan.idx[j]) not in busy]
+        fresh, losses = [], []
+        if keep:
+            sub = CohortPlan(
+                rnd=plan.rnd,
+                idx=plan.idx[keep],
+                lrs=plan.lrs[keep],
+                epochs=plan.epochs[keep],
+                n_steps=plan.n_steps[keep],
+                batch_idx=[plan.batch_idx[j] for j in keep],
+            )
+            result = self._cohort.run_cohort(sim, sub)
+            x_c_anchor = sim.state.x_c
+            fresh = [
+                InFlight(
+                    cid=int(sub.idx[j]),
+                    x_prev=x_c_anchor,
+                    x_new=jax.tree.map(lambda l, j=j: l[j], result.x_new_a),
+                    T_rem=float(result.Ts[j]),
+                )
+                for j in range(len(keep))
+            ]
+            losses = result.losses
+        flights = self.pending + fresh
+
+        # 2. round horizon: quantile of remaining windows; always admit at
+        # least the earliest arrival so the server makes progress
+        rems = np.asarray([f.T_rem for f in flights], np.float64)
+        W = float(np.quantile(rems, self.horizon_quantile))
+        W = max(W, float(rems.min()))
+
+        arrived = sorted(
+            (f for f in flights if f.T_rem <= W + 1e-12), key=lambda f: f.T_rem
+        )
+        stale = [f for f in flights if f.T_rem > W + 1e-12]
+
+        # 3. waves: at most max_waves sync groups at arrival-time boundaries
+        n_waves = min(self.max_waves, len(arrived))
+        groups = [list(g) for g in np.array_split(np.arange(len(arrived)), n_waves)]
+        tau0, active, n_sub, n_waves_run = 0.0, [], 0, 0
+        for g in groups:
+            if not g:
+                continue
+            active = active + [arrived[k] for k in g]
+            tau1 = max(f.T_rem for f in active)
+            sub, reached = self._integrate_window(sim, active, tau0, tau1)
+            n_sub += sub
+            # continue from the τ actually integrated: when max_substeps
+            # caps a stiff window, restarting at the nominal boundary would
+            # silently skip (reached, tau1] of the central ODE
+            tau0 = max(tau0, reached)
+            n_waves_run += 1
+
+        # 4. stale clients: deduct only the centrally *integrated* window
+        # tau_end = max(arrived T_rem) <= W — deducting the full horizon W
+        # would skip the segment (tau_end, W] of each straggler's trajectory
+        # from every BE solve — and re-anchor Γ there (exact by linearity)
+        tau_end = tau0
+        frac = lambda f: tau_end / max(f.T_rem, 1e-12)
+        self.pending = [
+            InFlight(
+                cid=f.cid,
+                x_prev=jax.tree.map(
+                    lambda a, b, fr=frac(f): a + (b - a) * jnp.float32(fr),
+                    f.x_prev, f.x_new,
+                ),
+                x_new=f.x_new,
+                T_rem=f.T_rem - tau_end,
+                stale_rounds=f.stale_rounds + 1,
+            )
+            for f in stale
+        ]
+
+        sim.state = sim.state._replace(round=sim.state.round + 1)
+        self.last_round_stats = {
+            "arrived": len(arrived),
+            "stale": len(self.pending),
+            "waves": n_waves_run,
+            "substeps": n_sub,
+            "horizon": W,
+            "tau_end": tau_end,
+        }
+        # all-busy cohorts dispatch no local work; nan marks the gap rather
+        # than pretending a loss was observed
+        loss = float(np.mean(losses)) if losses else float("nan")
+        return {"loss": loss, **self.last_round_stats}

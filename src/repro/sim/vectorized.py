@@ -1,0 +1,167 @@
+"""Vectorized local integration: the whole cohort in one jit dispatch.
+
+The seed executed clients one-by-one — A jit dispatches per round plus A
+host-side batch assemblies. Here the cohort's heterogeneous step counts
+(e_i·steps_per_epoch) are padded to a common length S_pad and all clients
+advance together in a single ``jax.vmap``-over-``jax.lax.scan`` call:
+
+  * every client runs S_pad scan iterations;
+  * iteration k of client j applies the update only when k < n_steps_j —
+    masked with a ``jnp.where`` *select* on the carry (not arithmetic
+    masking), so a padded step leaves the carry byte-identical to never
+    having run and NaN/Inf from garbage padded batches cannot leak in;
+  * padded minibatch slots repeat the client's last real step's indices
+    (always valid data), so the gathered batch tensor is dense;
+  * the per-step arithmetic is fed/client.py::client_step — the same
+    function the sequential oracle scans over — which is what makes the
+    two backends bit-for-bit comparable (tests/test_engine.py).
+
+Clients whose partitions are smaller than the batch size produce ragged
+batch shapes; the runner groups the cohort by per-client batch size and
+issues one vmapped dispatch per group (one group in the common case).
+
+S_pad is derived from the config ceiling (epochs_max·steps_per_epoch), not
+the cohort max, so the jitted runner compiles exactly once per client kind.
+
+The optional Pallas batched-aggregation kernel path
+(kernels/batch_agg.py, ``FedSimConfig.agg_kernels``) fuses the cohort
+weighted-delta reduction for the fedavg/fedprox/fednova server step.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.engine import CohortPlan, CohortResult, ExecutionBackend
+
+Pytree = Any
+
+
+def build_cohort_runner(loss_fn: Callable, kind: str, mu: float = 0.0) -> Callable:
+    """Build the jitted vmap-over-scan cohort runner for one client kind.
+
+    Returns ``runner(x_c, I_a, batches, lrs, ps, n_valid) -> (x_new_a,
+    losses)`` where leaves of ``batches`` are (A, S_pad, bs, ...), ``I_a``
+    leaves are (A, ...) (pass None-shaped zeros only for kind="fedecado";
+    other kinds ignore it and may receive ``None``), and ``n_valid`` (A,)
+    int32 gives each client's true step count. ``x_new_a`` leaves are
+    (A, ...); ``losses`` is (A,) — each client's last *valid* minibatch
+    loss. Re-traces only when shapes change (once per (A, S_pad, bs)).
+    """
+    from repro.fed.client import client_step
+
+    step = client_step(loss_fn, kind, mu)
+    takes_I = kind == "fedecado"
+
+    def one_client(x_c, I_i, batches, lr, p_i, n_valid):
+        steps = jnp.arange(jax.tree.leaves(batches)[0].shape[0], dtype=jnp.int32)
+
+        def body(carry, xs):
+            x, last_loss = carry
+            batch, k = xs
+            x_upd, loss = step(x, batch, x_c, I_i, lr, p_i)
+            valid = k < n_valid
+            x = jax.tree.map(lambda a, b: jnp.where(valid, a, b), x_upd, x)
+            last_loss = jnp.where(valid, loss, last_loss)
+            return (x, last_loss), None
+
+        (x, last_loss), _ = jax.lax.scan(
+            body, (x_c, jnp.zeros((), jnp.float32)), (batches, steps)
+        )
+        return x, last_loss
+
+    if takes_I:
+        fn = jax.vmap(one_client, in_axes=(None, 0, 0, 0, 0, 0))
+        return jax.jit(fn)
+
+    def one_client_no_I(x_c, batches, lr, p_i, n_valid):
+        return one_client(x_c, None, batches, lr, p_i, n_valid)
+
+    fn = jax.vmap(one_client_no_I, in_axes=(None, 0, 0, 0, 0))
+    return jax.jit(lambda x_c, I_a, batches, lrs, ps, nv: fn(x_c, batches, lrs, ps, nv))
+
+
+class VectorizedBackend(ExecutionBackend):
+    """Batched cohort execution; numerically equivalent to SequentialBackend
+    on the same ``CohortPlan`` (asserted bit-for-bit in tests/test_engine.py)."""
+
+    name = "vectorized"
+
+    def __init__(self):
+        self._runners: Dict[Tuple, Callable] = {}
+
+    def _runner(self, sim, kind: str) -> Callable:
+        mu = float(sim.cfg.mu) if kind == "fedprox" else 0.0
+        key = (kind, mu)
+        if key not in self._runners:
+            self._runners[key] = build_cohort_runner(sim.loss_fn, kind, mu)
+        return self._runners[key]
+
+    @staticmethod
+    def _pad_steps(cfg) -> int:
+        """Config-stable scan length: the cohort ceiling, so the runner
+        compiles once instead of once per distinct round maximum."""
+        if cfg.hetero is not None and cfg.algorithm != "ecado":
+            return int(cfg.hetero.epochs_max) * cfg.steps_per_epoch
+        return int(cfg.epochs_fixed) * cfg.steps_per_epoch
+
+    def run_cohort(self, sim, plan: CohortPlan) -> CohortResult:
+        cfg = sim.cfg
+        alg = cfg.algorithm
+        kind = (
+            "fedecado" if alg in ("fedecado", "ecado")
+            else ("fedprox" if alg == "fedprox" else "sgd")
+        )
+        x_c = sim.state.x_c if sim.state is not None else sim.params
+        A = plan.cohort_size
+        S_pad = max(self._pad_steps(cfg), int(plan.n_steps.max()))
+        runner = self._runner(sim, kind)
+
+        # group clients by their (possibly ragged) per-client batch size
+        groups: Dict[int, list] = {}
+        for j in range(A):
+            groups.setdefault(plan.batch_idx[j].shape[1], []).append(j)
+
+        order, xs, losses_g = [], [], []
+        for bs, js in sorted(groups.items()):
+            sel = np.stack([
+                np.pad(
+                    plan.batch_idx[j],
+                    ((0, S_pad - plan.batch_idx[j].shape[0]), (0, 0)),
+                    mode="edge",
+                )
+                for j in js
+            ])                                             # (Ag, S_pad, bs)
+            batches = {k: jnp.asarray(v[sel]) for k, v in sim.data.items()}
+            lrs = jnp.asarray(plan.lrs[js], jnp.float32)
+            nv = jnp.asarray(plan.n_steps[js], jnp.int32)
+            if kind == "fedecado":
+                rows = jnp.asarray(plan.idx[js])
+                I_g = jax.tree.map(lambda l: l[rows], sim.state.I)
+                ps = (
+                    jnp.asarray(sim.p_hat[plan.idx[js]], jnp.float32)
+                    if alg == "fedecado"
+                    else jnp.ones((len(js),), jnp.float32)
+                )
+            else:
+                I_g = None
+                ps = jnp.ones((len(js),), jnp.float32)
+            x_g, loss_g = runner(x_c, I_g, batches, lrs, ps, nv)
+            order.extend(js)
+            xs.append(x_g)
+            losses_g.append(loss_g)
+
+        inv = np.argsort(np.asarray(order))
+        x_new_a = jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=0)[inv], *xs)
+        loss_a = jnp.concatenate(losses_g)[inv]
+
+        Ts = [float(t) for t in plan.windows()]
+        return CohortResult(
+            x_new_a=x_new_a,
+            Ts=Ts,
+            taus=[int(n) for n in plan.n_steps],
+            losses=[float(l) for l in loss_a],
+        )

@@ -1,0 +1,111 @@
+"""Minimal deterministic fallback for the ``hypothesis`` API surface these
+tests use, installed by conftest.py ONLY when the real package is missing
+(it is an optional test dependency — see pyproject.toml [test] extras).
+
+Real hypothesis does guided search and shrinking; this fallback just runs
+``max_examples`` seeded pseudo-random samples per test, which keeps the
+property suites executing (rather than erroring at collection) in minimal
+environments. Install hypothesis for real property testing.
+
+Covered API: @given(**kwargs), @settings(max_examples=, deadline=),
+strategies.{integers, floats, booleans, sampled_from, lists, tuples, just}.
+"""
+from __future__ import annotations
+
+
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-fallback"
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: np.random.RandomState):
+        return self._sample(rng)
+
+
+class strategies:  # noqa: N801 — mirrors the hypothesis module name
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        # width/allow_nan/allow_infinity accepted and ignored: bounded
+        # uniform draws are always finite and fp32-representable enough
+        def draw(rng):
+            v = float(rng.uniform(min_value, max_value))
+            # hit the boundaries occasionally, like hypothesis does
+            r = rng.rand()
+            if r < 0.05:
+                return float(min_value)
+            if r < 0.1:
+                return float(max_value)
+            return v
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.randint(0, 2)))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[rng.randint(0, len(options))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.randint(min_size, max_size + 1))
+            return [elements.sample(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements):
+        return _Strategy(lambda rng: tuple(e.sample(rng) for e in elements))
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+
+def settings(max_examples=100, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        # NOTE: the wrapper must expose a ZERO-argument signature (and no
+        # __wrapped__ chain) or pytest would try to resolve the strategy
+        # parameters as fixtures — hence no functools.wraps here.
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", 100)
+            # deterministic per-test seed so failures reproduce
+            seed = zlib.adler32(fn.__qualname__.encode()) & 0x7FFFFFFF
+            rng = np.random.RandomState(seed)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategy_kwargs.items()}
+                fn(**drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def assume(condition) -> bool:
+    """Real hypothesis aborts the example; here we just require truthiness."""
+    return bool(condition)

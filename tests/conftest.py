@@ -1,8 +1,27 @@
+import sys
+
 import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # single real CPU device; only launch/dryrun.py forces 512 placeholders.
+
+# hypothesis is an optional test dependency (pyproject.toml [test] extras).
+# When absent, install the deterministic fallback so the property suites
+# still execute instead of killing collection with ModuleNotFoundError.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import importlib.util
+    import os
+
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"),
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
 
 
 @pytest.fixture(scope="session")

@@ -5,6 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# optional test dependency; conftest.py installs a deterministic fallback
+# when the real package is absent, so this only skips if both are missing
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

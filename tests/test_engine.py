@@ -1,0 +1,230 @@
+"""Multi-rate execution engine tests (repro/sim, DESIGN.md §5).
+
+* backend equivalence: on the same seed (hence the same CohortPlan
+  stream), the vectorized backend must reproduce the sequential reference
+  oracle's histories and final central state for all four client kinds —
+  fedecado, ecado, fedprox, and sgd (fedavg/fednova) — down to
+  reduction-order ulps;
+* event scheduler: staleness slicing must preserve the Σ_i I_i = 0
+  fixed-point invariant of the consensus dynamics (DESIGN.md §5.3);
+* batched-aggregation kernel path agrees with the jnp baselines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConsensusConfig
+from repro.data import make_classification
+from repro.fed import FedSim, FedSimConfig, HeteroConfig, dirichlet_partition
+from repro.sim import CohortPlan, EventBackend, SequentialBackend, VectorizedBackend
+
+
+@pytest.fixture(scope="module")
+def mlp_problem():
+    data = make_classification(1024, dim=12, n_classes=4, seed=1)
+    # alpha small enough that some partitions are < batch_size -> exercises
+    # the ragged-batch grouping of the vectorized runner
+    parts = dirichlet_partition(data["y"], 10, alpha=0.3, seed=1)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    params0 = {
+        "w0": jax.random.normal(k1, (12, 24)) / 4.0,
+        "b0": jnp.zeros((24,)),
+        "w1": jax.random.normal(k2, (24, 4)) / np.sqrt(24),
+        "b1": jnp.zeros((4,)),
+    }
+
+    def loss_fn(p, batch):
+        h = jnp.tanh(batch["x"] @ p["w0"] + p["b0"]) @ p["w1"] + p["b1"]
+        lp = jax.nn.log_softmax(h)
+        return -jnp.mean(
+            jnp.take_along_axis(lp, batch["y"][:, None].astype(jnp.int32), -1)
+        )
+
+    return data, parts, params0, loss_fn
+
+
+def _run(loss_fn, params0, data, parts, alg, backend, rounds=3, **kw):
+    cfg = FedSimConfig(
+        algorithm=alg, n_clients=len(parts), participation=0.4, rounds=rounds,
+        batch_size=16, steps_per_epoch=2, hetero=HeteroConfig(1e-3, 1e-2, 1, 4),
+        seed=7, backend=backend, consensus=ConsensusConfig(max_substeps=8), **kw,
+    )
+    sim = FedSim(loss_fn, params0, data, parts, cfg)
+    hist = sim.run()
+    return sim, hist
+
+
+# ---------------------------------------------------------------------------
+# vectorized == sequential, all four client kinds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alg", ["fedecado", "ecado", "fedprox", "fedavg"])
+def test_vectorized_matches_sequential(mlp_problem, alg):
+    data, parts, params0, loss_fn = mlp_problem
+    sim_s, hist_s = _run(loss_fn, params0, data, parts, alg, "sequential")
+    sim_v, hist_v = _run(loss_fn, params0, data, parts, alg, "vectorized")
+
+    # same plan stream -> same rounds; histories agree to reduction-order ulps
+    np.testing.assert_allclose(hist_v["loss"], hist_s["loss"], rtol=1e-6, atol=1e-7)
+    for a, b in zip(
+        jax.tree.leaves(sim_s.current_params()),
+        jax.tree.leaves(sim_v.current_params()),
+        strict=True,
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+def test_vectorized_cohort_bitwise_on_shared_plan(mlp_problem):
+    """On ONE explicit plan the two backends' local integrations agree at
+    fp32 resolution — per-client endpoints, windows, and step counts."""
+    data, parts, params0, loss_fn = mlp_problem
+    cfg = FedSimConfig(
+        algorithm="fedecado", n_clients=len(parts), participation=0.5, rounds=1,
+        batch_size=16, steps_per_epoch=2, hetero=HeteroConfig(1e-3, 1e-2, 1, 4),
+        seed=11, backend="sequential",
+    )
+    sim = FedSim(loss_fn, params0, data, parts, cfg)
+    plan = sim._draw_plan(0, 5)
+    res_s = SequentialBackend().run_cohort(sim, plan)
+    res_v = VectorizedBackend().run_cohort(sim, plan)
+
+    assert res_s.Ts == res_v.Ts
+    assert res_s.taus == res_v.taus
+    np.testing.assert_allclose(res_v.losses, res_s.losses, rtol=1e-6, atol=1e-7)
+    for a, b in zip(
+        jax.tree.leaves(res_s.x_new_a), jax.tree.leaves(res_v.x_new_a), strict=True
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7
+        )
+
+
+def test_plan_is_deterministic_per_seed(mlp_problem):
+    data, parts, params0, loss_fn = mlp_problem
+    plans = []
+    for _ in range(2):
+        cfg = FedSimConfig(
+            algorithm="fedavg", n_clients=len(parts), participation=0.4, rounds=1,
+            batch_size=16, steps_per_epoch=2, seed=5,
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg)
+        plans.append(sim._draw_plan(0, 4))
+    a, b = plans
+    assert isinstance(a, CohortPlan)
+    np.testing.assert_array_equal(a.idx, b.idx)
+    np.testing.assert_array_equal(a.lrs, b.lrs)
+    for x, y in zip(a.batch_idx, b.batch_idx, strict=True):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# event scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_event_staleness_preserves_flow_invariant():
+    """At the consensus fixed point (x_i = x_c*, I_i = −p̂_i∇f_i(x_c*),
+    Σ_i I_i = 0) the event scheduler must leave the state stationary no
+    matter how arrivals are sliced into waves or delayed by staleness
+    (DESIGN.md §5.3)."""
+    n, dim = 4, 3
+    # one data point per client, centred so the optimum is x* = 0 and the
+    # per-client gradients at x* sum to zero
+    cs = np.asarray(
+        [[1.0, -2.0, 0.5], [-1.0, 2.0, -0.5], [2.0, 1.0, -1.0], [-2.0, -1.0, 1.0]],
+        np.float32,
+    )
+    assert np.abs(cs.sum(0)).max() == 0.0
+    data = {"x": cs, "y": np.zeros((n,), np.int64)}
+    parts = [np.asarray([i]) for i in range(n)]
+
+    def loss_fn(p, batch):
+        return 0.5 * jnp.mean(jnp.sum(jnp.square(p["w"][None] - batch["x"]), -1))
+
+    params0 = {"w": jnp.zeros((dim,), jnp.float32)}
+    cfg = FedSimConfig(
+        algorithm="fedecado", n_clients=n, participation=1.0, rounds=6,
+        batch_size=4, steps_per_epoch=3, lr_fixed=5e-3, epochs_fixed=2,
+        hetero=HeteroConfig(1e-3, 1e-2, 1, 5),    # heterogeneous windows
+        seed=0, backend="event", event_horizon=0.5, event_max_waves=3,
+        consensus=ConsensusConfig(L=0.1, max_substeps=16),
+    )
+    sim = FedSim(loss_fn, params0, data, parts, cfg)
+    # place the server exactly at the fixed point: ∇f_i(0) = −c_i and
+    # p̂_i = 1, so I_i = −p̂_i·∇f_i(x*) = c_i with Σ_i I_i = 0
+    sim.state = sim.state._replace(I={"w": jnp.asarray(cs, jnp.float32)})
+
+    hist = sim.run()
+    x_c = np.asarray(sim.state.x_c["w"])
+    I_sum = np.asarray(jnp.sum(sim.state.I["w"], axis=0))
+    np.testing.assert_allclose(x_c, np.zeros(dim), atol=1e-5)
+    np.testing.assert_allclose(I_sum, np.zeros(dim), atol=1e-5)
+    assert np.isfinite(hist["loss"]).all()
+
+
+def test_event_backend_exercises_staleness():
+    """With a sub-1 horizon quantile and heterogeneous windows, some client
+    must actually be carried across a round boundary."""
+    data = make_classification(256, dim=6, n_classes=3, seed=2)
+    parts = dirichlet_partition(data["y"], 6, alpha=0.5, seed=2)
+    params0 = {"w": jax.random.normal(jax.random.PRNGKey(2), (6, 3)) / 3.0}
+
+    def loss_fn(p, batch):
+        lp = jax.nn.log_softmax(batch["x"] @ p["w"])
+        return -jnp.mean(
+            jnp.take_along_axis(lp, batch["y"][:, None].astype(jnp.int32), -1)
+        )
+
+    cfg = FedSimConfig(
+        algorithm="fedecado", n_clients=6, participation=0.5, rounds=5,
+        batch_size=16, steps_per_epoch=2, hetero=HeteroConfig(1e-3, 1e-2, 1, 5),
+        seed=3, backend="event", event_horizon=0.5, event_max_waves=2,
+        consensus=ConsensusConfig(max_substeps=8),
+    )
+    sim = FedSim(loss_fn, params0, data, parts, cfg)
+    stale_seen = 0
+    for _ in range(cfg.rounds):
+        plan = sim._draw_plan(0, 3)
+        sim.backend.run_round(sim, plan)
+        stale_seen += sim.backend.last_round_stats["stale"]
+    assert stale_seen > 0
+    assert isinstance(sim.backend, EventBackend)
+
+
+def test_event_backend_rejects_averaging_algorithms():
+    data = make_classification(64, dim=4, n_classes=2, seed=0)
+    parts = dirichlet_partition(data["y"], 4, alpha=1.0, seed=0)
+    params0 = {"w": jnp.zeros((4, 2))}
+    loss_fn = lambda p, b: jnp.mean(jnp.square(b["x"] @ p["w"]))
+    cfg = FedSimConfig(
+        algorithm="fedavg", n_clients=4, participation=0.5, rounds=1,
+        batch_size=8, steps_per_epoch=1, seed=0, backend="event",
+    )
+    sim = FedSim(loss_fn, params0, data, parts, cfg)
+    with pytest.raises(ValueError, match="event backend"):
+        sim.run()
+
+
+# ---------------------------------------------------------------------------
+# batched-aggregation kernel path
+# ---------------------------------------------------------------------------
+
+
+def test_agg_kernels_match_baseline_aggregation(mlp_problem):
+    data, parts, params0, loss_fn = mlp_problem
+    for alg in ("fedavg", "fednova"):
+        sim_a, hist_a = _run(loss_fn, params0, data, parts, alg, "vectorized")
+        sim_b, hist_b = _run(
+            loss_fn, params0, data, parts, alg, "vectorized", agg_kernels=True
+        )
+        np.testing.assert_allclose(hist_b["loss"], hist_a["loss"], rtol=1e-5)
+        for a, b in zip(
+            jax.tree.leaves(sim_a.current_params()),
+            jax.tree.leaves(sim_b.current_params()),
+            strict=True,
+        ):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6
+            )

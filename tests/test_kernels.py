@@ -88,6 +88,43 @@ def test_gamma_kernel_vs_ref(A, D):
         np.testing.assert_allclose(k, r, rtol=1e-4, atol=1e-6)
 
 
+@pytest.mark.parametrize("A", [1, 4, 13])
+@pytest.mark.parametrize("D,tile", [(1024, 1024), (2048, 512)])
+def test_batch_agg_kernel_vs_ref(A, D, tile):
+    from repro.kernels.batch_agg import batch_agg_call
+
+    rng = np.random.RandomState(A + D)
+    xc = jnp.asarray(rng.randn(D), jnp.float32)
+    xn = jnp.asarray(rng.randn(A, D), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.0, 1.0, A), jnp.float32)
+    mask = jnp.asarray((rng.rand(A) > 0.2).astype(np.float32))
+    for scale in (1.0, 3.7):
+        k = batch_agg_call(xc, xn, w, mask, jnp.float32(scale), interpret=True, tile_d=tile)
+        r = ref.batch_agg_ref(xc, xn, w, mask, jnp.float32(scale))
+        np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-6)
+
+
+def test_batched_aggregate_matches_fedavg():
+    """The pytree wrapper (kernel and ref paths) reproduces the jnp
+    fedavg aggregation baseline on a ragged-leaf model."""
+    from repro.fed import fedavg_aggregate
+    from repro.kernels import batched_aggregate
+
+    rng = np.random.RandomState(3)
+    x_c = {
+        "w0": jnp.asarray(rng.randn(13, 7), jnp.float32),
+        "b": jnp.asarray(rng.randn(5), jnp.float32),
+    }
+    x_new = jax.tree.map(lambda l: jnp.asarray(rng.randn(6, *l.shape), jnp.float32), x_c)
+    p = jnp.asarray(rng.uniform(0.5, 2.0, 6), jnp.float32)
+    expect = fedavg_aggregate(x_c, x_new, p)
+    w = p / jnp.sum(p)
+    for uk in (True, False):
+        got = batched_aggregate(x_c, x_new, w, 1.0, use_kernel=uk)
+        for a, b in zip(jax.tree.leaves(expect), jax.tree.leaves(got)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("D", [1024, 8192])
 def test_hutchinson_kernel_vs_ref(D):
     rng = np.random.RandomState(2)
