@@ -9,11 +9,13 @@ System benches:
   consensus_step      — fused Pallas kernel vs jnp reference (µs/call)
   gamma_kernel        — Γ kernel vs reference
   adaptive_overhead   — Algorithm-1 substeps/backtracks per round vs δ
-  engine              — sequential vs vectorized execution backend
-                        rounds/sec at n_clients ∈ {10, 100, 500}
+  engine              — sequential vs vectorized vs sharded execution
+                        backend rounds/sec at n_clients ∈ {10, 100, 1000}
+                        on 8 forced host devices; persists BENCH_engine.json
   roofline_summary    — per (arch x shape) terms from results/dryrun JSONs
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; the engine bench additionally
+writes a machine-readable JSON report (schema in tests/test_bench_engine.py).
 """
 from __future__ import annotations
 
@@ -242,52 +244,108 @@ def adaptive_overhead_bench():
         )
 
 
-def engine_bench(rounds=10, sizes=(10, 100, 500)):
+ENGINE_BENCH_SCHEMA_VERSION = 1
+
+
+def engine_bench(
+    rounds=10,
+    sizes=(10, 100, 1000),
+    backends=("sequential", "vectorized", "sharded"),
+    json_path="BENCH_engine.json",
+):
     """Multi-rate execution engine: sequential (one jit dispatch per client,
     the seed hot path) vs vectorized (whole cohort in one vmap-over-scan
-    dispatch) rounds/sec, full participation, heterogeneous e_i/lr_i in the
-    cross-device regime (many clients, small local batches) where the
-    Python-bound per-client dispatch dominates the seed hot path."""
+    dispatch) vs sharded (the cohort shard_map-ed across every local device
+    with psum consensus reductions and the whole multi-round segment
+    jit-resident) rounds/sec — full participation, heterogeneous e_i/lr_i
+    in the cross-device regime (many clients, small local batches) where
+    Python-bound per-round dispatch dominates the seed hot path.
+
+    Emits the usual CSV rows AND persists a machine-readable
+    ``BENCH_engine.json`` (backend × n_clients → rounds/sec; schema pinned
+    by tests/test_bench_engine.py). Returns the report dict. Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (main() sets it
+    for ``--only engine``) to give the sharded backend a real device axis.
+    """
+    import jax as _jax
+
     from repro.fed import FedSim, FedSimConfig, HeteroConfig, iid_partition
 
     data, params0, loss_fn, _ = _mlp_problem(n=16384, dim=32, classes=10, seed=0)
+
+    def make_cfg(n, backend):
+        return FedSimConfig(
+            algorithm="fedecado", n_clients=n, participation=1.0,
+            rounds=rounds, batch_size=8, steps_per_epoch=1,
+            hetero=HeteroConfig(1e-3, 1e-2, 1, 5), seed=0,
+            eval_every=1 << 30, backend=backend,
+        )
+
+    # the report's config block is derived from the ACTUAL benched config so
+    # the persisted JSON can never drift from the measurement
+    cfg0 = make_cfg(sizes[0], backends[0])
+    report = {
+        "schema_version": ENGINE_BENCH_SCHEMA_VERSION,
+        "benchmark": "engine",
+        "n_devices": len(_jax.devices()),
+        "rounds": int(rounds),
+        "sizes": [int(n) for n in sizes],
+        "backends": list(backends),
+        "config": {
+            "algorithm": cfg0.algorithm,
+            "participation": cfg0.participation,
+            "batch_size": cfg0.batch_size,
+            "steps_per_epoch": cfg0.steps_per_epoch,
+            "epochs_range": [cfg0.hetero.epochs_min, cfg0.hetero.epochs_max],
+            "lr_range": [cfg0.hetero.lr_min, cfg0.hetero.lr_max],
+            "seed": cfg0.seed,
+        },
+        "results": [],
+    }
     for n in sizes:
         parts = iid_partition(len(data["y"]), n, seed=0)
         rps = {}
-        for backend in ("sequential", "vectorized"):
-            cfg = FedSimConfig(
-                algorithm="fedecado", n_clients=n, participation=1.0,
-                rounds=rounds, batch_size=8, steps_per_epoch=1,
-                hetero=HeteroConfig(1e-3, 1e-2, 1, 5), seed=0,
-                eval_every=1 << 30, backend=backend,
-            )
-            sim = FedSim(loss_fn, params0, data, parts, cfg)
-            sim.run(1)                       # warm the jit caches
+        for backend in backends:
+            cfg = make_cfg(n, backend)
+            # warm-up covers every jit variant the timed run will hit (for
+            # the sharded backend that includes the R=rounds segment shape),
+            # then a fresh sim SHARING the warmed backend is timed
+            warm = FedSim(loss_fn, params0, data, parts, cfg)
+            warm.run(rounds)
             if backend == "sequential":
-                # one warm-up round only covers the (kind, n_steps) jit
-                # variants that round happened to draw; prime the rest so
-                # first-compile cost stays out of the timed region
+                # prime the (kind, n_steps) jit variants the warm-up rounds
+                # happened not to draw
                 from repro.sim import CohortPlan
 
                 h = cfg.hetero
                 for e in range(h.epochs_min, h.epochs_max + 1):
                     ns = e * cfg.steps_per_epoch
-                    sim.backend.run_cohort(sim, CohortPlan(
+                    warm.backend.run_cohort(warm, CohortPlan(
                         rnd=-1, idx=np.asarray([0]),
                         lrs=np.asarray([1e-3], np.float32),
                         epochs=np.asarray([e]), n_steps=np.asarray([ns]),
                         batch_idx=[np.zeros((ns, cfg.batch_size), np.int64)],
                     ))
+            sim = FedSim(loss_fn, params0, data, parts, cfg)
+            sim.backend = warm.backend       # keep the warmed jit caches
             t0 = time.perf_counter()
             sim.run(rounds)
             rps[backend] = rounds / (time.perf_counter() - t0)
-        speed = rps["vectorized"] / rps["sequential"]
-        _row(
-            f"engine_seq_round_us_n{n}",
-            1e6 / rps["sequential"],
-            f"seq_rps={rps['sequential']:.3f};vec_rps={rps['vectorized']:.3f};"
-            f"speedup={speed:.1f}x",
-        )
+            report["results"].append({
+                "backend": backend,
+                "n_clients": int(n),
+                "rounds_per_sec": float(rps[backend]),
+            })
+        base = rps.get("sequential", next(iter(rps.values())))
+        derived = ";".join(f"{b}_rps={v:.3f}" for b, v in rps.items())
+        if "vectorized" in rps and "sharded" in rps:
+            derived += f";sharded_vs_vectorized={rps['sharded'] / rps['vectorized']:.2f}x"
+        _row(f"engine_round_us_n{n}", 1e6 / base, derived)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {json_path}", flush=True)
+    return report
 
 
 def roofline_summary(results_dir="results/dryrun"):
@@ -320,11 +378,25 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="subset: table1,table2,fig6,kernels,adaptive,engine,roofline")
     ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--engine-json", default="BENCH_engine.json",
+                    help="where the engine bench persists its JSON report")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="host devices forced for the engine bench (via "
+                    "XLA_FLAGS, only when not already set)")
     args = ap.parse_args()
     sel = set(args.only.split(",")) if args.only else None
 
     def want(name):
         return sel is None or name in sel
+
+    if sel == {"engine"} and args.devices > 1 and "XLA_FLAGS" not in os.environ:
+        # must precede the first jax device query; gives the sharded engine
+        # backend a real multi-device axis on CPU hosts. Only for a
+        # dedicated --only engine run — forcing virtual devices would skew
+        # every other bench's timings when engine is part of a sweep
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}"
+        )
 
     print("name,us_per_call,derived")
     if want("kernels"):
@@ -333,7 +405,13 @@ def main() -> None:
     if want("adaptive"):
         adaptive_overhead_bench()
     if want("engine"):
-        engine_bench()
+        # persist the JSON artifact only on a dedicated --only engine run
+        # (which forces the multi-device axis above) — a full sweep would
+        # silently overwrite the committed 8-device BENCH_engine.json with
+        # single-device numbers
+        engine_bench(
+            json_path=args.engine_json if sel == {"engine"} else None
+        )
     if want("table1"):
         table1_noniid(rounds=args.rounds)
     if want("table2"):

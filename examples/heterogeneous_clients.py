@@ -21,10 +21,14 @@ def main():
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument(
-        "--backend", choices=("sequential", "vectorized", "event"),
+        "--backend", choices=("sequential", "vectorized", "event", "sharded"),
         default="vectorized",
         help="execution engine (repro/sim): vectorized = whole cohort in one "
-        "dispatch; event = async arrivals with staleness (fedecado only)",
+        "dispatch; event = async arrivals with staleness (fedecado only); "
+        "sharded = shard_map over every local device with psum consensus "
+        "reductions and jit-resident multi-round segments (run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8 to see true "
+        "multi-device execution on CPU)",
     )
     ap.add_argument(
         "--event-horizon", type=float, default=0.75,

@@ -1,6 +1,11 @@
 from repro.core.consensus import ConsensusConfig, adaptive_be_step, be_step, lte
 from repro.core.ecado import ecado_round
-from repro.core.fedecado import RoundStats, server_round, set_gains
+from repro.core.fedecado import (
+    RoundStats,
+    consensus_integrate,
+    server_round,
+    set_gains,
+)
 from repro.core.flow import ServerState, init_server_state
 from repro.core.gamma import gamma, gamma_leaf, gamma_stacked
 from repro.core.sensitivity import (
@@ -13,6 +18,7 @@ from repro.core.sensitivity import (
 __all__ = [
     "ConsensusConfig", "be_step", "adaptive_be_step", "lte",
     "server_round", "set_gains", "RoundStats", "ecado_round",
+    "consensus_integrate",
     "ServerState", "init_server_state",
     "gamma", "gamma_leaf", "gamma_stacked",
     "hutchinson_scalar", "hutchinson_diag", "hvp", "make_gain",

@@ -27,7 +27,7 @@ paper's LU factorization, DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,13 @@ import jax.numpy as jnp
 from repro.core.gamma import gamma_stacked
 
 Pytree = Any
+
+
+def _sum0(x: jax.Array, axis_name: Optional[str]) -> jax.Array:
+    """Σ over the leading (client) axis; cross-device ``psum`` when the
+    client axis is sharded under ``shard_map`` (sim/sharded.py)."""
+    s = jnp.sum(x, axis=0)
+    return jax.lax.psum(s, axis_name) if axis_name else s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,11 +69,19 @@ def be_step(
     S_frozen: Pytree,
     dt: jax.Array,
     L: float,
+    axis_name: Optional[str] = None,
+    mask: Optional[jax.Array] = None,
 ):
     """One Backward-Euler consensus solve. Returns (x_c_new, I_a_new).
 
     Leaves: x_c (...); I_a/J_a/gamma_a (A, ...); g_inv (A,) scalar gains (or
     a pytree of (A, ...) diagonal gains); S_frozen (...) = Σ_{inactive} I_i.
+
+    With ``axis_name`` the client axis is a local shard of a ``shard_map``
+    program and the Schur sums Σ_a u_a, Σ_a w_a run as local partial sums +
+    ``psum`` across devices. ``mask`` (A_local,) zeroes padded cohort rows
+    out of both reductions (their I_new comes out 0 and is dropped by the
+    caller's scatter).
     """
     r = dt / L
     diag_gains = not isinstance(g_inv, jax.Array)
@@ -75,9 +90,13 @@ def be_step(
         gib = gi if diag_gains else _bcast(gi, Ia)
         d = 1.0 + r * gib
         u = (Ia + r * (Ga + Ja * gib)) / d
-        w = r / d
-        num = xc + dt * (jnp.sum(u, axis=0) + Sf)
-        den = 1.0 + dt * jnp.sum(w * jnp.ones_like(Ia), axis=0)
+        w = (r / d) * jnp.ones_like(Ia)
+        if mask is not None:
+            mb = _bcast(mask, Ia)
+            u = u * mb
+            w = w * mb
+        num = xc + dt * (_sum0(u, axis_name) + Sf)
+        den = 1.0 + dt * _sum0(w, axis_name)
         xc_new = num / den
         I_new = u - w * xc_new[None]
         return xc_new, I_new
@@ -115,21 +134,41 @@ def _flow_rhs(x_c, I_a, J_a, gamma_a, g_inv, L):
 
 
 def lte(
-    x_c, I_a, x_c_new, I_new, J_a, gamma_tau, gamma_new, g_inv, dt, L
+    x_c, I_a, x_c_new, I_new, J_a, gamma_tau, gamma_new, g_inv, dt, L,
+    axis_name: Optional[str] = None,
+    mask: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """max|ε_BE| over both eq. 29 (central) and eq. 30 (flow) terms."""
+    """max|ε_BE| over both eq. 29 (central) and eq. 30 (flow) terms.
+
+    ``axis_name``/``mask`` follow ``be_step``: the client-axis sum in ε_C is
+    psum-reduced and padded rows are excluded from both error terms, so the
+    backtracking decision is identical on every device.
+    """
     # ε_C = (Δt/2)·|Σ_a I⁺ − Σ_a I|  (frozen flows cancel)
-    eps_c = jax.tree.map(
-        lambda a, b: jnp.max(jnp.abs(jnp.sum(b - a, axis=0))), I_a, I_new
-    )
+    def leaf_c(a, b):
+        d = b - a
+        if mask is not None:
+            d = d * _bcast(mask, d)
+        return jnp.max(jnp.abs(_sum0(d, axis_name)))
+
+    eps_c = jax.tree.map(leaf_c, I_a, I_new)
     # ε_L = (Δt/2)·|İ(τ+Δt) − İ(τ)|
     rhs_old = _flow_rhs(x_c, I_a, J_a, gamma_tau, g_inv, L)
     rhs_new = _flow_rhs(x_c_new, I_new, J_a, gamma_new, g_inv, L)
-    eps_l = jax.tree.map(lambda a, b: jnp.max(jnp.abs(b - a)), rhs_old, rhs_new)
+
+    def leaf_l(a, b):
+        d = jnp.abs(b - a)
+        if mask is not None:
+            d = d * _bcast(mask, d)
+        return jnp.max(d)
+
+    eps_l = jax.tree.map(leaf_l, rhs_old, rhs_new)
     m = jnp.maximum(
         jnp.max(jnp.stack(jax.tree.leaves(eps_c))),
         jnp.max(jnp.stack(jax.tree.leaves(eps_l))),
     )
+    if axis_name:
+        m = jax.lax.pmax(m, axis_name)
     return (dt / 2.0) * m
 
 
@@ -153,12 +192,22 @@ def adaptive_be_step(
     tau: jax.Array,
     dt0: jax.Array,
     ccfg: ConsensusConfig,
+    axis_name: Optional[str] = None,
+    mask: Optional[jax.Array] = None,
 ) -> StepResult:
     """Algorithm 1: backtrack Δt until max|ε_BE| ≤ δ, then take the BE step.
 
     ``x_prev_a``/``x_new_a``/``T_a`` feed the Γ operator at trial times.
+    With ``axis_name`` the client axis is sharded (see ``be_step``); every
+    scalar driving the backtracking loop is psum/pmax-replicated, so all
+    devices take the same trajectory through the while loop.
     """
-    use_kernel = ccfg.use_kernels and isinstance(g_inv, jax.Array)
+    use_kernel = (
+        ccfg.use_kernels
+        and isinstance(g_inv, jax.Array)
+        and axis_name is None
+        and mask is None    # the fused kernel has no cohort-padding mask path
+    )
     if use_kernel:
         # Fused Pallas path: Γ + BE Schur + LTE in one pass over parameters.
         # (The kernel assumes round-start client states == broadcast x_c,
@@ -176,8 +225,14 @@ def adaptive_be_step(
 
         def trial(dt):
             g_new = gamma_stacked(x_prev_a, x_new_a, T_a, tau + dt)
-            xc_n, I_n = be_step(x_c, I_a, J_a, g_new, g_inv, S_frozen, dt, ccfg.L)
-            eps = lte(x_c, I_a, xc_n, I_n, J_a, gamma_tau, g_new, g_inv, dt, ccfg.L)
+            xc_n, I_n = be_step(
+                x_c, I_a, J_a, g_new, g_inv, S_frozen, dt, ccfg.L,
+                axis_name=axis_name, mask=mask,
+            )
+            eps = lte(
+                x_c, I_a, xc_n, I_n, J_a, gamma_tau, g_new, g_inv, dt, ccfg.L,
+                axis_name=axis_name, mask=mask,
+            )
             return xc_n, I_n, eps
 
     def cond(carry):

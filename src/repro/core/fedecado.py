@@ -41,6 +41,70 @@ class RoundStats(NamedTuple):
     tau_end: jax.Array
 
 
+def consensus_integrate(
+    x_c: Pytree,
+    I_a0: Pytree,
+    J_a: Pytree,
+    x_prev_a: Pytree,
+    x_new_a: Pytree,
+    T_a: jax.Array,
+    g_inv_a,
+    S_frozen: Pytree,
+    dt0: jax.Array,
+    ccfg: ConsensusConfig,
+    axis_name: Optional[str] = None,
+    mask: Optional[jax.Array] = None,
+) -> tuple:
+    """Adaptive-BE integrate the central ODE over τ ∈ [0, max_a T_a].
+
+    The Algorithm-1 substep loop shared by the dense synchronous round
+    (``server_round``) and the sharded backend (sim/sharded.py, which calls
+    this inside ``shard_map`` with the client axis sharded — ``axis_name``
+    names the mesh axis and ``mask`` zeroes cohort-padding rows; the T_max
+    horizon and every LTE scalar are then pmax/psum-replicated).
+
+    Returns (x_c, I_a, tau_end, dt_next, stats) with stats =
+    (n_substeps, n_backtracks, final_dt, max_eps).
+    """
+    T_eff = T_a if mask is None else jnp.where(mask > 0, T_a, 0.0)
+    T_max = jnp.max(T_eff)
+    if axis_name:
+        T_max = jax.lax.pmax(T_max, axis_name)
+
+    def cond(carry):
+        x_c, I_a, tau, dt, stats = carry
+        return (tau < T_max) & (stats[0] < ccfg.max_substeps)
+
+    def body(carry):
+        x_c, I_a, tau, dt, stats = carry
+        n_sub, n_back, _, max_eps = stats
+        dt = jnp.minimum(dt, ccfg.dt_max)
+        res = adaptive_be_step(
+            x_c, I_a, J_a, x_prev_a, x_new_a, T_a, g_inv_a, S_frozen,
+            tau, dt, ccfg, axis_name=axis_name, mask=mask,
+        )
+        # warm-start the next step; gently grow when LTE is slack
+        grow = jnp.where(res.eps < 0.5 * ccfg.delta, 1.5, 1.0)
+        new_dt = jnp.minimum(res.dt_used * grow, ccfg.dt_max)
+        stats = (
+            n_sub + 1,
+            n_back + res.n_backtracks,
+            res.dt_used,
+            jnp.maximum(max_eps, res.eps),
+        )
+        return res.x_c, res.I_a, tau + res.dt_used, new_dt, stats
+
+    stats0 = (
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        dt0,
+        jnp.zeros((), jnp.float32),
+    )
+    return jax.lax.while_loop(
+        cond, body, (x_c, I_a0, jnp.zeros((), jnp.float32), dt0, stats0)
+    )
+
+
 def server_round(
     state: ServerState,
     x_new_a: Pytree,
@@ -58,39 +122,10 @@ def server_round(
     J_a, S_frozen, g_inv_a = gather_active(state, active_idx)
     # clients start each round from the broadcast central state
     x_prev_a = broadcast_clients(x_c, A)
-    T_max = jnp.max(T_a)
 
-    def cond(carry):
-        x_c, I_a, tau, dt, stats = carry
-        return (tau < T_max) & (stats[0] < ccfg.max_substeps)
-
-    def body(carry):
-        x_c, I_a, tau, dt, stats = carry
-        n_sub, n_back, _, max_eps = stats
-        dt = jnp.minimum(dt, ccfg.dt_max)
-        res = adaptive_be_step(
-            x_c, I_a, J_a, x_prev_a, x_new_a, T_a, g_inv_a, S_frozen,
-            tau, dt, ccfg,
-        )
-        # warm-start the next step; gently grow when LTE is slack
-        grow = jnp.where(res.eps < 0.5 * ccfg.delta, 1.5, 1.0)
-        new_dt = jnp.minimum(res.dt_used * grow, ccfg.dt_max)
-        stats = (
-            n_sub + 1,
-            n_back + res.n_backtracks,
-            res.dt_used,
-            jnp.maximum(max_eps, res.eps),
-        )
-        return res.x_c, res.I_a, tau + res.dt_used, new_dt, stats
-
-    stats0 = (
-        jnp.zeros((), jnp.int32),
-        jnp.zeros((), jnp.int32),
-        state.dt_last,
-        jnp.zeros((), jnp.float32),
-    )
-    x_c_f, I_a_f, tau_f, dt_f, stats = jax.lax.while_loop(
-        cond, body, (x_c, J_a, jnp.zeros((), jnp.float32), state.dt_last, stats0)
+    x_c_f, I_a_f, tau_f, dt_f, stats = consensus_integrate(
+        x_c, J_a, J_a, x_prev_a, x_new_a, T_a, g_inv_a, S_frozen,
+        state.dt_last, ccfg,
     )
 
     new_state = ServerState(

@@ -8,10 +8,14 @@ Used by the paper-reproduction experiments, examples/ and benchmarks/.
 Client execution is delegated to the multi-rate engine in ``repro/sim``
 behind the ``ExecutionBackend`` interface — ``FedSimConfig.backend`` picks
 ``sequential`` (per-client dispatch, the numerical reference oracle),
-``vectorized`` (whole cohort in one vmap-over-scan dispatch), or ``event``
-(continuous-time scheduler with straggler staleness). All host-side
-randomness for a round is rolled into a ``CohortPlan`` up front so every
-backend consumes identical cohorts/batches (DESIGN.md §5).
+``vectorized`` (whole cohort in one vmap-over-scan dispatch), ``event``
+(continuous-time scheduler with straggler staleness), or ``sharded``
+(shard_map over the client mesh axis with psum consensus reductions and
+jit-resident multi-round segments). All host-side randomness for a round is
+rolled into a ``CohortPlan`` up front so every backend consumes identical
+cohorts/batches (DESIGN.md §5); ``run`` hands whole segments of pre-drawn
+plans to the backend and only returns to the host at eval / gain-update
+boundaries.
 
 Data fractions p_i are normalized as p̂_i = n·p_i (mean 1) so local update
 magnitudes stay on the same timescale as the unweighted baselines; this is a
@@ -71,7 +75,7 @@ class FedSimConfig:
     seed: int = 0
     eval_every: int = 5
     # --- multi-rate execution engine (repro/sim, DESIGN.md §5) ---
-    backend: str = "sequential"     # sequential | vectorized | event
+    backend: str = "sequential"     # sequential | vectorized | event | sharded
     # event backend: quantile of in-flight windows absorbed per round
     # (< 1.0 leaves stragglers in the queue -> mid-round returns next round)
     event_horizon: float = 1.0
@@ -79,6 +83,10 @@ class FedSimConfig:
     # fuse the fedavg/fedprox/fednova cohort aggregation with the Pallas
     # batched-aggregation kernel (kernels/batch_agg.py)
     agg_kernels: bool = False
+    # sharded backend: force the cohort padding unit above the device count
+    # (DESIGN.md §5.5) — lets tests exercise uneven client→device padding
+    # even on a single-device host; None = pad to the device count
+    sharded_pad_multiple: Optional[int] = None
 
 
 class FedSim:
@@ -243,6 +251,30 @@ class FedSim:
         return {"loss": float(np.mean(result.losses))}
 
     # ------------------------------------------------------------------
+    def _segment_end(self, rnd: int, rounds: int) -> int:
+        """Largest ``end`` such that rounds [rnd, end) can execute without a
+        host-side interposition: segments break *after* any round whose eval
+        fires (the eval must see that round's params, not the segment's
+        end state) and *before* any periodic gain re-estimation. Backends
+        get the whole segment at once (``ExecutionBackend.run_rounds``) —
+        the sharded backend turns it into a single jit-resident fori_loop.
+        """
+        cfg = self.cfg
+        # bound the host rng (and plan memory) drawn ahead of execution by
+        # the backend's appetite: 1 for per-round backends (seed behaviour),
+        # larger for the sharded backend's jit-resident segments
+        end = min(rounds, rnd + self.backend.max_segment_rounds)
+        if cfg.gain_update_every and cfg.algorithm == "fedecado":
+            nxt = ((rnd // cfg.gain_update_every) + 1) * cfg.gain_update_every
+            if nxt > rnd:
+                end = min(end, nxt)
+        if self.eval_fn is not None:
+            for r in range(rnd, end):
+                if r % cfg.eval_every == 0 or r == rounds - 1:
+                    end = min(end, r + 1)
+                    break
+        return max(end, rnd + 1)
+
     def run(self, rounds: Optional[int] = None) -> Dict[str, list]:
         cfg = self.cfg
         rounds = rounds or cfg.rounds
@@ -251,7 +283,8 @@ class FedSim:
             A = self.n  # full participation by definition
         history: Dict[str, list] = {"round": [], "loss": [], "metrics": []}
 
-        for rnd in range(rounds):
+        rnd = 0
+        while rnd < rounds:
             if (
                 cfg.gain_update_every
                 and rnd
@@ -259,14 +292,21 @@ class FedSim:
                 and cfg.algorithm == "fedecado"
             ):
                 self._install_gains(round_idx=rnd)
-            plan = self._draw_plan(rnd, A)
-            rec = self.backend.run_round(self, plan)
-
-            history["round"].append(rnd)
-            history["loss"].append(rec["loss"])
-            if self.eval_fn is not None and (rnd % cfg.eval_every == 0 or rnd == rounds - 1):
-                m = self.eval_fn(self.current_params())
-                history["metrics"].append((rnd, m))
+            end = self._segment_end(rnd, rounds)
+            # all host randomness for the segment up front — same rng
+            # consumption order as the per-round loop (run_round does not
+            # touch self.rng), so histories are backend-independent
+            plans = [self._draw_plan(r, A) for r in range(rnd, end)]
+            recs = self.backend.run_rounds(self, plans)
+            for r, rec in zip(range(rnd, end), recs):
+                history["round"].append(r)
+                history["loss"].append(rec["loss"])
+                if self.eval_fn is not None and (
+                    r % cfg.eval_every == 0 or r == rounds - 1
+                ):
+                    m = self.eval_fn(self.current_params())
+                    history["metrics"].append((r, m))
+            rnd = end
         return history
 
     def current_params(self) -> Pytree:

@@ -9,6 +9,7 @@ ops.py        — jit'd pytree wrappers (kernel ↔ ref dispatch)
 ref.py        — pure-jnp oracles (tests assert allclose in interpret mode)
 """
 from repro.kernels.ops import (
+    batch_agg_psum,
     batched_aggregate,
     fused_consensus_step,
     gamma_op,
@@ -20,6 +21,7 @@ from repro.kernels.ops import (
 )
 
 __all__ = [
-    "batched_aggregate", "fused_consensus_step", "gamma_op", "hutchinson_op",
+    "batch_agg_psum", "batched_aggregate", "fused_consensus_step", "gamma_op",
+    "hutchinson_op",
     "ravel_tree", "unravel_tree", "ravel_stacked", "unravel_stacked",
 ]

@@ -33,6 +33,41 @@ def _batch_agg_kernel(scal_ref, w_ref, mask_ref, xc_ref, xnew_ref, out_ref):
     out_ref[:] = xc + scale * delta
 
 
+def _batch_agg_partial_kernel(w_ref, mask_ref, xc_ref, xnew_ref, out_ref):
+    w = (w_ref[:] * mask_ref[:])[:, None]
+    out_ref[:] = jnp.sum(w * (xnew_ref[:, :] - xc_ref[:][None]), axis=0)
+
+
+def batch_agg_partial_call(
+    x_c, x_new, w, mask, *, interpret: bool = True, tile_d: int = TILE_D
+):
+    """Device-local partial of the sharded cohort reduction:
+
+      partial[d] = Σ_a w_a·mask_a·(x_new[a, d] − x_c[d])
+
+    The sharded execution backend (sim/sharded.py) holds one cohort shard
+    per device; this kernel produces the shard's weighted-delta partial and
+    the caller ``psum``s partials across the client mesh axis before
+    applying ``x_c + scale·Σ`` (kernels/ops.py::batch_agg_psum). Same
+    blocking as the fused single-device kernel above.
+    """
+    A, D = x_new.shape
+    assert D % tile_d == 0, (D, tile_d)
+    full = lambda s: pl.BlockSpec(s, lambda i: (0,) * len(s))
+    return pl.pallas_call(
+        _batch_agg_partial_kernel,
+        grid=(D // tile_d,),
+        in_specs=[
+            full((A,)), full((A,)),
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
+            pl.BlockSpec((A, tile_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((D,), jnp.float32),
+        interpret=interpret,
+    )(w, mask, x_c, x_new)
+
+
 def batch_agg_call(
     x_c, x_new, w, mask, scale, *, interpret: bool = True, tile_d: int = TILE_D
 ):

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.batch_agg import batch_agg_call
+from repro.kernels.batch_agg import batch_agg_call, batch_agg_partial_call
 from repro.kernels.consensus import TILE_D, consensus_call
 from repro.kernels.gamma import gamma_call
 from repro.kernels.hutchinson import hutchinson_call
@@ -187,6 +187,41 @@ def batched_aggregate(
         use_kernel,
     )
     return unravel_tree(out, meta)
+
+
+def batch_agg_psum(
+    x_c: Pytree,
+    x_new_a: Pytree,
+    w: jax.Array,
+    axis_name: str,
+    use_kernel: bool = False,
+) -> Pytree:
+    """Sharded cohort weighted-delta reduction: Σ_a w_a·(x_a − x_c) with the
+    cohort axis sharded over mesh axis ``axis_name`` (called inside the
+    sharded backend's ``shard_map`` program, sim/sharded.py). Each device
+    computes its shard's partial — through the Pallas partial kernel when
+    ``use_kernel`` (FedSimConfig.agg_kernels), else plain jnp — and the
+    partials psum across the mesh. Cohort-padding masks are pre-folded into
+    ``w`` by the caller. Returns the delta pytree (caller applies
+    ``x_c + scale·delta``)."""
+    if use_kernel:
+        xc_flat, meta = ravel_tree(x_c)
+        xn_flat, _ = ravel_stacked(x_new_a)
+        A = xn_flat.shape[0]
+        part = batch_agg_partial_call(
+            xc_flat, xn_flat, w.astype(jnp.float32),
+            jnp.ones((A,), jnp.float32), interpret=_interpret(),
+        )
+        return unravel_tree(jax.lax.psum(part, axis_name), meta)
+
+    def leaf(xc, xa):
+        wb = w.reshape((-1,) + (1,) * (xa.ndim - 1)).astype(jnp.float32)
+        part = jnp.sum(
+            wb * (xa.astype(jnp.float32) - xc.astype(jnp.float32)[None]), axis=0
+        )
+        return jax.lax.psum(part, axis_name)
+
+    return jax.tree.map(leaf, x_c, x_new_a)
 
 
 def hutchinson_op(v: Pytree, hv: Pytree, acc: Pytree, use_kernel: bool = True):

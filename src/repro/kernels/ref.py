@@ -53,6 +53,13 @@ def batch_agg_ref(x_c, x_new, w, mask, scale):
     return x_c + scale * jnp.sum(wm * (x_new - x_c[None]), axis=0)
 
 
+def batch_agg_partial_ref(x_c, x_new, w, mask):
+    """Device-local partial of the sharded cohort reduction (no x_c/scale
+    application — the caller psums partials first)."""
+    wm = (w * mask)[:, None]
+    return jnp.sum(wm * (x_new - x_c[None]), axis=0)
+
+
 def hutchinson_ref(v, hv, acc):
     """Fused probe accumulate: acc += v*hv; partial trace = sum(v*hv)."""
     prod = v * hv

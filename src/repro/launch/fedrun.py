@@ -14,6 +14,12 @@ pjit-ed, not just dry-run lowered:
 
   PYTHONPATH=src python -m repro.launch.fedrun --arch smollm-360m --rounds 5
 
+``--backend sharded`` switches to the multi-device execution backend's
+machinery (sim/sharded.py, DESIGN.md §5.5): cohort local training is
+``shard_map``-ed over a 1-D "clients" mesh spanning every host device,
+with uneven cohort→device padding, and the BE Schur-arrowhead consensus
+reductions run as psum along that axis instead of a gathered dense solve.
+
 This is the cross-silo deployment shape described in DESIGN.md §2, scaled
 down to host devices so it executes on CPU.
 """
@@ -23,13 +29,14 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core import ConsensusConfig, init_server_state, server_round, set_gains
 from repro.data import make_lm_stream
 from repro.models import init_params, loss_fn
-from repro.sim.vectorized import build_cohort_runner
+from repro.sim.vectorized import build_cohort_runner, cohort_vmap_fn
 
 
 def main() -> None:
@@ -42,9 +49,13 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=2)
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--backend", choices=("vectorized", "sharded"), default="vectorized",
+        help="vectorized = vmapped cohort pjit over (data, model); sharded = "
+        "shard_map over a 1-D clients mesh with psum consensus reductions",
+    )
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
     cfg = get_smoke_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
@@ -53,24 +64,6 @@ def main() -> None:
     ccfg = ConsensusConfig(L=0.05, delta=1e-3, dt_init=0.05, max_substeps=16)
     state = init_server_state(params, args.clients, ccfg.dt_init)
     state = set_gains(state, jnp.full((args.clients,), 0.05))
-
-    # shardings: client axis -> "data"; everything else replicated (smoke
-    # configs are small; full-scale runs use launch/shardings.py rules)
-    rep = NamedSharding(mesh, P())
-    cax = NamedSharding(mesh, P("data"))
-
-    def stacked_sh(tree):
-        return jax.tree.map(lambda _: NamedSharding(mesh, P("data")), tree)
-
-    # --- cohort local training: the multi-rate engine's vectorized runner
-    # (vmap over the client axis), pjit over the mesh — the same code path
-    # FedSim's "vectorized" backend uses, so launch/ and fed/ share one
-    # local-integration implementation (DESIGN.md §5.1)
-    cohort_train = build_cohort_runner(lf, kind="fedecado")
-    ones_cohort = jnp.ones((args.cohort,), jnp.float32)
-    full_steps = jnp.full((args.cohort,), args.steps, jnp.int32)
-
-    round_fn = jax.jit(lambda s, x, T, i: server_round(s, x, T, i, ccfg))
 
     streams = [
         make_lm_stream(1 << 13, vocab=cfg.vocab_size, seed=100 + i)
@@ -82,6 +75,26 @@ def main() -> None:
         s = streams[i]
         starts = rng.randint(0, len(s) - args.seq_len - 1, (n_steps, args.batch_size))
         return np.stack([[s[a:a + args.seq_len] for a in row] for row in starts])
+
+    if args.backend == "sharded":
+        _run_sharded(args, lf, ccfg, state, batches_for, rng)
+        return
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+    # shardings: client axis -> "data"; everything else replicated (smoke
+    # configs are small; full-scale runs use launch/shardings.py rules)
+    cax = NamedSharding(mesh, P("data"))
+
+    # --- cohort local training: the multi-rate engine's vectorized runner
+    # (vmap over the client axis), pjit over the mesh — the same code path
+    # FedSim's "vectorized" backend uses, so launch/ and fed/ share one
+    # local-integration implementation (DESIGN.md §5.1)
+    cohort_train = build_cohort_runner(lf, kind="fedecado")
+    ones_cohort = jnp.ones((args.cohort,), jnp.float32)
+    full_steps = jnp.full((args.cohort,), args.steps, jnp.int32)
+
+    round_fn = jax.jit(lambda s, x, T, i: server_round(s, x, T, i, ccfg))
 
     with mesh:
         t0 = time.time()
@@ -104,6 +117,63 @@ def main() -> None:
                 flush=True,
             )
     print("done — cohort training and consensus both executed on the mesh")
+
+
+def _run_sharded(args, lf, ccfg, state, batches_for, rng) -> None:
+    """Cohort training + consensus through the sharded backend's building
+    blocks: shard_map local integration over the 1-D clients mesh and the
+    psum Schur-arrowhead solve, with the cohort padded to the device count."""
+    from repro.launch.mesh import make_client_mesh
+    from repro.sim.engine import pad_cohort_ids
+    from repro.sim.sharded import AXIS, build_flow_apply
+
+    mesh = make_client_mesh()
+    n_dev = mesh.shape[AXIS]
+    A = args.cohort
+    A_pad = -(-A // n_dev) * n_dev
+
+    c1 = P(AXIS)
+    cohort_train = jax.jit(shard_map(
+        cohort_vmap_fn(lf, "fedecado"), mesh=mesh,
+        in_specs=(P(), c1, c1, c1, c1, c1), out_specs=(c1, c1),
+        check_rep=False,
+    ))
+    apply_fn = build_flow_apply(mesh, ccfg)
+
+    t0 = time.time()
+    for rnd in range(args.rounds):
+        idx = np.sort(rng.choice(args.clients, A, replace=False))
+        lrs = rng.uniform(5e-3, 2e-2, A).astype(np.float32)
+        toks = np.stack([batches_for(int(i), args.steps) for i in idx])
+
+        pad = A_pad - A
+        idx_p, sidx, mask = pad_cohort_ids(idx, A_pad, args.clients)
+        lrs_p = np.concatenate([lrs, np.zeros(pad, np.float32)])
+        toks_p = np.pad(toks, ((0, pad),) + ((0, 0),) * (toks.ndim - 1), mode="edge")
+        n_valid = (mask * args.steps).astype(np.int32)
+        Ts = (lrs_p * n_valid).astype(np.float32)
+
+        I_a = jax.tree.map(lambda l: l[jnp.asarray(idx_p)], state.I)
+        x_new_a, losses = cohort_train(
+            state.x_c, I_a, {"tokens": jnp.asarray(toks_p)},
+            jnp.asarray(lrs_p), jnp.ones((A_pad,), jnp.float32),
+            jnp.asarray(n_valid),
+        )
+        x_c, I, dt_last, t = apply_fn(
+            state.x_c, state.I, state.g_inv, state.dt_last, state.t,
+            x_new_a, jnp.asarray(idx_p), jnp.asarray(sidx), jnp.asarray(mask),
+            jnp.asarray(Ts),
+        )
+        state = state._replace(
+            x_c=x_c, I=I, dt_last=dt_last, t=t, round=state.round + 1
+        )
+        loss = float(np.mean(np.asarray(losses)[mask > 0]))
+        print(
+            f"round {rnd}  cohort-loss {loss:.4f}  "
+            f"devices {n_dev}  cohort {A}->{A_pad}  ({time.time()-t0:.0f}s)",
+            flush=True,
+        )
+    print("done — sharded cohort training + psum consensus on the clients mesh")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, devices=devices[:n])
 
 
+def make_client_mesh(max_devices: int | None = None):
+    """1-D mesh over the local devices with a single ``"clients"`` axis.
+
+    This is the launch mesh of the sharded execution backend
+    (sim/sharded.py): the cohort axis is shard_map-ed over it and the
+    Schur-arrowhead consensus reductions run as psum along it. The federated
+    engine's smoke models are small enough that model dims stay replicated,
+    so every device goes to client parallelism (contrast the training meshes
+    above, which reserve a "model" axis). Under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` this yields an
+    N-way CPU mesh for tests/benchmarks.
+    """
+    devices = jax.devices()
+    n = len(devices) if max_devices is None else max(1, min(max_devices, len(devices)))
+    return jax.make_mesh((n,), ("clients",), devices=devices[:n])
+
+
 def batch_axes(mesh) -> tuple:
     """The axes a global batch (or client cohort) is sharded over."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

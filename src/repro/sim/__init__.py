@@ -1,8 +1,10 @@
 """Multi-rate client execution engine (DESIGN.md §5).
 
-engine.py     — CohortPlan/CohortResult, ExecutionBackend, sequential oracle
+engine.py     — CohortPlan/StackedPlan, ExecutionBackend, sequential oracle
 vectorized.py — whole-cohort vmap-over-scan runner with per-client step masks
 events.py     — continuous-time event scheduler with straggler staleness
+sharded.py    — shard_map multi-device backend: psum consensus reductions +
+                jit-resident fori_loop over pre-drawn round segments
 """
 from repro.sim.engine import (
     BACKENDS,
@@ -10,13 +12,22 @@ from repro.sim.engine import (
     CohortResult,
     ExecutionBackend,
     SequentialBackend,
+    StackedPlan,
     get_backend,
+    pad_cohort_ids,
+    stack_plans,
 )
 from repro.sim.events import EventBackend, InFlight
-from repro.sim.vectorized import VectorizedBackend, build_cohort_runner
+from repro.sim.sharded import ShardedBackend
+from repro.sim.vectorized import (
+    VectorizedBackend,
+    build_cohort_runner,
+    cohort_vmap_fn,
+)
 
 __all__ = [
     "BACKENDS", "CohortPlan", "CohortResult", "ExecutionBackend",
     "SequentialBackend", "VectorizedBackend", "EventBackend", "InFlight",
-    "build_cohort_runner", "get_backend",
+    "ShardedBackend", "StackedPlan", "pad_cohort_ids", "stack_plans",
+    "build_cohort_runner", "cohort_vmap_fn", "get_backend",
 ]

@@ -12,7 +12,12 @@ backends behind one ``ExecutionBackend`` interface:
                 dispatch with per-client step masks (sim/vectorized.py);
   event       — a continuous-time event scheduler that advances clients
                 asynchronously between Backward-Euler synchronization
-                points and supports staleness (sim/events.py).
+                points and supports staleness (sim/events.py);
+  sharded     — the vectorized dispatch split across devices with
+                ``shard_map`` over the client axis, psum consensus
+                reductions, and whole multi-round segments resident in one
+                jit via ``lax.fori_loop`` over a pre-drawn ``StackedPlan``
+                (sim/sharded.py, DESIGN.md §5.5).
 
 The round is split into two phases so the backends stay composable:
 
@@ -32,7 +37,7 @@ DESIGN.md §5.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +75,100 @@ class CohortPlan:
 
 
 @dataclasses.dataclass
+class StackedPlan:
+    """R ``CohortPlan``s densified into device-ready arrays for a jit-resident
+    multi-round loop (the sharded backend's ``lax.fori_loop`` segment).
+
+    The cohort axis is padded from A to ``A_pad`` (a multiple of the device
+    count) so it shards evenly; padded slots carry ``mask = 0``, ``idx = 0``
+    (a valid row for gathers), ``scatter_idx = n_clients`` (dropped by
+    out-of-bounds scatter), ``n_steps = 0`` (every scan iteration masked, so
+    the padded client's endpoint is exactly the broadcast x_c), and
+    ``T = 0`` (excluded from the masked T_max horizon). Step padding follows
+    the vectorized backend: each client's index rows are edge-padded to
+    ``S_pad``. Stacking requires a uniform per-client batch size across all
+    rounds — ``stack_plans`` returns None for ragged cohorts and the caller
+    falls back to per-round execution.
+    """
+    rnd0: int
+    idx: np.ndarray          # (R, A_pad) int32 gather ids (0 on padding)
+    scatter_idx: np.ndarray  # (R, A_pad) int32 scatter ids (n_clients on padding)
+    mask: np.ndarray         # (R, A_pad) float32 1=real client, 0=padding
+    lrs: np.ndarray          # (R, A_pad) float32
+    n_steps: np.ndarray      # (R, A_pad) int32
+    Ts: np.ndarray           # (R, A_pad) float32 windows lr_i·n_steps_i
+    sel: np.ndarray          # (R, A_pad, S_pad, bs) int32 minibatch indices
+    taus: np.ndarray         # (R, A_pad) float32 local step counts (= n_steps)
+
+    @property
+    def n_rounds(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def cohort_pad(self) -> int:
+        return self.idx.shape[1]
+
+
+def pad_cohort_ids(
+    idx: np.ndarray, A_pad: int, n_clients: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The sharded backend's cohort-padding sentinels, in ONE place
+    (DESIGN.md §5.5): returns (gather_idx, scatter_idx, mask) of length
+    ``A_pad`` where padded slots carry gather id 0 (a valid row, so device
+    gathers stay in bounds), scatter id ``n_clients`` (dropped by the
+    ``mode="drop"`` out-of-bounds scatter), and mask 0. Used by
+    ``stack_plans``, the sharded ragged fallback, and launch/fedrun.py —
+    change a sentinel here and every consumer follows."""
+    A = len(idx)
+    pad = A_pad - A
+    gather = np.concatenate([idx, np.zeros(pad, idx.dtype)]).astype(np.int32)
+    scatter = np.concatenate(
+        [idx, np.full(pad, n_clients, idx.dtype)]
+    ).astype(np.int32)
+    mask = np.concatenate([np.ones(A), np.zeros(pad)]).astype(np.float32)
+    return gather, scatter, mask
+
+
+def stack_plans(
+    plans: List[CohortPlan], n_clients: int, A_pad: int, S_pad: int
+) -> Optional[StackedPlan]:
+    """Densify a segment of plans into a StackedPlan, or None if any cohort
+    is ragged (mixed per-client batch sizes cannot share one dense sel
+    tensor without changing the minibatch-mean arithmetic)."""
+    bss = {p.batch_idx[j].shape[1] for p in plans for j in range(p.cohort_size)}
+    if len(bss) != 1:
+        return None
+    bs = bss.pop()
+    R = len(plans)
+    A = plans[0].cohort_size
+    assert all(p.cohort_size == A for p in plans), "uneven cohort sizes"
+    assert A_pad >= A and S_pad >= int(max(p.n_steps.max() for p in plans))
+
+    idx = np.zeros((R, A_pad), np.int32)
+    sidx = np.full((R, A_pad), n_clients, np.int32)
+    mask = np.zeros((R, A_pad), np.float32)
+    lrs = np.zeros((R, A_pad), np.float32)
+    n_steps = np.zeros((R, A_pad), np.int32)
+    Ts = np.zeros((R, A_pad), np.float32)
+    sel = np.zeros((R, A_pad, S_pad, bs), np.int32)
+    for r, p in enumerate(plans):
+        idx[r], sidx[r], mask[r] = pad_cohort_ids(p.idx, A_pad, n_clients)
+        lrs[r, :A] = p.lrs
+        n_steps[r, :A] = p.n_steps
+        Ts[r, :A] = p.windows()
+        for j in range(A):
+            sel[r, j] = np.pad(
+                p.batch_idx[j],
+                ((0, S_pad - p.batch_idx[j].shape[0]), (0, 0)),
+                mode="edge",
+            )
+    return StackedPlan(
+        rnd0=plans[0].rnd, idx=idx, scatter_idx=sidx, mask=mask, lrs=lrs,
+        n_steps=n_steps, Ts=Ts, sel=sel, taus=n_steps.astype(np.float32),
+    )
+
+
+@dataclasses.dataclass
 class CohortResult:
     """Local-integration outputs for one cohort, in plan order."""
     x_new_a: Pytree                 # stacked final client states, leaves (A, ...)
@@ -85,12 +184,24 @@ class ExecutionBackend:
 
     name = "base"
 
+    # how many rounds of host rng FedSim.run may pre-draw into one
+    # run_rounds segment. Backends that execute round-by-round keep the
+    # seed behaviour (one plan alive at a time); the sharded backend raises
+    # this to amortize its jit-resident fori_loop over many rounds.
+    max_segment_rounds = 1
+
     def run_cohort(self, sim, plan: CohortPlan) -> CohortResult:
         raise NotImplementedError
 
     def run_round(self, sim, plan: CohortPlan) -> Dict[str, Any]:
         result = self.run_cohort(sim, plan)
         return sim._apply_round(plan, result)
+
+    def run_rounds(self, sim, plans: List[CohortPlan]) -> List[Dict[str, Any]]:
+        """Execute a segment of pre-drawn plans. The default is the per-round
+        Python loop; the sharded backend overrides this with one jit-resident
+        ``lax.fori_loop`` over the whole stacked segment."""
+        return [self.run_round(sim, plan) for plan in plans]
 
 
 class SequentialBackend(ExecutionBackend):
@@ -164,12 +275,13 @@ class SequentialBackend(ExecutionBackend):
         return CohortResult(x_new_a=x_new_a, Ts=Ts, taus=taus, losses=losses)
 
 
-BACKENDS = ("sequential", "vectorized", "event")
+BACKENDS = ("sequential", "vectorized", "event", "sharded")
 
 
 def get_backend(cfg) -> ExecutionBackend:
     """Instantiate the execution backend named by ``cfg.backend``."""
     from repro.sim.events import EventBackend
+    from repro.sim.sharded import ShardedBackend
     from repro.sim.vectorized import VectorizedBackend
 
     if cfg.backend == "sequential":
@@ -180,4 +292,6 @@ def get_backend(cfg) -> ExecutionBackend:
         return EventBackend(
             horizon_quantile=cfg.event_horizon, max_waves=cfg.event_max_waves
         )
+    if cfg.backend == "sharded":
+        return ShardedBackend(pad_multiple=cfg.sharded_pad_multiple)
     raise ValueError(f"unknown backend {cfg.backend!r}; choose from {BACKENDS}")

@@ -1,0 +1,486 @@
+"""Sharded multi-device execution: the round loop resident on the mesh.
+
+The vectorized backend already collapses a cohort into one vmap-over-scan
+dispatch, but that dispatch lands on a single device and every round makes
+a host round-trip (plan staging, aggregation, history bookkeeping). This
+backend scales the same mechanism across the launch mesh
+(launch/mesh.py::make_client_mesh, a 1-D "clients" axis over all local
+devices) and moves the *multi-round* loop on-device:
+
+  * the cohort axis is padded to a multiple of the device count and
+    ``shard_map``-ed over the mesh, so each device runs the vmap-over-scan
+    local integration for its A_pad/n_dev clients;
+  * the Backward-Euler Schur-arrowhead reduction (Σ_a u_a, Σ_a w_a of
+    DESIGN.md §2) runs as device-local partial sums + ``psum`` along the
+    client axis — core/consensus.py's ``be_step``/``lte`` take the mesh
+    axis name directly, so the dense synchronous round and this backend
+    execute the very same Algorithm-1 loop (core/fedecado.py::
+    consensus_integrate), differing only in reduction topology;
+  * a whole segment of rounds executes inside ONE jit: host rng for R
+    rounds is pre-drawn into a ``StackedPlan`` (engine.py) and a
+    ``lax.fori_loop`` consumes it round by round, carrying
+    (x_c, I, dt_last, t) — zero host syncs between rounds;
+  * the averaging baselines (fedavg/fedprox/fednova) aggregate through the
+    sharded batch-agg entry (kernels/ops.py::batch_agg_psum): local masked
+    weighted-delta partials + psum.
+
+Padding/masking semantics (DESIGN.md §5.5): padded cohort rows run zero
+valid steps (their endpoint is exactly the broadcast x_c), carry mask 0 in
+every consensus reduction and LTE max, window T = 0 (excluded from the
+pmax'd τ horizon), and are dropped from the flow write-back by an
+out-of-bounds scatter index. Because every scalar that steers the adaptive
+loop (ε_BE, T_max, Δt) is psum/pmax-replicated, all devices branch
+identically through the nested while loops.
+
+Ragged cohorts (clients with |partition| < batch_size) cannot share one
+dense minibatch tensor without changing the minibatch-mean arithmetic, so
+those rounds fall back to the vectorized backend's per-group local
+integration and re-enter the sharded path at the consensus/aggregation
+reduction. Diagonal sensitivity gains keep their pytree layout on the host
+path and are not supported here (scalar gains only).
+
+Backend equivalence against the sequential oracle — all four client kinds,
+uneven padding, ragged partitions, partial participation, heterogeneous
+e_i/lr_i — is fuzzed in tests/test_backend_equiv.py; histories match at
+rtol ≈ 1e-6 (psum re-associates the cohort reductions, so bitwise equality
+is not expected).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.sim.engine import (
+    CohortPlan,
+    CohortResult,
+    ExecutionBackend,
+    StackedPlan,
+    pad_cohort_ids,
+    stack_plans,
+)
+from repro.sim.vectorized import VectorizedBackend, cohort_vmap_fn
+
+Pytree = Any
+
+AXIS = "clients"
+
+
+def _bcast(v: jax.Array, like: jax.Array) -> jax.Array:
+    return v.reshape((-1,) + (1,) * (like.ndim - 1))
+
+
+def _flow_round_core(
+    x_c, I, g_inv, dt_last, t,
+    x_new_loc, idx_loc, sidx_loc, mask_loc, T_loc, ccfg,
+):
+    """One FedECADO consensus round on a device-local cohort shard.
+
+    Runs inside ``shard_map``: (x_c, I, g_inv, dt_*, t) are replicated,
+    ``*_loc`` carry this device's A_pad/n_dev cohort rows. The Σ_a
+    reductions inside the BE solve psum over AXIS; the flow write-back
+    scatters each device's rows into the replicated I with exact set
+    semantics (psum of disjoint one-hot placements + hit mask).
+    """
+    from repro.core.fedecado import consensus_integrate
+    from repro.core.flow import broadcast_clients, tree_sum_clients
+
+    J_loc = jax.tree.map(lambda l: l[idx_loc], I)
+    # S_frozen = Σ_all I_i − Σ_active J_a; the active sum spans all shards
+    S_all = tree_sum_clients(I)
+    S_act = jax.tree.map(
+        lambda j: jax.lax.psum(jnp.sum(j * _bcast(mask_loc, j), axis=0), AXIS),
+        J_loc,
+    )
+    S_frozen = jax.tree.map(jnp.subtract, S_all, S_act)
+
+    A_loc = T_loc.shape[0]
+    x_prev_loc = broadcast_clients(x_c, A_loc)
+    g_loc = jnp.take(g_inv, idx_loc, axis=0)
+
+    x_c_f, I_f, tau_f, dt_f, _stats = consensus_integrate(
+        x_c, J_loc, J_loc, x_prev_loc, x_new_loc, T_loc, g_loc, S_frozen,
+        dt_last, ccfg, axis_name=AXIS, mask=mask_loc,
+    )
+
+    # exact-set write-back: every real cohort row is owned by exactly one
+    # device, so psum of the one-hot scatters reassembles the full update;
+    # padding rows carry sidx = n_clients and are dropped out of bounds
+    n = jax.tree.leaves(I)[0].shape[0]
+    hit = jax.lax.psum(
+        jnp.zeros((n,), jnp.float32).at[sidx_loc].add(mask_loc, mode="drop"),
+        AXIS,
+    )
+    rows = jax.tree.map(
+        lambda l, r: jax.lax.psum(
+            jnp.zeros_like(l).at[sidx_loc].add(r * _bcast(mask_loc, r), mode="drop"),
+            AXIS,
+        ),
+        I, I_f,
+    )
+    I_new = jax.tree.map(
+        lambda l, r: jnp.where(_bcast(hit, l) > 0, r, l), I, rows
+    )
+    return x_c_f, I_new, dt_f, t + tau_f
+
+
+def build_flow_segment(mesh, loss_fn: Callable, ccfg) -> Callable:
+    """Jitted R-round fedecado/ecado segment, shard_map-ed over ``mesh``.
+
+    ``fn(x_c, I, g_inv, dt_last, t, data, idx, sidx, mask, lrs, ns, Ts,
+    sel, ps) -> (x_c, I, dt_last, t, losses)`` where the plan arrays are the
+    ``StackedPlan`` fields (R, A_pad, ...) sharded on the cohort axis, and
+    ``losses`` comes back (R, A_pad) in global plan order.
+    """
+    cohort = cohort_vmap_fn(loss_fn, "fedecado")
+
+    def body(x_c, I, g_inv, dt_last, t, data, idx, sidx, mask, lrs, ns, Ts, sel, ps):
+        R, A_loc = idx.shape
+
+        def round_step(r, carry):
+            x_c, I, dt_last, t, losses = carry
+            batches = {k: v[sel[r]] for k, v in data.items()}
+            I_rows = jax.tree.map(lambda l: l[idx[r]], I)
+            x_new_loc, loss_loc = cohort(x_c, I_rows, batches, lrs[r], ps[r], ns[r])
+            x_c, I, dt_last, t = _flow_round_core(
+                x_c, I, g_inv, dt_last, t,
+                x_new_loc, idx[r], sidx[r], mask[r], Ts[r], ccfg,
+            )
+            return (x_c, I, dt_last, t, losses.at[r].set(loss_loc))
+
+        losses0 = jnp.zeros((R, A_loc), jnp.float32)
+        x_c, I, dt_last, t, losses = jax.lax.fori_loop(
+            0, R, round_step, (x_c, I, dt_last, t, losses0)
+        )
+        return x_c, I, dt_last, t, losses
+
+    c2 = P(None, AXIS)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P(), c2, c2, c2, c2, c2, c2, c2, c2),
+        out_specs=(P(), P(), P(), P(), c2),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def build_avg_segment(mesh, loss_fn: Callable, kind: str, mu: float,
+                      use_kernel: bool) -> Callable:
+    """Jitted R-round fedavg/fedprox/fednova segment.
+
+    ``fn(params, data, sel, lrs, ns, w, scale) -> (params, losses)`` —
+    ``w`` (R, A_pad) carries the host-precomputed aggregation weights with
+    cohort padding already zeroed, ``scale`` (R,) FedNova's τ_eff (ones for
+    fedavg/fedprox).
+    """
+    from repro.kernels.ops import batch_agg_psum
+
+    cohort = cohort_vmap_fn(loss_fn, kind, mu)
+
+    def body(params, data, sel, lrs, ns, w, scale):
+        R, A_loc = lrs.shape
+
+        def round_step(r, carry):
+            params, losses = carry
+            batches = {k: v[sel[r]] for k, v in data.items()}
+            x_new_loc, loss_loc = cohort(
+                params, None, batches, lrs[r], jnp.ones((A_loc,), jnp.float32),
+                ns[r],
+            )
+            delta = batch_agg_psum(
+                params, x_new_loc, w[r], AXIS, use_kernel=use_kernel
+            )
+            params = jax.tree.map(
+                lambda xc, d: xc + scale[r] * d, params, delta
+            )
+            return (params, losses.at[r].set(loss_loc))
+
+        losses0 = jnp.zeros((R, A_loc), jnp.float32)
+        return jax.lax.fori_loop(0, R, round_step, (params, losses0))
+
+    c2 = P(None, AXIS)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), c2, c2, c2, c2, P()),
+        out_specs=(P(), c2),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def build_flow_apply(mesh, ccfg) -> Callable:
+    """Consensus-only sharded round (ragged fallback): local integration
+    already happened on the gathered cohort; this applies the psum BE solve.
+    ``fn(x_c, I, g_inv, dt_last, t, x_new_a, idx, sidx, mask, Ts)``."""
+
+    def body(x_c, I, g_inv, dt_last, t, x_new_loc, idx, sidx, mask, Ts):
+        return _flow_round_core(
+            x_c, I, g_inv, dt_last, t, x_new_loc, idx, sidx, mask, Ts, ccfg
+        )
+
+    c1 = P(AXIS)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), c1, c1, c1, c1, c1),
+        out_specs=(P(), P(), P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def build_avg_apply(mesh, use_kernel: bool) -> Callable:
+    """Aggregation-only sharded round (ragged fallback for the averaging
+    algorithms): ``fn(params, x_new_a, w, scale) -> params``."""
+    from repro.kernels.ops import batch_agg_psum
+
+    def body(params, x_new_loc, w, scale):
+        delta = batch_agg_psum(params, x_new_loc, w, AXIS, use_kernel=use_kernel)
+        return jax.tree.map(lambda xc, d: xc + scale * d, params, delta)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(AXIS), P(AXIS), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+class ShardedBackend(ExecutionBackend):
+    """Multi-device cohort execution with on-device multi-round segments.
+
+    Numerically equivalent to SequentialBackend on the same plan stream at
+    rtol ≈ 1e-6 (psum re-associates the Σ_a reductions); fuzzed across
+    client kinds / padding / participation in tests/test_backend_equiv.py.
+
+    ``pad_multiple`` forces the cohort padding unit above the device count —
+    used by tests to exercise uneven client→device padding even on a
+    single-device host.
+    """
+
+    name = "sharded"
+
+    # long jit-resident segments are the point, but StackedPlan memory is
+    # O(R·A_pad·S_pad·bs) and each distinct R is a compile shape — 32 rounds
+    # amortizes the dispatch while bounding both
+    max_segment_rounds = 32
+
+    def __init__(self, pad_multiple: Optional[int] = None,
+                 max_devices: Optional[int] = None):
+        self.pad_multiple = pad_multiple
+        self.max_devices = max_devices
+        self._mesh = None
+        self._fns: Dict[Tuple, Callable] = {}
+        self._vec = VectorizedBackend()
+        # (data dict, device arrays) — holding the dict itself both keys the
+        # cache by identity and prevents id() reuse after gc
+        self._data_cache: Tuple[Optional[Dict], Optional[Dict]] = (None, None)
+        self.last_segment_stats: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.launch.mesh import make_client_mesh
+
+            self._mesh = make_client_mesh(self.max_devices)
+        return self._mesh
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.shape[AXIS]
+
+    def _pad_unit(self) -> int:
+        n_dev = self.n_devices
+        if self.pad_multiple:
+            return int(np.lcm(n_dev, int(self.pad_multiple)))
+        return n_dev
+
+    def _a_pad(self, A: int) -> int:
+        unit = self._pad_unit()
+        return int(-(-A // unit) * unit)
+
+    def _check(self, sim):
+        if sim.state is not None and not isinstance(sim.state.g_inv, jax.Array):
+            raise NotImplementedError(
+                "sharded backend supports scalar sensitivity gains only "
+                "(FedSimConfig.sensitivity='scalar'); diagonal gains keep "
+                "their pytree layout on the dense path"
+            )
+
+    def _fn(self, key: Tuple, builder: Callable) -> Callable:
+        if key not in self._fns:
+            self._fns[key] = builder()
+        return self._fns[key]
+
+    def _device_data(self, sim) -> Dict[str, jax.Array]:
+        if self._data_cache[0] is not sim.data:
+            self._data_cache = (
+                sim.data, {k: jnp.asarray(v) for k, v in sim.data.items()}
+            )
+        return self._data_cache[1]
+
+    # ------------------------------------------------------------------
+    def run_rounds(self, sim, plans: List[CohortPlan]) -> List[Dict[str, Any]]:
+        if not plans:
+            return []
+        self._check(sim)
+        cfg = sim.cfg
+        S_pad = max(
+            VectorizedBackend._pad_steps(cfg),
+            int(max(int(p.n_steps.max()) for p in plans)),
+        )
+        A_pad = self._a_pad(plans[0].cohort_size)
+        sp = stack_plans(plans, sim.n, A_pad, S_pad)
+        if sp is None:
+            # ragged cohort (|partition| < batch_size somewhere): per-round
+            # fallback — grouped local integration + sharded reduction
+            return [self.run_round(sim, p) for p in plans]
+        return self._run_segment(sim, sp)
+
+    def run_round(self, sim, plan: CohortPlan) -> Dict[str, Any]:
+        self._check(sim)
+        cfg = sim.cfg
+        S_pad = max(VectorizedBackend._pad_steps(cfg), int(plan.n_steps.max()))
+        sp = stack_plans([plan], sim.n, self._a_pad(plan.cohort_size), S_pad)
+        if sp is not None:
+            return self._run_segment(sim, sp)[0]
+        result = self._vec.run_cohort(sim, plan)
+        return self._apply_gathered(sim, plan, result)
+
+    # ------------------------------------------------------------------
+    def _run_segment(self, sim, sp: StackedPlan) -> List[Dict[str, Any]]:
+        cfg = sim.cfg
+        alg = cfg.algorithm
+        R = sp.n_rounds
+        data = self._device_data(sim)
+        arr = jnp.asarray
+
+        if alg in ("fedecado", "ecado"):
+            ps = (
+                sim.p_hat[sp.idx].astype(np.float32)
+                if alg == "fedecado"
+                else np.ones_like(sp.mask)
+            )
+            fn = self._fn(
+                # keyed on the loss fn too: the built closure captures it,
+                # and a backend instance may be reused across sims (the
+                # bench warm-up pattern)
+                ("flow_seg", id(sim.loss_fn), cfg.consensus),
+                lambda: build_flow_segment(self.mesh, sim.loss_fn, cfg.consensus),
+            )
+            st = sim.state
+            x_c, I, dt_last, t, losses = fn(
+                st.x_c, st.I, st.g_inv, st.dt_last, st.t, data,
+                arr(sp.idx), arr(sp.scatter_idx), arr(sp.mask), arr(sp.lrs),
+                arr(sp.n_steps), arr(sp.Ts), arr(sp.sel), arr(ps),
+            )
+            sim.state = st._replace(
+                x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + R
+            )
+        else:
+            kind = "fedprox" if alg == "fedprox" else "sgd"
+            mu = float(cfg.mu) if alg == "fedprox" else 0.0
+            w, scale = self._avg_weights(sim, sp)
+            fn = self._fn(
+                ("avg_seg", id(sim.loss_fn), kind, mu, bool(cfg.agg_kernels)),
+                lambda: build_avg_segment(
+                    self.mesh, sim.loss_fn, kind, mu, bool(cfg.agg_kernels)
+                ),
+            )
+            sim.params, losses = fn(
+                sim.params, data, arr(sp.sel), arr(sp.lrs), arr(sp.n_steps),
+                arr(w), arr(scale),
+            )
+
+        losses = np.asarray(losses)
+        self.last_segment_stats = {"rounds": R, "cohort_pad": sp.cohort_pad,
+                                   "n_devices": self.n_devices}
+        # host-side float64 mean over the real cohort rows, mirroring the
+        # sequential backend's np.mean over per-client python floats
+        return [
+            {"loss": float(np.mean(losses[r][sp.mask[r] > 0].astype(np.float64)))}
+            for r in range(R)
+        ]
+
+    def _avg_weights(self, sim, sp: StackedPlan):
+        """Host-precomputed per-round aggregation weights (fp32, matching
+        fed/baselines.py arithmetic), cohort padding zeroed via the mask."""
+        alg = sim.cfg.algorithm
+        p_a = (sim.p_hat[sp.idx] * sp.mask).astype(np.float32)
+        den = np.maximum(p_a.sum(axis=1, keepdims=True), np.float32(1e-12))
+        p = (p_a / den).astype(np.float32)
+        if alg == "fednova":
+            tau = sp.taus
+            scale = (p * tau).sum(axis=1).astype(np.float32)   # τ_eff
+            w = (p / np.maximum(tau, np.float32(1.0))).astype(np.float32)
+        else:   # fedavg / fedprox
+            w = p
+            scale = np.ones((sp.n_rounds,), np.float32)
+        return w, scale
+
+    # ------------------------------------------------------------------
+    def _apply_gathered(self, sim, plan: CohortPlan, result: CohortResult):
+        """Ragged fallback: cohort endpoints were produced by the vectorized
+        grouped runner; pad them to the device multiple and run the sharded
+        consensus / aggregation reduction."""
+        cfg = sim.cfg
+        alg = cfg.algorithm
+        A = plan.cohort_size
+        A_pad = self._a_pad(A)
+        pad = A_pad - A
+
+        x_ref = sim.state.x_c if sim.state is not None else sim.params
+        x_new_pad = jax.tree.map(
+            lambda l, xc: (
+                jnp.concatenate(
+                    [l, jnp.broadcast_to(xc[None], (pad,) + xc.shape)]
+                ) if pad else l
+            ),
+            result.x_new_a, x_ref,
+        )
+        idx, sidx, mask = pad_cohort_ids(plan.idx, A_pad, sim.n)
+
+        if alg in ("fedecado", "ecado"):
+            Ts = np.concatenate(
+                [np.asarray(result.Ts, np.float32), np.zeros(pad, np.float32)]
+            )
+            fn = self._fn(
+                ("flow_apply", cfg.consensus),
+                lambda: build_flow_apply(self.mesh, cfg.consensus),
+            )
+            st = sim.state
+            x_c, I, dt_last, t = fn(
+                st.x_c, st.I, st.g_inv, st.dt_last, st.t, x_new_pad,
+                jnp.asarray(idx), jnp.asarray(sidx), jnp.asarray(mask),
+                jnp.asarray(Ts),
+            )
+            sim.state = st._replace(
+                x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + 1
+            )
+        else:
+            sp1 = StackedPlan(
+                rnd0=plan.rnd,
+                idx=idx[None], scatter_idx=sidx[None], mask=mask[None],
+                lrs=np.zeros((1, A_pad), np.float32),
+                n_steps=np.zeros((1, A_pad), np.int32),
+                Ts=np.zeros((1, A_pad), np.float32),
+                sel=np.zeros((1, A_pad, 1, 1), np.int32),
+                taus=np.concatenate(
+                    [np.asarray(result.taus, np.float32), np.zeros(pad, np.float32)]
+                )[None],
+            )
+            w, scale = self._avg_weights(sim, sp1)
+            fn = self._fn(
+                ("avg_apply", bool(cfg.agg_kernels)),
+                lambda: build_avg_apply(self.mesh, bool(cfg.agg_kernels)),
+            )
+            sim.params = fn(
+                sim.params, x_new_pad, jnp.asarray(w[0]), jnp.asarray(scale[0])
+            )
+        return {"loss": float(np.mean(result.losses))}

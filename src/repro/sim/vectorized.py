@@ -40,16 +40,14 @@ from repro.sim.engine import CohortPlan, CohortResult, ExecutionBackend
 Pytree = Any
 
 
-def build_cohort_runner(loss_fn: Callable, kind: str, mu: float = 0.0) -> Callable:
-    """Build the jitted vmap-over-scan cohort runner for one client kind.
+def cohort_vmap_fn(loss_fn: Callable, kind: str, mu: float = 0.0) -> Callable:
+    """The UNJITTED vmap-over-scan cohort function for one client kind.
 
-    Returns ``runner(x_c, I_a, batches, lrs, ps, n_valid) -> (x_new_a,
-    losses)`` where leaves of ``batches`` are (A, S_pad, bs, ...), ``I_a``
-    leaves are (A, ...) (pass None-shaped zeros only for kind="fedecado";
-    other kinds ignore it and may receive ``None``), and ``n_valid`` (A,)
-    int32 gives each client's true step count. ``x_new_a`` leaves are
-    (A, ...); ``losses`` is (A,) — each client's last *valid* minibatch
-    loss. Re-traces only when shapes change (once per (A, S_pad, bs)).
+    ``fn(x_c, I_a, batches, lrs, ps, n_valid) -> (x_new_a, losses)`` — see
+    ``build_cohort_runner`` for the contract. Exposed separately so the
+    sharded backend can call it on each device's cohort shard inside its
+    ``shard_map`` program (sim/sharded.py), where the outer jit is owned by
+    the segment runner rather than per-dispatch.
     """
     from repro.fed.client import client_step
 
@@ -74,14 +72,27 @@ def build_cohort_runner(loss_fn: Callable, kind: str, mu: float = 0.0) -> Callab
         return x, last_loss
 
     if takes_I:
-        fn = jax.vmap(one_client, in_axes=(None, 0, 0, 0, 0, 0))
-        return jax.jit(fn)
+        return jax.vmap(one_client, in_axes=(None, 0, 0, 0, 0, 0))
 
     def one_client_no_I(x_c, batches, lr, p_i, n_valid):
         return one_client(x_c, None, batches, lr, p_i, n_valid)
 
     fn = jax.vmap(one_client_no_I, in_axes=(None, 0, 0, 0, 0))
-    return jax.jit(lambda x_c, I_a, batches, lrs, ps, nv: fn(x_c, batches, lrs, ps, nv))
+    return lambda x_c, I_a, batches, lrs, ps, nv: fn(x_c, batches, lrs, ps, nv)
+
+
+def build_cohort_runner(loss_fn: Callable, kind: str, mu: float = 0.0) -> Callable:
+    """Build the jitted vmap-over-scan cohort runner for one client kind.
+
+    Returns ``runner(x_c, I_a, batches, lrs, ps, n_valid) -> (x_new_a,
+    losses)`` where leaves of ``batches`` are (A, S_pad, bs, ...), ``I_a``
+    leaves are (A, ...) (pass None-shaped zeros only for kind="fedecado";
+    other kinds ignore it and may receive ``None``), and ``n_valid`` (A,)
+    int32 gives each client's true step count. ``x_new_a`` leaves are
+    (A, ...); ``losses`` is (A,) — each client's last *valid* minibatch
+    loss. Re-traces only when shapes change (once per (A, S_pad, bs)).
+    """
+    return jax.jit(cohort_vmap_fn(loss_fn, kind, mu))
 
 
 class VectorizedBackend(ExecutionBackend):

@@ -1,0 +1,199 @@
+"""Property-based backend-equivalence harness (DESIGN.md §5).
+
+FedECADO's multi-rate integration is only reproduced faithfully if every
+scheduler/backend slicing preserves the coupled flow's trajectory — and the
+bugs hide in exactly the corners single-seed smoke tests miss: ragged
+partitions (|part| < batch_size), partial participation, heterogeneous
+e_i/lr_i, and uneven client→device padding. This suite fuzzes those corners
+with hypothesis (or the deterministic fallback in tests/_hypothesis_fallback
+when hypothesis isn't installed — only the API subset the fallback covers is
+used here): on the same seed, the vectorized and sharded backends must
+reproduce the sequential oracle's histories and final parameters at
+rtol ≈ 1e-6 for every client kind. Bitwise equality is NOT expected: vmap
+may re-associate the minibatch loss mean and psum re-associates the
+sharded Σ_a reductions.
+
+A second group of properties pins the ``StackedPlan`` densification
+(engine.py::stack_plans): padding semantics, plan-order preservation, and
+the ragged-cohort refusal.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ConsensusConfig
+from repro.data import make_classification
+from repro.fed import FedSim, FedSimConfig, HeteroConfig, dirichlet_partition
+from repro.sim import CohortPlan, stack_plans
+
+ALGS = ("fedecado", "ecado", "fedprox", "fedavg", "fednova")
+
+_PROBLEM = None
+
+
+def _problem():
+    """One shared tiny non-IID problem (module-level, not a pytest fixture:
+    real hypothesis forbids function-scoped fixtures under @given). Dirichlet
+    alpha small enough that some partitions are < the larger fuzzed batch
+    size, exercising the ragged grouping / sharded fallback path."""
+    global _PROBLEM
+    if _PROBLEM is None:
+        data = make_classification(384, dim=6, n_classes=3, seed=11)
+        parts = dirichlet_partition(data["y"], 6, alpha=0.4, seed=11)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+        params0 = {
+            "w0": jax.random.normal(k1, (6, 8)) / 3.0,
+            "b0": jnp.zeros((8,)),
+            "w1": jax.random.normal(k2, (8, 3)) / np.sqrt(8),
+            "b1": jnp.zeros((3,)),
+        }
+
+        def loss_fn(p, batch):
+            h = jnp.tanh(batch["x"] @ p["w0"] + p["b0"]) @ p["w1"] + p["b1"]
+            lp = jax.nn.log_softmax(h)
+            return -jnp.mean(
+                jnp.take_along_axis(lp, batch["y"][:, None].astype(jnp.int32), -1)
+            )
+
+        _PROBLEM = (data, parts, params0, loss_fn)
+    return _PROBLEM
+
+
+# ---------------------------------------------------------------------------
+# sequential == vectorized == sharded on fuzzed cohort structure
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    alg=st.sampled_from(ALGS),
+    participation=st.floats(min_value=0.25, max_value=1.0),
+    batch_size=st.sampled_from([4, 16]),      # 16 > smallest partition -> ragged
+    steps_per_epoch=st.integers(min_value=1, max_value=2),
+    epochs_max=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=3),
+    pad_multiple=st.sampled_from([0, 3, 4]),  # 0 -> natural device padding
+)
+def test_backends_match_sequential_oracle(
+    alg, participation, batch_size, steps_per_epoch, epochs_max, seed, pad_multiple
+):
+    data, parts, params0, loss_fn = _problem()
+    runs = {}
+    for backend in ("sequential", "vectorized", "sharded"):
+        cfg = FedSimConfig(
+            algorithm=alg, n_clients=len(parts), participation=participation,
+            rounds=2, batch_size=batch_size, steps_per_epoch=steps_per_epoch,
+            hetero=HeteroConfig(1e-3, 1e-2, 1, epochs_max), seed=100 + seed,
+            backend=backend, consensus=ConsensusConfig(max_substeps=6),
+            sharded_pad_multiple=(pad_multiple or None),
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg)
+        hist = sim.run()
+        runs[backend] = (hist["loss"], sim.current_params())
+
+    ref_loss, ref_params = runs["sequential"]
+    for backend in ("vectorized", "sharded"):
+        loss, params = runs[backend]
+        np.testing.assert_allclose(
+            loss, ref_loss, rtol=1e-6, atol=1e-7,
+            err_msg=f"{backend} history diverged from sequential ({alg})",
+        )
+        for a, b in zip(
+            jax.tree.leaves(ref_params), jax.tree.leaves(params), strict=True
+        ):
+            np.testing.assert_allclose(
+                np.asarray(b), np.asarray(a), rtol=1e-6, atol=2e-7,
+                err_msg=f"{backend} params diverged from sequential ({alg})",
+            )
+
+
+# ---------------------------------------------------------------------------
+# StackedPlan densification properties
+# ---------------------------------------------------------------------------
+
+
+def _draw_plans(rng, R, A, n_clients, bs, max_steps, ragged_client=None):
+    plans = []
+    for r in range(R):
+        idx = np.sort(rng.choice(n_clients, A, replace=False))
+        n_steps = rng.randint(1, max_steps + 1, A).astype(np.int64)
+        lrs = rng.uniform(1e-3, 1e-2, A).astype(np.float32)
+        batch_idx = [
+            rng.randint(
+                0, 64, (int(ns), bs - 1 if j == ragged_client else bs)
+            ).astype(np.int64)
+            for j, ns in enumerate(n_steps)
+        ]
+        plans.append(CohortPlan(
+            rnd=r, idx=idx, lrs=lrs, epochs=n_steps // 1, n_steps=n_steps,
+            batch_idx=batch_idx,
+        ))
+    return plans
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    A=st.integers(min_value=1, max_value=7),
+    R=st.integers(min_value=1, max_value=3),
+    bs=st.integers(min_value=2, max_value=5),
+    max_steps=st.integers(min_value=1, max_value=6),
+    unit=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_stack_plans_padding_semantics(A, R, bs, max_steps, unit, seed):
+    rng = np.random.RandomState(seed)
+    n_clients = 9
+    plans = _draw_plans(rng, R, A, n_clients, bs, max_steps)
+    A_pad = -(-A // unit) * unit
+    S_pad = int(max(int(p.n_steps.max()) for p in plans)) + rng.randint(0, 3)
+    sp = stack_plans(plans, n_clients, A_pad, S_pad)
+
+    assert sp is not None
+    assert sp.idx.shape == (R, A_pad)
+    assert sp.sel.shape == (R, A_pad, S_pad, bs)
+    for r in range(R):
+        # mask marks exactly the real cohort, in plan order
+        assert sp.mask[r].sum() == A
+        np.testing.assert_array_equal(sp.idx[r, :A], plans[r].idx)
+        np.testing.assert_array_equal(sp.scatter_idx[r, :A], plans[r].idx)
+        # cohort padding: gather ids stay in-bounds, scatter ids are dropped
+        # out of bounds, windows are zero (excluded from the T_max horizon)
+        assert (sp.idx[r, A:] == 0).all()
+        assert (sp.scatter_idx[r, A:] == n_clients).all()
+        assert (sp.n_steps[r, A:] == 0).all()
+        assert (sp.Ts[r, A:] == 0).all()
+        for j in range(A):
+            ns = int(plans[r].n_steps[j])
+            np.testing.assert_array_equal(
+                sp.sel[r, j, :ns], plans[r].batch_idx[j]
+            )
+            # step padding repeats the client's last real minibatch row
+            np.testing.assert_array_equal(
+                sp.sel[r, j, ns:],
+                np.broadcast_to(
+                    plans[r].batch_idx[j][-1], (S_pad - ns, bs)
+                ),
+            )
+        np.testing.assert_allclose(
+            sp.Ts[r, :A], plans[r].lrs * plans[r].n_steps, rtol=1e-6
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    A=st.integers(min_value=2, max_value=6),
+    bs=st.integers(min_value=2, max_value=5),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_stack_plans_refuses_ragged_cohorts(A, bs, seed):
+    """Mixed per-client batch sizes cannot share one dense sel tensor
+    without changing the minibatch-mean arithmetic — stack_plans must
+    refuse so the backend takes the grouped fallback."""
+    rng = np.random.RandomState(seed)
+    plans = _draw_plans(
+        rng, 1, A, 9, bs, 3, ragged_client=int(rng.randint(0, A))
+    )
+    assert stack_plans(plans, 9, A, 4) is None
