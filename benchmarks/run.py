@@ -11,7 +11,9 @@ System benches:
   adaptive_overhead   — Algorithm-1 substeps/backtracks per round vs δ
   engine              — sequential vs vectorized vs sharded execution
                         backend rounds/sec at n_clients ∈ {10, 100, 1000}
-                        on 8 forced host devices; persists BENCH_engine.json
+                        on 8 forced host devices, with a per-algorithm axis
+                        (--algorithms, names from the fed/algorithms
+                        registry); persists BENCH_engine.json
   roofline_summary    — per (arch x shape) terms from results/dryrun JSONs
 
 Prints ``name,us_per_call,derived`` CSV rows; the engine bench additionally
@@ -81,9 +83,10 @@ def _mlp_problem(dim=32, classes=10, n=2048, seed=0, hidden=48):
 def _run_algorithms(data, params0, loss_fn, eval_fn, parts, rounds, hetero, seed):
     from repro.core import ConsensusConfig
     from repro.fed import FedSim, FedSimConfig
+    from repro.fed.algorithms import comparison_algorithms
 
     out = {}
-    for alg in ("fedecado", "fednova", "fedprox", "fedavg"):
+    for alg in comparison_algorithms():
         cfg = FedSimConfig(
             algorithm=alg, n_clients=len(parts), participation=0.2,
             rounds=rounds, batch_size=32, steps_per_epoch=5,
@@ -244,13 +247,14 @@ def adaptive_overhead_bench():
         )
 
 
-ENGINE_BENCH_SCHEMA_VERSION = 1
+ENGINE_BENCH_SCHEMA_VERSION = 2
 
 
 def engine_bench(
     rounds=10,
     sizes=(10, 100, 1000),
     backends=("sequential", "vectorized", "sharded"),
+    algorithms=("fedecado",),
     json_path="BENCH_engine.json",
 ):
     """Multi-rate execution engine: sequential (one jit dispatch per client,
@@ -261,21 +265,32 @@ def engine_bench(
     in the cross-device regime (many clients, small local batches) where
     Python-bound per-round dispatch dominates the seed hot path.
 
+    ``algorithms`` adds a per-algorithm axis (any names from the
+    fed/algorithms registry — ``--algorithms fedecado,fednova,fedadmm``),
+    so the flow-consensus and weighted-delta aggregation paths can be
+    compared on the same cohort shapes.
+
     Emits the usual CSV rows AND persists a machine-readable
-    ``BENCH_engine.json`` (backend × n_clients → rounds/sec; schema pinned
-    by tests/test_bench_engine.py). Returns the report dict. Run under
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (main() sets it
-    for ``--only engine``) to give the sharded backend a real device axis.
+    ``BENCH_engine.json`` (algorithm × backend × n_clients → rounds/sec;
+    schema v2, pinned by tests/test_bench_engine.py). Returns the report
+    dict. Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (main() sets it for ``--only engine``) to give the sharded backend a
+    real device axis.
     """
     import jax as _jax
 
     from repro.fed import FedSim, FedSimConfig, HeteroConfig, iid_partition
+    from repro.fed.algorithms import get_algorithm
+
+    assert algorithms, "engine_bench needs at least one algorithm"
+    for a in algorithms:           # fail fast, before any warm-up work
+        get_algorithm(a)
 
     data, params0, loss_fn, _ = _mlp_problem(n=16384, dim=32, classes=10, seed=0)
 
-    def make_cfg(n, backend):
+    def make_cfg(n, backend, algorithm):
         return FedSimConfig(
-            algorithm="fedecado", n_clients=n, participation=1.0,
+            algorithm=algorithm, n_clients=n, participation=1.0,
             rounds=rounds, batch_size=8, steps_per_epoch=1,
             hetero=HeteroConfig(1e-3, 1e-2, 1, 5), seed=0,
             eval_every=1 << 30, backend=backend,
@@ -283,7 +298,7 @@ def engine_bench(
 
     # the report's config block is derived from the ACTUAL benched config so
     # the persisted JSON can never drift from the measurement
-    cfg0 = make_cfg(sizes[0], backends[0])
+    cfg0 = make_cfg(sizes[0], backends[0], algorithms[0])
     report = {
         "schema_version": ENGINE_BENCH_SCHEMA_VERSION,
         "benchmark": "engine",
@@ -291,8 +306,8 @@ def engine_bench(
         "rounds": int(rounds),
         "sizes": [int(n) for n in sizes],
         "backends": list(backends),
+        "algorithms": list(algorithms),
         "config": {
-            "algorithm": cfg0.algorithm,
             "participation": cfg0.participation,
             "batch_size": cfg0.batch_size,
             "steps_per_epoch": cfg0.steps_per_epoch,
@@ -304,43 +319,49 @@ def engine_bench(
     }
     for n in sizes:
         parts = iid_partition(len(data["y"]), n, seed=0)
-        rps = {}
-        for backend in backends:
-            cfg = make_cfg(n, backend)
-            # warm-up covers every jit variant the timed run will hit (for
-            # the sharded backend that includes the R=rounds segment shape),
-            # then a fresh sim SHARING the warmed backend is timed
-            warm = FedSim(loss_fn, params0, data, parts, cfg)
-            warm.run(rounds)
-            if backend == "sequential":
-                # prime the (kind, n_steps) jit variants the warm-up rounds
-                # happened not to draw
-                from repro.sim import CohortPlan
+        for algorithm in algorithms:
+            rps = {}
+            for backend in backends:
+                cfg = make_cfg(n, backend, algorithm)
+                # warm-up covers every jit variant the timed run will hit
+                # (for the sharded backend that includes the R=rounds
+                # segment shape), then a fresh sim SHARING the warmed
+                # backend is timed
+                warm = FedSim(loss_fn, params0, data, parts, cfg)
+                warm.run(rounds)
+                if backend == "sequential":
+                    # prime the batch-shape jit variants the warm-up rounds
+                    # happened not to draw
+                    from repro.sim import CohortPlan
 
-                h = cfg.hetero
-                for e in range(h.epochs_min, h.epochs_max + 1):
-                    ns = e * cfg.steps_per_epoch
-                    warm.backend.run_cohort(warm, CohortPlan(
-                        rnd=-1, idx=np.asarray([0]),
-                        lrs=np.asarray([1e-3], np.float32),
-                        epochs=np.asarray([e]), n_steps=np.asarray([ns]),
-                        batch_idx=[np.zeros((ns, cfg.batch_size), np.int64)],
-                    ))
-            sim = FedSim(loss_fn, params0, data, parts, cfg)
-            sim.backend = warm.backend       # keep the warmed jit caches
-            t0 = time.perf_counter()
-            sim.run(rounds)
-            rps[backend] = rounds / (time.perf_counter() - t0)
-            report["results"].append({
-                "backend": backend,
-                "n_clients": int(n),
-                "rounds_per_sec": float(rps[backend]),
-            })
-        base = rps.get("sequential", next(iter(rps.values())))
-        derived = ";".join(f"{b}_rps={v:.3f}" for b, v in rps.items())
-        if "vectorized" in rps and "sharded" in rps:
-            derived += f";sharded_vs_vectorized={rps['sharded'] / rps['vectorized']:.2f}x"
-        _row(f"engine_round_us_n{n}", 1e6 / base, derived)
+                    h = cfg.hetero
+                    for e in range(h.epochs_min, h.epochs_max + 1):
+                        ns = e * cfg.steps_per_epoch
+                        warm.backend.run_cohort(warm, CohortPlan(
+                            rnd=-1, idx=np.asarray([0]),
+                            lrs=np.asarray([1e-3], np.float32),
+                            epochs=np.asarray([e]), n_steps=np.asarray([ns]),
+                            batch_idx=[np.zeros((ns, cfg.batch_size), np.int64)],
+                        ))
+                sim = FedSim(loss_fn, params0, data, parts, cfg)
+                sim.backend = warm.backend       # keep the warmed jit caches
+                t0 = time.perf_counter()
+                sim.run(rounds)
+                rps[backend] = rounds / (time.perf_counter() - t0)
+                report["results"].append({
+                    "algorithm": algorithm,
+                    "backend": backend,
+                    "n_clients": int(n),
+                    "rounds_per_sec": float(rps[backend]),
+                })
+            base = rps.get("sequential", next(iter(rps.values())))
+            derived = ";".join(f"{b}_rps={v:.3f}" for b, v in rps.items())
+            if "vectorized" in rps and "sharded" in rps:
+                derived += (
+                    f";sharded_vs_vectorized="
+                    f"{rps['sharded'] / rps['vectorized']:.2f}x"
+                )
+            _row(f"engine_round_us_{algorithm}_n{n}", 1e6 / base, derived)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(report, f, indent=2)
@@ -380,6 +401,9 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--engine-json", default="BENCH_engine.json",
                     help="where the engine bench persists its JSON report")
+    ap.add_argument("--algorithms", default="fedecado",
+                    help="comma-separated fed/algorithms registry names for "
+                    "the engine bench's per-algorithm axis")
     ap.add_argument("--devices", type=int, default=8,
                     help="host devices forced for the engine bench (via "
                     "XLA_FLAGS, only when not already set)")
@@ -405,12 +429,26 @@ def main() -> None:
     if want("adaptive"):
         adaptive_overhead_bench()
     if want("engine"):
+        # validate the algorithm names against the registry BEFORE any
+        # bench work runs (a typo at the end of the axis must not discard
+        # minutes of earlier timing)
+        from repro.fed.algorithms import get_algorithm
+
+        algorithms = tuple(a for a in args.algorithms.split(",") if a)
+        if not algorithms:
+            ap.error("--algorithms must name at least one registered algorithm")
+        for a in algorithms:
+            try:
+                get_algorithm(a)
+            except ValueError as e:
+                ap.error(str(e))
         # persist the JSON artifact only on a dedicated --only engine run
         # (which forces the multi-device axis above) — a full sweep would
         # silently overwrite the committed 8-device BENCH_engine.json with
         # single-device numbers
         engine_bench(
-            json_path=args.engine_json if sel == {"engine"} else None
+            algorithms=algorithms,
+            json_path=args.engine_json if sel == {"engine"} else None,
         )
     if want("table1"):
         table1_noniid(rounds=args.rounds)

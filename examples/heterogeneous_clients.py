@@ -13,13 +13,27 @@ import numpy as np
 
 from repro.data import make_classification
 from repro.fed import FedSim, FedSimConfig, HeteroConfig, iid_partition
+from repro.fed.algorithms import (
+    available_algorithms,
+    comparison_algorithms,
+    get_algorithm,
+)
 
 
 def main():
+    # every registered algorithm that supports partial participation rides
+    # along automatically (so a newly registered plugin shows up in the
+    # Table-2-style comparison with zero edits here)
+    default_algs = comparison_algorithms()
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=25)
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument(
+        "--algorithms", default=",".join(default_algs),
+        help="comma-separated registry names to compare "
+        f"(registered: {', '.join(available_algorithms())})",
+    )
     ap.add_argument(
         "--backend", choices=("sequential", "vectorized", "event", "sharded"),
         default="vectorized",
@@ -58,12 +72,14 @@ def main():
         return {"acc": float(jnp.mean(pred == jnp.asarray(data["y"])))}
 
     parts = iid_partition(len(data["y"]), args.clients, seed=0)
-    results = {a: [] for a in ("fedecado", "fednova", "fedprox", "fedavg")}
+    algs = [get_algorithm(a).name for a in args.algorithms.split(",") if a]
+    results = {a: [] for a in algs}
     for rep in range(args.repeats):
         for alg in results:
-            # the event scheduler only has flow dynamics for fedecado/ecado
+            # the event scheduler only handles flow dynamics — ask the
+            # plugin's capability flag instead of matching names
             backend = args.backend
-            if backend == "event" and alg not in ("fedecado", "ecado"):
+            if backend == "event" and not get_algorithm(alg).has_flow_dynamics:
                 backend = "vectorized"
             cfg = FedSimConfig(
                 algorithm=alg, n_clients=args.clients, participation=0.2,

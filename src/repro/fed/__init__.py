@@ -1,3 +1,11 @@
+from repro.fed.algorithms import (
+    FederatedAlgorithm,
+    WeightedDeltaAlgorithm,
+    available_algorithms,
+    get_algorithm,
+    make_algorithm,
+    register,
+)
 from repro.fed.baselines import fedavg_aggregate, fednova_aggregate, fedprox_aggregate
 from repro.fed.client import (
     CLIENT_KINDS,
@@ -6,6 +14,7 @@ from repro.fed.client import (
     client_step,
     fedecado_client_sim,
     fedprox_client,
+    register_client_kind,
     sgd_client,
 )
 from repro.fed.partition import data_fractions, dirichlet_partition, iid_partition
@@ -13,7 +22,10 @@ from repro.fed.server import ALGORITHMS, FedSim, FedSimConfig
 
 __all__ = [
     "FedSim", "FedSimConfig", "ALGORITHMS",
+    "FederatedAlgorithm", "WeightedDeltaAlgorithm",
+    "available_algorithms", "get_algorithm", "make_algorithm", "register",
     "HeteroConfig", "ClientOutput", "CLIENT_KINDS", "client_step",
+    "register_client_kind",
     "fedecado_client_sim", "sgd_client", "fedprox_client",
     "fedavg_aggregate", "fednova_aggregate", "fedprox_aggregate",
     "dirichlet_partition", "iid_partition", "data_fractions",

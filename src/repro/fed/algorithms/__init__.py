@@ -1,0 +1,96 @@
+"""First-class federated-algorithm plugin registry (DESIGN.md §6).
+
+Every comparison algorithm is a ``FederatedAlgorithm`` subclass registered
+here by name. The registry is the ONLY place algorithm names are resolved:
+``FedSim`` instantiates via ``make_algorithm(cfg)``, the execution backends
+(repro/sim) query capability flags on ``sim.alg`` instead of string-matching
+names, and the CLI entry points enumerate ``available_algorithms()`` for
+their ``--algorithm`` choices. Adding an algorithm is one module that
+subclasses the protocol (plus, if its client step needs a new gradient
+addend, one ``register_client_kind`` call) — zero edits anywhere else.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple, Type
+
+from repro.fed.algorithms.base import (
+    FederatedAlgorithm,
+    WeightedDeltaAlgorithm,
+    apply_weighted_delta,
+    weighted_delta,
+)
+
+_REGISTRY: Dict[str, Type[FederatedAlgorithm]] = {}
+
+
+def register(cls: Type[FederatedAlgorithm]) -> Type[FederatedAlgorithm]:
+    """Class decorator: add ``cls`` to the registry under ``cls.name``.
+    Duplicate names are rejected loudly — two plugins silently shadowing
+    each other would corrupt every comparison experiment."""
+    name = getattr(cls, "name", None)
+    if not name or name == "base":
+        raise ValueError(f"{cls!r} must set a non-default ``name`` to register")
+    if name in _REGISTRY:
+        prev = _REGISTRY[name]
+        raise ValueError(
+            f"algorithm {name!r} is already registered "
+            f"(by {prev.__module__}.{prev.__qualname__})"
+        )
+    _REGISTRY[name] = cls
+    return cls
+
+
+def available_algorithms() -> Tuple[str, ...]:
+    """Registered algorithm names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def get_algorithm(name: str) -> Type[FederatedAlgorithm]:
+    """Resolve a name to its algorithm class (capability flags are
+    class-level, so callers can query them without instantiating)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r}; registered algorithms: "
+            f"{', '.join(_REGISTRY)}"
+        ) from None
+
+
+def make_algorithm(cfg) -> FederatedAlgorithm:
+    """Instantiate the algorithm named by ``cfg.algorithm`` (one instance
+    per ``FedSim`` — instances own per-client state like FedADMM's duals)."""
+    return get_algorithm(cfg.algorithm)(cfg)
+
+
+def comparison_algorithms() -> Tuple[str, ...]:
+    """Registered algorithms eligible for the partial-participation
+    comparison sweeps (examples, table benches): everything that is not
+    full-participation-only. ONE home for the filter so the example and
+    the benches can never enumerate different sets."""
+    return tuple(
+        n for n in _REGISTRY if not _REGISTRY[n].full_participation_only
+    )
+
+
+# --- built-in plugins ------------------------------------------------------
+from repro.fed.algorithms.averaging import (  # noqa: E402
+    FedAvg,
+    FedNova,
+    FedProx,
+    fedavg_weights,
+    fednova_weights,
+)
+from repro.fed.algorithms.fedecado import ECADO, FedECADO  # noqa: E402
+
+for _cls in (FedECADO, ECADO, FedAvg, FedProx, FedNova):
+    register(_cls)
+
+__all__ = [
+    "FederatedAlgorithm", "WeightedDeltaAlgorithm",
+    "apply_weighted_delta", "weighted_delta",
+    "register", "available_algorithms", "get_algorithm", "make_algorithm",
+    "comparison_algorithms",
+    "FedECADO", "ECADO", "FedAvg", "FedProx", "FedNova",
+    "fedavg_weights", "fednova_weights",
+]

@@ -1,0 +1,65 @@
+"""The averaging baselines as plugins: FedAvg, FedProx, FedNova.
+
+* FedAvg   (McMahan et al. 2017): data-weighted average of client deltas.
+* FedProx  (Li et al. 2020): FedAvg aggregation; the μ-proximal term lives
+  in the client step (the ``fedprox`` client kind, fed/client.py).
+* FedNova  (Wang et al. 2020): normalized averaging — each client's delta is
+  divided by its local step count τ_i, then recombined with an effective
+  step Σ p̃_i τ_i, removing objective inconsistency under heterogeneous e_i.
+
+``fedavg_weights``/``fednova_weights`` are THE single home of the
+p/Σp / τ_eff weight math — the dense per-round path, the Pallas-fused
+kernel path, the sharded backend's host precompute, and the public
+``fed.baselines`` helpers all call these two functions.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.algorithms.base import WeightedDeltaAlgorithm
+
+
+def fedavg_weights(p_a, taus=None, xp=jnp):
+    """w = p̃ = p/Σp, scale 1. Shape-generic over the last axis; ``xp``
+    picks the array module (jnp for the jit paths, np for the sharded
+    backend's host precompute)."""
+    p = p_a / xp.maximum(
+        xp.sum(p_a, axis=-1, keepdims=True), np.float32(1e-12)
+    )
+    return p, xp.ones(p.shape[:-1], np.float32)
+
+
+def fednova_weights(p_a, taus, xp=jnp):
+    """w = p̃/max(τ, 1), scale τ_eff = Σ p̃ τ (normalized averaging)."""
+    p = p_a / xp.maximum(
+        xp.sum(p_a, axis=-1, keepdims=True), np.float32(1e-12)
+    )
+    tau = taus.astype(np.float32)
+    tau_eff = xp.sum(p * tau, axis=-1)
+    w = p / xp.maximum(tau, np.float32(1.0))
+    return w, tau_eff
+
+
+class FedAvg(WeightedDeltaAlgorithm):
+    name = "fedavg"
+    client_kind = "sgd"
+
+    def agg_weights(self, p_a, taus, xp=jnp):
+        return fedavg_weights(p_a, taus, xp=xp)
+
+
+class FedProx(FedAvg):
+    name = "fedprox"
+    client_kind = "fedprox"
+
+    def client_mu(self) -> float:
+        return float(self.cfg.mu)
+
+
+class FedNova(FedAvg):
+    name = "fednova"
+    client_kind = "sgd"
+
+    def agg_weights(self, p_a, taus, xp=jnp):
+        return fednova_weights(p_a, taus, xp=xp)

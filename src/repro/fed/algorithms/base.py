@@ -1,0 +1,196 @@
+"""``FederatedAlgorithm`` protocol: everything an algorithm owns.
+
+A federated algorithm, to this codebase, is four things:
+
+  1. a **client step** — the name of a registered client kind
+     (fed/client.py) plus the scalar ``mu`` its gradient addend closes
+     over, the per-client objective weights p_i, and (for kinds with
+     ``takes_flow``) the per-client state rows the step consumes;
+  2. **server state** — either the FedECADO ``ServerState`` (flow
+     variables + gains, installed via ``init_state``/``install_gains``)
+     or algorithm-owned per-client rows (``has_client_state``, e.g.
+     FedADMM's dual variables) living on the algorithm instance;
+  3. an **aggregation rule** — for the averaging family a
+     (weights, scale, endpoint-transform) spec applied through ONE shared
+     weighted-delta primitive (dense or Pallas-fused or psum-sharded);
+     for the flow family the Backward-Euler consensus round;
+  4. **capability flags** the execution backends query instead of
+     string-matching algorithm names: ``has_flow_dynamics`` (event-backend
+     eligibility + consensus aggregation), ``supports_hetero``,
+     ``full_participation_only`` and ``has_client_state``.
+
+Backends (repro/sim) never branch on ``cfg.algorithm``; they ask the
+instance at ``sim.alg``. Registration lives in fed/algorithms/__init__.py.
+"""
+from __future__ import annotations
+
+from typing import Any, ClassVar, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+class FederatedAlgorithm:
+    """Base protocol. Subclass, set ``name`` + capability flags, implement
+    ``aggregate`` (or inherit the weighted-delta family below), and decorate
+    with ``@register`` (fed/algorithms/__init__.py)."""
+
+    name: ClassVar[str] = "base"
+
+    # --- capability flags (class-level: queryable without instantiation) ---
+    has_flow_dynamics: ClassVar[bool] = False   # consensus aggregation + event backend
+    supports_hetero: ClassVar[bool] = True      # heterogeneous (lr_i, e_i) draws
+    full_participation_only: ClassVar[bool] = False
+    has_client_state: ClassVar[bool] = False    # algorithm-owned per-client rows
+    refreshable_gains: ClassVar[bool] = False   # periodic Ḡ_th re-estimation
+    client_kind: ClassVar[str] = "sgd"          # key into fed/client.py registry
+
+    def __init__(self, cfg=None):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- client --
+    def client_mu(self) -> float:
+        """Scalar the client kind's gradient addend closes over (FedProx's
+        proximal weight, FedADMM's ρ); 0.0 when unused."""
+        return 0.0
+
+    def client_weights(self, sim, idx: np.ndarray) -> np.ndarray:
+        """Per-client local objective weights p_i, same shape as ``idx``
+        (fp32 numpy; call sites convert). Default: unweighted."""
+        return np.ones(np.shape(idx), np.float32)
+
+    def client_rows(self, sim, idx) -> Optional[Pytree]:
+        """Per-client state rows the client step consumes, leaves
+        (A, ...) gathered at ``idx`` — FedECADO's flow variables, FedADMM's
+        duals — or None for stateless kinds."""
+        return None
+
+    # ------------------------------------------------------------- server --
+    def init_state(self, sim) -> None:
+        """Install server-side state on ``sim`` (and/or the instance) at
+        construction. Host rng drawn here must keep the documented
+        consumption order (fed/server.py::FedSim)."""
+        return None
+
+    def install_gains(self, sim, round_idx: int = 0) -> None:
+        """(Re)compute sensitivity gains; only meaningful for flow
+        algorithms."""
+        return None
+
+    # -------------------------------------------------------- aggregation --
+    def aggregate(self, sim, plan, result) -> None:
+        """Dense server aggregation for one round: consume the cohort's
+        ``CohortResult`` and update ``sim.state`` / ``sim.params`` (and any
+        algorithm-owned rows). Shared by the sequential and vectorized
+        backends and the sharded ragged fallback; the sharded segment path
+        replays the same spec inside ``shard_map`` (DESIGN.md §6)."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# the shared weighted-delta aggregation primitive
+# ---------------------------------------------------------------------------
+
+
+def weighted_delta(x_c: Pytree, x_new_a: Pytree, weights: jax.Array) -> Pytree:
+    """Σ_a w_a (x_a − x_c) per leaf; weights (A,) normalized by caller."""
+
+    def leaf(xc, xa):
+        w = weights.reshape((-1,) + (1,) * (xa.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(
+            w * (xa.astype(jnp.float32) - xc.astype(jnp.float32)[None]), axis=0
+        )
+
+    return jax.tree.map(leaf, x_c, x_new_a)
+
+
+def apply_weighted_delta(
+    x_c: Pytree,
+    y_a: Pytree,
+    w: jax.Array,
+    scale,
+    use_kernel: bool = False,
+) -> Pytree:
+    """x_c ← x_c + scale·Σ_a w_a (y_a − x_c) — THE dense aggregation entry
+    for the averaging family. ``use_kernel`` routes through the fused Pallas
+    batched-aggregation kernel (kernels/batch_agg.py); the plain path is the
+    per-leaf jnp reduction. Both consume the same (w, scale) spec, so kernel
+    fusion is a property of the call, not a per-algorithm fork."""
+    if use_kernel:
+        from repro.kernels import batched_aggregate
+
+        return batched_aggregate(x_c, y_a, w, scale)
+    delta = weighted_delta(x_c, y_a, w)
+    return jax.tree.map(lambda xc, d: xc + scale * d, x_c, delta)
+
+
+class WeightedDeltaAlgorithm(FederatedAlgorithm):
+    """Averaging family: aggregation is a weighted delta of (optionally
+    transformed) client endpoints. Subclasses override ``agg_weights`` (the
+    one place their weight math lives) and optionally ``agg_transform``
+    (endpoint rewrite + per-client state update, e.g. FedADMM's duals).
+
+    ``agg_weights`` is written array-module-generically (``xp`` = jnp or
+    np) and shape-generically (operates on the last axis), so the dense
+    per-round path (1-D (A,)) and the sharded backend's host precompute
+    (batched (R, A_pad), padding pre-zeroed via the cohort mask) share the
+    exact same lines.
+    """
+
+    def agg_weights(self, p_a, taus, xp=jnp) -> Tuple[Any, Any]:
+        """(..., A) masked data weights + local step counts → per-client
+        aggregation weights w (..., A) and update scale (...,)."""
+        raise NotImplementedError
+
+    def agg_transform(
+        self, x_c: Pytree, x_new_a: Pytree, rows: Optional[Pytree]
+    ) -> Tuple[Pytree, Optional[Pytree]]:
+        """Rewrite cohort endpoints before the weighted delta and produce
+        updated per-client state rows. Must be elementwise per client row
+        (it also runs device-local inside the sharded backend's shard_map
+        program). Default: identity endpoints, rows passed through unchanged
+        — so a ``has_client_state`` plugin that overrides only part of the
+        spec gets no-op state writes on every backend instead of a silent
+        skip on the dense path and a tree-structure crash in shard_map."""
+        return x_new_a, rows
+
+    # -- algorithm-owned per-client state (has_client_state) ---------------
+    def init_client_state(self, params: Pytree, n: int) -> Pytree:
+        """Fresh per-client rows, leaves (n, ...): zeros by default."""
+        return jax.tree.map(
+            lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params
+        )
+
+    def init_state(self, sim) -> None:
+        if self.has_client_state:
+            self.client_state = self.init_client_state(sim.params, sim.n)
+
+    def client_rows(self, sim, idx) -> Optional[Pytree]:
+        if not self.has_client_state:
+            return None
+        return jax.tree.map(lambda l: l[jnp.asarray(idx)], self.client_state)
+
+    def set_client_state(self, state: Pytree) -> None:
+        """Install updated rows wholesale (the sharded segment returns the
+        full (n, ...) tensor from its jit-resident fori_loop)."""
+        self.client_state = state
+
+    # -- dense aggregation -------------------------------------------------
+    def aggregate(self, sim, plan, result) -> None:
+        p_a = jnp.asarray(sim.p_hat[plan.idx], jnp.float32)
+        tau_a = jnp.asarray(result.taus, jnp.float32)
+        w, scale = self.agg_weights(p_a, tau_a)
+        rows = self.client_rows(sim, plan.idx)
+        y_a, new_rows = self.agg_transform(sim.params, result.x_new_a, rows)
+        sim.params = apply_weighted_delta(
+            sim.params, y_a, w, scale, use_kernel=sim.cfg.agg_kernels
+        )
+        if new_rows is not None:
+            from repro.core.flow import put_rows
+
+            self.client_state = put_rows(
+                self.client_state, jnp.asarray(plan.idx), new_rows
+            )

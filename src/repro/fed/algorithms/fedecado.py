@@ -1,0 +1,115 @@
+"""FedECADO and ECADO as plugins: the flow-dynamics family.
+
+Owns everything ``FedSim`` used to hardwire for the two: the ``ServerState``
+(central params + per-client flow variables I_i + gains), the sensitivity
+gain estimation Ḡ_th = 1/Δt_ref + p̂·h̄ (paper §4.2, eq. 42; scalar
+Hutchinson trace or per-parameter diagonal), and the consensus aggregation
+(Backward-Euler adaptive integration of the central ODE, Algorithm 2 steps
+12-16). ECADO is the §4 ablation: full participation, uniform gains,
+synchronous clients (no heterogeneity), unweighted local objectives.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.algorithms.base import FederatedAlgorithm
+
+
+class FedECADO(FederatedAlgorithm):
+    name = "fedecado"
+    has_flow_dynamics = True
+    refreshable_gains = True
+    client_kind = "fedecado"
+
+    # ------------------------------------------------------------- client --
+    def client_weights(self, sim, idx):
+        return sim.p_hat[idx].astype(np.float32)
+
+    def client_rows(self, sim, idx):
+        return jax.tree.map(lambda l: l[jnp.asarray(idx)], sim.state.I)
+
+    # ------------------------------------------------------------- server --
+    def init_state(self, sim) -> None:
+        from repro.core import init_server_state, server_round
+
+        cfg = sim.cfg
+        sim.state = init_server_state(sim.params, sim.n, cfg.consensus.dt_init)
+        self._round_fn = jax.jit(
+            partial(server_round, ccfg=cfg.consensus), static_argnums=()
+        )
+        self.install_gains(sim)
+
+    def install_gains(self, sim, round_idx: int = 0) -> None:
+        """(Re)compute Ḡ_th per client (paper §4.2, eq. 42). By default
+        precomputed once before training (the paper's §5 setting); with
+        ``gain_update_every > 0`` re-estimated periodically."""
+        from repro.core import hutchinson_scalar, set_gains
+
+        cfg = sim.cfg
+        key = jax.random.PRNGKey(cfg.seed + 17 + round_idx)
+        params = sim.state.x_c if round_idx else sim.params
+
+        if cfg.sensitivity == "diag":
+            from repro.core import hutchinson_diag
+
+            hfn = jax.jit(
+                lambda p, b, k: hutchinson_diag(
+                    sim.loss_fn, p, b, k, cfg.hutchinson_probes
+                )
+            )
+            g_rows = []
+            for i in range(sim.n):
+                batch = sim._client_batch(i, cfg.batch_size)
+                diag = hfn(params, batch, jax.random.fold_in(key, i))
+                G_i = jax.tree.map(
+                    lambda h, p_i=float(sim.p_hat[i]): 1.0 / cfg.dt_ref
+                    + p_i * jnp.maximum(h, 0.0),
+                    diag,
+                )
+                g_rows.append(jax.tree.map(lambda g: 1.0 / g, G_i))
+            g_inv = jax.tree.map(lambda *rows: jnp.stack(rows), *g_rows)
+            sim.state = set_gains(sim.state, g_inv)
+            return
+
+        h_bars = np.zeros((sim.n,), np.float32)
+        hfn = jax.jit(
+            lambda p, b, k: hutchinson_scalar(
+                sim.loss_fn, p, b, k, cfg.hutchinson_probes
+            )
+        )
+        for i in range(sim.n):
+            batch = sim._client_batch(i, cfg.batch_size)
+            h = hfn(params, batch, jax.random.fold_in(key, i))
+            h_bars[i] = float(np.maximum(h, 0.0))
+        G = 1.0 / cfg.dt_ref + sim.p_hat * h_bars          # eq. 42
+        sim.state = set_gains(sim.state, jnp.asarray(1.0 / G, jnp.float32))
+        sim.h_bars = h_bars
+
+    # -------------------------------------------------------- aggregation --
+    def aggregate(self, sim, plan, result) -> None:
+        sim.state, _stats = self._round_fn(
+            sim.state,
+            result.x_new_a,
+            jnp.asarray(result.Ts, jnp.float32),
+            jnp.asarray(plan.idx, jnp.int32),
+        )
+
+
+class ECADO(FedECADO):
+    name = "ecado"
+    supports_hetero = False          # synchronous clients by definition
+    full_participation_only = True
+    refreshable_gains = False
+
+    def client_weights(self, sim, idx):
+        return np.ones(np.shape(idx), np.float32)
+
+    def install_gains(self, sim, round_idx: int = 0) -> None:
+        from repro.core import set_gains
+
+        g = jnp.ones((sim.n,), jnp.float32) / (1.0 / sim.cfg.dt_ref)
+        sim.state = set_gains(sim.state, g)

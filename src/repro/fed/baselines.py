@@ -1,37 +1,26 @@
-"""Server-side aggregation baselines the paper compares against.
+"""Back-compat aggregation helpers for the averaging baselines.
 
-* FedAvg   (McMahan et al. 2017): data-weighted average of client deltas.
-* FedProx  (Li et al. 2020): FedAvg aggregation; the μ-proximal term lives in
-  the client step (fed/client.py:fedprox_client).
-* FedNova  (Wang et al. 2020): normalized averaging — each client's delta is
-  divided by its local step count τ_i, then recombined with an effective
-  step Σ p_i τ_i, removing objective inconsistency under heterogeneous e_i.
+The weight math lives in the algorithm plugins (fed/algorithms/averaging.py
+— the single home of the p/Σp and τ_eff arithmetic) and the delta
+application in fed/algorithms/base.py::apply_weighted_delta; these wrappers
+keep the original standalone-function API for examples and tests.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 Pytree = Any
 
-
-def _weighted_delta(x_c, x_new_a, weights):
-    """Σ_a w_a (x_a − x_c) per leaf; weights (A,) normalized by caller."""
-
-    def leaf(xc, xa):
-        w = weights.reshape((-1,) + (1,) * (xa.ndim - 1)).astype(jnp.float32)
-        return jnp.sum(w * (xa.astype(jnp.float32) - xc.astype(jnp.float32)[None]), axis=0)
-
-    return jax.tree.map(leaf, x_c, x_new_a)
+from repro.fed.algorithms.averaging import fedavg_weights, fednova_weights
+from repro.fed.algorithms.base import apply_weighted_delta
 
 
 def fedavg_aggregate(x_c: Pytree, x_new_a: Pytree, p_a: jax.Array) -> Pytree:
     """x_c ← x_c + Σ_a (p_a/Σp) Δ_a."""
-    w = p_a / jnp.maximum(jnp.sum(p_a), 1e-12)
-    delta = _weighted_delta(x_c, x_new_a, w)
-    return jax.tree.map(lambda xc, d: xc + d, x_c, delta)
+    w, scale = fedavg_weights(p_a)
+    return apply_weighted_delta(x_c, x_new_a, w, scale)
 
 
 # FedProx uses FedAvg aggregation
@@ -47,8 +36,5 @@ def fednova_aggregate(
     """Normalized averaging:
     x_c ← x_c + (Σ_a p̃_a τ_a) · Σ_a p̃_a Δ_a/τ_a,  p̃ = p/Σp.
     """
-    p = p_a / jnp.maximum(jnp.sum(p_a), 1e-12)
-    tau_eff = jnp.sum(p * tau_a.astype(jnp.float32))
-    w = p / jnp.maximum(tau_a.astype(jnp.float32), 1.0)
-    delta = _weighted_delta(x_c, x_new_a, w)
-    return jax.tree.map(lambda xc, d: xc + tau_eff * d, x_c, delta)
+    w, scale = fednova_weights(p_a, tau_a)
+    return apply_weighted_delta(x_c, x_new_a, w, scale)

@@ -8,14 +8,21 @@ Heterogeneous computation (paper eqs. 43-44): each client's learning rate
 lr_i ~ U[1e-4, 1e-3] and epoch count e_i ~ U[1, 10]; its continuous-time
 window is T_i = e_i·lr_i (×steps per epoch).
 
-The same machinery also runs the baselines' local steps (FedProx's proximal
-term, vanilla SGD for FedAvg/FedNova).
+The same machinery runs every algorithm's local step through an extensible
+**client-kind registry**: a kind names the gradient addend of the local FE
+update (the flow variable I_i for fedecado, the proximal pull μ(x − x0) for
+fedprox, zero for plain SGD) and declares whether the step consumes a
+per-client state row (``takes_flow``). Algorithm plugins
+(fed/algorithms/) register new kinds with ``register_client_kind`` — e.g.
+FedADMM's dual-augmented addend λ_i + ρ(x − x0) — and every execution
+backend (repro/sim) picks them up with zero backend edits, because the
+backends only ever query the registry.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +52,66 @@ class ClientOutput(NamedTuple):
     loss: jax.Array      # last minibatch loss
 
 
-CLIENT_KINDS = ("fedecado", "fedprox", "sgd")
+# ---------------------------------------------------------------------------
+# client-kind registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientKindSpec:
+    """One local-update flavour: ``make_extra(mu)`` builds the kind-specific
+    gradient addend ``extra(x, x0, I_i) -> pytree`` added to p_i·∇f_i;
+    ``takes_flow`` marks kinds whose addend consumes a per-client state row
+    I_i (the backends then gather/vmap those rows alongside the cohort)."""
+    name: str
+    takes_flow: bool
+    make_extra: Callable[[float], Callable]
+
+
+CLIENT_KINDS: Dict[str, ClientKindSpec] = {}
+
+
+def register_client_kind(
+    name: str, make_extra: Callable[[float], Callable], takes_flow: bool = False
+) -> ClientKindSpec:
+    """Register a new local-update kind. Raises on duplicate names so two
+    plugins cannot silently shadow each other's client arithmetic."""
+    if name in CLIENT_KINDS:
+        raise ValueError(f"client kind {name!r} is already registered")
+    spec = ClientKindSpec(name=name, takes_flow=takes_flow, make_extra=make_extra)
+    CLIENT_KINDS[name] = spec
+    return spec
+
+
+def client_kind_spec(name: str) -> ClientKindSpec:
+    if name not in CLIENT_KINDS:
+        raise ValueError(
+            f"unknown client kind {name!r}; registered kinds: "
+            f"{', '.join(sorted(CLIENT_KINDS))}"
+        )
+    return CLIENT_KINDS[name]
+
+
+register_client_kind(
+    "fedecado", lambda mu: (lambda x, x0, I_i: I_i), takes_flow=True
+)
+register_client_kind(
+    "fedprox",
+    lambda mu: (
+        lambda x, x0, I_i: jax.tree.map(
+            lambda a, b: mu * (a.astype(jnp.float32) - b.astype(jnp.float32)),
+            x, x0,
+        )
+    ),
+)
+register_client_kind(
+    "sgd",
+    lambda mu: (
+        lambda x, x0, I_i: jax.tree.map(
+            lambda l: jnp.zeros_like(l, jnp.float32), x
+        )
+    ),
+)
 
 
 def client_step(loss_fn: Callable, kind: str, mu: float = 0.0) -> Callable:
@@ -55,24 +121,13 @@ def client_step(loss_fn: Callable, kind: str, mu: float = 0.0) -> Callable:
 
       x ← x − lr·(p_i·∇f_i(x) + extra(x))
 
-    where ``extra`` is the kind-specific gradient addend — the flow variable
-    I_i (fedecado), the proximal pull μ(x − x0) (fedprox), or zero (sgd).
-    The sequential client sims below and the vectorized cohort runner in
-    ``repro/sim/vectorized.py`` both call exactly this function, so the two
-    backends execute identical per-step arithmetic (DESIGN.md §5).
+    where ``extra`` is the registered kind's gradient addend (see the
+    client-kind registry above). The sequential client sims below and the
+    vectorized cohort runner in ``repro/sim/vectorized.py`` both call
+    exactly this function, so all backends execute identical per-step
+    arithmetic (DESIGN.md §5).
     """
-    assert kind in CLIENT_KINDS, kind
-    if kind == "fedecado":
-        extra = lambda x, x0, I_i: I_i
-    elif kind == "fedprox":
-        extra = lambda x, x0, I_i: jax.tree.map(
-            lambda a, b: mu * (a.astype(jnp.float32) - b.astype(jnp.float32)),
-            x, x0,
-        )
-    else:  # sgd
-        extra = lambda x, x0, I_i: jax.tree.map(
-            lambda l: jnp.zeros_like(l, jnp.float32), x
-        )
+    extra = client_kind_spec(kind).make_extra(mu)
 
     def step(x, batch, x0, I_i, lr, p_i):
         g = jax.grad(loss_fn)(x, batch)
@@ -102,6 +157,23 @@ def _sgd_like_steps(
 
     x, losses = jax.lax.scan(scan_step, x0, batches)
     return x, losses[-1]
+
+
+def run_client(
+    loss_fn: Callable,
+    kind: str,
+    mu: float,
+    x0: Pytree,
+    I_i: Optional[Pytree],
+    batches,
+    lr,
+    p_i,
+):
+    """Uniform single-client entry for the sequential backend: scan
+    ``client_step`` over the minibatches and return (x_new, last loss).
+    ``I_i`` is the client's per-client state row for ``takes_flow`` kinds
+    and None otherwise."""
+    return _sgd_like_steps(loss_fn, x0, batches, lr, kind, p_i, I_i=I_i, mu=mu)
 
 
 def fedecado_client_sim(

@@ -1,21 +1,29 @@
 """Federated-learning simulation driver.
 
-Runs any of {fedecado, ecado, fedavg, fedprox, fednova} over a dataset
-partitioned across n clients with configurable participation, non-IID
-Dirichlet skew, and heterogeneous computation (lr_i, e_i per eqs. 43-44).
-Used by the paper-reproduction experiments, examples/ and benchmarks/.
+Runs any algorithm registered in the ``fed/algorithms`` plugin registry
+(fedecado, ecado, fedavg, fedprox, fednova, fedadmm, plus anything a user
+registers) over a dataset partitioned across n clients with configurable
+participation, non-IID Dirichlet skew, and heterogeneous computation
+(lr_i, e_i per eqs. 43-44). Used by the paper-reproduction experiments,
+examples/ and benchmarks/.
+
+``FedSim`` owns no algorithm-specific logic: ``cfg.algorithm`` is resolved
+once through ``make_algorithm`` and every formerly hardwired decision —
+client kind, per-client objective weights, server state and gains,
+aggregation rule, heterogeneity/participation/eligibility — is a protocol
+method or capability flag on ``self.alg`` (DESIGN.md §6).
 
 Client execution is delegated to the multi-rate engine in ``repro/sim``
 behind the ``ExecutionBackend`` interface — ``FedSimConfig.backend`` picks
 ``sequential`` (per-client dispatch, the numerical reference oracle),
 ``vectorized`` (whole cohort in one vmap-over-scan dispatch), ``event``
-(continuous-time scheduler with straggler staleness), or ``sharded``
-(shard_map over the client mesh axis with psum consensus reductions and
-jit-resident multi-round segments). All host-side randomness for a round is
-rolled into a ``CohortPlan`` up front so every backend consumes identical
-cohorts/batches (DESIGN.md §5); ``run`` hands whole segments of pre-drawn
-plans to the backend and only returns to the host at eval / gain-update
-boundaries.
+(continuous-time scheduler with straggler staleness; requires
+``alg.has_flow_dynamics``), or ``sharded`` (shard_map over the client mesh
+axis with psum consensus reductions and jit-resident multi-round segments).
+All host-side randomness for a round is rolled into a ``CohortPlan`` up
+front so every backend consumes identical cohorts/batches (DESIGN.md §5);
+``run`` hands whole segments of pre-drawn plans to the backend and only
+returns to the host at eval / gain-update boundaries.
 
 Data fractions p_i are normalized as p̂_i = n·p_i (mean 1) so local update
 magnitudes stay on the same timescale as the unweighted baselines; this is a
@@ -25,28 +33,22 @@ optimum of Σ p_i f_i unchanged.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    ConsensusConfig,
-    init_server_state,
-    make_gain,
-    hutchinson_scalar,
-    server_round,
-    set_gains,
-)
-from repro.fed.baselines import fedavg_aggregate, fednova_aggregate
+from repro.core import ConsensusConfig
+from repro.fed.algorithms import available_algorithms, make_algorithm
 from repro.fed.client import HeteroConfig
 from repro.fed.partition import data_fractions
 
 Pytree = Any
 
-ALGORITHMS = ("fedecado", "ecado", "fedavg", "fedprox", "fednova")
+# snapshot of the registry at import time, kept for back-compat call sites;
+# prefer fed.algorithms.available_algorithms() which reflects late plugins
+ALGORITHMS = available_algorithms()
 
 
 @dataclasses.dataclass
@@ -61,7 +63,7 @@ class FedSimConfig:
     hetero: Optional[HeteroConfig] = None
     lr_fixed: float = 5e-3
     epochs_fixed: int = 2
-    mu: float = 0.1                     # FedProx proximal weight
+    mu: float = 0.1                     # FedProx proximal weight / FedADMM ρ
     consensus: ConsensusConfig = dataclasses.field(default_factory=ConsensusConfig)
     dt_ref: float = 0.05                # Δt_ref in Ḡ_th = 1/Δt_ref + p·h̄
     hutchinson_probes: int = 2
@@ -80,7 +82,7 @@ class FedSimConfig:
     # (< 1.0 leaves stragglers in the queue -> mid-round returns next round)
     event_horizon: float = 1.0
     event_max_waves: int = 4        # BE sync groups per round
-    # fuse the fedavg/fedprox/fednova cohort aggregation with the Pallas
+    # fuse the averaging-family cohort aggregation with the Pallas
     # batched-aggregation kernel (kernels/batch_agg.py)
     agg_kernels: bool = False
     # sharded backend: force the cohort padding unit above the device count
@@ -101,7 +103,7 @@ class FedSim:
         cfg: FedSimConfig,
         eval_fn: Optional[Callable] = None,  # eval_fn(params) -> dict metrics
     ):
-        assert cfg.algorithm in ALGORITHMS, cfg.algorithm
+        self.alg = make_algorithm(cfg)     # ValueError lists the registry
         self.loss_fn = loss_fn
         self.cfg = cfg
         self.data = data
@@ -116,65 +118,18 @@ class FedSim:
 
         self.params = jax.tree.map(lambda l: l.astype(jnp.float32), params0)
         self.state = None
-        if cfg.algorithm in ("fedecado", "ecado"):
-            self.state = init_server_state(self.params, self.n, cfg.consensus.dt_init)
-            self._install_gains()
+        # algorithm-owned server state (flow variables + gains, dual rows,
+        # ...); any host rng it draws (gain estimation batches) comes first
+        # in the consumption order, exactly as the seed behaviour
+        self.alg.init_state(self)
 
-        self._round_fn = jax.jit(
-            partial(server_round, ccfg=cfg.consensus), static_argnums=()
-        )
         from repro.sim.engine import get_backend  # lazy: sim imports fed.client
 
         self.backend = get_backend(cfg)
 
     # ------------------------------------------------------------------
     def _install_gains(self, round_idx: int = 0):
-        """(Re)compute Ḡ_th per client (paper §4.2, eq. 42). By default
-        precomputed once before training (the paper's §5 setting); with
-        ``gain_update_every > 0`` re-estimated periodically."""
-        cfg = self.cfg
-        if cfg.algorithm == "ecado":
-            g = jnp.ones((self.n,), jnp.float32) / (1.0 / cfg.dt_ref)
-            self.state = set_gains(self.state, g)
-            return
-        key = jax.random.PRNGKey(cfg.seed + 17 + round_idx)
-        params = self.state.x_c if round_idx else self.params
-
-        if cfg.sensitivity == "diag":
-            from repro.core import hutchinson_diag
-
-            hfn = jax.jit(
-                lambda p, b, k: hutchinson_diag(
-                    self.loss_fn, p, b, k, cfg.hutchinson_probes
-                )
-            )
-            g_rows = []
-            for i in range(self.n):
-                batch = self._client_batch(i, cfg.batch_size)
-                diag = hfn(params, batch, jax.random.fold_in(key, i))
-                G_i = jax.tree.map(
-                    lambda h, p_i=float(self.p_hat[i]): 1.0 / cfg.dt_ref
-                    + p_i * jnp.maximum(h, 0.0),
-                    diag,
-                )
-                g_rows.append(jax.tree.map(lambda g: 1.0 / g, G_i))
-            g_inv = jax.tree.map(lambda *rows: jnp.stack(rows), *g_rows)
-            self.state = set_gains(self.state, g_inv)
-            return
-
-        h_bars = np.zeros((self.n,), np.float32)
-        hfn = jax.jit(
-            lambda p, b, k: hutchinson_scalar(
-                self.loss_fn, p, b, k, cfg.hutchinson_probes
-            )
-        )
-        for i in range(self.n):
-            batch = self._client_batch(i, cfg.batch_size)
-            h = hfn(params, batch, jax.random.fold_in(key, i))
-            h_bars[i] = float(np.maximum(h, 0.0))
-        G = 1.0 / cfg.dt_ref + self.p_hat * h_bars          # eq. 42
-        self.state = set_gains(self.state, jnp.asarray(1.0 / G, jnp.float32))
-        self.h_bars = h_bars
+        self.alg.install_gains(self, round_idx=round_idx)
 
     # ------------------------------------------------------------------
     def _client_batch(self, i: int, bs: int):
@@ -192,7 +147,7 @@ class FedSim:
 
         cfg = self.cfg
         idx = np.sort(self.rng.choice(self.n, A, replace=False))
-        if cfg.hetero is not None and cfg.algorithm != "ecado":
+        if cfg.hetero is not None and self.alg.supports_hetero:
             lrs, eps = cfg.hetero.sample(self.rng, A)
         else:
             lrs = np.full(A, cfg.lr_fixed, np.float32)
@@ -216,38 +171,9 @@ class FedSim:
     # ------------------------------------------------------------------
     def _apply_round(self, plan, result) -> Dict[str, Any]:
         """Server aggregation shared by the sequential/vectorized backends
-        (the event backend interleaves its own consensus integration)."""
-        cfg = self.cfg
-        x_new_a = result.x_new_a
-        p_a = jnp.asarray(self.p_hat[plan.idx], jnp.float32)
-
-        if cfg.algorithm in ("fedecado", "ecado"):
-            self.state, _stats = self._round_fn(
-                self.state,
-                x_new_a,
-                jnp.asarray(result.Ts, jnp.float32),
-                jnp.asarray(plan.idx, jnp.int32),
-            )
-        elif cfg.algorithm == "fednova":
-            tau_a = jnp.asarray(result.taus, jnp.float32)
-            if cfg.agg_kernels:
-                from repro.kernels import batched_aggregate
-
-                p = p_a / jnp.maximum(jnp.sum(p_a), 1e-12)
-                tau_eff = jnp.sum(p * tau_a)
-                self.params = batched_aggregate(
-                    self.params, x_new_a, p / jnp.maximum(tau_a, 1.0), tau_eff
-                )
-            else:
-                self.params = fednova_aggregate(self.params, x_new_a, p_a, tau_a)
-        else:  # fedavg / fedprox
-            if cfg.agg_kernels:
-                from repro.kernels import batched_aggregate
-
-                w = p_a / jnp.maximum(jnp.sum(p_a), 1e-12)
-                self.params = batched_aggregate(self.params, x_new_a, w)
-            else:
-                self.params = fedavg_aggregate(self.params, x_new_a, p_a)
+        and the sharded ragged fallback (the event backend interleaves its
+        own consensus integration): delegate to the algorithm plugin."""
+        self.alg.aggregate(self, plan, result)
         return {"loss": float(np.mean(result.losses))}
 
     # ------------------------------------------------------------------
@@ -264,7 +190,7 @@ class FedSim:
         # the backend's appetite: 1 for per-round backends (seed behaviour),
         # larger for the sharded backend's jit-resident segments
         end = min(rounds, rnd + self.backend.max_segment_rounds)
-        if cfg.gain_update_every and cfg.algorithm == "fedecado":
+        if cfg.gain_update_every and self.alg.refreshable_gains:
             nxt = ((rnd // cfg.gain_update_every) + 1) * cfg.gain_update_every
             if nxt > rnd:
                 end = min(end, nxt)
@@ -279,8 +205,8 @@ class FedSim:
         cfg = self.cfg
         rounds = rounds or cfg.rounds
         A = max(1, int(round(cfg.participation * self.n)))
-        if cfg.algorithm == "ecado":
-            A = self.n  # full participation by definition
+        if self.alg.full_participation_only:
+            A = self.n
         history: Dict[str, list] = {"round": [], "loss": [], "metrics": []}
 
         rnd = 0
@@ -289,7 +215,7 @@ class FedSim:
                 cfg.gain_update_every
                 and rnd
                 and rnd % cfg.gain_update_every == 0
-                and cfg.algorithm == "fedecado"
+                and self.alg.refreshable_gains
             ):
                 self._install_gains(round_idx=rnd)
             end = self._segment_end(rnd, rounds)

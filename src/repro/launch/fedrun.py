@@ -40,8 +40,23 @@ from repro.sim.vectorized import build_cohort_runner, cohort_vmap_fn
 
 
 def main() -> None:
+    from repro.fed.algorithms import available_algorithms, get_algorithm
+
+    # this driver runs the consensus machinery directly, so only registered
+    # algorithms with flow dynamics are eligible; argparse rejects the rest
+    # with the eligible names listed
+    flow_algs = [
+        n for n in available_algorithms() if get_algorithm(n).has_flow_dynamics
+    ]
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_IDS), default="smollm-360m")
+    ap.add_argument(
+        "--algorithm", choices=flow_algs, default="fedecado",
+        help="flow-dynamics algorithm from the plugin registry; picks the "
+        "registered client kind for the cohort runner (on this demo's "
+        "equal-sized synthetic streams p̂_i ≡ 1, so fedecado and ecado "
+        "coincide numerically)",
+    )
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--cohort", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=5)
@@ -60,6 +75,7 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
     lf = lambda p, b: loss_fn(p, b, cfg)
+    client_kind = get_algorithm(args.algorithm).client_kind
 
     ccfg = ConsensusConfig(L=0.05, delta=1e-3, dt_init=0.05, max_substeps=16)
     state = init_server_state(params, args.clients, ccfg.dt_init)
@@ -77,7 +93,7 @@ def main() -> None:
         return np.stack([[s[a:a + args.seq_len] for a in row] for row in starts])
 
     if args.backend == "sharded":
-        _run_sharded(args, lf, ccfg, state, batches_for, rng)
+        _run_sharded(args, lf, ccfg, state, batches_for, rng, client_kind)
         return
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -90,7 +106,7 @@ def main() -> None:
     # (vmap over the client axis), pjit over the mesh — the same code path
     # FedSim's "vectorized" backend uses, so launch/ and fed/ share one
     # local-integration implementation (DESIGN.md §5.1)
-    cohort_train = build_cohort_runner(lf, kind="fedecado")
+    cohort_train = build_cohort_runner(lf, kind=client_kind)
     ones_cohort = jnp.ones((args.cohort,), jnp.float32)
     full_steps = jnp.full((args.cohort,), args.steps, jnp.int32)
 
@@ -119,7 +135,7 @@ def main() -> None:
     print("done — cohort training and consensus both executed on the mesh")
 
 
-def _run_sharded(args, lf, ccfg, state, batches_for, rng) -> None:
+def _run_sharded(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
     """Cohort training + consensus through the sharded backend's building
     blocks: shard_map local integration over the 1-D clients mesh and the
     psum Schur-arrowhead solve, with the cohort padded to the device count."""
@@ -134,7 +150,7 @@ def _run_sharded(args, lf, ccfg, state, batches_for, rng) -> None:
 
     c1 = P(AXIS)
     cohort_train = jax.jit(shard_map(
-        cohort_vmap_fn(lf, "fedecado"), mesh=mesh,
+        cohort_vmap_fn(lf, client_kind), mesh=mesh,
         in_specs=(P(), c1, c1, c1, c1, c1), out_specs=(c1, c1),
         check_rep=False,
     ))

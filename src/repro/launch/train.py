@@ -5,10 +5,12 @@ Two modes:
     ``--arch`` config on synthetic token streams — the "does the substrate
     train" driver (runs on CPU; on TPU the same step is pjit-ed onto the
     production mesh via --mesh).
-  * ``--mode fed``: federated training with --algorithm
-    {fedecado,ecado,fedavg,fedprox,fednova} over n clients with Dirichlet
+  * ``--mode fed``: federated training over n clients with Dirichlet
     non-IID partitions and heterogeneous (lr_i, e_i) — the paper's workflow
-    (Algorithm 2) end to end.
+    (Algorithm 2) end to end. ``--algorithm`` choices are enumerated from
+    the fed/algorithms plugin registry, so a newly registered algorithm is
+    immediately selectable (and an unknown name dies at argparse time with
+    the registered names listed, not deep inside FedSim).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --steps 50
@@ -110,8 +112,13 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
-    # fed mode
-    ap.add_argument("--algorithm", default="fedecado")
+    # fed mode — choices come from the plugin registry (fed/algorithms)
+    from repro.fed.algorithms import available_algorithms
+
+    ap.add_argument(
+        "--algorithm", default="fedecado", choices=list(available_algorithms()),
+        help="federated algorithm (registered plugins: %(choices)s)",
+    )
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--participation", type=float, default=0.25)
     ap.add_argument("--rounds", type=int, default=50)

@@ -31,6 +31,12 @@ The round is split into two phases so the backends stay composable:
      server aggregation (``FedSim._apply_round``); the event backend
      overrides the whole round to interleave arrivals with BE sync steps.
 
+Backends carry NO algorithm knowledge: the client kind, its ``mu``, the
+per-client objective weights, and any per-client state rows all come from
+the ``FederatedAlgorithm`` plugin at ``sim.alg`` (fed/algorithms/,
+DESIGN.md §6), so a newly registered algorithm runs on every backend with
+zero edits here.
+
 Padding/masking semantics of the vectorized path are documented in
 DESIGN.md §5.
 """
@@ -67,11 +73,15 @@ class CohortPlan:
         return len(self.idx)
 
     def windows(self) -> np.ndarray:
-        """(A,) float32 continuous-time windows T_i = lr_i · n_steps_i."""
-        return np.asarray(
-            [np.float32(float(lr) * int(ns)) for lr, ns in zip(self.lrs, self.n_steps)],
-            np.float32,
-        )
+        """(A,) float32 continuous-time windows T_i = lr_i · n_steps_i.
+
+        float32·int64 promotes to float64 (the exact product — lr_i is an
+        exact double, n_steps_i an exact int) and a single rounding back to
+        float32 — the same value as the historical per-element
+        ``np.float32(float(lr) * int(ns))`` path, pinned by
+        tests/test_algorithms.py::test_windows_vectorized_rounding.
+        """
+        return (self.lrs * self.n_steps).astype(np.float32)
 
 
 @dataclasses.dataclass
@@ -214,65 +224,47 @@ class SequentialBackend(ExecutionBackend):
     def __init__(self):
         self._jit_cache: Dict[Tuple, Any] = {}
 
-    # -- per-kind jitted client fns (moved verbatim from the seed FedSim) --
-    def _client_fn(self, sim, kind: str, n_steps: int):
-        from repro.fed.client import fedecado_client_sim, fedprox_client, sgd_client
+    # -- one jitted client fn per (kind, mu); retraces per batch shape ------
+    def _client_fn(self, sim, kind: str, mu: float):
+        from functools import partial
 
-        key = (kind, n_steps)
+        from repro.fed.client import run_client
+
+        key = (kind, float(mu))
         if key not in self._jit_cache:
-            if kind == "fedecado":
-                fn = jax.jit(
-                    lambda x0, I, batches, lr, p: fedecado_client_sim(
-                        sim.loss_fn, x0, I, batches, lr, p
-                    )
-                )
-            elif kind == "fedprox":
-                fn = jax.jit(
-                    lambda x0, batches, lr, mu: fedprox_client(
-                        sim.loss_fn, x0, batches, lr, mu
-                    )
-                )
-            else:  # sgd
-                fn = jax.jit(
-                    lambda x0, batches, lr: sgd_client(sim.loss_fn, x0, batches, lr)
-                )
-            self._jit_cache[key] = fn
+            self._jit_cache[key] = jax.jit(
+                partial(run_client, sim.loss_fn, kind, float(mu))
+            )
         return self._jit_cache[key]
 
     def run_cohort(self, sim, plan: CohortPlan) -> CohortResult:
-        cfg = sim.cfg
+        alg = sim.alg
+        kind, mu = alg.client_kind, alg.client_mu()
         x_c = sim.state.x_c if sim.state is not None else sim.params
-        x_news, Ts, taus, losses = [], [], [], []
-        for j, i in enumerate(plan.idx):
-            n_steps = int(plan.n_steps[j])
+        rows = alg.client_rows(sim, plan.idx)      # (A, ...) or None
+        ps = alg.client_weights(sim, plan.idx)     # (A,) fp32
+        fn = self._client_fn(sim, kind, mu)
+
+        x_news, taus, losses = [], [], []
+        for j in range(plan.cohort_size):
             batches = {
                 k: jnp.asarray(v[plan.batch_idx[j]]) for k, v in sim.data.items()
             }
-            if cfg.algorithm in ("fedecado", "ecado"):
-                I_i = jax.tree.map(lambda l: l[int(i)], sim.state.I)
-                p_i = float(sim.p_hat[int(i)]) if cfg.algorithm == "fedecado" else 1.0
-                out = self._client_fn(sim, "fedecado", n_steps)(
-                    x_c, I_i, batches, float(plan.lrs[j]), p_i
-                )
-                x_news.append(out.x_new)
-                Ts.append(float(out.T))
-                losses.append(float(out.loss))
-            elif cfg.algorithm == "fedprox":
-                x_new, loss = self._client_fn(sim, "fedprox", n_steps)(
-                    x_c, batches, float(plan.lrs[j]), cfg.mu
-                )
-                x_news.append(x_new)
-                losses.append(float(loss))
-            else:  # fedavg, fednova
-                x_new, loss = self._client_fn(sim, "sgd", n_steps)(
-                    x_c, batches, float(plan.lrs[j])
-                )
-                x_news.append(x_new)
-                losses.append(float(loss))
-            taus.append(n_steps)
+            I_j = (
+                jax.tree.map(lambda l: l[j], rows) if rows is not None else None
+            )
+            x_new, loss = fn(x_c, I_j, batches, float(plan.lrs[j]), float(ps[j]))
+            x_news.append(x_new)
+            losses.append(float(loss))
+            taus.append(int(plan.n_steps[j]))
 
         x_new_a = jax.tree.map(lambda *xs: jnp.stack(xs), *x_news)
-        return CohortResult(x_new_a=x_new_a, Ts=Ts, taus=taus, losses=losses)
+        return CohortResult(
+            x_new_a=x_new_a,
+            Ts=[float(t) for t in plan.windows()],
+            taus=taus,
+            losses=losses,
+        )
 
 
 BACKENDS = ("sequential", "vectorized", "event", "sharded")

@@ -31,8 +31,9 @@ BE solve sees Σ_active I_a + S_frozen = Σ_all I_i, so a state at the
 critical point stays there no matter how arrivals are sliced
 (tests/test_engine.py::test_event_staleness_preserves_flow_invariant).
 
-Only the fedecado/ecado algorithms have flow dynamics to schedule; the
-averaging baselines raise.
+Only algorithms whose plugin declares ``has_flow_dynamics`` (the
+fedecado/ecado family) have flow dynamics to schedule; every other
+registered algorithm raises.
 """
 from __future__ import annotations
 
@@ -137,10 +138,11 @@ class EventBackend(ExecutionBackend):
     # ------------------------------------------------------------------
     def run_round(self, sim, plan: CohortPlan):
         cfg = sim.cfg
-        if cfg.algorithm not in ("fedecado", "ecado"):
+        if not sim.alg.has_flow_dynamics:
             raise ValueError(
                 "the event backend schedules flow dynamics and only supports "
-                f"fedecado/ecado, got {cfg.algorithm!r}"
+                "algorithms whose plugin declares has_flow_dynamics, got "
+                f"{cfg.algorithm!r}"
             )
 
         # 1. local integration for the newly dispatched cohort (batched).

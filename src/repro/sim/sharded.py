@@ -18,36 +18,45 @@ devices) and moves the *multi-round* loop on-device:
     consensus_integrate), differing only in reduction topology;
   * a whole segment of rounds executes inside ONE jit: host rng for R
     rounds is pre-drawn into a ``StackedPlan`` (engine.py) and a
-    ``lax.fori_loop`` consumes it round by round, carrying
-    (x_c, I, dt_last, t) — zero host syncs between rounds;
-  * the averaging baselines (fedavg/fedprox/fednova) aggregate through the
-    sharded batch-agg entry (kernels/ops.py::batch_agg_psum): local masked
-    weighted-delta partials + psum.
+    ``lax.fori_loop`` consumes it round by round — zero host syncs between
+    rounds;
+  * the averaging family aggregates through the sharded batch-agg entry
+    (kernels/ops.py::batch_agg_psum): local masked weighted-delta partials
+    + psum, with the (w, scale) spec and the optional endpoint transform
+    coming from the ``FederatedAlgorithm`` plugin (fed/algorithms/).
+
+Which path a simulation takes is decided by capability flags on
+``sim.alg``, never by algorithm names: ``has_flow_dynamics`` selects the
+consensus segment, ``has_client_state`` threads the algorithm's per-client
+rows (e.g. FedADMM duals) through the jit-resident loop with the same
+one-hot psum scatter the flow write-back uses. A newly registered plugin
+therefore runs sharded with zero edits to this module.
 
 Padding/masking semantics (DESIGN.md §5.5): padded cohort rows run zero
 valid steps (their endpoint is exactly the broadcast x_c), carry mask 0 in
 every consensus reduction and LTE max, window T = 0 (excluded from the
-pmax'd τ horizon), and are dropped from the flow write-back by an
-out-of-bounds scatter index. Because every scalar that steers the adaptive
-loop (ε_BE, T_max, Δt) is psum/pmax-replicated, all devices branch
+pmax'd τ horizon), and are dropped from every per-client-state write-back
+by an out-of-bounds scatter index. Because every scalar that steers the
+adaptive loop (ε_BE, T_max, Δt) is psum/pmax-replicated, all devices branch
 identically through the nested while loops.
 
 Ragged cohorts (clients with |partition| < batch_size) cannot share one
 dense minibatch tensor without changing the minibatch-mean arithmetic, so
 those rounds fall back to the vectorized backend's per-group local
-integration and re-enter the sharded path at the consensus/aggregation
-reduction. Diagonal sensitivity gains keep their pytree layout on the host
+integration; flow algorithms then re-enter the sharded path at the psum
+consensus reduction, while the averaging family — whose endpoints are
+already gathered on one device — applies the algorithm's dense aggregate
+directly. Diagonal sensitivity gains keep their pytree layout on the host
 path and are not supported here (scalar gains only).
 
-Backend equivalence against the sequential oracle — all four client kinds,
-uneven padding, ragged partitions, partial participation, heterogeneous
-e_i/lr_i — is fuzzed in tests/test_backend_equiv.py; histories match at
-rtol ≈ 1e-6 (psum re-associates the cohort reductions, so bitwise equality
-is not expected).
+Backend equivalence against the sequential oracle — every registered
+algorithm, uneven padding, ragged partitions, partial participation,
+heterogeneous e_i/lr_i — is fuzzed in tests/test_backend_equiv.py;
+histories match at rtol ≈ 1e-6 (psum re-associates the cohort reductions,
+so bitwise equality is not expected).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -61,7 +70,6 @@ from repro.sim.engine import (
     CohortResult,
     ExecutionBackend,
     StackedPlan,
-    pad_cohort_ids,
     stack_plans,
 )
 from repro.sim.vectorized import VectorizedBackend, cohort_vmap_fn
@@ -75,17 +83,38 @@ def _bcast(v: jax.Array, like: jax.Array) -> jax.Array:
     return v.reshape((-1,) + (1,) * (like.ndim - 1))
 
 
+def _scatter_rows(full, rows_loc, sidx_loc, mask_loc):
+    """Exact-set write-back of device-local per-client rows into the
+    replicated (n, ...) tensor: every real cohort row is owned by exactly
+    one device, so psum of the one-hot scatters reassembles the full
+    update; padding rows carry sidx = n and are dropped out of bounds."""
+    n = jax.tree.leaves(full)[0].shape[0]
+    hit = jax.lax.psum(
+        jnp.zeros((n,), jnp.float32).at[sidx_loc].add(mask_loc, mode="drop"),
+        AXIS,
+    )
+    rows = jax.tree.map(
+        lambda l, r: jax.lax.psum(
+            jnp.zeros_like(l).at[sidx_loc].add(r * _bcast(mask_loc, r), mode="drop"),
+            AXIS,
+        ),
+        full, rows_loc,
+    )
+    return jax.tree.map(
+        lambda l, r: jnp.where(_bcast(hit, l) > 0, r, l), full, rows
+    )
+
+
 def _flow_round_core(
     x_c, I, g_inv, dt_last, t,
     x_new_loc, idx_loc, sidx_loc, mask_loc, T_loc, ccfg,
 ):
-    """One FedECADO consensus round on a device-local cohort shard.
+    """One flow-consensus round on a device-local cohort shard.
 
     Runs inside ``shard_map``: (x_c, I, g_inv, dt_*, t) are replicated,
     ``*_loc`` carry this device's A_pad/n_dev cohort rows. The Σ_a
-    reductions inside the BE solve psum over AXIS; the flow write-back
-    scatters each device's rows into the replicated I with exact set
-    semantics (psum of disjoint one-hot placements + hit mask).
+    reductions inside the BE solve psum over AXIS; the flow write-back uses
+    the shared one-hot scatter (``_scatter_rows``).
     """
     from repro.core.fedecado import consensus_integrate
     from repro.core.flow import broadcast_clients, tree_sum_clients
@@ -108,36 +137,20 @@ def _flow_round_core(
         dt_last, ccfg, axis_name=AXIS, mask=mask_loc,
     )
 
-    # exact-set write-back: every real cohort row is owned by exactly one
-    # device, so psum of the one-hot scatters reassembles the full update;
-    # padding rows carry sidx = n_clients and are dropped out of bounds
-    n = jax.tree.leaves(I)[0].shape[0]
-    hit = jax.lax.psum(
-        jnp.zeros((n,), jnp.float32).at[sidx_loc].add(mask_loc, mode="drop"),
-        AXIS,
-    )
-    rows = jax.tree.map(
-        lambda l, r: jax.lax.psum(
-            jnp.zeros_like(l).at[sidx_loc].add(r * _bcast(mask_loc, r), mode="drop"),
-            AXIS,
-        ),
-        I, I_f,
-    )
-    I_new = jax.tree.map(
-        lambda l, r: jnp.where(_bcast(hit, l) > 0, r, l), I, rows
-    )
+    I_new = _scatter_rows(I, I_f, sidx_loc, mask_loc)
     return x_c_f, I_new, dt_f, t + tau_f
 
 
-def build_flow_segment(mesh, loss_fn: Callable, ccfg) -> Callable:
-    """Jitted R-round fedecado/ecado segment, shard_map-ed over ``mesh``.
+def build_flow_segment(mesh, loss_fn: Callable, ccfg,
+                       kind: str = "fedecado", mu: float = 0.0) -> Callable:
+    """Jitted R-round flow-dynamics segment, shard_map-ed over ``mesh``.
 
     ``fn(x_c, I, g_inv, dt_last, t, data, idx, sidx, mask, lrs, ns, Ts,
     sel, ps) -> (x_c, I, dt_last, t, losses)`` where the plan arrays are the
     ``StackedPlan`` fields (R, A_pad, ...) sharded on the cohort axis, and
     ``losses`` comes back (R, A_pad) in global plan order.
     """
-    cohort = cohort_vmap_fn(loss_fn, "fedecado")
+    cohort = cohort_vmap_fn(loss_fn, kind, mu)
 
     def body(x_c, I, g_inv, dt_last, t, data, idx, sidx, mask, lrs, ns, Ts, sel, ps):
         R, A_loc = idx.shape
@@ -169,45 +182,57 @@ def build_flow_segment(mesh, loss_fn: Callable, ccfg) -> Callable:
     return jax.jit(fn)
 
 
-def build_avg_segment(mesh, loss_fn: Callable, kind: str, mu: float,
-                      use_kernel: bool) -> Callable:
-    """Jitted R-round fedavg/fedprox/fednova segment.
+def build_avg_segment(mesh, alg, loss_fn: Callable, use_kernel: bool) -> Callable:
+    """Jitted R-round weighted-delta segment for the averaging family.
 
-    ``fn(params, data, sel, lrs, ns, w, scale) -> (params, losses)`` —
-    ``w`` (R, A_pad) carries the host-precomputed aggregation weights with
-    cohort padding already zeroed, ``scale`` (R,) FedNova's τ_eff (ones for
-    fedavg/fedprox).
+    ``fn(params, rows, data, idx, sidx, mask, sel, lrs, ns, ps, w, scale)
+    -> (params, rows, losses)`` — ``w`` (R, A_pad) carries the
+    host-precomputed aggregation weights from the algorithm's
+    ``agg_weights`` spec with cohort padding already zeroed, ``scale`` (R,)
+    the per-round update scale (FedNova's τ_eff; ones otherwise), ``ps``
+    (R, A_pad) the per-client objective weights, and ``rows`` the
+    algorithm's per-client state (leaves (n+?, ...); an empty pytree when
+    ``alg.has_client_state`` is False). The endpoint transform
+    (``agg_transform``, e.g. FedADMM's dual update) runs device-local on
+    each shard; updated rows re-enter the replicated tensor through the
+    same one-hot psum scatter as the flow write-back.
     """
     from repro.kernels.ops import batch_agg_psum
 
-    cohort = cohort_vmap_fn(loss_fn, kind, mu)
+    cohort = cohort_vmap_fn(loss_fn, alg.client_kind, alg.client_mu())
+    takes_rows = bool(alg.has_client_state)
 
-    def body(params, data, sel, lrs, ns, w, scale):
+    def body(params, rows, data, idx, sidx, mask, sel, lrs, ns, ps, w, scale):
         R, A_loc = lrs.shape
 
         def round_step(r, carry):
-            params, losses = carry
+            params, rows, losses = carry
             batches = {k: v[sel[r]] for k, v in data.items()}
-            x_new_loc, loss_loc = cohort(
-                params, None, batches, lrs[r], jnp.ones((A_loc,), jnp.float32),
-                ns[r],
+            rows_loc = (
+                jax.tree.map(lambda l: l[idx[r]], rows) if takes_rows else None
             )
+            x_new_loc, loss_loc = cohort(
+                params, rows_loc, batches, lrs[r], ps[r], ns[r]
+            )
+            y_loc, new_rows_loc = alg.agg_transform(params, x_new_loc, rows_loc)
             delta = batch_agg_psum(
-                params, x_new_loc, w[r], AXIS, use_kernel=use_kernel
+                params, y_loc, w[r], AXIS, use_kernel=use_kernel
             )
             params = jax.tree.map(
                 lambda xc, d: xc + scale[r] * d, params, delta
             )
-            return (params, losses.at[r].set(loss_loc))
+            if takes_rows:
+                rows = _scatter_rows(rows, new_rows_loc, sidx[r], mask[r])
+            return (params, rows, losses.at[r].set(loss_loc))
 
         losses0 = jnp.zeros((R, A_loc), jnp.float32)
-        return jax.lax.fori_loop(0, R, round_step, (params, losses0))
+        return jax.lax.fori_loop(0, R, round_step, (params, rows, losses0))
 
     c2 = P(None, AXIS)
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(), c2, c2, c2, c2, P()),
-        out_specs=(P(), c2),
+        in_specs=(P(), P(), P(), c2, c2, c2, c2, c2, c2, c2, c2, P()),
+        out_specs=(P(), P(), c2),
         check_rep=False,
     )
     return jax.jit(fn)
@@ -233,30 +258,13 @@ def build_flow_apply(mesh, ccfg) -> Callable:
     return jax.jit(fn)
 
 
-def build_avg_apply(mesh, use_kernel: bool) -> Callable:
-    """Aggregation-only sharded round (ragged fallback for the averaging
-    algorithms): ``fn(params, x_new_a, w, scale) -> params``."""
-    from repro.kernels.ops import batch_agg_psum
-
-    def body(params, x_new_loc, w, scale):
-        delta = batch_agg_psum(params, x_new_loc, w, AXIS, use_kernel=use_kernel)
-        return jax.tree.map(lambda xc, d: xc + scale * d, params, delta)
-
-    fn = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(), P(AXIS), P(AXIS), P()),
-        out_specs=P(),
-        check_rep=False,
-    )
-    return jax.jit(fn)
-
-
 class ShardedBackend(ExecutionBackend):
     """Multi-device cohort execution with on-device multi-round segments.
 
     Numerically equivalent to SequentialBackend on the same plan stream at
     rtol ≈ 1e-6 (psum re-associates the Σ_a reductions); fuzzed across
-    client kinds / padding / participation in tests/test_backend_equiv.py.
+    registered algorithms / padding / participation in
+    tests/test_backend_equiv.py.
 
     ``pad_multiple`` forces the cohort padding unit above the device count —
     used by tests to exercise uneven client→device padding even on a
@@ -313,6 +321,17 @@ class ShardedBackend(ExecutionBackend):
                 "their pytree layout on the dense path"
             )
 
+    @staticmethod
+    def _segmentable(alg) -> bool:
+        """Only algorithms that expose a jit-resident aggregation — the
+        flow consensus or the weighted-delta (w, scale) spec — can ride the
+        multi-round fori_loop segment. A protocol-conformant plugin that
+        implements ``aggregate`` directly still runs sharded via the
+        per-round path: grouped local integration + its dense aggregate."""
+        return bool(alg.has_flow_dynamics) or callable(
+            getattr(alg, "agg_weights", None)
+        )
+
     def _fn(self, key: Tuple, builder: Callable) -> Callable:
         if key not in self._fns:
             self._fns[key] = builder()
@@ -330,9 +349,10 @@ class ShardedBackend(ExecutionBackend):
         if not plans:
             return []
         self._check(sim)
-        cfg = sim.cfg
+        if not self._segmentable(sim.alg):
+            return [self.run_round(sim, p) for p in plans]
         S_pad = max(
-            VectorizedBackend._pad_steps(cfg),
+            VectorizedBackend._pad_steps(sim),
             int(max(int(p.n_steps.max()) for p in plans)),
         )
         A_pad = self._a_pad(plans[0].cohort_size)
@@ -345,34 +365,36 @@ class ShardedBackend(ExecutionBackend):
 
     def run_round(self, sim, plan: CohortPlan) -> Dict[str, Any]:
         self._check(sim)
-        cfg = sim.cfg
-        S_pad = max(VectorizedBackend._pad_steps(cfg), int(plan.n_steps.max()))
-        sp = stack_plans([plan], sim.n, self._a_pad(plan.cohort_size), S_pad)
-        if sp is not None:
-            return self._run_segment(sim, sp)[0]
+        if self._segmentable(sim.alg):
+            S_pad = max(
+                VectorizedBackend._pad_steps(sim), int(plan.n_steps.max())
+            )
+            sp = stack_plans([plan], sim.n, self._a_pad(plan.cohort_size), S_pad)
+            if sp is not None:
+                return self._run_segment(sim, sp)[0]
         result = self._vec.run_cohort(sim, plan)
         return self._apply_gathered(sim, plan, result)
 
     # ------------------------------------------------------------------
     def _run_segment(self, sim, sp: StackedPlan) -> List[Dict[str, Any]]:
         cfg = sim.cfg
-        alg = cfg.algorithm
+        alg = sim.alg
         R = sp.n_rounds
         data = self._device_data(sim)
         arr = jnp.asarray
+        ps = alg.client_weights(sim, sp.idx)
 
-        if alg in ("fedecado", "ecado"):
-            ps = (
-                sim.p_hat[sp.idx].astype(np.float32)
-                if alg == "fedecado"
-                else np.ones_like(sp.mask)
-            )
+        if alg.has_flow_dynamics:
             fn = self._fn(
                 # keyed on the loss fn too: the built closure captures it,
                 # and a backend instance may be reused across sims (the
                 # bench warm-up pattern)
-                ("flow_seg", id(sim.loss_fn), cfg.consensus),
-                lambda: build_flow_segment(self.mesh, sim.loss_fn, cfg.consensus),
+                ("flow_seg", id(sim.loss_fn), alg.client_kind,
+                 float(alg.client_mu()), cfg.consensus),
+                lambda: build_flow_segment(
+                    self.mesh, sim.loss_fn, cfg.consensus,
+                    kind=alg.client_kind, mu=float(alg.client_mu()),
+                ),
             )
             st = sim.state
             x_c, I, dt_last, t, losses = fn(
@@ -384,19 +406,22 @@ class ShardedBackend(ExecutionBackend):
                 x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + R
             )
         else:
-            kind = "fedprox" if alg == "fedprox" else "sgd"
-            mu = float(cfg.mu) if alg == "fedprox" else 0.0
             w, scale = self._avg_weights(sim, sp)
+            rows = alg.client_state if alg.has_client_state else {}
             fn = self._fn(
-                ("avg_seg", id(sim.loss_fn), kind, mu, bool(cfg.agg_kernels)),
+                ("avg_seg", id(sim.loss_fn), alg.name,
+                 float(alg.client_mu()), bool(cfg.agg_kernels)),
                 lambda: build_avg_segment(
-                    self.mesh, sim.loss_fn, kind, mu, bool(cfg.agg_kernels)
+                    self.mesh, alg, sim.loss_fn, bool(cfg.agg_kernels)
                 ),
             )
-            sim.params, losses = fn(
-                sim.params, data, arr(sp.sel), arr(sp.lrs), arr(sp.n_steps),
-                arr(w), arr(scale),
+            sim.params, rows, losses = fn(
+                sim.params, rows, data, arr(sp.idx), arr(sp.scatter_idx),
+                arr(sp.mask), arr(sp.sel), arr(sp.lrs), arr(sp.n_steps),
+                arr(ps), arr(w), arr(scale),
             )
+            if alg.has_client_state:
+                alg.set_client_state(rows)
 
         losses = np.asarray(losses)
         self.last_segment_stats = {"rounds": R, "cohort_pad": sp.cohort_pad,
@@ -409,33 +434,32 @@ class ShardedBackend(ExecutionBackend):
         ]
 
     def _avg_weights(self, sim, sp: StackedPlan):
-        """Host-precomputed per-round aggregation weights (fp32, matching
-        fed/baselines.py arithmetic), cohort padding zeroed via the mask."""
-        alg = sim.cfg.algorithm
+        """Host-precomputed per-round aggregation weights from the
+        algorithm's ``agg_weights`` spec (fp32 numpy, the same lines the
+        dense path runs under jnp), cohort padding zeroed via the mask."""
         p_a = (sim.p_hat[sp.idx] * sp.mask).astype(np.float32)
-        den = np.maximum(p_a.sum(axis=1, keepdims=True), np.float32(1e-12))
-        p = (p_a / den).astype(np.float32)
-        if alg == "fednova":
-            tau = sp.taus
-            scale = (p * tau).sum(axis=1).astype(np.float32)   # τ_eff
-            w = (p / np.maximum(tau, np.float32(1.0))).astype(np.float32)
-        else:   # fedavg / fedprox
-            w = p
-            scale = np.ones((sp.n_rounds,), np.float32)
-        return w, scale
+        w, scale = sim.alg.agg_weights(p_a, sp.taus, xp=np)
+        return w.astype(np.float32), scale.astype(np.float32)
 
     # ------------------------------------------------------------------
     def _apply_gathered(self, sim, plan: CohortPlan, result: CohortResult):
         """Ragged fallback: cohort endpoints were produced by the vectorized
-        grouped runner; pad them to the device multiple and run the sharded
-        consensus / aggregation reduction."""
+        grouped runner. Flow algorithms pad them to the device multiple and
+        run the sharded psum consensus; the averaging family — endpoints
+        already gathered on one device — applies the algorithm's dense
+        aggregate (identical weighted-delta arithmetic, dense reduction)."""
         cfg = sim.cfg
-        alg = cfg.algorithm
+        alg = sim.alg
+        if not alg.has_flow_dynamics:
+            return sim._apply_round(plan, result)
+
+        from repro.sim.engine import pad_cohort_ids
+
         A = plan.cohort_size
         A_pad = self._a_pad(A)
         pad = A_pad - A
 
-        x_ref = sim.state.x_c if sim.state is not None else sim.params
+        x_ref = sim.state.x_c
         x_new_pad = jax.tree.map(
             lambda l, xc: (
                 jnp.concatenate(
@@ -446,41 +470,20 @@ class ShardedBackend(ExecutionBackend):
         )
         idx, sidx, mask = pad_cohort_ids(plan.idx, A_pad, sim.n)
 
-        if alg in ("fedecado", "ecado"):
-            Ts = np.concatenate(
-                [np.asarray(result.Ts, np.float32), np.zeros(pad, np.float32)]
-            )
-            fn = self._fn(
-                ("flow_apply", cfg.consensus),
-                lambda: build_flow_apply(self.mesh, cfg.consensus),
-            )
-            st = sim.state
-            x_c, I, dt_last, t = fn(
-                st.x_c, st.I, st.g_inv, st.dt_last, st.t, x_new_pad,
-                jnp.asarray(idx), jnp.asarray(sidx), jnp.asarray(mask),
-                jnp.asarray(Ts),
-            )
-            sim.state = st._replace(
-                x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + 1
-            )
-        else:
-            sp1 = StackedPlan(
-                rnd0=plan.rnd,
-                idx=idx[None], scatter_idx=sidx[None], mask=mask[None],
-                lrs=np.zeros((1, A_pad), np.float32),
-                n_steps=np.zeros((1, A_pad), np.int32),
-                Ts=np.zeros((1, A_pad), np.float32),
-                sel=np.zeros((1, A_pad, 1, 1), np.int32),
-                taus=np.concatenate(
-                    [np.asarray(result.taus, np.float32), np.zeros(pad, np.float32)]
-                )[None],
-            )
-            w, scale = self._avg_weights(sim, sp1)
-            fn = self._fn(
-                ("avg_apply", bool(cfg.agg_kernels)),
-                lambda: build_avg_apply(self.mesh, bool(cfg.agg_kernels)),
-            )
-            sim.params = fn(
-                sim.params, x_new_pad, jnp.asarray(w[0]), jnp.asarray(scale[0])
-            )
+        Ts = np.concatenate(
+            [np.asarray(result.Ts, np.float32), np.zeros(pad, np.float32)]
+        )
+        fn = self._fn(
+            ("flow_apply", cfg.consensus),
+            lambda: build_flow_apply(self.mesh, cfg.consensus),
+        )
+        st = sim.state
+        x_c, I, dt_last, t = fn(
+            st.x_c, st.I, st.g_inv, st.dt_last, st.t, x_new_pad,
+            jnp.asarray(idx), jnp.asarray(sidx), jnp.asarray(mask),
+            jnp.asarray(Ts),
+        )
+        sim.state = st._replace(
+            x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + 1
+        )
         return {"loss": float(np.mean(result.losses))}

@@ -16,6 +16,11 @@ advance together in a single ``jax.vmap``-over-``jax.lax.scan`` call:
     function the sequential oracle scans over — which is what makes the
     two backends bit-for-bit comparable (tests/test_engine.py).
 
+The client kind, its ``mu``, the per-client objective weights, and any
+per-client state rows (flow variables, FedADMM duals, ...) come from the
+``FederatedAlgorithm`` plugin at ``sim.alg`` via the client-kind registry
+(fed/client.py) — this backend carries zero algorithm-specific branches.
+
 Clients whose partitions are smaller than the batch size produce ragged
 batch shapes; the runner groups the cohort by per-client batch size and
 issues one vmapped dispatch per group (one group in the common case).
@@ -23,9 +28,10 @@ issues one vmapped dispatch per group (one group in the common case).
 S_pad is derived from the config ceiling (epochs_max·steps_per_epoch), not
 the cohort max, so the jitted runner compiles exactly once per client kind.
 
-The optional Pallas batched-aggregation kernel path
+Server aggregation happens in the algorithm plugin (``FedSim._apply_round``
+→ ``alg.aggregate``), where the optional Pallas batched-aggregation kernel
 (kernels/batch_agg.py, ``FedSimConfig.agg_kernels``) fuses the cohort
-weighted-delta reduction for the fedavg/fedprox/fednova server step.
+weighted-delta reduction for the averaging family.
 """
 from __future__ import annotations
 
@@ -47,12 +53,14 @@ def cohort_vmap_fn(loss_fn: Callable, kind: str, mu: float = 0.0) -> Callable:
     ``build_cohort_runner`` for the contract. Exposed separately so the
     sharded backend can call it on each device's cohort shard inside its
     ``shard_map`` program (sim/sharded.py), where the outer jit is owned by
-    the segment runner rather than per-dispatch.
+    the segment runner rather than per-dispatch. Whether ``I_a`` (the
+    per-client state rows) is consumed or ignored comes from the registered
+    kind's ``takes_flow`` flag (fed/client.py).
     """
-    from repro.fed.client import client_step
+    from repro.fed.client import client_kind_spec, client_step
 
     step = client_step(loss_fn, kind, mu)
-    takes_I = kind == "fedecado"
+    takes_I = client_kind_spec(kind).takes_flow
 
     def one_client(x_c, I_i, batches, lr, p_i, n_valid):
         steps = jnp.arange(jax.tree.leaves(batches)[0].shape[0], dtype=jnp.int32)
@@ -86,11 +94,12 @@ def build_cohort_runner(loss_fn: Callable, kind: str, mu: float = 0.0) -> Callab
 
     Returns ``runner(x_c, I_a, batches, lrs, ps, n_valid) -> (x_new_a,
     losses)`` where leaves of ``batches`` are (A, S_pad, bs, ...), ``I_a``
-    leaves are (A, ...) (pass None-shaped zeros only for kind="fedecado";
-    other kinds ignore it and may receive ``None``), and ``n_valid`` (A,)
-    int32 gives each client's true step count. ``x_new_a`` leaves are
-    (A, ...); ``losses`` is (A,) — each client's last *valid* minibatch
-    loss. Re-traces only when shapes change (once per (A, S_pad, bs)).
+    leaves are (A, ...) (required for kinds whose registered spec has
+    ``takes_flow``; other kinds ignore it and may receive ``None``), and
+    ``n_valid`` (A,) int32 gives each client's true step count. ``x_new_a``
+    leaves are (A, ...); ``losses`` is (A,) — each client's last *valid*
+    minibatch loss. Re-traces only when shapes change (once per
+    (A, S_pad, bs)).
     """
     return jax.jit(cohort_vmap_fn(loss_fn, kind, mu))
 
@@ -104,32 +113,28 @@ class VectorizedBackend(ExecutionBackend):
     def __init__(self):
         self._runners: Dict[Tuple, Callable] = {}
 
-    def _runner(self, sim, kind: str) -> Callable:
-        mu = float(sim.cfg.mu) if kind == "fedprox" else 0.0
+    def _runner(self, sim) -> Callable:
+        kind, mu = sim.alg.client_kind, float(sim.alg.client_mu())
         key = (kind, mu)
         if key not in self._runners:
             self._runners[key] = build_cohort_runner(sim.loss_fn, kind, mu)
         return self._runners[key]
 
     @staticmethod
-    def _pad_steps(cfg) -> int:
+    def _pad_steps(sim) -> int:
         """Config-stable scan length: the cohort ceiling, so the runner
         compiles once instead of once per distinct round maximum."""
-        if cfg.hetero is not None and cfg.algorithm != "ecado":
+        cfg = sim.cfg
+        if cfg.hetero is not None and sim.alg.supports_hetero:
             return int(cfg.hetero.epochs_max) * cfg.steps_per_epoch
         return int(cfg.epochs_fixed) * cfg.steps_per_epoch
 
     def run_cohort(self, sim, plan: CohortPlan) -> CohortResult:
-        cfg = sim.cfg
-        alg = cfg.algorithm
-        kind = (
-            "fedecado" if alg in ("fedecado", "ecado")
-            else ("fedprox" if alg == "fedprox" else "sgd")
-        )
+        alg = sim.alg
         x_c = sim.state.x_c if sim.state is not None else sim.params
         A = plan.cohort_size
-        S_pad = max(self._pad_steps(cfg), int(plan.n_steps.max()))
-        runner = self._runner(sim, kind)
+        S_pad = max(self._pad_steps(sim), int(plan.n_steps.max()))
+        runner = self._runner(sim)
 
         # group clients by their (possibly ragged) per-client batch size
         groups: Dict[int, list] = {}
@@ -149,17 +154,8 @@ class VectorizedBackend(ExecutionBackend):
             batches = {k: jnp.asarray(v[sel]) for k, v in sim.data.items()}
             lrs = jnp.asarray(plan.lrs[js], jnp.float32)
             nv = jnp.asarray(plan.n_steps[js], jnp.int32)
-            if kind == "fedecado":
-                rows = jnp.asarray(plan.idx[js])
-                I_g = jax.tree.map(lambda l: l[rows], sim.state.I)
-                ps = (
-                    jnp.asarray(sim.p_hat[plan.idx[js]], jnp.float32)
-                    if alg == "fedecado"
-                    else jnp.ones((len(js),), jnp.float32)
-                )
-            else:
-                I_g = None
-                ps = jnp.ones((len(js),), jnp.float32)
+            I_g = alg.client_rows(sim, plan.idx[js])
+            ps = jnp.asarray(alg.client_weights(sim, plan.idx[js]), jnp.float32)
             x_g, loss_g = runner(x_c, I_g, batches, lrs, ps, nv)
             order.extend(js)
             xs.append(x_g)

@@ -1,0 +1,208 @@
+"""Algorithm plugin registry tests (fed/algorithms, DESIGN.md §6).
+
+* registration: builtins present, duplicate names rejected loudly,
+  unknown names produce an error that LISTS the registered names (both at
+  registry level and from the CLI ``choices=`` wiring);
+* capability flags: declared correctly for the builtins and actually
+  consulted by FedSim / the execution backends (event-backend gating,
+  full-participation, heterogeneity eligibility);
+* the client-kind registry that algorithm plugins extend;
+* CohortPlan.windows() vectorization: the batched float32 rounding must
+  match the historical per-element path exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.fed.algorithms import (
+    FederatedAlgorithm,
+    available_algorithms,
+    get_algorithm,
+    make_algorithm,
+    register,
+)
+from repro.fed.client import CLIENT_KINDS, client_kind_spec, register_client_kind
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_algorithms_registered():
+    names = available_algorithms()
+    assert set(names) >= {"fedecado", "ecado", "fedavg", "fedprox", "fednova"}
+    # registration order is stable (CLIs enumerate it into --algorithm)
+    assert names.index("fedecado") < names.index("fedavg")
+
+
+def test_duplicate_registration_rejected():
+    class Impostor(FederatedAlgorithm):
+        name = "fedavg"
+
+    with pytest.raises(ValueError, match="already registered"):
+        register(Impostor)
+    # the original class is untouched
+    assert get_algorithm("fedavg").__name__ == "FedAvg"
+
+
+def test_register_requires_a_name():
+    class Nameless(FederatedAlgorithm):
+        pass
+
+    with pytest.raises(ValueError, match="name"):
+        register(Nameless)
+
+
+def test_unknown_algorithm_error_lists_registry():
+    with pytest.raises(ValueError) as ei:
+        get_algorithm("fedsgdmomentum")
+    msg = str(ei.value)
+    assert "fedsgdmomentum" in msg
+    for name in available_algorithms():
+        assert name in msg
+
+
+def test_fedsim_rejects_unknown_algorithm_with_listing():
+    from repro.fed import FedSim, FedSimConfig
+
+    cfg = FedSimConfig(algorithm="nope", n_clients=2)
+    data = {"x": np.zeros((4, 2), np.float32), "y": np.zeros((4,), np.int64)}
+    parts = [np.asarray([0, 1]), np.asarray([2, 3])]
+    with pytest.raises(ValueError, match="fedecado"):
+        FedSim(lambda p, b: 0.0, {"w": np.zeros((2,))}, data, parts, cfg)
+
+
+# ---------------------------------------------------------------------------
+# capability flags
+# ---------------------------------------------------------------------------
+
+
+def test_capability_flags_of_builtins():
+    assert get_algorithm("fedecado").has_flow_dynamics
+    assert get_algorithm("fedecado").refreshable_gains
+    assert get_algorithm("ecado").full_participation_only
+    assert not get_algorithm("ecado").supports_hetero
+    assert not get_algorithm("ecado").refreshable_gains
+    for name in ("fedavg", "fedprox", "fednova"):
+        cls = get_algorithm(name)
+        assert not cls.has_flow_dynamics
+        assert not cls.full_participation_only
+        assert cls.supports_hetero
+    # client kinds resolve in the client-kind registry
+    for name in available_algorithms():
+        client_kind_spec(get_algorithm(name).client_kind)
+
+
+def test_capability_gates_event_backend():
+    """The event scheduler must be gated on has_flow_dynamics for EVERY
+    registered algorithm — not on a name list."""
+    import jax.numpy as jnp
+
+    from repro.data import make_classification
+    from repro.fed import FedSim, FedSimConfig, dirichlet_partition
+
+    data = make_classification(64, dim=4, n_classes=2, seed=0)
+    parts = dirichlet_partition(data["y"], 4, alpha=1.0, seed=0)
+    params0 = {"w": jnp.zeros((4, 2))}
+    loss_fn = lambda p, b: jnp.mean(jnp.square(b["x"] @ p["w"]))
+    for name in available_algorithms():
+        if get_algorithm(name).has_flow_dynamics:
+            continue
+        cfg = FedSimConfig(
+            algorithm=name, n_clients=4, participation=0.5, rounds=1,
+            batch_size=8, steps_per_epoch=1, seed=0, backend="event",
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg)
+        with pytest.raises(ValueError, match="event backend"):
+            sim.run()
+
+
+def test_sharded_backend_runs_plugin_without_weighted_delta_spec():
+    """A protocol-conformant plugin that implements ``aggregate`` directly
+    (no flow dynamics, no WeightedDeltaAlgorithm spec) must still run on
+    the sharded backend — via the per-round dense-aggregate fallback, not
+    an AttributeError inside the segment path."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import make_classification
+    from repro.fed import FedSim, FedSimConfig, dirichlet_partition
+
+    class MeanOfEndpoints(FederatedAlgorithm):
+        name = "mean-of-endpoints-test"   # instance-injected, NOT registered
+
+        def aggregate(self, sim, plan, result):
+            sim.params = jax.tree.map(
+                lambda xa: jnp.mean(xa, axis=0), result.x_new_a
+            )
+
+    data = make_classification(256, dim=6, n_classes=3, seed=4)
+    parts = dirichlet_partition(data["y"], 6, alpha=1.0, seed=4)
+    params0 = {"w": jax.random.normal(jax.random.PRNGKey(4), (6, 3)) / 3.0}
+
+    def loss_fn(p, batch):
+        lp = jax.nn.log_softmax(batch["x"] @ p["w"])
+        return -jnp.mean(
+            jnp.take_along_axis(lp, batch["y"][:, None].astype(np.int32), -1)
+        )
+
+    cfg = FedSimConfig(
+        algorithm="fedavg", n_clients=6, participation=0.5, rounds=2,
+        batch_size=8, steps_per_epoch=2, seed=1, backend="sharded",
+        sharded_pad_multiple=3,
+    )
+    sim = FedSim(loss_fn, params0, data, parts, cfg)
+    sim.alg = MeanOfEndpoints(cfg)        # swap in the bare-protocol plugin
+    hist = sim.run()
+    assert len(hist["loss"]) == 2 and np.isfinite(hist["loss"]).all()
+
+
+def test_make_algorithm_instances_are_per_config():
+    from repro.fed import FedSimConfig
+
+    a = make_algorithm(FedSimConfig(algorithm="fednova"))
+    b = make_algorithm(FedSimConfig(algorithm="fednova"))
+    assert a is not b and type(a) is type(b)
+
+
+# ---------------------------------------------------------------------------
+# client-kind registry
+# ---------------------------------------------------------------------------
+
+
+def test_client_kind_registry_builtins_and_errors():
+    assert {"fedecado", "fedprox", "sgd"} <= set(CLIENT_KINDS)
+    assert client_kind_spec("fedecado").takes_flow
+    assert not client_kind_spec("sgd").takes_flow
+    with pytest.raises(ValueError, match="already registered"):
+        register_client_kind("sgd", lambda mu: None)
+    with pytest.raises(ValueError) as ei:
+        client_kind_spec("warp")
+    assert "sgd" in str(ei.value)   # error lists registered kinds
+
+
+# ---------------------------------------------------------------------------
+# CohortPlan.windows() vectorization regression
+# ---------------------------------------------------------------------------
+
+
+def test_windows_vectorized_rounding():
+    """The batched (lrs · n_steps).astype(float32) must reproduce the old
+    per-element np.float32(float(lr) · int(ns)) rounding bit-for-bit:
+    both compute the exact product in double and round once to float32."""
+    from repro.sim import CohortPlan
+
+    rng = np.random.RandomState(0)
+    lrs = rng.uniform(1e-5, 2e-1, 4096).astype(np.float32)
+    n_steps = rng.randint(1, 1 << 14, 4096).astype(np.int64)
+    plan = CohortPlan(
+        rnd=0, idx=np.arange(4096), lrs=lrs, epochs=n_steps,
+        n_steps=n_steps, batch_idx=[],
+    )
+    old = np.asarray(
+        [np.float32(float(lr) * int(ns)) for lr, ns in zip(lrs, n_steps)],
+        np.float32,
+    )
+    new = plan.windows()
+    assert new.dtype == np.float32
+    np.testing.assert_array_equal(new.view(np.uint32), old.view(np.uint32))

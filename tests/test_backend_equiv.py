@@ -13,6 +13,11 @@ rtol ≈ 1e-6 for every client kind. Bitwise equality is NOT expected: vmap
 may re-associate the minibatch loss mean and psum re-associates the
 sharded Σ_a reductions.
 
+The algorithm axis is enumerated from the fed/algorithms plugin registry —
+both in the fuzz sampling and in a deterministic per-algorithm sweep — so
+any newly registered plugin (FedADMM, a user's algorithm) is equivalence-
+checked automatically, with zero edits here.
+
 A second group of properties pins the ``StackedPlan`` densification
 (engine.py::stack_plans): padding semantics, plan-order preservation, and
 the ragged-cohort refusal.
@@ -27,9 +32,10 @@ from hypothesis import strategies as st
 from repro.core import ConsensusConfig
 from repro.data import make_classification
 from repro.fed import FedSim, FedSimConfig, HeteroConfig, dirichlet_partition
+from repro.fed.algorithms import available_algorithms
 from repro.sim import CohortPlan, stack_plans
 
-ALGS = ("fedecado", "ecado", "fedprox", "fedavg", "fednova")
+ALGS = available_algorithms()
 
 _PROBLEM = None
 
@@ -89,6 +95,42 @@ def test_backends_match_sequential_oracle(
             hetero=HeteroConfig(1e-3, 1e-2, 1, epochs_max), seed=100 + seed,
             backend=backend, consensus=ConsensusConfig(max_substeps=6),
             sharded_pad_multiple=(pad_multiple or None),
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg)
+        hist = sim.run()
+        runs[backend] = (hist["loss"], sim.current_params())
+
+    ref_loss, ref_params = runs["sequential"]
+    for backend in ("vectorized", "sharded"):
+        loss, params = runs[backend]
+        np.testing.assert_allclose(
+            loss, ref_loss, rtol=1e-6, atol=1e-7,
+            err_msg=f"{backend} history diverged from sequential ({alg})",
+        )
+        for a, b in zip(
+            jax.tree.leaves(ref_params), jax.tree.leaves(params), strict=True
+        ):
+            np.testing.assert_allclose(
+                np.asarray(b), np.asarray(a), rtol=1e-6, atol=2e-7,
+                err_msg=f"{backend} params diverged from sequential ({alg})",
+            )
+
+
+@pytest.mark.parametrize("alg", ALGS)
+def test_every_registered_algorithm_matches_oracle(alg):
+    """Deterministic sweep over the WHOLE registry (the fuzz above samples
+    the algorithm axis; this guarantees each registered plugin — including
+    ones added after this test was written — gets at least one
+    ragged+uneven-padding equivalence check per run)."""
+    data, parts, params0, loss_fn = _problem()
+    runs = {}
+    for backend in ("sequential", "vectorized", "sharded"):
+        cfg = FedSimConfig(
+            algorithm=alg, n_clients=len(parts), participation=0.5,
+            rounds=2, batch_size=16, steps_per_epoch=2,   # bs 16 -> ragged
+            hetero=HeteroConfig(1e-3, 1e-2, 1, 3), seed=77,
+            backend=backend, consensus=ConsensusConfig(max_substeps=6),
+            sharded_pad_multiple=3,
         )
         sim = FedSim(loss_fn, params0, data, parts, cfg)
         hist = sim.run()

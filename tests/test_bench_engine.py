@@ -1,8 +1,12 @@
 """Engine-bench harness smoke test: ``benchmarks/run.py --only engine`` must
 run end-to-end and persist a ``BENCH_engine.json`` whose schema downstream
-tooling can rely on (backend × n_clients → rounds/sec). The schema is pinned
-here — bump ``ENGINE_BENCH_SCHEMA_VERSION`` in benchmarks/run.py when it
-changes, and update this test in the same PR."""
+tooling can rely on (algorithm × backend × n_clients → rounds/sec). The
+schema is pinned here — bump ``ENGINE_BENCH_SCHEMA_VERSION`` in
+benchmarks/run.py when it changes, and update this test in the same PR.
+
+Schema history: v1 = backend × n_clients (single hardwired algorithm);
+v2 = adds the per-algorithm axis ("algorithms" list + "algorithm" per
+results row, enumerable from the fed/algorithms registry)."""
 import importlib.util
 import json
 import os
@@ -26,6 +30,7 @@ def test_engine_bench_runs_and_json_schema_is_stable(tmp_path):
     report = bench.engine_bench(
         rounds=2, sizes=(4,),
         backends=("sequential", "vectorized", "sharded"),
+        algorithms=("fedecado", "fednova"),
         json_path=str(json_path),
     )
 
@@ -35,35 +40,39 @@ def test_engine_bench_runs_and_json_schema_is_stable(tmp_path):
     assert persisted == report
 
     # -- schema: top level ------------------------------------------------
-    assert persisted["schema_version"] == bench.ENGINE_BENCH_SCHEMA_VERSION == 1
+    assert persisted["schema_version"] == bench.ENGINE_BENCH_SCHEMA_VERSION == 2
     assert persisted["benchmark"] == "engine"
     assert isinstance(persisted["n_devices"], int) and persisted["n_devices"] >= 1
     assert persisted["rounds"] == 2
     assert persisted["sizes"] == [4]
     assert persisted["backends"] == ["sequential", "vectorized", "sharded"]
+    assert persisted["algorithms"] == ["fedecado", "fednova"]
     assert isinstance(persisted["config"], dict)
-    assert persisted["config"]["algorithm"] == "fedecado"
 
-    # -- schema: results rows — one per (backend × n_clients) -------------
+    # -- schema: results rows — one per (algorithm × backend × n_clients) --
     rows = persisted["results"]
     assert isinstance(rows, list)
     seen = set()
     for row in rows:
-        assert set(row) == {"backend", "n_clients", "rounds_per_sec"}
+        assert set(row) == {"algorithm", "backend", "n_clients", "rounds_per_sec"}
+        assert row["algorithm"] in persisted["algorithms"]
         assert row["backend"] in persisted["backends"]
         assert row["n_clients"] in persisted["sizes"]
         assert isinstance(row["rounds_per_sec"], float)
         assert row["rounds_per_sec"] > 0
-        seen.add((row["backend"], row["n_clients"]))
+        seen.add((row["algorithm"], row["backend"], row["n_clients"]))
     assert seen == {
-        (b, n) for b in persisted["backends"] for n in persisted["sizes"]
+        (a, b, n)
+        for a in persisted["algorithms"]
+        for b in persisted["backends"]
+        for n in persisted["sizes"]
     }
 
 
 def test_repo_bench_artifact_matches_schema():
     """The committed BENCH_engine.json (produced on 8 forced host devices)
     must parse under the same schema and witness the acceptance criterion:
-    sharded rounds/sec ≥ vectorized at the largest size."""
+    sharded rounds/sec ≥ vectorized at the largest size (fedecado axis)."""
     path = os.path.join(
         os.path.dirname(__file__), os.pardir, "BENCH_engine.json"
     )
@@ -71,10 +80,12 @@ def test_repo_bench_artifact_matches_schema():
         pytest.skip("no committed BENCH_engine.json")
     with open(path) as f:
         report = json.load(f)
-    assert report["schema_version"] == 1
+    assert report["schema_version"] == 2
+    assert "fedecado" in report["algorithms"]
     n_max = max(report["sizes"])
     rps = {
         r["backend"]: r["rounds_per_sec"]
-        for r in report["results"] if r["n_clients"] == n_max
+        for r in report["results"]
+        if r["n_clients"] == n_max and r["algorithm"] == "fedecado"
     }
     assert rps["sharded"] >= rps["vectorized"]

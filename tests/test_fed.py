@@ -178,8 +178,10 @@ def test_fedecado_beats_fedavg_on_heterogeneous_noniid(mlp_problem):
 
 
 def test_all_algorithms_run_one_round(mlp_problem):
+    from repro.fed import available_algorithms
+
     data, parts, params0, loss_fn, eval_fn = mlp_problem
-    for alg in ("fedecado", "ecado", "fedavg", "fedprox", "fednova"):
+    for alg in available_algorithms():
         cfg = FedSimConfig(
             algorithm=alg, n_clients=12, participation=0.25, rounds=2,
             batch_size=16, steps_per_epoch=2, seed=0, eval_every=2,
