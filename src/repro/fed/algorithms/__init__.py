@@ -81,9 +81,10 @@ from repro.fed.algorithms.averaging import (  # noqa: E402
     fedavg_weights,
     fednova_weights,
 )
+from repro.fed.algorithms.fedadmm import FedADMM  # noqa: E402
 from repro.fed.algorithms.fedecado import ECADO, FedECADO  # noqa: E402
 
-for _cls in (FedECADO, ECADO, FedAvg, FedProx, FedNova):
+for _cls in (FedECADO, ECADO, FedAvg, FedProx, FedNova, FedADMM):
     register(_cls)
 
 __all__ = [
@@ -91,6 +92,6 @@ __all__ = [
     "apply_weighted_delta", "weighted_delta",
     "register", "available_algorithms", "get_algorithm", "make_algorithm",
     "comparison_algorithms",
-    "FedECADO", "ECADO", "FedAvg", "FedProx", "FedNova",
+    "FedECADO", "ECADO", "FedAvg", "FedProx", "FedNova", "FedADMM",
     "fedavg_weights", "fednova_weights",
 ]

@@ -1,0 +1,78 @@
+"""FedADMM (Gong, Li & Freris, 2022) as a registry plugin.
+
+Each client k keeps a dual variable λ_k (parameter-shaped, like SCAFFOLD
+control variates) and locally minimizes the augmented Lagrangian
+
+    L_k(x) = f_k(x) + ⟨λ_k, x − z⟩ + (ρ/2)·‖x − z‖²
+
+by SGD from the broadcast server state z — gradient addend
+λ_k + ρ(x − z), i.e. the FedECADO flow-row machinery composed with the
+FedProx proximal pull, registered below as the ``admm`` client kind
+(``takes_flow``: the backends gather/vmap the λ rows exactly like flow
+variables). After K local steps the duals and server state update
+
+    λ_k ← λ_k + ρ(x_k − z)            (dual ascent)
+    z   ← Σ_k p̃_k (x_k + λ_k⁺/ρ)      (data-weighted over the cohort)
+
+which in weighted-delta form is the transformed endpoint
+y_k = x_k + λ_k⁺/ρ with FedAvg weights — so aggregation rides the shared
+``apply_weighted_delta`` / Pallas batch-agg / psum machinery untouched.
+ρ reuses ``FedSimConfig.mu`` (both are the proximal strength).
+
+This module is the API's acceptance proof: registering it here makes
+FedADMM run on the sequential, vectorized AND sharded backends — and be
+picked up by the registry-parametrized equivalence fuzz, the CLIs and the
+engine bench — with **zero lines changed** in ``sim/``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.algorithms.averaging import FedAvg
+from repro.fed.client import register_client_kind
+
+
+def _admm_extra(mu):
+    """λ_i + ρ(x − x0): the dual + augmentation gradient addend (ρ = mu)."""
+
+    def extra(x, x0, lam):
+        return jax.tree.map(
+            lambda l, a, b: l
+            + mu * (a.astype(jnp.float32) - b.astype(jnp.float32)),
+            lam, x, x0,
+        )
+
+    return extra
+
+
+register_client_kind("admm", _admm_extra, takes_flow=True)
+
+
+class FedADMM(FedAvg):
+    name = "fedadmm"
+    client_kind = "admm"
+    has_client_state = True      # the duals λ, leaves (n, ...), zeros at init
+
+    @property
+    def rho(self) -> float:
+        # clamp away 0 so the y = x + λ/ρ transform stays finite even if a
+        # user zeroes mu (the client step then degenerates to plain SGD)
+        return float(max(self.cfg.mu, 1e-8))
+
+    def client_mu(self) -> float:
+        return float(self.cfg.mu)
+
+    def agg_transform(self, x_c, x_new_a, rows):
+        rho = np.float32(self.rho)
+        lam_new = jax.tree.map(
+            lambda lam, xa, xc: lam
+            + rho * (xa.astype(jnp.float32) - xc.astype(jnp.float32)[None]),
+            rows, x_new_a, x_c,
+        )
+        y_a = jax.tree.map(
+            lambda xa, lam: xa.astype(jnp.float32) + lam / rho,
+            x_new_a, lam_new,
+        )
+        return y_a, lam_new
