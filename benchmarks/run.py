@@ -14,6 +14,10 @@ System benches:
                         on 8 forced host devices, with a per-algorithm axis
                         (--algorithms, names from the fed/algorithms
                         registry); persists BENCH_engine.json
+  scenarios           — a reduced algorithms × heterogeneity-scenarios
+                        matrix through launch/sweep.py (the full
+                        committed BENCH_scenarios.json is produced by
+                        ``python -m repro.launch.sweep`` directly)
   roofline_summary    — per (arch x shape) terms from results/dryrun JSONs
 
 Prints ``name,us_per_call,derived`` CSV rows; the engine bench additionally
@@ -369,6 +373,27 @@ def engine_bench(
     return report
 
 
+def scenario_matrix_bench(rounds=10):
+    """Reduced scenario × algorithm matrix via the sweep runner
+    (launch/sweep.py): CSV rows with final accuracy + wall time per cell.
+    Covers one label-skew, one covariate-shift and one availability-trace
+    regime so the scenario plumbing stays exercised by the bench sweep."""
+    from repro.launch.sweep import run_sweep
+
+    report = run_sweep(
+        algorithms=("fedecado", "fednova"),
+        scenarios=("dirichlet01", "feature-shift", "diurnal"),
+        seeds=1, rounds=rounds, clients=10, equiv_scenarios=(),
+        json_path=None, table=False,
+    )
+    for row in report["results"]:
+        _row(
+            f"scenario_{row['scenario']}_{row['algorithm']}",
+            row["wall_s"] * 1e6,
+            f"acc={row['acc']:.3f};loss={row['final_loss']:.3f}",
+        )
+
+
 def roofline_summary(results_dir="results/dryrun"):
     """Echo the dry-run roofline terms as CSV (no compute)."""
     paths = sorted(glob.glob(os.path.join(results_dir, "*.json")))
@@ -397,7 +422,8 @@ def main() -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="subset: table1,table2,fig6,kernels,adaptive,engine,roofline")
+                    help="subset: table1,table2,fig6,kernels,adaptive,"
+                    "engine,scenarios,roofline")
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--engine-json", default="BENCH_engine.json",
                     help="where the engine bench persists its JSON report")
@@ -450,6 +476,8 @@ def main() -> None:
             algorithms=algorithms,
             json_path=args.engine_json if sel == {"engine"} else None,
         )
+    if want("scenarios"):
+        scenario_matrix_bench(rounds=min(args.rounds, 10))
     if want("table1"):
         table1_noniid(rounds=args.rounds)
     if want("table2"):

@@ -1,16 +1,24 @@
-"""Paper §5.1 experiment at reduced scale: non-IID Dirichlet(alpha) data,
-all four algorithms, repeated over multiple partition seeds (paper Table 1).
+"""Paper §5.1 experiment at reduced scale: statistical-skew scenarios from
+the repro/scenarios registry (default: the paper's Dir(0.1) label skew),
+all comparison algorithms, repeated over multiple partition seeds (paper
+Table 1). ``--scenario`` enumerates the scenario registry exactly as
+``--algorithm`` CLIs enumerate the algorithm registry; ``--alpha``
+overrides the Dirichlet concentration on an ad-hoc spec copy.
 
   PYTHONPATH=src python examples/noniid_dirichlet.py --repeats 3 --rounds 40
+  PYTHONPATH=src python examples/noniid_dirichlet.py --scenario label-shard2
 """
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data import make_classification
-from repro.fed import FedSim, FedSimConfig, dirichlet_partition
+from repro.fed import FedSim, FedSimConfig
+from repro.fed.algorithms import comparison_algorithms
+from repro.scenarios import PartitionSpec, available_scenarios, get_scenario
 
 
 def build_problem(seed):
@@ -40,29 +48,49 @@ def build_problem(seed):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument(
+        "--scenario", default="dirichlet01", choices=available_scenarios(),
+        help="heterogeneity scenario (repro/scenarios registry)",
+    )
+    ap.add_argument(
+        "--alpha", type=float, default=None,
+        help="override the scenario's Dirichlet alpha (ad-hoc spec copy)",
+    )
     ap.add_argument("--clients", type=int, default=25)
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
 
-    results = {a: [] for a in ("fedecado", "fednova", "fedprox", "fedavg")}
+    scenario = get_scenario(args.scenario)
+    if args.alpha is not None:
+        if scenario.partition.kind != "dirichlet":
+            raise SystemExit(
+                f"--alpha only applies to Dirichlet scenarios; "
+                f"{scenario.name!r} partitions by {scenario.partition.kind!r}"
+            )
+        scenario = dataclasses.replace(
+            scenario,
+            name=f"{scenario.name}@alpha{args.alpha:g}",
+            partition=dataclasses.replace(scenario.partition, alpha=args.alpha),
+        )
+
+    results = {a: [] for a in comparison_algorithms()}
     for rep in range(args.repeats):
         data, params0, loss_fn, eval_fn = build_problem(rep)
-        parts = dirichlet_partition(data["y"], args.clients, args.alpha, seed=rep)
         for alg in results:
             cfg = FedSimConfig(
                 algorithm=alg, n_clients=args.clients, participation=0.2,
                 rounds=args.rounds, batch_size=32, steps_per_epoch=3,
-                hetero=None, seed=100 + rep, eval_every=args.rounds,
+                seed=100 + rep, eval_every=args.rounds, scenario=scenario,
             )
-            sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
+            sim = FedSim(loss_fn, params0, data, None, cfg, eval_fn)
             hist = sim.run()
             acc = hist["metrics"][-1][1]["acc"]
             results[alg].append(acc)
             print(f"rep {rep} {alg:10s} acc={acc:.4f}", flush=True)
 
-    print("\n== Table-1-style summary (mean ± std over partitions) ==")
+    print(f"\n== Table-1-style summary ({scenario.name}: {scenario.axes()}; "
+          "mean ± std over partitions) ==")
     for alg, accs in results.items():
         print(f"{alg:10s} {np.mean(accs)*100:5.1f} ({np.std(accs)*100:.1f})")
 

@@ -1,7 +1,12 @@
 from repro.data.pipeline import ClientDataLoader, shard_batch
-from repro.data.synthetic import lm_batches, make_classification, make_lm_stream
+from repro.data.synthetic import (
+    lm_batches,
+    make_classification,
+    make_lm_stream,
+    rotate_scale,
+)
 
 __all__ = [
-    "make_classification", "make_lm_stream", "lm_batches",
+    "make_classification", "make_lm_stream", "lm_batches", "rotate_scale",
     "ClientDataLoader", "shard_batch",
 ]

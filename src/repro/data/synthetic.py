@@ -36,6 +36,22 @@ def make_classification(
     return {"x": x, "y": y}
 
 
+def rotate_scale(x: np.ndarray, theta: float, scale: float) -> np.ndarray:
+    """s·R(θ)·x on a (m, d) batch: R(θ) rotates each consecutive coordinate
+    pair by θ (block-diagonal, orthogonal; an odd final coordinate passes
+    through). The per-client covariate-shift primitive of the scenario
+    subsystem (repro/scenarios::FeatureShiftSpec) — orthogonality keeps the
+    synthetic teacher's decision structure recoverable, so the shift is a
+    distribution mismatch rather than label destruction."""
+    out = x.copy()
+    c, s = np.cos(theta), np.sin(theta)
+    d2 = (x.shape[1] // 2) * 2
+    a, b = x[:, 0:d2:2], x[:, 1:d2:2]
+    out[:, 0:d2:2] = c * a - s * b
+    out[:, 1:d2:2] = s * a + c * b
+    return (scale * out).astype(x.dtype)
+
+
 def make_lm_stream(
     n_tokens: int = 1 << 16,
     vocab: int = 512,

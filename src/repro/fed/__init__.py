@@ -17,7 +17,13 @@ from repro.fed.client import (
     register_client_kind,
     sgd_client,
 )
-from repro.fed.partition import data_fractions, dirichlet_partition, iid_partition
+from repro.fed.partition import (
+    data_fractions,
+    dirichlet_partition,
+    iid_partition,
+    label_shard_partition,
+    quantity_skew_partition,
+)
 from repro.fed.server import ALGORITHMS, FedSim, FedSimConfig
 
 __all__ = [
@@ -29,4 +35,5 @@ __all__ = [
     "fedecado_client_sim", "sgd_client", "fedprox_client",
     "fedavg_aggregate", "fednova_aggregate", "fedprox_aggregate",
     "dirichlet_partition", "iid_partition", "data_fractions",
+    "label_shard_partition", "quantity_skew_partition",
 ]

@@ -1,13 +1,25 @@
 """Non-IID data partitioning across clients.
 
-``dirichlet_partition`` reproduces the paper's §5.1 setting: class-label
-proportions per client drawn from Dir(alpha) (paper uses Dir(0.1) over 100
-clients); client dataset sizes |D_i| fall out of the draw and feed the p_i
-weights of the aggregate sensitivity model (eq. 34).
+The statistical-skew axis of the scenario subsystem (repro/scenarios,
+DESIGN.md §7) is built from the partitioners here:
+
+* ``dirichlet_partition`` reproduces the paper's §5.1 setting: class-label
+  proportions per client drawn from Dir(alpha) (paper uses Dir(0.1) over 100
+  clients); client dataset sizes |D_i| fall out of the draw and feed the p_i
+  weights of the aggregate sensitivity model (eq. 34).
+* ``label_shard_partition`` is the McMahan-style pathological split: each
+  client holds samples from at most ``shards_per_client`` classes.
+* ``quantity_skew_partition`` keeps labels IID but draws client sizes from a
+  Zipf profile — a few data-rich clients, a long tail of tiny ones.
+* ``iid_partition`` is the uniform control.
+
+All partitioners are deterministic per ``seed`` and return disjoint index
+arrays covering every sample exactly once (tests/test_scenarios.py pins the
+invariants).
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 
@@ -18,31 +30,140 @@ def dirichlet_partition(
     alpha: float = 0.1,
     seed: int = 0,
     min_size: int = 2,
+    max_retries: int = 64,
 ) -> List[np.ndarray]:
     """Partition sample indices by Dirichlet-distributed class proportions.
 
-    Returns a list of index arrays, one per client.
+    Returns a list of index arrays, one per client. A draw leaving any
+    client below ``min_size`` samples is rejected and redrawn from a
+    deterministically advanced seed (attempt ``a`` uses RandomState
+    ``seed + 0x9E3779B9·a mod 2^32``; attempt 0 keeps the historical
+    stream, so succeeding-first-try results are unchanged). After
+    ``max_retries`` rejected draws — or immediately when ``min_size`` is
+    arithmetically unreachable — a ValueError explains which knob to relax.
     """
+    n_samples = len(labels)
+    if n_samples < n_clients * min_size:
+        raise ValueError(
+            f"dirichlet_partition: min_size={min_size} is unreachable — "
+            f"{n_samples} samples cannot give {n_clients} clients "
+            f">= {min_size} each; lower min_size or n_clients"
+        )
     rng = np.random.RandomState(seed)
     n_classes = int(labels.max()) + 1
     idx_by_class = [np.where(labels == c)[0] for c in range(n_classes)]
     for idx in idx_by_class:
         rng.shuffle(idx)
 
-    while True:
+    for attempt in range(max_retries):
+        if attempt:
+            # advance the seed deterministically: each retry draws from a
+            # fresh, attempt-derived stream instead of whatever state the
+            # previous rejection happened to leave behind
+            rng = np.random.RandomState((seed + 0x9E3779B9 * attempt) % (1 << 32))
         client_idx: List[list] = [[] for _ in range(n_clients)]
-        for c, idx in enumerate(idx_by_class):
+        for idx in idx_by_class:
             props = rng.dirichlet(np.full(n_clients, alpha))
             cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
             for client, part in enumerate(np.split(idx, cuts)):
                 client_idx[client].extend(part.tolist())
         sizes = np.array([len(ci) for ci in client_idx])
         if sizes.min() >= min_size:
-            break
+            out = [np.asarray(sorted(ci), dtype=np.int64) for ci in client_idx]
+            for o in out:
+                rng.shuffle(o)
+            return out
+    raise ValueError(
+        f"dirichlet_partition: no draw satisfied min_size={min_size} after "
+        f"{max_retries} attempts (n_samples={n_samples}, "
+        f"n_clients={n_clients}, alpha={alpha}); lower min_size, raise "
+        f"alpha, or raise max_retries"
+    )
+
+
+def label_shard_partition(
+    labels: np.ndarray,
+    n_clients: int,
+    shards_per_client: int = 2,
+    seed: int = 0,
+) -> List[np.ndarray]:
+    """Pathological label skew: each client holds <= ``shards_per_client``
+    classes (the McMahan et al. 2017 CIFAR/MNIST split). Classes are dealt
+    to clients round-robin over a seed-permuted class order, then each
+    class's (shuffled) samples are split evenly among the clients that hold
+    it — so every sample lands on exactly one client.
+    """
+    rng = np.random.RandomState(seed)
+    n_classes = int(labels.max()) + 1
+    perm = rng.permutation(n_classes)
+    class_clients: List[List[int]] = [[] for _ in range(n_classes)]
+    for i in range(n_clients):
+        held = set()
+        for j in range(shards_per_client):
+            c = int(perm[(i * shards_per_client + j) % n_classes])
+            if c not in held:            # k > n_classes would deal repeats
+                held.add(c)
+                class_clients[c].append(i)
+    client_idx: List[list] = [[] for _ in range(n_clients)]
+    for c in range(n_classes):
+        if not class_clients[c]:
+            # fewer shard slots than classes: deal the orphan class to the
+            # least-loaded client (keeps the partition complete; that client
+            # may then exceed shards_per_client only when
+            # n_clients·shards_per_client < n_classes)
+            class_clients[c].append(
+                int(np.argmin([len(ci) for ci in client_idx]))
+            )
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        for cl, chunk in zip(
+            class_clients[c], np.array_split(idx, len(class_clients[c]))
+        ):
+            client_idx[cl].extend(chunk.tolist())
+    if min(len(ci) for ci in client_idx) == 0:
+        raise ValueError(
+            f"label_shard_partition: {n_clients} clients x "
+            f"{shards_per_client} shards left an empty client "
+            f"(n_classes={n_classes}); lower n_clients or raise "
+            f"shards_per_client"
+        )
     out = [np.asarray(sorted(ci), dtype=np.int64) for ci in client_idx]
     for o in out:
         rng.shuffle(o)
     return out
+
+
+def quantity_skew_partition(
+    n_samples: int,
+    n_clients: int,
+    zipf_a: float = 1.4,
+    seed: int = 0,
+    min_size: int = 2,
+) -> List[np.ndarray]:
+    """IID labels, Zipf(``zipf_a``) client sizes: client at (permuted) rank
+    r holds ~ r^-a of the data — a few data-rich clients, a long tail of
+    tiny ones. Sizes are floored at ``min_size``; the rank->client map is a
+    seed-drawn permutation so client 0 is not always the giant.
+    """
+    if n_samples < n_clients * min_size:
+        raise ValueError(
+            f"quantity_skew_partition: min_size={min_size} is unreachable — "
+            f"{n_samples} samples over {n_clients} clients"
+        )
+    rng = np.random.RandomState(seed)
+    ranks = np.arange(1, n_clients + 1, dtype=np.float64) ** (-zipf_a)
+    props = ranks / ranks.sum()
+    spare = n_samples - n_clients * min_size
+    sizes = min_size + np.floor(props * spare).astype(np.int64)
+    # largest-remainder: hand the leftover samples to the largest shares
+    rem = n_samples - int(sizes.sum())
+    order = np.argsort(-(props * spare - np.floor(props * spare)))
+    sizes[order[:rem]] += 1
+    assert sizes.sum() == n_samples
+    sizes = sizes[rng.permutation(n_clients)]       # rank -> client map
+    idx = rng.permutation(n_samples)
+    cuts = np.cumsum(sizes)[:-1]
+    return [np.asarray(p, dtype=np.int64) for p in np.split(idx, cuts)]
 
 
 def data_fractions(partitions: List[np.ndarray]) -> np.ndarray:

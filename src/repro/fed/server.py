@@ -7,6 +7,18 @@ participation, non-IID Dirichlet skew, and heterogeneous computation
 (lr_i, e_i per eqs. 43-44). Used by the paper-reproduction experiments,
 examples/ and benchmarks/.
 
+Heterogeneity regimes come from the scenario registry (repro/scenarios,
+DESIGN.md §7): when ``FedSimConfig.scenario`` names (or carries) a
+``Scenario``, the scenario owns partitioning and per-client statistical
+transforms (``FedSim`` materializes them from the raw dataset — pass
+``partitions=None``), and its systems axis reshapes every round's
+``CohortPlan`` inside ``_draw_plan``: availability traces replace the
+uniform cohort draw, device profiles replace the ``HeteroConfig`` envelope
+for (lr_i, e_i), and mid-round dropout truncates local windows. Because all
+of that happens in the shared host-side plan draw, every execution backend
+consumes scenarios unchanged. ``drift_every`` re-partitions at segment
+boundaries (handled like gain refresh).
+
 ``FedSim`` owns no algorithm-specific logic: ``cfg.algorithm`` is resolved
 once through ``make_algorithm`` and every formerly hardwired decision —
 client kind, per-client objective weights, server state and gains,
@@ -89,6 +101,13 @@ class FedSimConfig:
     # (DESIGN.md §5.5) — lets tests exercise uneven client→device padding
     # even on a single-device host; None = pad to the device count
     sharded_pad_multiple: Optional[int] = None
+    # --- heterogeneity scenario (repro/scenarios, DESIGN.md §7) ---
+    # a registered scenario name or a Scenario instance; when set, FedSim
+    # materializes partitions + per-client transforms from the raw dataset
+    # (pass partitions=None) and the scenario's systems axis (availability,
+    # device profiles, dropout) steers every round's CohortPlan. Scenario
+    # device profiles take precedence over ``hetero``.
+    scenario: Optional[Any] = None
 
 
 class FedSim:
@@ -99,16 +118,29 @@ class FedSim:
         loss_fn: Callable,                 # loss_fn(params, batch) -> scalar
         params0: Pytree,
         data: Dict[str, np.ndarray],       # {"x": (N, ...), "y": (N,)}
-        partitions: Sequence[np.ndarray],  # per-client index arrays
+        partitions: Optional[Sequence[np.ndarray]],  # per-client index arrays
         cfg: FedSimConfig,
         eval_fn: Optional[Callable] = None,  # eval_fn(params) -> dict metrics
     ):
         self.alg = make_algorithm(cfg)     # ValueError lists the registry
         self.loss_fn = loss_fn
         self.cfg = cfg
+        self.n = cfg.n_clients
+        self.scn = None
+        self._raw_data = data
+        if cfg.scenario is not None:
+            from repro.scenarios import make_scenario  # lazy: avoid cycle
+
+            if partitions is not None:
+                raise ValueError(
+                    "pass partitions=None when cfg.scenario is set — the "
+                    "scenario owns partitioning (and the per-client "
+                    "statistical transforms that ride on it)"
+                )
+            self.scn = make_scenario(cfg.scenario)
+            data, partitions = self.scn.materialize(data, self.n, cfg.seed)
         self.data = data
         self.partitions = list(partitions)
-        self.n = cfg.n_clients
         assert len(self.partitions) == self.n
         self.eval_fn = eval_fn
         self.rng = np.random.RandomState(cfg.seed)
@@ -142,17 +174,39 @@ class FedSim:
         """Roll ALL host randomness for one round into a CohortPlan: cohort
         choice, lr_i/e_i heterogeneity, and per-step minibatch indices — in
         exactly the rng-consumption order of the seed sequential loop, so
-        histories are reproducible across backends (and with the seed)."""
+        histories are reproducible across backends (and with the seed).
+        The scenario's systems axis hooks in here and ONLY here — cohort
+        via availability trace, rates via device profiles, windows via
+        mid-round dropout — which is exactly what keeps every backend
+        consuming scenarios unchanged (DESIGN.md §7)."""
         from repro.sim.engine import CohortPlan
 
         cfg = self.cfg
-        idx = np.sort(self.rng.choice(self.n, A, replace=False))
-        if cfg.hetero is not None and self.alg.supports_hetero:
+        scn = self.scn
+        if scn is not None and not self.alg.full_participation_only:
+            # availability-trace cohorts can be smaller than A on sparse
+            # rounds; full-participation algorithms (ecado) keep the
+            # synchronous all-clients draw by definition
+            idx = scn.draw_cohort(self.rng, rnd, self.n, A)
+        else:
+            idx = np.sort(self.rng.choice(self.n, A, replace=False))
+        A = len(idx)
+        if scn is not None and scn.spec.profiles and self.alg.supports_hetero:
+            lrs, eps = scn.draw_rates(self.rng, idx)
+        elif cfg.hetero is not None and self.alg.supports_hetero:
             lrs, eps = cfg.hetero.sample(self.rng, A)
         else:
             lrs = np.full(A, cfg.lr_fixed, np.float32)
             eps = np.full(A, cfg.epochs_fixed, np.int64)
         n_steps = eps.astype(np.int64) * cfg.steps_per_epoch
+        if (
+            scn is not None
+            and scn.spec.dropout is not None
+            and self.alg.supports_hetero
+        ):
+            # truncation precedes the minibatch draw, so batch_idx and the
+            # windows T_i = lr_i·n_steps_i stay consistent on every backend
+            n_steps = scn.apply_dropout(self.rng, n_steps)
 
         bs = cfg.batch_size
         batch_idx = []
@@ -167,6 +221,21 @@ class FedSim:
             rnd=rnd, idx=idx, lrs=lrs, epochs=np.asarray(eps),
             n_steps=np.asarray(n_steps), batch_idx=batch_idx,
         )
+
+    # ------------------------------------------------------------------
+    def _apply_drift(self) -> None:
+        """Scenario concept drift: re-materialize partitions (and any
+        per-client statistical transforms) from the pristine dataset and
+        refresh the p_i weights. Runs only at segment boundaries
+        (``_segment_end`` breaks segments at drift multiples). When a
+        transform rewrites the arrays, materialize returns a NEW data dict,
+        so identity-keyed device caches (sim/sharded.py) re-upload."""
+        self.data, parts = self.scn.materialize(
+            self._raw_data, self.n, self.cfg.seed
+        )
+        self.partitions = list(parts)
+        p = data_fractions(self.partitions)
+        self.p_hat = (p * self.n).astype(np.float32)
 
     # ------------------------------------------------------------------
     def _apply_round(self, plan, result) -> Dict[str, Any]:
@@ -194,6 +263,11 @@ class FedSim:
             nxt = ((rnd // cfg.gain_update_every) + 1) * cfg.gain_update_every
             if nxt > rnd:
                 end = min(end, nxt)
+        if self.scn is not None and self.scn.spec.drift_every:
+            # partition drift re-materializes host-side state, so every
+            # drift boundary must start a fresh segment
+            de = self.scn.spec.drift_every
+            end = min(end, ((rnd // de) + 1) * de)
         if self.eval_fn is not None:
             for r in range(rnd, end):
                 if r % cfg.eval_every == 0 or r == rounds - 1:
@@ -211,6 +285,8 @@ class FedSim:
 
         rnd = 0
         while rnd < rounds:
+            if self.scn is not None and self.scn.drift_due(rnd):
+                self._apply_drift()
             if (
                 cfg.gain_update_every
                 and rnd

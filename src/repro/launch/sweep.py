@@ -1,0 +1,346 @@
+"""Experiment-matrix sweep runner: algorithms × scenarios × seeds.
+
+Crosses the fed/algorithms plugin registry with the repro/scenarios
+heterogeneity registry into the paper-style evaluation matrix (§5: FedECADO
+vs FedProx/FedNova *across heterogeneous regimes*), prints Table-1-style
+comparison tables, and persists a machine-readable ``BENCH_scenarios.json``
+(schema pinned by tests/test_bench_scenarios.py, like BENCH_engine.json).
+
+Two grids per run:
+
+* **accuracy matrix** — every (algorithm × scenario × seed) cell on the
+  primary ``--backend``: final eval accuracy + last-round loss + wall time;
+* **equivalence grid** — every algorithm × ``--equiv-scenarios`` ×
+  {sequential, vectorized, sharded}: loss histories of the non-sequential
+  backends must match the sequential oracle at ``--equiv-rtol`` (1e-6 — the
+  engine-wide equivalence bar), extending the backend-equivalence guarantee
+  to availability-trace / feature-shift / dropout scenarios. Any violation
+  exits non-zero unless ``--allow-equiv-fail``.
+
+The model/problem is the shared synthetic-teacher MLP of benchmarks/run.py
+(table-1 hyperparameters, L=0.01); ``loss_fn`` is module-level so the
+per-(kind, mu) jit caches of the shared backend instances hit across cells.
+
+  PYTHONPATH=src python -m repro.launch.sweep --rounds 40 --seeds 2
+  PYTHONPATH=src python -m repro.launch.sweep \
+      --algorithms fedecado,fednova --scenarios dirichlet01,diurnal \
+      --rounds 2 --clients 8 --seeds 1        # CI smoke grid
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SCENARIO_BENCH_SCHEMA_VERSION = 1
+
+EQUIV_BACKENDS = ("sequential", "vectorized", "sharded")
+
+# default equivalence scenarios: >= 6 registered regimes spanning every
+# axis the acceptance bar names — one availability trace (diurnal), one
+# feature shift, plus label/quantity skew and mid-round dropout
+DEFAULT_EQUIV_SCENARIOS = (
+    "dirichlet01", "label-shard2", "quantity-zipf",
+    "feature-shift", "diurnal", "flaky-dropout",
+)
+
+
+def _fwd(p, x):
+    return jnp.tanh(x @ p["w0"] + p["b0"]) @ p["w1"] + p["b1"]
+
+
+def loss_fn(p, batch):
+    """Module-level (closure-free) loss: ONE function object across every
+    sweep cell, so backend jit caches keyed on it are shared."""
+    lp = jax.nn.log_softmax(_fwd(p, batch["x"]))
+    return -jnp.mean(
+        jnp.take_along_axis(lp, batch["y"][:, None].astype(jnp.int32), -1)
+    )
+
+
+def build_problem(seed: int, n_samples: int = 2048, dim: int = 32,
+                  classes: int = 10, hidden: int = 48):
+    """Per-seed synthetic-teacher problem; params0 is seed-independent so
+    every cell starts from the same initialization."""
+    from repro.data import make_classification
+
+    data = make_classification(n_samples, dim=dim, n_classes=classes, seed=seed)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    params0 = {
+        "w0": jax.random.normal(k1, (dim, hidden)) / np.sqrt(dim),
+        "b0": jnp.zeros((hidden,)),
+        "w1": jax.random.normal(k2, (hidden, classes)) / np.sqrt(hidden),
+        "b1": jnp.zeros((classes,)),
+    }
+
+    def eval_fn(p):
+        pred = jnp.argmax(_fwd(p, jnp.asarray(data["x"])), -1)
+        return {"acc": float(jnp.mean(pred == jnp.asarray(data["y"])))}
+
+    return data, params0, eval_fn
+
+
+def _make_cfg(algorithm, scenario, seed, backend, *, rounds, clients,
+              participation, batch_size, steps_per_epoch):
+    from repro.core import ConsensusConfig
+    from repro.fed import FedSimConfig
+
+    return FedSimConfig(
+        algorithm=algorithm, n_clients=clients, participation=participation,
+        rounds=rounds, batch_size=batch_size, steps_per_epoch=steps_per_epoch,
+        lr_fixed=1e-2, epochs_fixed=2, hetero=None, seed=1000 + seed,
+        eval_every=rounds, backend=backend, scenario=scenario,
+        # L tuned on the table-1 config (benchmarks/run.py)
+        consensus=ConsensusConfig(L=0.01),
+    )
+
+
+def _shared_backend(cache: Dict[str, object], name: str):
+    """One backend instance per name for the whole sweep — their per-(kind,
+    mu) jit caches then amortize compilation across the matrix (the
+    engine-bench warm-up pattern)."""
+    if name not in cache:
+        from repro.sim.engine import SequentialBackend
+        from repro.sim.sharded import ShardedBackend
+        from repro.sim.vectorized import VectorizedBackend
+
+        cache[name] = {
+            "sequential": SequentialBackend,
+            "vectorized": VectorizedBackend,
+            "sharded": ShardedBackend,
+        }[name]()
+    return cache[name]
+
+
+def run_cell(algorithm: str, scenario: str, seed: int, backend: str,
+             problem, backends_cache, **grid) -> Dict[str, object]:
+    """One matrix cell: train, eval once at the end, return the row."""
+    from repro.fed import FedSim
+
+    data, params0, eval_fn = problem
+    cfg = _make_cfg(algorithm, scenario, seed, backend, **grid)
+    t0 = time.time()
+    sim = FedSim(loss_fn, params0, data, None, cfg, eval_fn)
+    sim.backend = _shared_backend(backends_cache, backend)
+    hist = sim.run()
+    return {
+        "algorithm": algorithm,
+        "scenario": scenario,
+        "seed": int(seed),
+        "backend": backend,
+        "acc": float(hist["metrics"][-1][1]["acc"]),
+        "final_loss": float(hist["loss"][-1]),
+        "wall_s": float(time.time() - t0),
+        "_history": [float(l) for l in hist["loss"]],
+    }
+
+
+def _table(report) -> str:
+    """Table-1-style mean±std accuracy matrix (rows scenarios, columns
+    algorithms, primary backend only)."""
+    algs, scns = report["algorithms"], report["scenarios"]
+    cells = {}
+    for r in report["results"]:
+        cells.setdefault((r["scenario"], r["algorithm"]), []).append(r["acc"])
+    w = max(12, max(len(a) for a in algs) + 1)
+    lines = [
+        "== accuracy (mean±std over seeds, backend="
+        f"{report['backend']}, rounds={report['rounds']}) ==",
+        f"{'scenario':18s}" + "".join(f"{a:>{w}s}" for a in algs),
+    ]
+    for s in scns:
+        row = f"{s:18s}"
+        for a in algs:
+            accs = cells.get((s, a), [])
+            row += (
+                f"{100 * np.mean(accs):7.1f}±{100 * np.std(accs):4.1f}".rjust(w)
+                if accs else "n/a".rjust(w)
+            )
+        lines.append(row)
+    return "\n".join(lines)
+
+
+def run_sweep(
+    algorithms: Optional[Sequence[str]] = None,
+    scenarios: Optional[Sequence[str]] = None,
+    *,
+    seeds: int = 2,
+    rounds: int = 40,
+    clients: int = 25,
+    participation: float = 0.2,
+    batch_size: int = 32,
+    steps_per_epoch: int = 5,
+    backend: str = "vectorized",
+    equiv_scenarios: Sequence[str] = DEFAULT_EQUIV_SCENARIOS,
+    equiv_rounds: int = 2,
+    equiv_rtol: float = 1e-6,
+    json_path: Optional[str] = "BENCH_scenarios.json",
+    table: bool = True,
+) -> Dict[str, object]:
+    """Run the matrix + equivalence grids and return the report dict
+    (persisted to ``json_path`` when set). Names are validated against both
+    registries BEFORE any cell runs."""
+    from repro.fed.algorithms import available_algorithms, get_algorithm
+    from repro.scenarios import available_scenarios, get_scenario
+
+    algorithms = tuple(algorithms or available_algorithms())
+    scenarios = tuple(scenarios or available_scenarios())
+    equiv_scenarios = tuple(equiv_scenarios)
+    for a in algorithms:
+        get_algorithm(a)
+    for s in (*scenarios, *equiv_scenarios):
+        get_scenario(s)
+
+    grid = dict(rounds=rounds, clients=clients, participation=participation,
+                batch_size=batch_size, steps_per_epoch=steps_per_epoch)
+    report: Dict[str, object] = {
+        "schema_version": SCENARIO_BENCH_SCHEMA_VERSION,
+        "benchmark": "scenarios",
+        "rounds": int(rounds),
+        "clients": int(clients),
+        "participation": float(participation),
+        "seeds": list(range(seeds)),
+        "algorithms": list(algorithms),
+        "scenarios": list(scenarios),
+        "backend": backend,
+        "config": {
+            "batch_size": int(batch_size),
+            "steps_per_epoch": int(steps_per_epoch),
+            "lr_fixed": 1e-2,
+            "epochs_fixed": 2,
+            "consensus_L": 0.01,
+        },
+        "equivalence_config": {
+            "backends": list(EQUIV_BACKENDS),
+            "scenarios": list(equiv_scenarios),
+            "rounds": int(equiv_rounds),
+            "rtol": float(equiv_rtol),
+        },
+        "results": [],
+        "equivalence": [],
+    }
+
+    backends_cache: Dict[str, object] = {}
+
+    # ---- accuracy matrix -------------------------------------------------
+    for seed in range(seeds):
+        problem = build_problem(seed)
+        for scenario in scenarios:
+            for algorithm in algorithms:
+                row = run_cell(algorithm, scenario, seed, backend,
+                               problem, backends_cache, **grid)
+                row.pop("_history")
+                report["results"].append(row)
+                print(
+                    f"seed {seed} {scenario:16s} {algorithm:10s} "
+                    f"acc={row['acc']:.4f} ({row['wall_s']:.1f}s)",
+                    flush=True,
+                )
+
+    # ---- backend-equivalence grid ---------------------------------------
+    if equiv_scenarios:
+        problem = build_problem(0)
+        egrid = dict(grid, rounds=equiv_rounds)
+        for scenario in equiv_scenarios:
+            for algorithm in algorithms:
+                hists = {}
+                for b in EQUIV_BACKENDS:
+                    hists[b] = run_cell(
+                        algorithm, scenario, 0, b, problem, backends_cache,
+                        **egrid,
+                    )["_history"]
+                ref = np.asarray(hists["sequential"], np.float64)
+                for b in EQUIV_BACKENDS[1:]:
+                    got = np.asarray(hists[b], np.float64)
+                    err = float(np.max(np.abs(got - ref)))
+                    ok = bool(
+                        np.allclose(got, ref, rtol=equiv_rtol, atol=1e-7)
+                    )
+                    report["equivalence"].append({
+                        "algorithm": algorithm,
+                        "scenario": scenario,
+                        "backend": b,
+                        "max_abs_err": err,
+                        "ok": ok,
+                    })
+                    print(
+                        f"equiv {scenario:16s} {algorithm:10s} {b:10s} "
+                        f"max|Δloss|={err:.2e} {'ok' if ok else 'FAIL'}",
+                        flush=True,
+                    )
+
+    if table:
+        print("\n" + _table(report), flush=True)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {json_path}", flush=True)
+    return report
+
+
+def main() -> None:
+    from repro.fed.algorithms import available_algorithms
+    from repro.scenarios import available_scenarios
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--algorithms", default=",".join(available_algorithms()),
+        help="comma-separated fed/algorithms registry names "
+        f"(registered: {', '.join(available_algorithms())})",
+    )
+    ap.add_argument(
+        "--scenarios", default=",".join(available_scenarios()),
+        help="comma-separated scenario registry names "
+        f"(registered: {', '.join(available_scenarios())})",
+    )
+    ap.add_argument("--seeds", type=int, default=2,
+                    help="number of repetition seeds (0..N-1)")
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--clients", type=int, default=25)
+    ap.add_argument("--participation", type=float, default=0.2)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--steps-per-epoch", type=int, default=5)
+    ap.add_argument(
+        "--backend", default="vectorized",
+        choices=("sequential", "vectorized", "sharded"),
+        help="primary backend of the accuracy matrix",
+    )
+    ap.add_argument(
+        "--equiv-scenarios", default=",".join(DEFAULT_EQUIV_SCENARIOS),
+        help="scenarios for the sequential/vectorized/sharded equivalence "
+        "grid ('' disables it)",
+    )
+    ap.add_argument("--equiv-rounds", type=int, default=2)
+    ap.add_argument("--equiv-rtol", type=float, default=1e-6)
+    ap.add_argument("--json", default="BENCH_scenarios.json",
+                    help="report path ('' disables persisting)")
+    ap.add_argument("--allow-equiv-fail", action="store_true",
+                    help="do not exit non-zero on equivalence violations")
+    args = ap.parse_args()
+
+    report = run_sweep(
+        [a for a in args.algorithms.split(",") if a],
+        [s for s in args.scenarios.split(",") if s],
+        seeds=args.seeds, rounds=args.rounds, clients=args.clients,
+        participation=args.participation, batch_size=args.batch_size,
+        steps_per_epoch=args.steps_per_epoch, backend=args.backend,
+        equiv_scenarios=[s for s in args.equiv_scenarios.split(",") if s],
+        equiv_rounds=args.equiv_rounds, equiv_rtol=args.equiv_rtol,
+        json_path=args.json or None,
+    )
+    bad = [r for r in report["equivalence"] if not r["ok"]]
+    if bad and not args.allow_equiv_fail:
+        raise SystemExit(
+            f"backend equivalence FAILED for {len(bad)} cells: "
+            + ", ".join(f"{r['scenario']}/{r['algorithm']}/{r['backend']}"
+                        for r in bad[:8])
+        )
+
+
+if __name__ == "__main__":
+    main()

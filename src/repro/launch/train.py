@@ -62,7 +62,15 @@ def run_fed(args) -> None:
     data = make_classification(
         n_samples=args.n_samples, dim=32, n_classes=10, seed=args.seed
     )
-    parts = dirichlet_partition(data["y"], args.clients, alpha=args.alpha, seed=args.seed)
+    # a scenario owns partitioning AND the heterogeneity axes
+    # (repro/scenarios); without one, keep the historical explicit
+    # Dirichlet(alpha) split + uniform HeteroConfig envelope
+    parts = (
+        None if args.scenario
+        else dirichlet_partition(
+            data["y"], args.clients, alpha=args.alpha, seed=args.seed
+        )
+    )
 
     def init_mlp(key, dims=(32, 64, 10)):
         ks = jax.random.split(key, 2)
@@ -91,10 +99,14 @@ def run_fed(args) -> None:
         rounds=args.rounds,
         batch_size=32,
         steps_per_epoch=3,
-        hetero=HeteroConfig(1e-3, 1e-2, 1, 5) if args.hetero else None,
+        hetero=(
+            HeteroConfig(1e-3, 1e-2, 1, 5)
+            if args.hetero and not args.scenario else None
+        ),
         consensus=ConsensusConfig(use_kernels=args.kernels),
         seed=args.seed,
         eval_every=max(args.rounds // 10, 1),
+        scenario=args.scenario,
     )
     sim = FedSim(mlp_loss, init_mlp(jax.random.PRNGKey(0)), data, parts, cfg, eval_fn)
     hist = sim.run()
@@ -118,6 +130,13 @@ def main() -> None:
     ap.add_argument(
         "--algorithm", default="fedecado", choices=list(available_algorithms()),
         help="federated algorithm (registered plugins: %(choices)s)",
+    )
+    from repro.scenarios import available_scenarios
+
+    ap.add_argument(
+        "--scenario", default=None, choices=list(available_scenarios()),
+        help="heterogeneity scenario (repro/scenarios registry); overrides "
+        "--alpha/--hetero with the scenario's own axes",
     )
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--participation", type=float, default=0.25)

@@ -1,0 +1,87 @@
+"""First-class heterogeneity-scenario registry (DESIGN.md §7).
+
+Mirrors the fed/algorithms plugin registry: every named heterogeneity
+regime is a frozen ``Scenario`` spec registered here, and the registry is
+the ONLY place scenario names resolve. ``FedSim`` consumes
+``FedSimConfig.scenario`` (a name or a ``Scenario`` instance) through
+``make_scenario``, the CLI entry points (examples/, launch/sweep.py)
+enumerate ``available_scenarios()`` for their ``--scenario`` choices, and
+the sweep runner crosses this registry with the algorithm registry into the
+paper-style evaluation matrix. Adding a scenario is one
+``register_scenario(Scenario(...))`` call — zero edits anywhere else.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple, Union
+
+from repro.scenarios.base import (
+    AVAILABILITY_KINDS,
+    PARTITION_KINDS,
+    AvailabilitySpec,
+    DeviceProfile,
+    DropoutSpec,
+    FeatureShiftSpec,
+    PartitionSpec,
+    Scenario,
+    ScenarioRuntime,
+)
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register_scenario(spec: Scenario) -> Scenario:
+    """Add ``spec`` to the registry under ``spec.name``. Duplicate names are
+    rejected loudly — two scenarios silently shadowing each other would
+    corrupt every sweep row labelled with that name."""
+    if not spec.name:
+        raise ValueError("a Scenario must carry a non-empty name to register")
+    if spec.name in _REGISTRY:
+        raise ValueError(f"scenario {spec.name!r} is already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def available_scenarios() -> Tuple[str, ...]:
+    """Registered scenario names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def get_scenario(name: str) -> Scenario:
+    """Resolve a name to its (frozen, declarative) ``Scenario`` spec."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r}; registered scenarios: "
+            f"{', '.join(_REGISTRY)}"
+        ) from None
+
+
+def make_scenario(spec: Union[str, Scenario]) -> ScenarioRuntime:
+    """Instantiate the runtime for a scenario name or an (ad-hoc, possibly
+    unregistered) ``Scenario`` spec — one runtime per ``FedSim``, since it
+    owns mutable trace/drift/profile state."""
+    if isinstance(spec, str):
+        spec = get_scenario(spec)
+    if not isinstance(spec, Scenario):
+        raise TypeError(
+            f"scenario must be a registered name or a Scenario, got {spec!r}"
+        )
+    return ScenarioRuntime(spec)
+
+
+# --- built-in scenarios ----------------------------------------------------
+from repro.scenarios.library import BUILTIN_SCENARIOS, THREE_TIERS  # noqa: E402
+
+for _spec in BUILTIN_SCENARIOS:
+    register_scenario(_spec)
+
+__all__ = [
+    "Scenario", "ScenarioRuntime",
+    "PartitionSpec", "FeatureShiftSpec", "DeviceProfile",
+    "AvailabilitySpec", "DropoutSpec",
+    "PARTITION_KINDS", "AVAILABILITY_KINDS",
+    "register_scenario", "available_scenarios", "get_scenario",
+    "make_scenario",
+    "BUILTIN_SCENARIOS", "THREE_TIERS",
+]

@@ -1,0 +1,316 @@
+"""Declarative heterogeneity scenarios: spec dataclasses + runtime.
+
+A ``Scenario`` composes the two heterogeneity axes the paper's §5 evaluation
+sweeps (and that FedProx/FedNova/FedECADO react to differently):
+
+**statistical skew** — what each client's data looks like:
+  * ``partition``       which partitioner builds the client index sets
+                        (iid | dirichlet(alpha) | label_shard(k) |
+                        quantity_skew(zipf)), fed/partition.py;
+  * ``feature_shift``   per-client input rotation/scale on the synthetic
+                        teacher — client i sees s_i·R(θ_i)·x, a genuine
+                        covariate shift the label skew axes cannot express;
+  * ``label_noise``     per-client uniform label flips;
+  * ``drift_every``     re-draw the partition every R rounds (concept
+                        drift); each re-draw advances the partition seed
+                        deterministically.
+
+**systems** — how each client computes and when it shows up:
+  * ``profiles``        device tiers: each client is pinned to a
+                        ``DeviceProfile`` whose (lr, epochs) ranges drive
+                        its per-round e_i/lr_i draws — replacing the single
+                        uniform ``HeteroConfig`` envelope;
+  * ``availability``    round-varying participation traces (sine diurnal /
+                        timezone blocks / Markov churn) replacing the
+                        uniform cohort draw in ``FedSim._draw_plan``;
+  * ``dropout``         mid-round dropout: a hit client finishes only a
+                        prefix of its local window, so its effective
+                        T_i = lr_i·n_steps_i shrinks — exercising the event
+                        backend's staleness/re-anchoring path and FedNova's
+                        τ_i normalization.
+
+All specs are frozen (hashable — ``FedSimConfig.scenario`` may carry one)
+and purely declarative. Mutable evolution (Markov availability state, drift
+counters, the client->profile pinning) lives in ``ScenarioRuntime``, one per
+``FedSim``. Two rng domains keep backend equivalence intact: ``materialize``
+uses a scenario-owned RandomState (never the sim's plan rng), while the
+per-round hooks consume the sim's plan rng *inside* ``_draw_plan`` — so
+every execution backend sees byte-identical ``CohortPlan`` streams and the
+backend-equivalence harness extends to scenarios unchanged
+(tests/test_backend_equiv.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.fed.partition import (
+    dirichlet_partition,
+    iid_partition,
+    label_shard_partition,
+    quantity_skew_partition,
+)
+
+PARTITION_KINDS = ("iid", "dirichlet", "label_shard", "quantity_skew")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """Which partitioner builds the client index sets, with its knobs."""
+    kind: str = "iid"
+    alpha: float = 0.1              # dirichlet concentration
+    shards_per_client: int = 2      # label_shard classes per client
+    zipf_a: float = 1.4             # quantity_skew size exponent
+    min_size: int = 2               # dirichlet / quantity_skew floor
+
+    def build(self, labels: np.ndarray, n_clients: int, seed: int) -> List[np.ndarray]:
+        if self.kind == "iid":
+            return iid_partition(len(labels), n_clients, seed=seed)
+        if self.kind == "dirichlet":
+            return dirichlet_partition(
+                labels, n_clients, self.alpha, seed=seed, min_size=self.min_size
+            )
+        if self.kind == "label_shard":
+            return label_shard_partition(
+                labels, n_clients, self.shards_per_client, seed=seed
+            )
+        if self.kind == "quantity_skew":
+            return quantity_skew_partition(
+                len(labels), n_clients, self.zipf_a, seed=seed,
+                min_size=self.min_size,
+            )
+        raise ValueError(
+            f"unknown partition kind {self.kind!r}; choose from {PARTITION_KINDS}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureShiftSpec:
+    """Per-client covariate shift x -> s_i·R(θ_i)·x: θ_i ~ U[-max_angle,
+    max_angle] rotates each consecutive coordinate pair (a block-diagonal
+    orthogonal map), s_i ~ U[scale_min, scale_max] rescales. Orthogonality
+    keeps the teacher's decision structure recoverable, so the shift is a
+    distribution mismatch rather than label destruction."""
+    max_angle: float = 0.7854       # ~pi/4
+    scale_min: float = 0.7
+    scale_max: float = 1.3
+
+    def apply(self, x: np.ndarray, rng: np.random.RandomState) -> np.ndarray:
+        from repro.data.synthetic import rotate_scale
+
+        theta = rng.uniform(-self.max_angle, self.max_angle)
+        s = rng.uniform(self.scale_min, self.scale_max)
+        return rotate_scale(x, theta, s)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """One device tier: assignment mass + the (lr_i, e_i) draw ranges of
+    clients pinned to it (paper eqs. 43-44, stratified instead of one
+    uniform envelope)."""
+    name: str
+    weight: float
+    lr_min: float
+    lr_max: float
+    epochs_min: int
+    epochs_max: int
+
+
+AVAILABILITY_KINDS = ("sine", "blocks", "markov")
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilitySpec:
+    """Round-varying client availability.
+
+    * ``sine``   — diurnal: client i is up with probability p_min +
+                   (p_max−p_min)·(1+sin(2π(rnd/period + i/n)))/2 (phase
+                   staggered across clients, so the available set rotates);
+    * ``blocks`` — timezones: clients are split into ``n_blocks`` contiguous
+                   blocks; only block (rnd mod n_blocks) is up (deterministic);
+    * ``markov`` — churn: per-client two-state chain, up→down w.p. p_drop,
+                   down→up w.p. p_recover each round.
+    """
+    kind: str = "sine"
+    period: int = 12
+    p_min: float = 0.1
+    p_max: float = 0.9
+    n_blocks: int = 4
+    p_drop: float = 0.1
+    p_recover: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class DropoutSpec:
+    """Mid-round dropout: with probability ``prob`` a participating client
+    finishes only a U[min_frac, 1) prefix of its local window (>= 1 step)."""
+    prob: float = 0.3
+    min_frac: float = 0.25
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One declarative heterogeneity scenario (both axes composed)."""
+    name: str
+    description: str = ""
+    # --- statistical skew axis ---
+    partition: PartitionSpec = PartitionSpec()
+    feature_shift: Optional[FeatureShiftSpec] = None
+    label_noise: float = 0.0
+    drift_every: int = 0
+    # --- systems axis ---
+    profiles: Tuple[DeviceProfile, ...] = ()
+    availability: Optional[AvailabilitySpec] = None
+    dropout: Optional[DropoutSpec] = None
+
+    def axes(self) -> str:
+        """Short human tag of the active axes (sweep table headers)."""
+        tags = [self.partition.kind]
+        if self.feature_shift:
+            tags.append("fshift")
+        if self.label_noise:
+            tags.append(f"noise{self.label_noise:g}")
+        if self.drift_every:
+            tags.append(f"drift{self.drift_every}")
+        if self.profiles:
+            tags.append(f"{len(self.profiles)}tier")
+        if self.availability:
+            tags.append(self.availability.kind)
+        if self.dropout:
+            tags.append("dropout")
+        return "+".join(tags)
+
+
+class ScenarioRuntime:
+    """Mutable per-``FedSim`` execution state of one ``Scenario``.
+
+    ``materialize`` owns its rng (derived from the sim seed + drift count);
+    the per-round hooks (``draw_cohort``/``draw_rates``/``apply_dropout``)
+    consume the rng that ``FedSim._draw_plan`` passes in, keeping the plan
+    stream identical across execution backends.
+    """
+
+    def __init__(self, spec: Scenario):
+        self.spec = spec
+        self.drift_count = 0
+        self._profile_of: Optional[np.ndarray] = None   # (n,) tier index
+        self._markov_up: Optional[np.ndarray] = None    # (n,) bool chain state
+
+    # ------------------------------------------------------ statistical --
+    def materialize(
+        self, data: Dict[str, np.ndarray], n_clients: int, seed: int
+    ) -> Tuple[Dict[str, np.ndarray], List[np.ndarray]]:
+        """Partition ``data`` and apply the per-client statistical
+        transforms (feature shift, label noise) to the samples each client
+        owns. Returns (data', partitions); ``data`` itself is never mutated
+        — a NEW dict (fresh identity, so device-side data caches re-upload)
+        is returned iff a transform is active. Each call advances the drift
+        counter, so re-invoking under ``drift_every`` re-draws the partition
+        from a deterministically advanced seed."""
+        spec = self.spec
+        pseed = (seed + 100003 * self.drift_count) % (1 << 31)
+        parts = spec.partition.build(
+            np.asarray(data["y"]), n_clients, pseed
+        )
+        rng = np.random.RandomState((seed + 7 + 31 * self.drift_count) % (1 << 31))
+        out = data
+        if spec.feature_shift is not None or spec.label_noise > 0:
+            out = {
+                k: (np.array(v, copy=True) if k in ("x", "y") else v)
+                for k, v in data.items()
+            }
+            n_classes = int(np.asarray(data["y"]).max()) + 1
+            for part in parts:
+                if spec.feature_shift is not None:
+                    out["x"][part] = spec.feature_shift.apply(out["x"][part], rng)
+                if spec.label_noise > 0:
+                    y = out["y"]
+                    flip = rng.rand(len(part)) < spec.label_noise
+                    y[part[flip]] = rng.randint(
+                        0, n_classes, int(flip.sum())
+                    ).astype(y.dtype)
+        if spec.profiles and self._profile_of is None:
+            # pinned once from a dedicated stream: device identity persists
+            # across drift re-draws (the data moves, the hardware doesn't)
+            prng = np.random.RandomState((seed + 9176) % (1 << 31))
+            w = np.asarray([p.weight for p in spec.profiles], np.float64)
+            self._profile_of = prng.choice(
+                len(spec.profiles), size=n_clients, p=w / w.sum()
+            )
+        self.drift_count += 1
+        return out, parts
+
+    def drift_due(self, rnd: int) -> bool:
+        return bool(self.spec.drift_every) and rnd > 0 and rnd % self.spec.drift_every == 0
+
+    # ---------------------------------------------------------- systems --
+    def draw_cohort(
+        self, rng: np.random.RandomState, rnd: int, n: int, A: int
+    ) -> np.ndarray:
+        """Participating client ids for round ``rnd``: the availability
+        trace restricts the candidate pool, then up to ``A`` clients are
+        drawn uniformly from it. No trace => the uniform draw of the
+        default plan path (same rng consumption)."""
+        av = self.spec.availability
+        if av is None:
+            return np.sort(rng.choice(n, A, replace=False))
+        if av.kind == "sine":
+            phase = 2.0 * np.pi * (rnd / max(av.period, 1) + np.arange(n) / n)
+            p = av.p_min + (av.p_max - av.p_min) * 0.5 * (1.0 + np.sin(phase))
+            up = rng.rand(n) < p
+        elif av.kind == "blocks":
+            up = (np.arange(n) * av.n_blocks // n) == (rnd % av.n_blocks)
+        elif av.kind == "markov":
+            if self._markov_up is None:
+                self._markov_up = np.ones(n, bool)
+            u = rng.rand(n)
+            self._markov_up = np.where(
+                self._markov_up, u >= av.p_drop, u < av.p_recover
+            )
+            up = self._markov_up
+        else:
+            raise ValueError(
+                f"unknown availability kind {av.kind!r}; "
+                f"choose from {AVAILABILITY_KINDS}"
+            )
+        ids = np.where(up)[0]
+        if len(ids) == 0:
+            ids = np.arange(n)       # never stall the server on an empty round
+        return np.sort(rng.choice(ids, min(A, len(ids)), replace=False))
+
+    def draw_rates(
+        self, rng: np.random.RandomState, idx: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-client (lr_i, e_i) draws from each client's pinned device
+        profile — the stratified replacement of ``HeteroConfig.sample``."""
+        assert self._profile_of is not None, "materialize() must run first"
+        lrs = np.empty(len(idx), np.float32)
+        eps = np.empty(len(idx), np.int64)
+        for j, i in enumerate(idx):
+            p = self.spec.profiles[int(self._profile_of[int(i)])]
+            lrs[j] = rng.uniform(p.lr_min, p.lr_max)
+            eps[j] = rng.randint(p.epochs_min, p.epochs_max + 1)
+        return lrs, eps
+
+    def apply_dropout(
+        self, rng: np.random.RandomState, n_steps: np.ndarray
+    ) -> np.ndarray:
+        """Truncate dropped clients' step counts to a prefix of their
+        window (>= 1 step). Runs BEFORE the minibatch draw, so the plan's
+        ``batch_idx`` and windows T_i = lr_i·n_steps_i are consistent on
+        every backend."""
+        d = self.spec.dropout
+        hit = rng.rand(len(n_steps)) < d.prob
+        fracs = rng.uniform(d.min_frac, 1.0, len(n_steps))
+        cut = np.maximum(1, np.ceil(fracs * n_steps)).astype(n_steps.dtype)
+        return np.where(hit, np.minimum(cut, n_steps), n_steps)
+
+    def step_ceiling(self, steps_per_epoch: int) -> Optional[int]:
+        """Config-stable per-client scan-length ceiling under device
+        profiles (the vectorized backend pads to this so its runner
+        compiles once); None when the scenario does not drive rates."""
+        if not self.spec.profiles:
+            return None
+        return max(p.epochs_max for p in self.spec.profiles) * steps_per_epoch

@@ -1,0 +1,106 @@
+"""Built-in scenarios: the evaluation matrix's rows.
+
+Each entry composes the skew/systems axes of ``Scenario`` (base.py) into a
+named, registered heterogeneity regime. ``dirichlet01`` is the paper's §5.1
+headline setting; ``hetero-devices`` reproduces the §5.2 computational-
+heterogeneity envelope as three device tiers; the rest extend the matrix
+along the taxonomy of non-IID regimes (label shards, quantity skew,
+covariate shift, label noise, drift) and client dynamics (diurnal
+availability, Markov churn, mid-round dropout).
+
+Registering a new scenario is one ``register_scenario(Scenario(...))`` call
+— every CLI (`--scenario` in examples/, launch/sweep.py's matrix) picks it
+up with zero further edits, exactly like the fed/algorithms registry.
+"""
+from __future__ import annotations
+
+from repro.scenarios.base import (
+    AvailabilitySpec,
+    DeviceProfile,
+    DropoutSpec,
+    FeatureShiftSpec,
+    PartitionSpec,
+    Scenario,
+)
+
+# three device tiers spanning the paper's eqs. (43)-(44) envelope
+# (lr in [1e-3, 1e-2], e in [1, 5]) — stratified instead of one uniform draw
+THREE_TIERS = (
+    DeviceProfile("fast", weight=0.3, lr_min=5e-3, lr_max=1e-2,
+                  epochs_min=4, epochs_max=5),
+    DeviceProfile("mid", weight=0.5, lr_min=2e-3, lr_max=6e-3,
+                  epochs_min=2, epochs_max=4),
+    DeviceProfile("slow", weight=0.2, lr_min=1e-3, lr_max=3e-3,
+                  epochs_min=1, epochs_max=2),
+)
+
+BUILTIN_SCENARIOS = (
+    Scenario(
+        "iid",
+        "uniform IID partition, homogeneous synchronous clients (control)",
+    ),
+    Scenario(
+        "dirichlet01",
+        "paper §5.1: Dir(0.1) label skew, fixed client compute",
+        partition=PartitionSpec("dirichlet", alpha=0.1),
+    ),
+    Scenario(
+        "dirichlet1",
+        "mild Dir(1.0) label skew",
+        partition=PartitionSpec("dirichlet", alpha=1.0),
+    ),
+    Scenario(
+        "label-shard2",
+        "pathological split: <= 2 classes per client",
+        partition=PartitionSpec("label_shard", shards_per_client=2),
+    ),
+    Scenario(
+        "quantity-zipf",
+        "IID labels, Zipf(1.4) client sizes (unbalanced p_i)",
+        partition=PartitionSpec("quantity_skew", zipf_a=1.4),
+    ),
+    Scenario(
+        "feature-shift",
+        "IID labels + per-client input rotation/scale (covariate shift)",
+        feature_shift=FeatureShiftSpec(),
+    ),
+    Scenario(
+        "label-noise",
+        "Dir(0.3) label skew + 15% per-client uniform label flips",
+        partition=PartitionSpec("dirichlet", alpha=0.3),
+        label_noise=0.15,
+    ),
+    Scenario(
+        "drift",
+        "Dir(0.3) label skew, partition re-drawn every 10 rounds",
+        partition=PartitionSpec("dirichlet", alpha=0.3),
+        drift_every=10,
+    ),
+    Scenario(
+        "hetero-devices",
+        "paper §5.2 regime: IID data, three-tier device speeds (lr_i, e_i)",
+        profiles=THREE_TIERS,
+    ),
+    Scenario(
+        "diurnal",
+        "Dir(0.3) skew + sine (diurnal) availability + device tiers",
+        partition=PartitionSpec("dirichlet", alpha=0.3),
+        profiles=THREE_TIERS,
+        availability=AvailabilitySpec("sine", period=12, p_min=0.2, p_max=0.9),
+    ),
+    Scenario(
+        "flaky-dropout",
+        "device tiers + 30% mid-round dropout (prefix windows -> staleness)",
+        profiles=THREE_TIERS,
+        dropout=DropoutSpec(prob=0.3, min_frac=0.25),
+    ),
+    Scenario(
+        "worst-case",
+        "Dir(0.1) + covariate shift + tiers + Markov churn + dropout",
+        partition=PartitionSpec("dirichlet", alpha=0.1),
+        feature_shift=FeatureShiftSpec(),
+        profiles=THREE_TIERS,
+        availability=AvailabilitySpec("markov", p_drop=0.2, p_recover=0.5),
+        dropout=DropoutSpec(prob=0.2, min_frac=0.3),
+    ),
+)

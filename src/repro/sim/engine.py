@@ -142,16 +142,20 @@ def pad_cohort_ids(
 def stack_plans(
     plans: List[CohortPlan], n_clients: int, A_pad: int, S_pad: int
 ) -> Optional[StackedPlan]:
-    """Densify a segment of plans into a StackedPlan, or None if any cohort
-    is ragged (mixed per-client batch sizes cannot share one dense sel
-    tensor without changing the minibatch-mean arithmetic)."""
+    """Densify a segment of plans into a StackedPlan, or None if the
+    segment cannot share one dense tensor layout: ragged cohorts (mixed
+    per-client batch sizes change the minibatch-mean arithmetic) or uneven
+    cohort sizes across rounds (availability-trace scenarios admit fewer
+    clients on sparse rounds). Refused segments fall back to per-round
+    execution."""
     bss = {p.batch_idx[j].shape[1] for p in plans for j in range(p.cohort_size)}
     if len(bss) != 1:
         return None
     bs = bss.pop()
     R = len(plans)
     A = plans[0].cohort_size
-    assert all(p.cohort_size == A for p in plans), "uneven cohort sizes"
+    if any(p.cohort_size != A for p in plans):
+        return None
     assert A_pad >= A and S_pad >= int(max(p.n_steps.max() for p in plans))
 
     idx = np.zeros((R, A_pad), np.int32)

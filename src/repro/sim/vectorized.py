@@ -123,8 +123,15 @@ class VectorizedBackend(ExecutionBackend):
     @staticmethod
     def _pad_steps(sim) -> int:
         """Config-stable scan length: the cohort ceiling, so the runner
-        compiles once instead of once per distinct round maximum."""
+        compiles once instead of once per distinct round maximum. Scenario
+        device profiles (repro/scenarios) supersede ``cfg.hetero`` as the
+        rate source, so their epochs ceiling wins when active."""
         cfg = sim.cfg
+        scn = getattr(sim, "scn", None)
+        if scn is not None and sim.alg.supports_hetero:
+            ceil = scn.step_ceiling(cfg.steps_per_epoch)
+            if ceil is not None:
+                return int(ceil)
         if cfg.hetero is not None and sim.alg.supports_hetero:
             return int(cfg.hetero.epochs_max) * cfg.steps_per_epoch
         return int(cfg.epochs_fixed) * cfg.steps_per_epoch

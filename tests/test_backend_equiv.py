@@ -20,8 +20,17 @@ checked automatically, with zero edits here.
 
 A second group of properties pins the ``StackedPlan`` densification
 (engine.py::stack_plans): padding semantics, plan-order preservation, and
-the ragged-cohort refusal.
+the ragged-cohort refusal (including the uneven-cohort refusal that
+availability-trace scenarios rely on).
+
+A third group extends the equivalence guarantee to the scenario subsystem
+(repro/scenarios, DESIGN.md §7): availability traces, feature shift,
+device profiles, mid-round dropout and partition drift all act through the
+shared host-side plan draw, so sequential == vectorized == sharded must
+keep holding at rtol 1e-6 under every scenario axis.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -224,6 +233,62 @@ def test_stack_plans_padding_semantics(A, R, bs, max_steps, unit, seed):
         )
 
 
+# ---------------------------------------------------------------------------
+# scenario-axis equivalence (repro/scenarios)
+# ---------------------------------------------------------------------------
+
+
+def _scenario_cases():
+    """One case per scenario axis the plan draw can exercise: availability
+    trace, covariate shift, device tiers + dropout, and drift (forced to
+    fire inside the 4-round window)."""
+    from repro.scenarios import get_scenario
+
+    return [
+        ("diurnal", get_scenario("diurnal")),                  # availability
+        ("feature-shift", get_scenario("feature-shift")),      # covariate
+        ("flaky-dropout", get_scenario("flaky-dropout")),      # tiers+dropout
+        ("drift", dataclasses.replace(get_scenario("drift"), drift_every=2)),
+    ]
+
+
+@pytest.mark.parametrize("alg", ["fedecado", "fednova"])
+@pytest.mark.parametrize(
+    "case", _scenario_cases(), ids=[c[0] for c in _scenario_cases()]
+)
+def test_scenario_backends_match_sequential_oracle(case, alg):
+    _, spec = case
+    data, _, params0, loss_fn = _problem()
+    runs = {}
+    for backend in ("sequential", "vectorized", "sharded"):
+        cfg = FedSimConfig(
+            algorithm=alg, n_clients=6, participation=0.6,
+            rounds=4, batch_size=4, steps_per_epoch=1, seed=91,
+            backend=backend, consensus=ConsensusConfig(max_substeps=6),
+            sharded_pad_multiple=3, scenario=spec,
+        )
+        sim = FedSim(loss_fn, params0, data, None, cfg)
+        hist = sim.run()
+        runs[backend] = (hist["loss"], sim.current_params())
+
+    ref_loss, ref_params = runs["sequential"]
+    for backend in ("vectorized", "sharded"):
+        loss, params = runs[backend]
+        np.testing.assert_allclose(
+            loss, ref_loss, rtol=1e-6, atol=1e-7,
+            err_msg=f"{backend} history diverged from sequential "
+            f"({alg}, scenario {spec.name})",
+        )
+        for a, b in zip(
+            jax.tree.leaves(ref_params), jax.tree.leaves(params), strict=True
+        ):
+            np.testing.assert_allclose(
+                np.asarray(b), np.asarray(a), rtol=1e-6, atol=2e-7,
+                err_msg=f"{backend} params diverged from sequential "
+                f"({alg}, scenario {spec.name})",
+            )
+
+
 @settings(max_examples=10, deadline=None)
 @given(
     A=st.integers(min_value=2, max_value=6),
@@ -239,3 +304,13 @@ def test_stack_plans_refuses_ragged_cohorts(A, bs, seed):
         rng, 1, A, 9, bs, 3, ragged_client=int(rng.randint(0, A))
     )
     assert stack_plans(plans, 9, A, 4) is None
+
+
+def test_stack_plans_refuses_uneven_cohort_sizes():
+    """Availability-trace scenarios admit fewer clients on sparse rounds;
+    such segments cannot share one dense cohort axis and must fall back to
+    per-round execution instead of asserting."""
+    rng = np.random.RandomState(0)
+    plans = _draw_plans(rng, 2, 4, 9, 3, 3)
+    small = _draw_plans(rng, 1, 2, 9, 3, 3)
+    assert stack_plans(plans + small, 9, 4, 4) is None

@@ -1,0 +1,380 @@
+"""Scenario subsystem tests (repro/scenarios, DESIGN.md §7).
+
+Three layers:
+  * partition invariants — every sample assigned exactly once, fractions
+    sum to 1, per-seed reproducibility, label-shard class cap, and the
+    dirichlet retry cap raising instead of spinning forever;
+  * spec/runtime semantics — registry behaviour, feature-shift/label-noise
+    materialization, availability traces, device profiles, mid-round
+    dropout, and drift re-draws;
+  * integration — every registered scenario runs end-to-end through FedSim,
+    and the dropout scenario exercises the event backend's staleness path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ConsensusConfig
+from repro.data import make_classification
+from repro.fed import FedSim, FedSimConfig
+from repro.fed.partition import (
+    data_fractions,
+    dirichlet_partition,
+    iid_partition,
+    label_shard_partition,
+    quantity_skew_partition,
+)
+from repro.scenarios import (
+    AvailabilitySpec,
+    DropoutSpec,
+    FeatureShiftSpec,
+    PartitionSpec,
+    Scenario,
+    available_scenarios,
+    get_scenario,
+    make_scenario,
+    register_scenario,
+)
+
+
+# ---------------------------------------------------------------------------
+# partition invariants
+# ---------------------------------------------------------------------------
+
+
+def _labels(n=600, classes=8, seed=0):
+    return np.random.RandomState(seed).randint(0, classes, size=n)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    kind=st.sampled_from(["dirichlet", "label_shard", "quantity_skew", "iid"]),
+    n_clients=st.integers(2, 12),
+    seed=st.integers(0, 100),
+)
+def test_partitioners_cover_every_sample_exactly_once(kind, n_clients, seed):
+    labels = _labels(seed=seed)
+    parts = PartitionSpec(kind, alpha=0.5).build(labels, n_clients, seed)
+    assert len(parts) == n_clients
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)   # disjoint and complete
+    np.testing.assert_allclose(data_fractions(parts).sum(), 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "fn",
+    [
+        lambda labels, s: dirichlet_partition(labels, 6, 0.3, seed=s),
+        lambda labels, s: label_shard_partition(labels, 6, 2, seed=s),
+        lambda labels, s: quantity_skew_partition(len(labels), 6, seed=s),
+        lambda labels, s: iid_partition(len(labels), 6, seed=s),
+    ],
+    ids=["dirichlet", "label_shard", "quantity_skew", "iid"],
+)
+def test_partitioners_reproducible_per_seed(fn):
+    labels = _labels()
+    a = fn(labels, 3)
+    b = fn(labels, 3)
+    c = fn(labels, 4)
+    for pa, pb in zip(a, b, strict=True):
+        np.testing.assert_array_equal(pa, pb)
+    assert any(
+        len(pa) != len(pc) or (pa != pc).any() for pa, pc in zip(a, c)
+    ), "different seeds should give different draws"
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_label_shard_class_cap(k):
+    labels = _labels(n=800, classes=8)
+    parts = label_shard_partition(labels, 8, shards_per_client=k, seed=1)
+    for part in parts:
+        assert len(part) > 0
+        assert len(np.unique(labels[part])) <= k
+
+
+def test_quantity_skew_is_skewed_and_floored():
+    parts = quantity_skew_partition(1000, 10, zipf_a=1.6, seed=0, min_size=3)
+    sizes = np.sort([len(p) for p in parts])
+    assert sizes.min() >= 3
+    assert sizes[-1] > 4 * sizes[0]       # heavy head vs long tail
+
+
+def test_dirichlet_min_size_unreachable_raises_immediately():
+    labels = _labels(n=10)
+    with pytest.raises(ValueError, match="unreachable"):
+        dirichlet_partition(labels, 5, alpha=0.1, seed=0, min_size=4)
+
+
+def test_dirichlet_retry_cap_raises_instead_of_spinning():
+    # one class, 20 samples, 10 clients each needing >= 2 under alpha=1e-3:
+    # essentially every draw concentrates on one client, so the capped
+    # retry loop must terminate with the explanatory error
+    labels = np.zeros(20, np.int64)
+    with pytest.raises(ValueError, match="max_retries"):
+        dirichlet_partition(labels, 10, alpha=1e-3, seed=0, min_size=2,
+                            max_retries=3)
+
+
+def test_dirichlet_first_try_success_matches_historic_stream():
+    """Attempt 0 keeps the pre-fix rng stream: the retry machinery must not
+    perturb partitions that succeeded first try (every committed artifact
+    depends on them)."""
+    labels = _labels(n=500, classes=7, seed=3)
+    parts = dirichlet_partition(labels, 5, alpha=0.5, seed=3)
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == 500
+    parts2 = dirichlet_partition(labels, 5, alpha=0.5, seed=3)
+    for a, b in zip(parts, parts2, strict=True):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_enumerates_and_resolves():
+    names = available_scenarios()
+    assert len(names) >= 6
+    for required in ("dirichlet01", "feature-shift", "diurnal",
+                     "flaky-dropout", "hetero-devices", "quantity-zipf"):
+        assert required in names
+        assert get_scenario(required).name == required
+
+
+def test_registry_rejects_duplicates_and_unknown_names():
+    with pytest.raises(ValueError, match="already registered"):
+        register_scenario(Scenario("dirichlet01"))
+    with pytest.raises(ValueError, match="registered scenarios"):
+        get_scenario("no-such-scenario")
+    with pytest.raises(TypeError):
+        make_scenario(42)
+
+
+def test_make_scenario_accepts_adhoc_spec():
+    spec = Scenario("adhoc-test", partition=PartitionSpec("dirichlet", alpha=2.0))
+    rt = make_scenario(spec)
+    assert rt.spec is spec
+    assert "adhoc-test" not in available_scenarios()
+
+
+# ---------------------------------------------------------------------------
+# materialization: statistical axis
+# ---------------------------------------------------------------------------
+
+
+def _data(n=400, dim=8, classes=4, seed=0):
+    return make_classification(n, dim=dim, n_classes=classes, seed=seed)
+
+
+def test_feature_shift_rotates_and_scales_per_client():
+    data = _data()
+    rt = make_scenario(Scenario("t", feature_shift=FeatureShiftSpec()))
+    out, parts = rt.materialize(data, 5, seed=0)
+    assert out is not data and out["x"] is not data["x"]
+    np.testing.assert_array_equal(out["y"], data["y"])      # labels untouched
+    for part in parts:
+        # orthogonal rotation × scalar s_i: per-sample norm ratio is the
+        # SAME constant within a client (and ~never exactly 1)
+        r = np.linalg.norm(out["x"][part], axis=1) / np.linalg.norm(
+            data["x"][part], axis=1
+        )
+        np.testing.assert_allclose(r, r[0], rtol=1e-5)
+    ratios = [
+        np.linalg.norm(out["x"][p[0]]) / np.linalg.norm(data["x"][p[0]])
+        for p in parts
+    ]
+    assert np.std(ratios) > 1e-3, "clients should get distinct scales"
+
+
+def test_label_noise_flips_about_the_requested_fraction():
+    data = _data(n=4000)
+    rt = make_scenario(Scenario("t", label_noise=0.25))
+    out, _ = rt.materialize(data, 5, seed=0)
+    np.testing.assert_array_equal(out["x"], data["x"])      # inputs untouched
+    flipped = np.mean(out["y"] != data["y"])
+    # uniform resample keeps the old label 1/classes of the time
+    expect = 0.25 * (1 - 1 / 4)
+    assert abs(flipped - expect) < 0.05
+    assert data["y"] is not out["y"]
+
+
+def test_materialize_without_transforms_returns_same_data_object():
+    data = _data()
+    rt = make_scenario("dirichlet01")
+    out, parts = rt.materialize(data, 5, seed=0)
+    assert out is data                  # identity preserved -> device caches hold
+    assert len(parts) == 5
+
+
+def test_drift_redraws_partitions_deterministically():
+    data = _data()
+    rt = make_scenario("drift")
+    _, p0 = rt.materialize(data, 5, seed=9)
+    _, p1 = rt.materialize(data, 5, seed=9)     # drift_count advanced
+    assert any(len(a) != len(b) or (a != b).any() for a, b in zip(p0, p1))
+    rt2 = make_scenario("drift")
+    _, q0 = rt2.materialize(data, 5, seed=9)
+    for a, b in zip(p0, q0, strict=True):
+        np.testing.assert_array_equal(a, b)     # same seed, same first draw
+
+
+# ---------------------------------------------------------------------------
+# systems axis hooks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["sine", "blocks", "markov"])
+def test_availability_cohorts_are_valid_subsets(kind):
+    rt = make_scenario(
+        Scenario("t", availability=AvailabilitySpec(kind, n_blocks=3))
+    )
+    rng = np.random.RandomState(0)
+    n, A = 12, 5
+    for rnd in range(8):
+        idx = rt.draw_cohort(rng, rnd, n, A)
+        assert 1 <= len(idx) <= A
+        assert (np.diff(idx) > 0).all()             # sorted, unique
+        assert idx.min() >= 0 and idx.max() < n
+        if kind == "blocks":
+            blocks = np.arange(n) * 3 // n
+            assert (blocks[idx] == rnd % 3).all()   # deterministic membership
+
+
+def test_device_profiles_draw_within_tier_ranges_and_persist_over_drift():
+    rt = make_scenario("diurnal")
+    data = _data()
+    rt.materialize(data, 10, seed=0)
+    pin0 = rt._profile_of.copy()
+    rt.materialize(data, 10, seed=0)                # drift re-draw
+    np.testing.assert_array_equal(pin0, rt._profile_of)
+
+    rng = np.random.RandomState(1)
+    idx = np.arange(10)
+    lrs, eps = rt.draw_rates(rng, idx)
+    for j, i in enumerate(idx):
+        p = rt.spec.profiles[int(rt._profile_of[i])]
+        assert p.lr_min <= lrs[j] <= p.lr_max
+        assert p.epochs_min <= eps[j] <= p.epochs_max
+
+
+def test_dropout_truncates_to_nonempty_prefix():
+    rt = make_scenario(Scenario("t", dropout=DropoutSpec(prob=1.0, min_frac=0.2)))
+    rng = np.random.RandomState(0)
+    n_steps = np.asarray([1, 4, 10, 25], np.int64)
+    out = rt.apply_dropout(rng, n_steps)
+    assert (out >= 1).all()
+    assert (out <= n_steps).all()
+    assert (out < n_steps).any()        # prob=1 must actually truncate
+
+
+# ---------------------------------------------------------------------------
+# FedSim integration
+# ---------------------------------------------------------------------------
+
+
+_PROBLEM = None
+
+
+def _problem():
+    global _PROBLEM
+    if _PROBLEM is None:
+        data = make_classification(384, dim=6, n_classes=3, seed=11)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+        params0 = {
+            "w0": jax.random.normal(k1, (6, 8)) / 3.0,
+            "b0": jnp.zeros((8,)),
+            "w1": jax.random.normal(k2, (8, 3)) / np.sqrt(8),
+            "b1": jnp.zeros((3,)),
+        }
+
+        def loss_fn(p, batch):
+            h = jnp.tanh(batch["x"] @ p["w0"] + p["b0"]) @ p["w1"] + p["b1"]
+            lp = jax.nn.log_softmax(h)
+            return -jnp.mean(
+                jnp.take_along_axis(lp, batch["y"][:, None].astype(jnp.int32), -1)
+            )
+
+        _PROBLEM = (data, params0, loss_fn)
+    return _PROBLEM
+
+
+@pytest.mark.parametrize("name", available_scenarios())
+def test_every_registered_scenario_runs_end_to_end(name):
+    data, params0, loss_fn = _problem()
+    cfg = FedSimConfig(
+        algorithm="fednova", n_clients=6, participation=0.6, rounds=2,
+        batch_size=4, steps_per_epoch=1, seed=3, backend="vectorized",
+        scenario=name,
+    )
+    sim = FedSim(loss_fn, params0, data, None, cfg)
+    hist = sim.run()
+    assert len(hist["loss"]) == 2
+    assert np.isfinite(hist["loss"]).all()
+
+
+def test_scenario_rejects_explicit_partitions():
+    data, params0, loss_fn = _problem()
+    cfg = FedSimConfig(algorithm="fednova", n_clients=6, scenario="iid")
+    with pytest.raises(ValueError, match="partitions=None"):
+        FedSim(loss_fn, params0, data, [np.arange(10)] * 6, cfg)
+
+
+def test_drift_scenario_rebuilds_partitions_midrun():
+    data, params0, loss_fn = _problem()
+    spec = dataclasses.replace(get_scenario("drift"), drift_every=2)
+    cfg = FedSimConfig(
+        algorithm="fednova", n_clients=6, participation=0.6, rounds=4,
+        batch_size=4, steps_per_epoch=1, seed=3, backend="vectorized",
+        scenario=spec,
+    )
+    sim = FedSim(loss_fn, params0, data, None, cfg)
+    before = [p.copy() for p in sim.partitions]
+    hist = sim.run()
+    assert np.isfinite(hist["loss"]).all()
+    assert sim.scn.drift_count == 2     # initial materialize + one drift
+    changed = any(
+        len(a) != len(b) or (a != b).any()
+        for a, b in zip(before, sim.partitions)
+    )
+    assert changed, "drift boundary should have re-drawn the partition"
+
+
+def test_dropout_scenario_exercises_event_staleness():
+    """Mid-round dropout + device tiers + a sub-1.0 horizon: stragglers
+    must be left pending (the staleness/re-anchoring path) and the flow
+    invariant machinery must keep losses finite throughout."""
+    data, params0, loss_fn = _problem()
+    cfg = FedSimConfig(
+        algorithm="fedecado", n_clients=8, participation=0.75, rounds=1,
+        batch_size=4, steps_per_epoch=2, seed=5, backend="event",
+        event_horizon=0.5, scenario="flaky-dropout",
+        consensus=ConsensusConfig(max_substeps=6),
+    )
+    sim = FedSim(loss_fn, params0, data, None, cfg)
+    total_stale = 0
+    for _ in range(6):
+        hist = sim.run(1)
+        assert np.isfinite(hist["loss"]).all()
+        total_stale += sim.backend.last_round_stats["stale"]
+    assert total_stale > 0, "sub-1.0 horizon under dropout must leave stragglers"
+
+
+def test_full_participation_algorithm_ignores_availability():
+    """ecado is synchronous-by-definition: availability traces and device
+    profiles must degrade to the full synchronous cohort draw."""
+    data, params0, loss_fn = _problem()
+    cfg = FedSimConfig(
+        algorithm="ecado", n_clients=6, rounds=1, batch_size=4,
+        steps_per_epoch=1, seed=3, backend="sequential", scenario="diurnal",
+        consensus=ConsensusConfig(max_substeps=4),
+    )
+    sim = FedSim(loss_fn, params0, data, None, cfg)
+    plan = sim._draw_plan(0, sim.n)
+    np.testing.assert_array_equal(plan.idx, np.arange(6))
+    assert (plan.n_steps == sim.cfg.epochs_fixed * sim.cfg.steps_per_epoch).all()
