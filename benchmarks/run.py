@@ -9,11 +9,12 @@ System benches:
   consensus_step      — fused Pallas kernel vs jnp reference (µs/call)
   gamma_kernel        — Γ kernel vs reference
   adaptive_overhead   — Algorithm-1 substeps/backtracks per round vs δ
-  engine              — sequential vs vectorized vs sharded execution
-                        backend rounds/sec at n_clients ∈ {10, 100, 1000}
-                        on 8 forced host devices, with a per-algorithm axis
-                        (--algorithms, names from the fed/algorithms
-                        registry); persists BENCH_engine.json
+  engine              — sequential vs vectorized vs event vs sharded
+                        execution backend rounds/sec at n_clients ∈
+                        {10, 100, 1000} on 8 forced host devices, with a
+                        per-algorithm axis (--algorithms, names from the
+                        fed/algorithms registry; event rows are flow-only);
+                        persists BENCH_engine.json (schema v3)
   scenarios           — a reduced algorithms × heterogeneity-scenarios
                         matrix through launch/sweep.py (the full
                         committed BENCH_scenarios.json is produced by
@@ -86,7 +87,7 @@ def _mlp_problem(dim=32, classes=10, n=2048, seed=0, hidden=48):
 
 def _run_algorithms(data, params0, loss_fn, eval_fn, parts, rounds, hetero, seed):
     from repro.core import ConsensusConfig
-    from repro.fed import FedSim, FedSimConfig
+    from repro.fed import FedSim, FedSimConfig, last_finite_loss
     from repro.fed.algorithms import comparison_algorithms
 
     out = {}
@@ -104,7 +105,8 @@ def _run_algorithms(data, params0, loss_fn, eval_fn, parts, rounds, hetero, seed
         hist = sim.run()
         out[alg] = {
             "acc": hist["metrics"][-1][1]["acc"],
-            "loss": hist["loss"][-1],
+            # nan-aware: the event backend marks all-busy rounds with nan
+            "loss": last_finite_loss(hist["loss"]),
             "wall_s": time.time() - t0,
         }
     return out
@@ -200,14 +202,15 @@ def consensus_step_bench(A=16, D=1 << 16):
     gi = jnp.asarray(rng.uniform(0.05, 0.2, A), jnp.float32)
     dt, tau = jnp.float32(0.02), jnp.float32(0.01)
     I_a, J_a, xn = st(0.1), st(0.1), st(1.0)
+    xp = {"w": jnp.broadcast_to(tree["w"][None], (A, D))}  # synchronous anchors
 
     for use_kernel, name in ((True, "pallas_interpret"), (False, "jnp_ref")):
         fn = jax.jit(
-            lambda xc, Sf, I, J, xn, T, gi, uk=use_kernel: fused_consensus_step(
-                xc, Sf, I, J, xn, T, gi, dt, tau, 1.0, use_kernel=uk
+            lambda xc, Sf, I, J, xp, xn, T, gi, uk=use_kernel: fused_consensus_step(
+                xc, Sf, I, J, xp, xn, T, gi, dt, tau, 1.0, use_kernel=uk
             )
         )
-        us = _timeit(fn, tree, Sf, I_a, J_a, xn, T, gi, iters=10)
+        us = _timeit(fn, tree, Sf, I_a, J_a, xp, xn, T, gi, iters=10)
         gb = (A * D * 3 + 2 * D) * 4 / 1e9
         _row(f"consensus_step_{name}_A{A}_D{D}", us,
              f"traffic={gb:.3f}GB;GBps={gb / (us / 1e6):.1f}")
@@ -251,32 +254,36 @@ def adaptive_overhead_bench():
         )
 
 
-ENGINE_BENCH_SCHEMA_VERSION = 2
+ENGINE_BENCH_SCHEMA_VERSION = 3
 
 
 def engine_bench(
     rounds=10,
     sizes=(10, 100, 1000),
-    backends=("sequential", "vectorized", "sharded"),
+    backends=("sequential", "vectorized", "event", "sharded"),
     algorithms=("fedecado",),
     json_path="BENCH_engine.json",
 ):
     """Multi-rate execution engine: sequential (one jit dispatch per client,
     the seed hot path) vs vectorized (whole cohort in one vmap-over-scan
-    dispatch) vs sharded (the cohort shard_map-ed across every local device
-    with psum consensus reductions and the whole multi-round segment
-    jit-resident) rounds/sec — full participation, heterogeneous e_i/lr_i
-    in the cross-device regime (many clients, small local batches) where
-    Python-bound per-round dispatch dominates the seed hot path.
+    dispatch) vs event (the device-resident flight-table scheduler at
+    horizon_quantile=1.0, whole segments jit-resident) vs sharded (the
+    cohort shard_map-ed across every local device with psum consensus
+    reductions and the whole multi-round segment jit-resident) rounds/sec —
+    full participation, heterogeneous e_i/lr_i in the cross-device regime
+    (many clients, small local batches) where Python-bound per-round
+    dispatch dominates the seed hot path.
 
     ``algorithms`` adds a per-algorithm axis (any names from the
     fed/algorithms registry — ``--algorithms fedecado,fednova,fedadmm``),
     so the flow-consensus and weighted-delta aggregation paths can be
-    compared on the same cohort shapes.
+    compared on the same cohort shapes. The event backend only schedules
+    flow dynamics, so event rows exist only for algorithms whose plugin
+    declares ``has_flow_dynamics``.
 
     Emits the usual CSV rows AND persists a machine-readable
     ``BENCH_engine.json`` (algorithm × backend × n_clients → rounds/sec;
-    schema v2, pinned by tests/test_bench_engine.py). Returns the report
+    schema v3, pinned by tests/test_bench_engine.py). Returns the report
     dict. Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
     (main() sets it for ``--only engine``) to give the sharded backend a
     real device axis.
@@ -318,6 +325,8 @@ def engine_bench(
             "epochs_range": [cfg0.hetero.epochs_min, cfg0.hetero.epochs_max],
             "lr_range": [cfg0.hetero.lr_min, cfg0.hetero.lr_max],
             "seed": cfg0.seed,
+            "event_horizon": cfg0.event_horizon,
+            "event_max_waves": cfg0.event_max_waves,
         },
         "results": [],
     }
@@ -326,6 +335,8 @@ def engine_bench(
         for algorithm in algorithms:
             rps = {}
             for backend in backends:
+                if backend == "event" and not get_algorithm(algorithm).has_flow_dynamics:
+                    continue       # the event scheduler is flow-only
                 cfg = make_cfg(n, backend, algorithm)
                 # warm-up covers every jit variant the timed run will hit
                 # (for the sharded backend that includes the R=rounds

@@ -103,6 +103,18 @@ def main():
             acc = hist["metrics"][-1][1]["acc"]
             results[alg].append(acc)
             print(f"rep {rep} {alg:10s} acc={acc:.4f}", flush=True)
+            if backend == "event" and rep == 0:
+                # make the async behaviour observable: per-round flight-table
+                # stats (arrivals absorbed, stragglers pending, BE waves,
+                # adaptive substeps, busy re-draws dropped from the plan)
+                for r, s in enumerate(sim.backend.round_stats):
+                    print(
+                        f"    round {r:3d}  arrived={s['arrived']:2d} "
+                        f"stale={s['stale']:2d} waves={s['waves']} "
+                        f"substeps={s['substeps']:3d} "
+                        f"dropped={s['dropped']}",
+                        flush=True,
+                    )
 
     print(f"\n== Table-2-style summary ({scenario.name}: {scenario.axes()}; "
           "mean ± std over device draws) ==")

@@ -8,6 +8,14 @@ from repro.core.fedecado import (
 )
 from repro.core.flow import ServerState, init_server_state
 from repro.core.gamma import gamma, gamma_leaf, gamma_stacked
+from repro.core.multirate import (
+    FlightTable,
+    MultirateStats,
+    flight_insert,
+    init_flight_table,
+    masked_quantile,
+    multirate_integrate,
+)
 from repro.core.sensitivity import (
     hutchinson_diag,
     hutchinson_scalar,
@@ -20,6 +28,8 @@ __all__ = [
     "server_round", "set_gains", "RoundStats", "ecado_round",
     "consensus_integrate",
     "ServerState", "init_server_state",
+    "FlightTable", "MultirateStats", "init_flight_table", "flight_insert",
+    "masked_quantile", "multirate_integrate",
     "gamma", "gamma_leaf", "gamma_stacked",
     "hutchinson_scalar", "hutchinson_diag", "hvp", "make_gain",
 ]

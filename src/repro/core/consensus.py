@@ -205,18 +205,20 @@ def adaptive_be_step(
     use_kernel = (
         ccfg.use_kernels
         and isinstance(g_inv, jax.Array)
-        and axis_name is None
-        and mask is None    # the fused kernel has no cohort-padding mask path
+        and axis_name is None   # the fused kernel reduces densely, no psum
     )
     if use_kernel:
-        # Fused Pallas path: Γ + BE Schur + LTE in one pass over parameters.
-        # (The kernel assumes round-start client states == broadcast x_c,
-        # which is how x_prev_a is constructed in fedecado.server_round.)
+        # Fused Pallas path: Γ + BE Schur + LTE in one pass over parameters,
+        # with explicit per-client Γ anchors and an optional activity mask —
+        # the anchored-masked form the event scheduler's stale flights need
+        # (core/multirate.py), degenerating to the synchronous round when
+        # x_prev_a is the broadcast x_c and the mask is None.
         from repro.kernels.ops import fused_consensus_step
 
         def trial(dt):
             xc_n, I_n, eps = fused_consensus_step(
-                x_c, S_frozen, I_a, J_a, x_new_a, T_a, g_inv, dt, tau, ccfg.L,
+                x_c, S_frozen, I_a, J_a, x_prev_a, x_new_a, T_a, g_inv,
+                dt, tau, ccfg.L, mask=mask,
             )
             return xc_n, I_n, eps
 

@@ -1,0 +1,384 @@
+"""Device-resident multi-rate event integration: the flight table.
+
+The event scheduler's unit of work is an in-flight client: a dispatched
+client whose local trajectory the server has not yet fully absorbed. PR 1
+represented those as a host-Python list of ``InFlight`` dataclasses, which
+forced a device→host sync on every adaptive-BE substep and could neither
+shard nor ride a jit-resident multi-round segment. This module replaces the
+list with a fixed-capacity **flight table** — a pytree of stacked arrays —
+and reimplements the whole event round (horizon, waves, adaptive-BE
+substepping, staleness re-anchoring) as pure jax control flow:
+
+  * ``FlightTable``: capacity-C stacked Γ anchors ``x_prev``/``x_new``
+    (leaves (C, ...)), remaining windows ``T_rem`` (C,), ``stale_rounds``
+    (C,), client ids ``cid`` (C,) and an ``alive`` mask (C,). The table is
+    **direct-indexed**: slot ``c`` holds client ``offset + c``'s flight (a
+    client has at most one in-flight record, so capacity = n_clients is an
+    exact bound and busy lookups are O(1) gathers). ``cid`` carries an
+    out-of-bounds sentinel on dead slots so every write-back is a
+    ``mode="drop"`` one-hot scatter — dead rows can never alias a real
+    client.
+  * ``flight_insert``: batched masked insert of a freshly dispatched cohort
+    (one one-hot scatter per leaf; masked rows — busy clients, cohort
+    padding — leave the table bitwise untouched).
+  * ``multirate_integrate``: one full event round. The horizon is a masked
+    ``jnp.nanquantile`` over alive windows; arrivals are partitioned into at
+    most ``max_waves`` waves by per-wave quantile thresholds of the arrived
+    windows; each wave runs the Algorithm-1 adaptive-BE loop as a
+    ``lax.while_loop`` with the active set expressed as a mask into
+    ``be_step``/``lte`` (core/consensus.py) — the same masked path the
+    sharded backend uses, so passing ``axis_name`` shards the capacity axis
+    over the client mesh with psum-reduced wave solves; stale flights are
+    Γ re-anchored to τ_end with one batched masked lerp (the Pallas
+    anchor-rebase kernel when ``ccfg.use_kernels``).
+
+Zero host syncs: every quantity that used to round-trip through ``float()``
+(horizon, wave boundaries, dt, LTE scalars) stays on device, so a whole
+segment of event rounds can live inside one jit (sim/events.py).
+
+Wave semantics vs PR 1: the host scheduler split arrivals into
+``np.array_split`` rank groups; the device version uses quantile thresholds
+over the arrived windows — identical at ``max_waves=1`` (and in particular
+at the ``horizon_quantile=1.0`` setting pinned against the sequential
+oracle in tests/test_backend_equiv.py), and the same up to tie-breaking
+elsewhere. Like the synchronous round, a wave's last BE substep may
+overshoot its boundary (Γ extrapolates); stale windows are clamped at a
+small positive remainder so an overshot straggler simply arrives first
+thing next round. The Σ_i I_i = 0 fixed-point invariant is preserved by
+construction for any slicing: every wave's solve sees
+Σ_active I_a + S_frozen = Σ_all I_i (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.consensus import ConsensusConfig, adaptive_be_step
+from repro.core.flow import take_rows, tree_sum_clients
+
+Pytree = Any
+
+# dead-slot sentinel: far out of bounds for any client tensor, so every
+# mode="drop" scatter keyed on ``cid`` drops dead rows
+DEAD_CID = 1 << 30
+
+
+class FlightTable(NamedTuple):
+    """Fixed-capacity table of in-flight clients (leaves stacked on a
+    leading capacity axis C; direct-indexed, slot c <-> client offset+c)."""
+
+    cid: jax.Array          # (C,) int32 client id; DEAD_CID on dead slots
+    x_prev: Pytree          # leaves (C, ...) Γ anchor at τ=0 of this round
+    x_new: Pytree           # leaves (C, ...) local endpoint x_i(T_i)
+    T_rem: jax.Array        # (C,) float32 remaining continuous-time window
+    stale_rounds: jax.Array  # (C,) int32 rounds spent in the queue
+    alive: jax.Array        # (C,) float32 1 = in flight, 0 = free slot
+
+    @property
+    def capacity(self) -> int:
+        return self.T_rem.shape[0]
+
+
+class MultirateStats(NamedTuple):
+    """Per-round event statistics (global counts under ``axis_name``)."""
+
+    arrived: jax.Array      # int32 flights absorbed this round
+    stale: jax.Array        # int32 flights left pending
+    waves: jax.Array        # int32 waves that integrated > 0 time
+    substeps: jax.Array     # int32 total adaptive-BE substeps
+    horizon: jax.Array      # float32 round horizon W
+    tau_end: jax.Array      # float32 centrally integrated time
+
+
+def init_flight_table(params_like: Pytree, capacity: int) -> FlightTable:
+    """An empty table whose anchor leaves mirror ``params_like`` with a
+    leading capacity axis."""
+    zeros = jax.tree.map(
+        lambda l: jnp.zeros((capacity,) + jnp.shape(l), jnp.float32),
+        params_like,
+    )
+    return FlightTable(
+        cid=jnp.full((capacity,), DEAD_CID, jnp.int32),
+        x_prev=zeros,
+        x_new=jax.tree.map(jnp.array, zeros),
+        T_rem=jnp.zeros((capacity,), jnp.float32),
+        stale_rounds=jnp.zeros((capacity,), jnp.int32),
+        alive=jnp.zeros((capacity,), jnp.float32),
+    )
+
+
+def _bcast(v: jax.Array, like: jax.Array) -> jax.Array:
+    return v.reshape((-1,) + (1,) * (like.ndim - 1))
+
+
+def _concrete(x) -> Optional[np.ndarray]:
+    """The array's concrete numpy value, or None under a jit trace."""
+    try:
+        return np.asarray(x)
+    except (jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return None
+
+
+def flight_insert(
+    table: FlightTable,
+    cid: jax.Array,         # (A,) int32 global client ids
+    x_prev_a: Pytree,       # leaves (A, ...)
+    x_new_a: Pytree,        # leaves (A, ...)
+    T_a: jax.Array,         # (A,) float32 windows
+    mask: jax.Array,        # (A,) float32 1 = insert, 0 = leave untouched
+    offset: int = 0,        # first global client id owned by this table shard
+) -> FlightTable:
+    """Masked batched insert of a dispatched cohort.
+
+    Slot assignment is direct: client ``cid`` lands in slot ``cid - offset``
+    (rows outside [offset, offset + C) are dropped — that is how each shard
+    of a sharded table claims its own rows from an all-gathered cohort).
+    Every leaf updates through a one-hot scatter-add into zeros + a
+    hit-masked select, so masked-out rows and untouched slots stay bitwise
+    identical. The caller must mask out busy clients (slots already alive);
+    inserting into an alive slot would alias two flights of one client.
+
+    When called with concrete (non-traced) inputs the overflow and busy
+    invariants are checked eagerly and raise ``ValueError``; under a jit
+    trace the contract is the caller's (sim/events.py masks busy draws and
+    sizes the capacity to n_clients, which makes overflow impossible).
+    """
+    C = table.capacity
+    raw_slots = cid.astype(jnp.int32) - jnp.int32(offset)
+
+    c_slots, c_mask, c_alive = (
+        _concrete(raw_slots), _concrete(mask), _concrete(table.alive)
+    )
+    # eager invariant checks apply to whole (unsharded) tables only: a shard
+    # (offset from a traced axis_index, or a later shard's rows) legitimately
+    # sees out-of-range rows and masks them below
+    c_off = _concrete(offset)
+    if (c_off is not None and int(c_off) == 0
+            and c_slots is not None and c_mask is not None):
+        sel = c_slots[c_mask > 0]
+        if sel.size and (sel.min() < 0 or sel.max() >= C):
+            raise ValueError(
+                f"FlightTable overflow: insert targets slot(s) "
+                f"{sorted(set(int(s) for s in sel if s < 0 or s >= C))} "
+                f"outside capacity {C} — the table is direct-indexed, so "
+                "capacity must cover every dispatchable client id"
+            )
+        if c_alive is not None and (c_alive[sel] > 0).any():
+            raise ValueError(
+                "FlightTable busy-slot insert: client(s) "
+                f"{sorted(int(c_slots[j]) for j in range(len(c_slots)) if c_mask[j] > 0 and c_alive[c_slots[j]] > 0)} "
+                "are already in flight — mask busy draws out before inserting"
+            )
+
+    # rows outside this shard's slot range are someone else's to claim —
+    # mask them instead of relying on scatter dropping (negative indices
+    # would WRAP, landing a flight in the wrong client's slot)
+    in_range = ((raw_slots >= 0) & (raw_slots < C)).astype(mask.dtype)
+    mask = mask * in_range
+    slots = jnp.clip(raw_slots, 0, C - 1)
+
+    hit = jnp.zeros((C,), jnp.float32).at[slots].add(mask, mode="drop")
+
+    def put_leaf(leaf, rows):
+        upd = jnp.zeros_like(leaf).at[slots].add(
+            rows.astype(leaf.dtype) * _bcast(mask, rows).astype(leaf.dtype),
+            mode="drop",
+        )
+        return jnp.where(_bcast(hit, leaf) > 0, upd, leaf)
+
+    imask = mask.astype(jnp.int32)
+    cid_new = jnp.full((C,), 0, jnp.int32).at[slots].add(
+        cid.astype(jnp.int32) * imask, mode="drop"
+    )
+    return FlightTable(
+        cid=jnp.where(hit > 0, cid_new, table.cid),
+        x_prev=jax.tree.map(put_leaf, table.x_prev, x_prev_a),
+        x_new=jax.tree.map(put_leaf, table.x_new, x_new_a),
+        T_rem=put_leaf(table.T_rem, T_a.astype(jnp.float32)),
+        stale_rounds=jnp.where(hit > 0, 0, table.stale_rounds),
+        alive=jnp.where(hit > 0, 1.0, table.alive),
+    )
+
+
+def masked_quantile(vals: jax.Array, mask: jax.Array, q) -> jax.Array:
+    """``np.quantile`` (linear interpolation) over the masked entries of
+    ``vals``; nan when the mask is empty."""
+    return jnp.nanquantile(
+        jnp.where(mask > 0, vals, jnp.nan), q, method="linear"
+    )
+
+
+def _masked_sum_rows(tree: Pytree, mask: jax.Array,
+                     axis_name: Optional[str]) -> Pytree:
+    """Σ over the capacity axis of mask-selected rows (+psum when sharded)."""
+
+    def leaf(l):
+        s = jnp.sum(l * _bcast(mask, l), axis=0)
+        return jax.lax.psum(s, axis_name) if axis_name else s
+
+    return jax.tree.map(leaf, tree)
+
+
+def _psum_scalar(x, axis_name):
+    return jax.lax.psum(x, axis_name) if axis_name else x
+
+
+def multirate_integrate(
+    x_c: Pytree,
+    I: Pytree,                      # replicated (n_clients, ...) flow rows
+    g_inv,                          # (n,) scalar gains or diag pytree rows
+    dt_last: jax.Array,
+    t: jax.Array,
+    table: FlightTable,
+    ccfg: ConsensusConfig,
+    horizon_quantile: float,
+    max_waves: int,
+    axis_name: Optional[str] = None,
+):
+    """One event round over the flight table (Algorithm 2, multi-rate form).
+
+    Absorbs the ``horizon_quantile`` of alive windows in ≤ ``max_waves``
+    waves of adaptive-BE integration, Γ re-anchors the stragglers to the
+    integrated time τ_end, and writes the arrived flights' flow rows back
+    into ``I``. With ``axis_name`` the capacity axis is a shard of a
+    ``shard_map`` program over the client mesh: the horizon/wave thresholds
+    are computed from all-gathered (tiny, (C,)) window vectors, the BE Schur
+    sums psum across devices via the masked path of ``be_step``/``lte``, and
+    the flow write-back is the exact-set one-hot psum scatter — every scalar
+    steering the wave/substep loops is replicated, so all devices branch
+    identically.
+
+    Returns ``(x_c, I, dt_last, t, table, MultirateStats)``.
+    """
+    alive = table.alive
+    T = table.T_rem
+
+    if axis_name:
+        T_all = jax.lax.all_gather(T, axis_name, tiled=True)
+        alive_all = jax.lax.all_gather(alive, axis_name, tiled=True)
+    else:
+        T_all, alive_all = T, alive
+
+    m = jnp.sum(alive_all)
+    # round horizon: quantile of alive windows, but always admit the
+    # earliest arrival so the server makes progress
+    W = masked_quantile(T_all, alive_all, horizon_quantile)
+    W = jnp.maximum(W, jnp.min(jnp.where(alive_all > 0, T_all, jnp.inf)))
+    W = jnp.where(m > 0, W, 0.0)
+
+    arrived = (alive > 0) & (T <= W + 1e-12)
+    arrived_f = arrived.astype(jnp.float32)
+    arrived_all = (alive_all > 0) & (T_all <= W + 1e-12)
+    n_arr = jnp.sum(arrived_all.astype(jnp.float32))
+
+    # round-start views: previous-round flows J0 and per-flight gains,
+    # gathered by cid (dead slots clamp harmlessly — masked everywhere)
+    gather_ids = jnp.minimum(table.cid, jax.tree.leaves(I)[0].shape[0] - 1)
+    J0 = take_rows(I, gather_ids)
+    g_rows = (
+        jnp.take(g_inv, gather_ids, axis=0)
+        if isinstance(g_inv, jax.Array)
+        else take_rows(g_inv, gather_ids)
+    )
+    S_all0 = tree_sum_clients(I)
+
+    def wave_step(w, carry):
+        x_c, I_tab, tau, dt, n_sub, n_waves = carry
+        qw = (w + 1).astype(jnp.float32) / max_waves
+        tau1 = masked_quantile(T_all, arrived_all.astype(jnp.float32), qw)
+        tau1 = jnp.where(n_arr > 0, tau1, 0.0)
+        active = arrived_f * (T <= tau1 + 1e-12).astype(jnp.float32)
+        # frozen flows: everything outside this wave's active set — rows not
+        # yet active carry their round-start values, so Σ_inactive current
+        # = Σ_all I − Σ_active J0 (active sets are nested across waves)
+        S_act = _masked_sum_rows(J0, active, axis_name)
+        S_frozen = jax.tree.map(jnp.subtract, S_all0, S_act)
+        J_w = I_tab  # wave-start anchor for the (I − J)·g⁻¹ gain term
+
+        def cond(c):
+            _, _, tau_c, _, k = c
+            return (tau_c < tau1) & (k < ccfg.max_substeps)
+
+        def body(c):
+            xc_c, I_c, tau_c, dt_c, k = c
+            dt_c = jnp.minimum(dt_c, ccfg.dt_max)
+            res = adaptive_be_step(
+                xc_c, I_c, J_w, table.x_prev, table.x_new, T, g_rows,
+                S_frozen, tau_c, dt_c, ccfg,
+                axis_name=axis_name, mask=active,
+            )
+            grow = jnp.where(res.eps < 0.5 * ccfg.delta, 1.5, 1.0)
+            new_dt = jnp.minimum(res.dt_used * grow, ccfg.dt_max)
+            # masked rows come back 0 from the Schur solve — keep theirs
+            I_next = jax.tree.map(
+                lambda new, old: jnp.where(_bcast(active, new) > 0, new, old),
+                res.I_a, I_c,
+            )
+            return res.x_c, I_next, tau_c + res.dt_used, new_dt, k + 1
+
+        x_c, I_tab, tau_w, dt, k = jax.lax.while_loop(
+            cond, body, (x_c, I_tab, tau, dt, jnp.zeros((), jnp.int32))
+        )
+        return (x_c, I_tab, tau_w, dt, n_sub + k,
+                n_waves + (k > 0).astype(jnp.int32))
+
+    zero_i = jnp.zeros((), jnp.int32)
+    x_c, I_tab, tau_end, dt_f, n_sub, n_waves = jax.lax.fori_loop(
+        0, int(max_waves), wave_step,
+        (x_c, J0, jnp.zeros((), jnp.float32), dt_last, zero_i, zero_i),
+    )
+
+    # arrived flights: flow rows re-enter the replicated I through the
+    # exact-set one-hot scatter (each real slot owned by exactly one shard)
+    n = jax.tree.leaves(I)[0].shape[0]
+    hit = _psum_scalar(
+        jnp.zeros((n,), jnp.float32).at[table.cid].add(arrived_f, mode="drop"),
+        axis_name,
+    )
+    rows = jax.tree.map(
+        lambda full, r: _psum_scalar(
+            jnp.zeros_like(full).at[table.cid].add(
+                r * _bcast(arrived_f, r), mode="drop"
+            ),
+            axis_name,
+        ),
+        I, I_tab,
+    )
+    I_new = jax.tree.map(
+        lambda full, r: jnp.where(_bcast(hit, full) > 0, r, full), I, rows
+    )
+
+    # stragglers: deduct the centrally integrated window and re-anchor Γ
+    # there (exact by Theorem-1 linearity) with one batched masked lerp
+    stale = alive * (1.0 - arrived_f)
+    frac = tau_end / jnp.maximum(T, 1e-12)
+    from repro.kernels.ops import anchor_rebase_op  # lazy: kernels are leaf deps
+
+    x_prev_new = anchor_rebase_op(
+        table.x_prev, table.x_new, frac, stale,
+        use_kernel=ccfg.use_kernels,
+    )
+    table_new = FlightTable(
+        cid=jnp.where(stale > 0, table.cid, DEAD_CID),
+        x_prev=x_prev_new,
+        x_new=table.x_new,
+        # clamp: a wave may overshoot its boundary (as the synchronous round
+        # does); an overshot straggler keeps a tiny positive remainder and
+        # arrives first thing next round
+        T_rem=jnp.where(stale > 0, jnp.maximum(T - tau_end, 1e-6), 0.0),
+        stale_rounds=jnp.where(stale > 0, table.stale_rounds + 1, 0),
+        alive=stale,
+    )
+    stats = MultirateStats(
+        arrived=_psum_scalar(jnp.sum(arrived_f), axis_name).astype(jnp.int32),
+        stale=_psum_scalar(jnp.sum(stale), axis_name).astype(jnp.int32),
+        waves=n_waves,
+        substeps=n_sub,
+        horizon=W,
+        tau_end=tau_end,
+    )
+    return x_c, I_new, dt_f, t + tau_end, table_new, stats

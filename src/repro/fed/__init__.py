@@ -24,10 +24,17 @@ from repro.fed.partition import (
     label_shard_partition,
     quantity_skew_partition,
 )
-from repro.fed.server import ALGORITHMS, FedSim, FedSimConfig
+from repro.fed.server import (
+    ALGORITHMS,
+    FedSim,
+    FedSimConfig,
+    last_finite_loss,
+    mean_finite_loss,
+)
 
 __all__ = [
     "FedSim", "FedSimConfig", "ALGORITHMS",
+    "last_finite_loss", "mean_finite_loss",
     "FederatedAlgorithm", "WeightedDeltaAlgorithm",
     "available_algorithms", "get_algorithm", "make_algorithm", "register",
     "HeteroConfig", "ClientOutput", "CLIENT_KINDS", "client_step",

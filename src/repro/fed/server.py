@@ -29,9 +29,12 @@ Client execution is delegated to the multi-rate engine in ``repro/sim``
 behind the ``ExecutionBackend`` interface — ``FedSimConfig.backend`` picks
 ``sequential`` (per-client dispatch, the numerical reference oracle),
 ``vectorized`` (whole cohort in one vmap-over-scan dispatch), ``event``
-(continuous-time scheduler with straggler staleness; requires
-``alg.has_flow_dynamics``), or ``sharded`` (shard_map over the client mesh
-axis with psum consensus reductions and jit-resident multi-round segments).
+(device-resident flight-table scheduler with straggler staleness and
+jit-resident segments, optionally mesh-sharded via ``event_sharded``;
+requires ``alg.has_flow_dynamics``; all-busy rounds report ``loss = nan``
+— summarize histories with ``last_finite_loss``/``mean_finite_loss``), or
+``sharded`` (shard_map over the client mesh axis with psum consensus
+reductions and jit-resident multi-round segments).
 All host-side randomness for a round is rolled into a ``CohortPlan`` up
 front so every backend consumes identical cohorts/batches (DESIGN.md §5);
 ``run`` hands whole segments of pre-drawn plans to the backend and only
@@ -61,6 +64,30 @@ Pytree = Any
 # snapshot of the registry at import time, kept for back-compat call sites;
 # prefer fed.algorithms.available_algorithms() which reflects late plugins
 ALGORITHMS = available_algorithms()
+
+
+def last_finite_loss(losses: Sequence[float]) -> float:
+    """The most recent finite entry of a loss history, or nan if none.
+
+    The event backend marks all-busy rounds (no client dispatched, server
+    advanced on pending arrivals only) with ``loss = nan`` rather than
+    pretending a loss was observed; any consumer that summarizes a history
+    endpoint must skip those gaps instead of averaging them away —
+    ``nan`` propagating into a "final loss" mislabels an otherwise healthy
+    run as diverged."""
+    arr = np.asarray(list(losses), np.float64)
+    finite = np.isfinite(arr)
+    if not finite.any():
+        return float("nan")
+    return float(arr[finite][-1])
+
+
+def mean_finite_loss(losses: Sequence[float]) -> float:
+    """nan-skipping mean of a loss history (nan if every entry is a gap)."""
+    arr = np.asarray(list(losses), np.float64)
+    if not np.isfinite(arr).any():
+        return float("nan")
+    return float(np.nanmean(arr))
 
 
 @dataclasses.dataclass
@@ -94,6 +121,9 @@ class FedSimConfig:
     # (< 1.0 leaves stragglers in the queue -> mid-round returns next round)
     event_horizon: float = 1.0
     event_max_waves: int = 4        # BE sync groups per round
+    # run the event backend's flight table sharded over the client mesh
+    # (psum-reduced wave solves, DESIGN.md §8); False = dense single-device
+    event_sharded: bool = False
     # fuse the averaging-family cohort aggregation with the Pallas
     # batched-aggregation kernel (kernels/batch_agg.py)
     agg_kernels: bool = False

@@ -1,7 +1,9 @@
 """Pallas TPU kernels for the paper's perf-critical hot spots.
 
-consensus.py  — fused Γ + BE Schur solve + LTE (the FedECADO server step)
-gamma.py      — standalone Γ interpolation/extrapolation
+consensus.py  — fused Γ + BE Schur solve + LTE (the FedECADO server step,
+                anchored-masked: explicit per-client Γ anchors + row mask)
+gamma.py      — Γ interpolation/extrapolation + the event scheduler's
+                masked anchor-rebase lerp (core/multirate.py staleness)
 batch_agg.py  — masked weighted cohort aggregation (fedavg/fednova step)
 hutchinson.py — fused sensitivity probe accumulate (v ⊙ Hv + trace)
 ssm_scan.py   — VMEM-resident selective scan (Mamba/jamba hot loop)
@@ -9,6 +11,7 @@ ops.py        — jit'd pytree wrappers (kernel ↔ ref dispatch)
 ref.py        — pure-jnp oracles (tests assert allclose in interpret mode)
 """
 from repro.kernels.ops import (
+    anchor_rebase_op,
     batch_agg_psum,
     batched_aggregate,
     fused_consensus_step,
@@ -21,7 +24,7 @@ from repro.kernels.ops import (
 )
 
 __all__ = [
-    "batch_agg_psum", "batched_aggregate", "fused_consensus_step", "gamma_op",
-    "hutchinson_op",
+    "anchor_rebase_op", "batch_agg_psum", "batched_aggregate",
+    "fused_consensus_step", "gamma_op", "hutchinson_op",
     "ravel_tree", "unravel_tree", "ravel_stacked", "unravel_stacked",
 ]

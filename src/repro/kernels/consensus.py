@@ -34,6 +34,7 @@ def _consensus_kernel(
     sf_ref,     # (TILE_D,)
     I_ref,      # (A, TILE_D)
     J_ref,      # (A, TILE_D)
+    xprev_ref,  # (A, TILE_D)
     xnew_ref,   # (A, TILE_D)
     xc_out,     # (TILE_D,)
     I_out,      # (A, TILE_D)
@@ -51,13 +52,14 @@ def _consensus_kernel(
     xc = xc_ref[:]
     I = I_ref[:, :]
     J = J_ref[:, :]
+    xp = xprev_ref[:, :]
     xn = xnew_ref[:, :]
 
     frac_new = (tau + dt) / T
     frac_old = tau / T
-    delta = xn - xc[None]
-    g_new = xc[None] + delta * frac_new
-    g_old = xc[None] + delta * frac_old
+    delta = xn - xp
+    g_new = xp + delta * frac_new
+    g_old = xp + delta * frac_old
 
     d = 1.0 + r * gi
     u = (I + r * (g_new + J * gi)) / d * m
@@ -77,10 +79,14 @@ def _consensus_kernel(
 
 
 def consensus_call(
-    x_c, S_frozen, I, J, x_new, T, g_inv, mask, dt, tau, L: float,
+    x_c, S_frozen, I, J, x_prev, x_new, T, g_inv, mask, dt, tau, L: float,
     *, interpret: bool = True, tile_d: int = TILE_D,
 ):
     """Invoke the fused kernel. Caller guarantees D % tile_d == 0.
+
+    ``x_prev`` (A, D) carries each client's explicit Γ anchor — the
+    broadcast central state in the synchronous round, a re-based anchor for
+    the event scheduler's stale flights (core/multirate.py).
 
     Returns (x_c_new (D,), I_new (A, D), eps_c scalar, eps_l scalar).
     """
@@ -99,7 +105,7 @@ def consensus_call(
         grid=grid,
         in_specs=[
             full((4,)), full((A,)), full((A,)), full((A,)),
-            tiled1, tiled1, tiled2, tiled2, tiled2,
+            tiled1, tiled1, tiled2, tiled2, tiled2, tiled2,
         ],
         out_specs=[
             tiled1, tiled2,
@@ -113,7 +119,7 @@ def consensus_call(
             jax.ShapeDtypeStruct((n_tiles,), jnp.float32),
         ],
         interpret=interpret,
-    )(scal, T, g_inv, mask, x_c, S_frozen, I, J, x_new)
+    )(scal, T, g_inv, mask, x_c, S_frozen, I, J, x_prev, x_new)
 
     x_c_new, I_new, epsc, epsl = out
     return x_c_new, I_new, jnp.max(epsc), jnp.max(epsl)

@@ -1,9 +1,20 @@
-"""Standalone Γ interpolation/extrapolation kernel (Pallas TPU).
+"""Γ interpolation/extrapolation kernels (Pallas TPU).
 
-out[a, :] = (x_c + (x_new[a] − x_c)·(τ/T_a)) · mask[a] — one fused read/write
-pass per tile (the jnp version materializes the broadcast difference first).
-Used when the server evaluates client states at probe time points outside the
-BE solve (e.g. diagnostics, Γ-based drift metrics).
+``gamma_call``: out[a, :] = (x_c + (x_new[a] − x_c)·(τ/T_a)) · mask[a] — one
+fused read/write pass per tile (the jnp version materializes the broadcast
+difference first). Used when the server evaluates client states at probe
+time points outside the BE solve (e.g. diagnostics, Γ-based drift metrics).
+
+``anchor_rebase_call``: the event scheduler's staleness hot loop
+(core/multirate.py) — masked Γ anchor rebase along each flight's
+(x_prev, x_new) line:
+
+  out[a, :] = mask[a] ? x_prev[a] + (x_new[a] − x_prev[a])·frac[a]
+                      : x_prev[a]
+
+One read of each (A, TILE_D) operand tile, one write; mask=0 rows (dead
+slots, arrived flights) pass through bitwise untouched so the flight table's
+free-slot contents never drift.
 """
 from __future__ import annotations
 
@@ -38,3 +49,30 @@ def gamma_call(x_c, x_new, T, tau, mask, *, interpret: bool = True, tile_d: int 
         out_shape=jax.ShapeDtypeStruct((A, D), jnp.float32),
         interpret=interpret,
     )(scal, T, mask, x_c, x_new)
+
+
+def _anchor_rebase_kernel(frac_ref, mask_ref, xprev_ref, xnew_ref, out_ref):
+    frac = frac_ref[:][:, None]
+    keep = mask_ref[:][:, None] > 0
+    xp = xprev_ref[:, :]
+    out_ref[:, :] = jnp.where(keep, xp + (xnew_ref[:, :] - xp) * frac, xp)
+
+
+def anchor_rebase_call(
+    x_prev, x_new, frac, mask, *, interpret: bool = True, tile_d: int = TILE_D
+):
+    """Masked Γ anchor rebase over (A, D) stacked anchors. Caller
+    guarantees D % tile_d == 0. Parity oracle: kernels/ref.py::
+    anchor_rebase_ref."""
+    A, D = x_prev.shape
+    assert D % tile_d == 0, (D, tile_d)
+    full = lambda s: pl.BlockSpec(s, lambda i: (0,) * len(s))
+    tiled2 = pl.BlockSpec((A, tile_d), lambda i: (0, i))
+    return pl.pallas_call(
+        _anchor_rebase_kernel,
+        grid=(D // tile_d,),
+        in_specs=[full((A,)), full((A,)), tiled2, tiled2],
+        out_specs=tiled2,
+        out_shape=jax.ShapeDtypeStruct((A, D), jnp.float32),
+        interpret=interpret,
+    )(frac, mask, x_prev, x_new)

@@ -8,7 +8,7 @@ target for this container); on TPU they compile for real.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.batch_agg import batch_agg_call, batch_agg_partial_call
 from repro.kernels.consensus import TILE_D, consensus_call
-from repro.kernels.gamma import gamma_call
+from repro.kernels.gamma import anchor_rebase_call, gamma_call
 from repro.kernels.hutchinson import hutchinson_call
 
 Pytree = Any
@@ -94,15 +94,24 @@ def fused_consensus_step(
     S_frozen: Pytree,
     I_a: Pytree,
     J_a: Pytree,
+    x_prev_a: Pytree,
     x_new_a: Pytree,
     T: jax.Array,
     g_inv: jax.Array,
     dt: jax.Array,
     tau: jax.Array,
     L: float,
+    mask: Optional[jax.Array] = None,
     use_kernel: bool = True,
 ):
     """Γ + BE Schur + LTE in one fused pass. Scalar gains only (g_inv (A,)).
+
+    ``x_prev_a`` carries each client's explicit Γ anchor (stacked, (A, ...)
+    leaves) — the broadcast central state in the synchronous round, re-based
+    anchors for the event scheduler's stale flights — and ``mask`` (A,)
+    zeroes inactive rows out of the Schur sums and both LTE terms (the
+    anchored-masked path that lets the event backend keep
+    ``ConsensusConfig.use_kernels`` on; None = all rows active).
 
     Returns (x_c_new tree, I_new tree, eps scalar = max(eps_c, eps_l)).
     """
@@ -110,23 +119,20 @@ def fused_consensus_step(
     sf_flat, _ = ravel_tree(S_frozen)
     I_flat, smeta = ravel_stacked(I_a)
     J_flat, _ = ravel_stacked(J_a)
+    xp_flat, _ = ravel_stacked(x_prev_a)
     xn_flat, _ = ravel_stacked(x_new_a)
     A = I_flat.shape[0]
-    mask = jnp.ones((A,), jnp.float32)
+    if mask is None:
+        mask = jnp.ones((A,), jnp.float32)
 
-    if use_kernel:
-        xc_new, I_new, eps_c, eps_l = consensus_call(
-            xc_flat, sf_flat, I_flat, J_flat, xn_flat,
-            T.astype(jnp.float32), g_inv.astype(jnp.float32), mask,
-            jnp.asarray(dt, jnp.float32), jnp.asarray(tau, jnp.float32), float(L),
-            interpret=_interpret(),
-        )
-    else:
-        xc_new, I_new, eps_c, eps_l = _consensus_ref_call(
-            xc_flat, sf_flat, I_flat, J_flat, xn_flat,
-            T.astype(jnp.float32), g_inv.astype(jnp.float32), mask,
-            jnp.asarray(dt, jnp.float32), jnp.asarray(tau, jnp.float32), float(L),
-        )
+    call = consensus_call if use_kernel else _consensus_ref_call
+    xc_new, I_new, eps_c, eps_l = call(
+        xc_flat, sf_flat, I_flat, J_flat, xp_flat, xn_flat,
+        T.astype(jnp.float32), g_inv.astype(jnp.float32),
+        mask.astype(jnp.float32),
+        jnp.asarray(dt, jnp.float32), jnp.asarray(tau, jnp.float32), float(L),
+        interpret=_interpret(),
+    )
     return (
         unravel_tree(xc_new, meta),
         unravel_stacked(I_new, smeta),
@@ -134,8 +140,38 @@ def fused_consensus_step(
     )
 
 
-def _consensus_ref_call(xc, sf, I, J, xn, T, g_inv, mask, dt, tau, L, **kw):
-    return ref.consensus_ref(xc, sf, I, J, xn, T, g_inv, mask, dt, tau, L)
+def _consensus_ref_call(xc, sf, I, J, xp, xn, T, g_inv, mask, dt, tau, L, **kw):
+    return ref.consensus_ref(xc, sf, I, J, xp, xn, T, g_inv, mask, dt, tau, L)
+
+
+def anchor_rebase_op(
+    x_prev: Pytree,
+    x_new: Pytree,
+    frac: jax.Array,
+    mask: jax.Array,
+    use_kernel: bool = True,
+) -> Pytree:
+    """Masked Γ anchor rebase over stacked pytrees (the event scheduler's
+    staleness hot loop, core/multirate.py): rows with ``mask=1`` move to the
+    fraction ``frac_a`` point of their (x_prev, x_new) line; other rows pass
+    through bitwise untouched. Kernel path fuses the lerp + select into one
+    pass over the raveled (A, D) anchors; the jnp path maps the same
+    arithmetic per leaf."""
+    if use_kernel:
+        xp_flat, smeta = ravel_stacked(x_prev)
+        xn_flat, _ = ravel_stacked(x_new)
+        out = anchor_rebase_call(
+            xp_flat, xn_flat, frac.astype(jnp.float32),
+            mask.astype(jnp.float32), interpret=_interpret(),
+        )
+        return unravel_stacked(out, smeta)
+
+    def leaf(a, b):
+        fr = frac.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
+        keep = mask.reshape((-1,) + (1,) * (a.ndim - 1)) > 0
+        return jnp.where(keep, a + (b - a) * fr, a)
+
+    return jax.tree.map(leaf, x_prev, x_new)
 
 
 def gamma_op(x_c: Pytree, x_new_a: Pytree, T: jax.Array, tau, use_kernel: bool = True):

@@ -17,19 +17,21 @@ def gamma_ref(x_c, x_new, T, tau, mask):
     return (x_c[None] + (x_new - x_c[None]) * frac) * mask[:, None]
 
 
-def consensus_ref(x_c, S_frozen, I, J, x_new, T, g_inv, mask, dt, tau, L):
+def consensus_ref(x_c, S_frozen, I, J, x_prev, x_new, T, g_inv, mask, dt, tau, L):
     """Fused Γ + BE arrowhead Schur solve + LTE terms.
 
-    Returns (x_c_new (D,), I_new (A, D), eps_c scalar, eps_l scalar) where
-    eps are the *unscaled-by-(dt/2)* raw max-abs terms scaled inside, i.e.
-    already multiplied by dt/2 (paper eqs. 29-30).
+    ``x_prev`` (A, D) is each client's explicit Γ anchor (the broadcast
+    central state in the synchronous round; a re-based anchor for stale
+    event flights). Returns (x_c_new (D,), I_new (A, D), eps_c scalar,
+    eps_l scalar) where eps are the *unscaled-by-(dt/2)* raw max-abs terms
+    scaled inside, i.e. already multiplied by dt/2 (paper eqs. 29-30).
     """
     r = dt / L
     m = mask[:, None]
     frac_new = ((tau + dt) / jnp.maximum(T, 1e-12))[:, None]
     frac_old = (tau / jnp.maximum(T, 1e-12))[:, None]
-    gamma_new = x_c[None] + (x_new - x_c[None]) * frac_new
-    gamma_old = x_c[None] + (x_new - x_c[None]) * frac_old
+    gamma_new = x_prev + (x_new - x_prev) * frac_new
+    gamma_old = x_prev + (x_new - x_prev) * frac_old
 
     gi = g_inv[:, None]
     d = 1.0 + r * gi
@@ -45,6 +47,15 @@ def consensus_ref(x_c, S_frozen, I, J, x_new, T, g_inv, mask, dt, tau, L):
     eps_l = (dt / 2.0) * jnp.max(jnp.abs(rhs_new - rhs_old))
     eps_c = (dt / 2.0) * jnp.max(jnp.abs(jnp.sum((I_new - I) * m, axis=0)))
     return x_c_new, I_new, eps_c, eps_l
+
+
+def anchor_rebase_ref(x_prev, x_new, frac, mask):
+    """Masked Γ anchor rebase: rows with mask=1 move to the point a
+    fraction ``frac_a`` along the (x_prev, x_new) line (exact by Theorem-1
+    linearity); mask=0 rows pass through bitwise untouched. Shapes:
+    x_prev/x_new (A, D); frac/mask (A,)."""
+    reb = x_prev + (x_new - x_prev) * frac[:, None]
+    return jnp.where(mask[:, None] > 0, reb, x_prev)
 
 
 def batch_agg_ref(x_c, x_new, w, mask, scale):

@@ -20,6 +20,14 @@ machinery (sim/sharded.py, DESIGN.md §5.5): cohort local training is
 with uneven cohort→device padding, and the BE Schur-arrowhead consensus
 reductions run as psum along that axis instead of a gathered dense solve.
 
+``--backend event`` drives the device-resident multi-rate event engine
+(core/multirate.py, DESIGN.md §8) directly: each round's cohort endpoints
+are inserted into the flight table and a jitted insert+integrate event
+round absorbs the ``--event-horizon`` quantile of in-flight windows,
+carrying stragglers across rounds via Γ re-anchoring — per-round
+arrived/stale/wave/substep stats are printed so the async behaviour is
+observable.
+
 This is the cross-silo deployment shape described in DESIGN.md §2, scaled
 down to host devices so it executes on CPU.
 """
@@ -65,9 +73,21 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
-        "--backend", choices=("vectorized", "sharded"), default="vectorized",
-        help="vectorized = vmapped cohort pjit over (data, model); sharded = "
-        "shard_map over a 1-D clients mesh with psum consensus reductions",
+        "--backend", choices=("vectorized", "event", "sharded"),
+        default="vectorized",
+        help="vectorized = vmapped cohort pjit over (data, model); event = "
+        "device-resident flight-table scheduler (async arrivals, staleness); "
+        "sharded = shard_map over a 1-D clients mesh with psum consensus "
+        "reductions",
+    )
+    ap.add_argument(
+        "--event-horizon", type=float, default=0.7,
+        help="event backend: quantile of in-flight windows absorbed per "
+        "round (< 1.0 leaves stragglers pending across rounds)",
+    )
+    ap.add_argument(
+        "--event-max-waves", type=int, default=2,
+        help="event backend: BE sync groups per round",
     )
     args = ap.parse_args()
 
@@ -94,6 +114,9 @@ def main() -> None:
 
     if args.backend == "sharded":
         _run_sharded(args, lf, ccfg, state, batches_for, rng, client_kind)
+        return
+    if args.backend == "event":
+        _run_event(args, lf, ccfg, state, batches_for, rng, client_kind)
         return
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -133,6 +156,71 @@ def main() -> None:
                 flush=True,
             )
     print("done — cohort training and consensus both executed on the mesh")
+
+
+def _run_event(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
+    """Cohort training + the flight-table event round on device: busy draws
+    are masked before dispatch, stragglers carry across rounds, and the
+    per-round multi-rate stats are printed."""
+    from functools import partial
+
+    from repro.core.flow import broadcast_clients
+    from repro.core.multirate import (
+        flight_insert,
+        init_flight_table,
+        multirate_integrate,
+    )
+
+    cohort_train = build_cohort_runner(lf, kind=client_kind)
+    table = init_flight_table(state.x_c, args.clients)
+    ones_cohort = jnp.ones((args.cohort,), jnp.float32)
+    full_steps = jnp.full((args.cohort,), args.steps, jnp.int32)
+
+    @partial(jax.jit, static_argnums=())
+    def event_round(state_tup, tab, x_new_a, idx, Ts, dmask):
+        x_c, I, g_inv, dt_last, t = state_tup
+        A = idx.shape[0]
+        tab = flight_insert(
+            tab, idx, broadcast_clients(x_c, A), x_new_a, Ts, dmask
+        )
+        return multirate_integrate(
+            x_c, I, g_inv, dt_last, t, tab, ccfg,
+            args.event_horizon, args.event_max_waves,
+        )
+
+    t0 = time.time()
+    for rnd in range(args.rounds):
+        idx = np.sort(rng.choice(args.clients, args.cohort, replace=False))
+        lrs = rng.uniform(5e-3, 2e-2, args.cohort).astype(np.float32)
+        toks = np.stack([batches_for(int(i), args.steps) for i in idx])
+        I_a = jax.tree.map(lambda l: l[jnp.asarray(idx)], state.I)
+        x_new_a, losses = cohort_train(
+            state.x_c, I_a, {"tokens": jnp.asarray(toks)},
+            jnp.asarray(lrs), ones_cohort, full_steps,
+        )
+        busy = np.asarray(table.alive)[idx]
+        dmask = jnp.asarray(1.0 - busy, jnp.float32)
+        Ts = jnp.asarray(lrs * args.steps, jnp.float32)
+        x_c, I, dt_last, t, table, st = event_round(
+            (state.x_c, state.I, state.g_inv, state.dt_last, state.t),
+            table, x_new_a, jnp.asarray(idx, jnp.int32), Ts, dmask,
+        )
+        state = state._replace(
+            x_c=x_c, I=I, dt_last=dt_last, t=t, round=state.round + 1
+        )
+        kept = float(np.sum(1.0 - busy))
+        loss = (
+            float(np.sum(np.asarray(losses) * (1.0 - busy)) / kept)
+            if kept else float("nan")
+        )
+        print(
+            f"round {rnd}  cohort-loss {loss:.4f}  "
+            f"arrived {int(st.arrived)}  stale {int(st.stale)}  "
+            f"waves {int(st.waves)}  substeps {int(st.substeps)}  "
+            f"dropped {int(busy.sum())}  ({time.time()-t0:.0f}s)",
+            flush=True,
+        )
+    print("done — flight-table event rounds executed on device")
 
 
 def _run_sharded(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:

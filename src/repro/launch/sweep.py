@@ -9,7 +9,10 @@ comparison tables, and persists a machine-readable ``BENCH_scenarios.json``
 Two grids per run:
 
 * **accuracy matrix** — every (algorithm × scenario × seed) cell on the
-  primary ``--backend``: final eval accuracy + last-round loss + wall time;
+  primary ``--backend``: final eval accuracy + last finite loss + wall time
+  (``--backend event`` restricts to flow-dynamics algorithms, and each
+  cell's round log surfaces the async counters — dropped busy re-draws,
+  stale stragglers, absorbed arrivals);
 * **equivalence grid** — every algorithm × ``--equiv-scenarios`` ×
   {sequential, vectorized, sharded}: loss histories of the non-sequential
   backends must match the sequential oracle at ``--equiv-rtol`` (1e-6 — the
@@ -86,7 +89,7 @@ def build_problem(seed: int, n_samples: int = 2048, dim: int = 32,
 
 
 def _make_cfg(algorithm, scenario, seed, backend, *, rounds, clients,
-              participation, batch_size, steps_per_epoch):
+              participation, batch_size, steps_per_epoch, event_horizon=1.0):
     from repro.core import ConsensusConfig
     from repro.fed import FedSimConfig
 
@@ -95,49 +98,70 @@ def _make_cfg(algorithm, scenario, seed, backend, *, rounds, clients,
         rounds=rounds, batch_size=batch_size, steps_per_epoch=steps_per_epoch,
         lr_fixed=1e-2, epochs_fixed=2, hetero=None, seed=1000 + seed,
         eval_every=rounds, backend=backend, scenario=scenario,
+        event_horizon=event_horizon,
         # L tuned on the table-1 config (benchmarks/run.py)
         consensus=ConsensusConfig(L=0.01),
     )
 
 
-def _shared_backend(cache: Dict[str, object], name: str):
-    """One backend instance per name for the whole sweep — their per-(kind,
-    mu) jit caches then amortize compilation across the matrix (the
-    engine-bench warm-up pattern)."""
-    if name not in cache:
+def _shared_backend(cache: Dict[object, object], name: str,
+                    event_horizon: float = 1.0):
+    """One backend instance per cache key for the whole sweep — their
+    per-(kind, mu) jit caches then amortize compilation across the matrix
+    (the engine-bench warm-up pattern). The event backend's flight table is
+    per-sim state and resets itself when its owner changes; its key
+    includes the horizon so cells at different horizons can never silently
+    share one instance."""
+    key = (name, float(event_horizon)) if name == "event" else name
+    if key not in cache:
         from repro.sim.engine import SequentialBackend
+        from repro.sim.events import EventBackend
         from repro.sim.sharded import ShardedBackend
         from repro.sim.vectorized import VectorizedBackend
 
-        cache[name] = {
+        cache[key] = {
             "sequential": SequentialBackend,
             "vectorized": VectorizedBackend,
             "sharded": ShardedBackend,
+            "event": lambda: EventBackend(horizon_quantile=event_horizon),
         }[name]()
-    return cache[name]
+    return cache[key]
 
 
 def run_cell(algorithm: str, scenario: str, seed: int, backend: str,
-             problem, backends_cache, **grid) -> Dict[str, object]:
-    """One matrix cell: train, eval once at the end, return the row."""
-    from repro.fed import FedSim
+             problem, backends_cache, *, event_horizon: float = 1.0,
+             **grid) -> Dict[str, object]:
+    """One matrix cell: train, eval once at the end, return the row (plus
+    the event backend's aggregated round stats under private keys)."""
+    from repro.fed import FedSim, last_finite_loss
 
     data, params0, eval_fn = problem
-    cfg = _make_cfg(algorithm, scenario, seed, backend, **grid)
+    cfg = _make_cfg(algorithm, scenario, seed, backend,
+                    event_horizon=event_horizon, **grid)
     t0 = time.time()
     sim = FedSim(loss_fn, params0, data, None, cfg, eval_fn)
-    sim.backend = _shared_backend(backends_cache, backend)
+    sim.backend = _shared_backend(backends_cache, backend, event_horizon)
     hist = sim.run()
-    return {
+    row = {
         "algorithm": algorithm,
         "scenario": scenario,
         "seed": int(seed),
         "backend": backend,
         "acc": float(hist["metrics"][-1][1]["acc"]),
-        "final_loss": float(hist["loss"][-1]),
+        # nan-aware: event rounds with an all-busy cohort mark the loss
+        # gap with nan; the endpoint must skip it, not propagate it
+        "final_loss": last_finite_loss(hist["loss"]),
         "wall_s": float(time.time() - t0),
         "_history": [float(l) for l in hist["loss"]],
     }
+    stats = getattr(sim.backend, "round_stats", None)
+    if stats:      # event backend: per-round async counters for the logs
+        row["_event"] = {
+            "dropped": int(sum(s["dropped"] for s in stats)),
+            "stale": int(sum(s["stale"] for s in stats)),
+            "arrived": int(sum(s["arrived"] for s in stats)),
+        }
+    return row
 
 
 def _table(report) -> str:
@@ -176,6 +200,7 @@ def run_sweep(
     batch_size: int = 32,
     steps_per_epoch: int = 5,
     backend: str = "vectorized",
+    event_horizon: float = 1.0,
     equiv_scenarios: Sequence[str] = DEFAULT_EQUIV_SCENARIOS,
     equiv_rounds: int = 2,
     equiv_rtol: float = 1e-6,
@@ -195,6 +220,18 @@ def run_sweep(
         get_algorithm(a)
     for s in (*scenarios, *equiv_scenarios):
         get_scenario(s)
+    if backend == "event":
+        # the event scheduler is flow-only; fail before any cell runs
+        bad = [a for a in algorithms if not get_algorithm(a).has_flow_dynamics]
+        if bad:
+            flow = [
+                a for a in available_algorithms()
+                if get_algorithm(a).has_flow_dynamics
+            ]
+            raise ValueError(
+                f"--backend event only supports flow-dynamics algorithms "
+                f"(got {', '.join(bad)}; eligible: {', '.join(flow)})"
+            )
 
     grid = dict(rounds=rounds, clients=clients, participation=participation,
                 batch_size=batch_size, steps_per_epoch=steps_per_epoch)
@@ -233,12 +270,22 @@ def run_sweep(
         for scenario in scenarios:
             for algorithm in algorithms:
                 row = run_cell(algorithm, scenario, seed, backend,
-                               problem, backends_cache, **grid)
+                               problem, backends_cache,
+                               event_horizon=event_horizon, **grid)
                 row.pop("_history")
+                ev = row.pop("_event", None)
+                # event round log: surface the async counters — dropped
+                # (busy re-draws masked out of the plan) would otherwise be
+                # silent cohort shrinkage
+                extra = (
+                    f" dropped={ev['dropped']} stale={ev['stale']}"
+                    f" arrived={ev['arrived']}"
+                    if ev is not None and backend == "event" else ""
+                )
                 report["results"].append(row)
                 print(
                     f"seed {seed} {scenario:16s} {algorithm:10s} "
-                    f"acc={row['acc']:.4f} ({row['wall_s']:.1f}s)",
+                    f"acc={row['acc']:.4f} ({row['wall_s']:.1f}s){extra}",
                     flush=True,
                 )
 
@@ -307,8 +354,14 @@ def main() -> None:
     ap.add_argument("--steps-per-epoch", type=int, default=5)
     ap.add_argument(
         "--backend", default="vectorized",
-        choices=("sequential", "vectorized", "sharded"),
-        help="primary backend of the accuracy matrix",
+        choices=("sequential", "vectorized", "event", "sharded"),
+        help="primary backend of the accuracy matrix (event: flow-dynamics "
+        "algorithms only; round logs gain dropped/stale/arrived counters)",
+    )
+    ap.add_argument(
+        "--event-horizon", type=float, default=1.0,
+        help="event backend: quantile of in-flight windows absorbed per "
+        "round (< 1.0 exercises staleness/busy-drop in the sweep)",
     )
     ap.add_argument(
         "--equiv-scenarios", default=",".join(DEFAULT_EQUIV_SCENARIOS),
@@ -329,6 +382,7 @@ def main() -> None:
         seeds=args.seeds, rounds=args.rounds, clients=args.clients,
         participation=args.participation, batch_size=args.batch_size,
         steps_per_epoch=args.steps_per_epoch, backend=args.backend,
+        event_horizon=args.event_horizon,
         equiv_scenarios=[s for s in args.equiv_scenarios.split(",") if s],
         equiv_rounds=args.equiv_rounds, equiv_rtol=args.equiv_rtol,
         json_path=args.json or None,

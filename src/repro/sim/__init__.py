@@ -2,7 +2,9 @@
 
 engine.py     — CohortPlan/StackedPlan, ExecutionBackend, sequential oracle
 vectorized.py — whole-cohort vmap-over-scan runner with per-client step masks
-events.py     — continuous-time event scheduler with straggler staleness
+events.py     — device-resident event scheduler (core/multirate.py flight
+                table): jit-resident segments, quantile-horizon waves,
+                straggler staleness, optional sharded event mode
 sharded.py    — shard_map multi-device backend: psum consensus reductions +
                 jit-resident fori_loop over pre-drawn round segments
 """
@@ -17,7 +19,8 @@ from repro.sim.engine import (
     pad_cohort_ids,
     stack_plans,
 )
-from repro.sim.events import EventBackend, InFlight
+from repro.core.multirate import FlightTable
+from repro.sim.events import EventBackend
 from repro.sim.sharded import ShardedBackend
 from repro.sim.vectorized import (
     VectorizedBackend,
@@ -27,7 +30,7 @@ from repro.sim.vectorized import (
 
 __all__ = [
     "BACKENDS", "CohortPlan", "CohortResult", "ExecutionBackend",
-    "SequentialBackend", "VectorizedBackend", "EventBackend", "InFlight",
+    "SequentialBackend", "VectorizedBackend", "EventBackend", "FlightTable",
     "ShardedBackend", "StackedPlan", "pad_cohort_ids", "stack_plans",
     "build_cohort_runner", "cohort_vmap_fn", "get_backend",
 ]

@@ -10,9 +10,13 @@ backends behind one ``ExecutionBackend`` interface:
                 verbatim as the numerical reference oracle);
   vectorized  — the whole cohort in a single ``vmap``-over-``lax.scan``
                 dispatch with per-client step masks (sim/vectorized.py);
-  event       — a continuous-time event scheduler that advances clients
-                asynchronously between Backward-Euler synchronization
-                points and supports staleness (sim/events.py);
+  event       — a device-resident continuous-time scheduler: a
+                fixed-capacity ``FlightTable`` (core/multirate.py) absorbs
+                asynchronous arrivals in quantile-horizon waves between
+                Backward-Euler syncs, supports straggler staleness via
+                Γ re-anchoring, consumes ``StackedPlan`` segments
+                jit-resident, and optionally shards the flight table over
+                the client mesh (sim/events.py, DESIGN.md §8);
   sharded     — the vectorized dispatch split across devices with
                 ``shard_map`` over the client axis, psum consensus
                 reductions, and whole multi-round segments resident in one
@@ -218,6 +222,63 @@ class ExecutionBackend:
         return [self.run_round(sim, plan) for plan in plans]
 
 
+CLIENT_AXIS = "clients"   # the 1-D launch mesh axis (launch/mesh.py)
+
+
+class MeshedBackendMixin:
+    """Device-mesh infrastructure shared by the backends that run on the
+    1-D clients launch mesh (sharded, event): lazy mesh construction, the
+    lcm-based cohort/capacity padding unit (``pad_multiple`` forces it
+    above the device count so tests exercise uneven padding on any host,
+    DESIGN.md §5.5), a keyed jit-closure cache, and the identity-keyed
+    device-data upload cache (scenario drift re-materializes a NEW data
+    dict, so identity keying is exactly what forces the re-upload —
+    holding the dict itself also prevents id() reuse after gc). One
+    implementation so the two backends cannot drift."""
+
+    def _init_mesh_infra(self, pad_multiple: Optional[int],
+                         max_devices: Optional[int]) -> None:
+        self.pad_multiple = pad_multiple
+        self.max_devices = max_devices
+        self._mesh = None
+        self._fns: Dict[Tuple, Any] = {}
+        self._data_cache: Tuple[Optional[Dict], Optional[Dict]] = (None, None)
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.launch.mesh import make_client_mesh
+
+            self._mesh = make_client_mesh(self.max_devices)
+        return self._mesh
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.shape[CLIENT_AXIS]
+
+    def _pad_unit(self) -> int:
+        n_dev = self.n_devices
+        if self.pad_multiple:
+            return int(np.lcm(n_dev, int(self.pad_multiple)))
+        return n_dev
+
+    def _a_pad(self, A: int) -> int:
+        unit = self._pad_unit()
+        return int(-(-A // unit) * unit)
+
+    def _fn(self, key: Tuple, builder: Any) -> Any:
+        if key not in self._fns:
+            self._fns[key] = builder()
+        return self._fns[key]
+
+    def _device_data(self, sim) -> Dict[str, Any]:
+        if self._data_cache[0] is not sim.data:
+            self._data_cache = (
+                sim.data, {k: jnp.asarray(v) for k, v in sim.data.items()}
+            )
+        return self._data_cache[1]
+
+
 class SequentialBackend(ExecutionBackend):
     """Reference oracle: one jitted ``lax.scan`` dispatch per client, exactly
     the seed ``FedSim.run`` inner loop. Slow (Python-bound) but simple; the
@@ -286,7 +347,9 @@ def get_backend(cfg) -> ExecutionBackend:
         return VectorizedBackend()
     if cfg.backend == "event":
         return EventBackend(
-            horizon_quantile=cfg.event_horizon, max_waves=cfg.event_max_waves
+            horizon_quantile=cfg.event_horizon, max_waves=cfg.event_max_waves,
+            sharded=cfg.event_sharded,
+            pad_multiple=cfg.sharded_pad_multiple,
         )
     if cfg.backend == "sharded":
         return ShardedBackend(pad_multiple=cfg.sharded_pad_multiple)

@@ -1,35 +1,47 @@
-"""Continuous-time event scheduler: asynchronous arrivals between BE syncs.
+"""Device-resident continuous-time event backend: async arrivals between BE
+syncs, executed as jit-resident multi-round segments.
 
 ``server_round`` (core/fedecado.py) assumes the whole cohort finishes
-together: the server waits for every endpoint, then integrates the central
-ODE over [0, max_i T_i] in one go. Real federations are not like that —
-clients with small windows T_i = e_i·lr_i·steps return early, stragglers
-late, some only in the *next* round. This module replaces the implicit
-barrier with an event queue:
+together. Real federations are not like that — clients with small windows
+T_i return early, stragglers late, some only in the *next* round. This
+backend replaces the implicit barrier with the flight-table multi-rate
+integrator (core/multirate.py): every dispatched client is a row of a
+fixed-capacity ``FlightTable`` (stacked Γ anchors, remaining window,
+staleness counter, alive mask), a round absorbs the ``horizon_quantile`` of
+in-flight windows in ≤ ``max_waves`` waves of masked adaptive-BE
+integration, and stragglers stay queued with their Γ anchor re-based to the
+integrated time (exact by Theorem-1 linearity).
 
-  * every dispatched client is an ``InFlight`` record carrying its Γ
-    anchors (round-start state x_prev, endpoint x_new) and its remaining
-    window;
-  * a round processes arrivals in time order, grouped into at most
-    ``max_waves`` waves; between consecutive wave boundaries the server
-    runs adaptive Backward-Euler steps (Algorithm 1) with the active set =
-    clients arrived *so far* (finished clients keep contributing through Γ
-    extrapolation, exactly as in the synchronous round) while the flows of
-    everyone else stay frozen in S_frozen;
-  * the round horizon is the ``horizon_quantile`` q of the in-flight
-    remaining windows. Clients beyond the horizon are STALE: they stay in
-    the queue and return mid-round next time, their Γ anchor re-based to
-    the centrally integrated time τ_end = max(arrived T_rem) (the line
-    through (Γ(τ_end), x_new) over the remaining window is the same line,
-    so re-anchoring is exact — Theorem 1's linearity) — no recomputation,
-    no dropped work.
+Engineering shape (matching the other backends, DESIGN.md §8):
 
-With q = 1.0 every client arrives in-round and the trajectory matches the
-synchronous semantics up to wave granularity. The Σ_i I_i = 0 fixed-point
-invariant of the consensus solve is preserved by construction: each wave's
-BE solve sees Σ_active I_a + S_frozen = Σ_all I_i, so a state at the
-critical point stays there no matter how arrivals are sliced
-(tests/test_engine.py::test_event_staleness_preserves_flow_invariant).
+  * ``run_rounds`` consumes whole pre-drawn ``StackedPlan`` segments: local
+    cohort integration (the §5.1 vmap-over-scan runner), busy-client
+    masking, flight insertion, and the wave/substep loops all execute
+    inside ONE jit with a ``lax.fori_loop`` over the rounds — zero host
+    syncs per round (the PR-1 scheduler synced on every adaptive substep);
+  * a **sharded event mode** (``FedSimConfig.event_sharded``) runs the same
+    program under ``shard_map`` on the PR-2 client mesh: the flight table's
+    capacity axis and the cohort axis are sharded, wave solves psum-reduce
+    through the masked ``be_step``/``lte`` path, and flow write-backs use
+    the exact-set one-hot psum scatter;
+  * busy clients re-drawn by the participation sampler are masked out
+    BEFORE their endpoints enter the table (a client must never hold two
+    flights); the per-round ``dropped`` count is reported in
+    ``last_round_stats`` and ``round_stats`` rather than silently discarded;
+  * an all-busy cohort dispatches no local work: the round still advances
+    the server on pending arrivals, and its loss is ``nan`` to mark the gap
+    (callers aggregate with the nan-aware helpers in fed/server.py);
+  * ragged cohorts (|partition| < batch_size) and uneven cohort sizes
+    cannot share a dense plan tensor; those rounds fall back to the grouped
+    vectorized local integration and re-enter the jitted event round at the
+    insert+integrate step.
+
+With ``horizon_quantile=1.0`` every flight arrives in-round; at
+``max_waves=1`` the integration is exactly the synchronous Algorithm-2
+round, so the backend is pinned against the sequential oracle at rtol 1e-5
+in both dense and sharded modes (tests/test_backend_equiv.py). The
+Σ_i I_i = 0 fixed-point invariant is preserved under any wave/staleness
+slicing (DESIGN.md §8, tests/test_engine.py, tests/test_multirate.py).
 
 Only algorithms whose plugin declares ``has_flow_dynamics`` (the
 fedecado/ecado family) have flow dynamics to schedule; every other
@@ -37,203 +49,422 @@ registered algorithm raises.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, List
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-from repro.core.consensus import adaptive_be_step
-from repro.core.flow import gather_active, put_rows
-from repro.sim.engine import CohortPlan, ExecutionBackend
-from repro.sim.vectorized import VectorizedBackend
+from repro.core.flow import broadcast_clients
+from repro.core.multirate import (
+    FlightTable,
+    flight_insert,
+    init_flight_table,
+    multirate_integrate,
+)
+from repro.sim.engine import (
+    CLIENT_AXIS,
+    CohortPlan,
+    ExecutionBackend,
+    MeshedBackendMixin,
+    StackedPlan,
+    pad_cohort_ids,
+    stack_plans,
+)
+from repro.sim.vectorized import VectorizedBackend, cohort_vmap_fn
 
 Pytree = Any
 
+AXIS = CLIENT_AXIS   # the 1-D launch mesh axis (launch/mesh.py)
 
-@dataclasses.dataclass
-class InFlight:
-    """A dispatched client that has not yet been absorbed by the server."""
-    cid: int
-    x_prev: Pytree      # Γ anchor at the start of the remaining window
-    x_new: Pytree       # local endpoint x_i(T_i)
-    T_rem: float        # remaining continuous-time window
-    stale_rounds: int = 0
+_STAT_KEYS = ("arrived", "stale", "waves", "substeps", "horizon", "tau_end",
+              "dropped", "loss")
 
 
-def _stack(trees: List[Pytree]) -> Pytree:
-    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+def _event_round(
+    x_c, I, g_inv, dt_last, t, tab,
+    x_new_rows, idx, Ts, dmask,
+    ccfg, hq, max_waves, axis_name=None, offset=0,
+):
+    """One event round given already-integrated cohort endpoints: mask-aware
+    flight insertion + the wave integrator. ``x_new_rows``/``idx``/``Ts``/
+    ``dmask`` are table-global (dense) or all-gathered-to-global (sharded)
+    cohort rows. Returns (x_c, I, dt_last, t, tab, stats (8,) f32 rows in
+    ``_STAT_KEYS`` order; dropped/loss slots filled by the caller)."""
+    A = idx.shape[0]
+    x_prev_rows = broadcast_clients(x_c, A)
+    tab = flight_insert(tab, idx, x_prev_rows, x_new_rows, Ts, dmask, offset=offset)
+    x_c, I, dt_last, t, tab, st = multirate_integrate(
+        x_c, I, g_inv, dt_last, t, tab, ccfg, hq, max_waves,
+        axis_name=axis_name,
+    )
+    stats = jnp.stack([
+        st.arrived.astype(jnp.float32),
+        st.stale.astype(jnp.float32),
+        st.waves.astype(jnp.float32),
+        st.substeps.astype(jnp.float32),
+        st.horizon,
+        st.tau_end,
+        jnp.zeros((), jnp.float32),     # dropped: filled by the caller
+        jnp.zeros((), jnp.float32),     # loss: filled by the caller
+    ])
+    return x_c, I, dt_last, t, tab, stats
 
 
-class EventBackend(ExecutionBackend):
-    """Event-driven FedECADO round with straggler staleness."""
+def _masked_loss(loss, dmask, axis_name=None):
+    """nan-aware cohort loss: mean over dispatched rows, nan when none (the
+    all-busy-cohort marker the nan-aware history helpers understand)."""
+    s = jnp.sum(loss * dmask)
+    c = jnp.sum(dmask)
+    if axis_name:
+        s = jax.lax.psum(s, axis_name)
+        c = jax.lax.psum(c, axis_name)
+    return jnp.where(c > 0, s / jnp.maximum(c, 1.0), jnp.nan), c
+
+
+def build_event_segment(
+    loss_fn: Callable, ccfg, kind: str, mu: float, hq: float, max_waves: int,
+) -> Callable:
+    """Jitted R-round dense event segment.
+
+    ``fn(x_c, I, g_inv, dt_last, t, tab, data, idx, mask, lrs, ns, Ts, sel,
+    ps) -> (x_c, I, dt_last, t, tab, stats (R, 8))`` where the plan arrays
+    are ``StackedPlan`` fields and ``stats`` rows follow ``_STAT_KEYS``.
+    """
+    cohort = cohort_vmap_fn(loss_fn, kind, mu)
+
+    def body(x_c, I, g_inv, dt_last, t, tab, data, idx, mask, lrs, ns, Ts, sel, ps):
+        R, A = idx.shape
+
+        def round_step(r, carry):
+            x_c, I, dt_last, t, tab, out = carry
+            batches = {k: v[sel[r]] for k, v in data.items()}
+            I_rows = jax.tree.map(lambda l: l[idx[r]], I)
+            x_new_a, loss_a = cohort(x_c, I_rows, batches, lrs[r], ps[r], ns[r])
+            # a client still in flight is busy: re-dispatching it would put
+            # one flow row in two flights, so its draw is masked out before
+            # the endpoint can enter the table (direct-indexed busy lookup)
+            busy = tab.alive[idx[r]]
+            dmask = mask[r] * (1.0 - busy)
+            x_c, I, dt_last, t, tab, stats = _event_round(
+                x_c, I, g_inv, dt_last, t, tab,
+                x_new_a, idx[r], Ts[r], dmask,
+                ccfg, hq, max_waves,
+            )
+            loss_r, _ = _masked_loss(loss_a, dmask)
+            stats = stats.at[6].set(jnp.sum(mask[r] * busy))
+            stats = stats.at[7].set(loss_r)
+            return (x_c, I, dt_last, t, tab, out.at[r].set(stats))
+
+        out0 = jnp.zeros((R, len(_STAT_KEYS)), jnp.float32)
+        return jax.lax.fori_loop(
+            0, R, round_step, (x_c, I, dt_last, t, tab, out0)
+        )
+
+    return jax.jit(body)
+
+
+def build_event_segment_sharded(
+    mesh, loss_fn: Callable, ccfg, kind: str, mu: float, hq: float,
+    max_waves: int,
+) -> Callable:
+    """The sharded event segment: same contract as ``build_event_segment``
+    but shard_map-ed over the client mesh — cohort axis and flight-table
+    capacity axis sharded, wave solves psum-reduced, plan arrays (R, A_pad)
+    sharded on the cohort axis. Freshly dispatched endpoints are
+    all-gathered once per round so each shard can claim its table slots."""
+    cohort = cohort_vmap_fn(loss_fn, kind, mu)
+
+    def body(x_c, I, g_inv, dt_last, t, tab, data, idx, mask, lrs, ns, Ts, sel, ps):
+        R, A_loc = idx.shape
+        C_loc = tab.alive.shape[0]
+        offset = jax.lax.axis_index(AXIS) * C_loc
+        gather = lambda a: jax.lax.all_gather(a, AXIS, tiled=True)
+
+        def round_step(r, carry):
+            x_c, I, dt_last, t, tab, out = carry
+            batches = {k: v[sel[r]] for k, v in data.items()}
+            I_rows = jax.tree.map(lambda l: l[idx[r]], I)
+            x_new_loc, loss_loc = cohort(x_c, I_rows, batches, lrs[r], ps[r], ns[r])
+            alive_all = gather(tab.alive)          # (C_pad,) slot order
+            busy_loc = alive_all[idx[r]]
+            dmask_loc = mask[r] * (1.0 - busy_loc)
+            x_c, I, dt_last, t, tab, stats = _event_round(
+                x_c, I, g_inv, dt_last, t, tab,
+                jax.tree.map(gather, x_new_loc),
+                gather(idx[r]), gather(Ts[r]), gather(dmask_loc),
+                ccfg, hq, max_waves, axis_name=AXIS, offset=offset,
+            )
+            loss_r, _ = _masked_loss(loss_loc, dmask_loc, AXIS)
+            dropped = jax.lax.psum(jnp.sum(mask[r] * busy_loc), AXIS)
+            stats = stats.at[6].set(dropped)
+            stats = stats.at[7].set(loss_r)
+            return (x_c, I, dt_last, t, tab, out.at[r].set(stats))
+
+        out0 = jnp.zeros((R, len(_STAT_KEYS)), jnp.float32)
+        return jax.lax.fori_loop(
+            0, R, round_step, (x_c, I, dt_last, t, tab, out0)
+        )
+
+    c2 = P(None, AXIS)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P(AXIS), P(),
+                  c2, c2, c2, c2, c2, c2, c2),
+        out_specs=(P(), P(), P(), P(), P(AXIS), P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def build_event_apply(ccfg, hq: float, max_waves: int) -> Callable:
+    """Insert+integrate-only dense event round (the ragged fallback): local
+    integration already happened on the gathered cohort."""
+
+    def body(x_c, I, g_inv, dt_last, t, tab, x_new_a, idx, Ts, dmask):
+        return _event_round(
+            x_c, I, g_inv, dt_last, t, tab, x_new_a, idx, Ts, dmask,
+            ccfg, hq, max_waves,
+        )
+
+    return jax.jit(body)
+
+
+def build_event_apply_sharded(mesh, ccfg, hq: float, max_waves: int) -> Callable:
+    """Sharded ragged fallback: cohort rows arrive device-sharded, the
+    table shards claim their slots after an all-gather."""
+
+    def body(x_c, I, g_inv, dt_last, t, tab, x_new_loc, idx_loc, Ts_loc, dm_loc):
+        C_loc = tab.alive.shape[0]
+        offset = jax.lax.axis_index(AXIS) * C_loc
+        gather = lambda a: jax.lax.all_gather(a, AXIS, tiled=True)
+        return _event_round(
+            x_c, I, g_inv, dt_last, t, tab,
+            jax.tree.map(gather, x_new_loc),
+            gather(idx_loc), gather(Ts_loc), gather(dm_loc),
+            ccfg, hq, max_waves, axis_name=AXIS, offset=offset,
+        )
+
+    c1 = P(AXIS)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P(AXIS), c1, c1, c1, c1),
+        out_specs=(P(), P(), P(), P(), P(AXIS), P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+class EventBackend(MeshedBackendMixin, ExecutionBackend):
+    """Event-driven FedECADO rounds with straggler staleness, device-resident.
+
+    ``sharded=True`` runs the flight table and wave solves over the PR-2
+    client mesh (``FedSimConfig.event_sharded``); ``pad_multiple`` forces
+    the cohort/capacity padding unit above the device count so tests can
+    exercise uneven padding on any host (DESIGN.md §5.5 sentinels).
+    """
 
     name = "event"
 
-    def __init__(self, horizon_quantile: float = 1.0, max_waves: int = 4):
+    # event segments are jit-resident like the sharded backend's; 16 rounds
+    # amortizes dispatch while bounding StackedPlan memory and compile time
+    # for the nested wave/substep loops
+    max_segment_rounds = 16
+
+    def __init__(self, horizon_quantile: float = 1.0, max_waves: int = 4,
+                 sharded: bool = False, pad_multiple: Optional[int] = None,
+                 max_devices: Optional[int] = None):
         assert 0.0 < horizon_quantile <= 1.0, horizon_quantile
-        self.horizon_quantile = horizon_quantile
+        self.horizon_quantile = float(horizon_quantile)
         self.max_waves = max(1, int(max_waves))
-        self.pending: List[InFlight] = []
-        self._cohort = VectorizedBackend()
-        self._abe = None            # jitted adaptive BE step, built lazily
-        self.last_round_stats: dict = {}
+        self.sharded = bool(sharded)
+        self._init_mesh_infra(pad_multiple, max_devices)
+        self._vec = VectorizedBackend()
+        self._table: Optional[FlightTable] = None
+        self._owner = None               # the FedSim the table belongs to
+        self.last_round_stats: Dict[str, Any] = {}
+        self.round_stats: List[Dict[str, Any]] = []   # one dict per round
+        self.total_dropped = 0
+
+    def _pad_unit(self) -> int:
+        # the dense mode never touches the mesh: capacity = n_clients and
+        # cohorts stay unpadded
+        return super()._pad_unit() if self.sharded else 1
 
     # ------------------------------------------------------------------
-    def _be_fn(self, sim):
-        if self._abe is None:
-            # the fused-kernel BE path assumes Γ anchors equal the current
-            # broadcast x_c (how the synchronous round constructs x_prev_a);
-            # stale flights here carry re-based anchors, so always use the
-            # explicit-anchor path regardless of ConsensusConfig.use_kernels
-            ccfg = dataclasses.replace(sim.cfg.consensus, use_kernels=False)
-            self._abe = jax.jit(partial(adaptive_be_step, ccfg=ccfg))
-        return self._abe
-
-    def _integrate_window(
-        self, sim, flights: List[InFlight], tau0: float, tau1: float
-    ) -> tuple:
-        """Adaptive-BE integrate the central ODE over [tau0, tau1] with the
-        given arrived clients active; mutates ``sim.state``. Returns
-        (substeps taken, τ actually reached) — the two differ from the
-        request when ``max_substeps`` caps a stiff window, and the caller
-        must continue from the reached τ, not the nominal boundary."""
-        if tau1 <= tau0 + 1e-12:
-            return 0, tau0
-        state = sim.state
-        ccfg = sim.cfg.consensus
-        idx = jnp.asarray([f.cid for f in flights], jnp.int32)
-        x_prev_a = _stack([f.x_prev for f in flights])
-        x_new_a = _stack([f.x_new for f in flights])
-        T_a = jnp.asarray([f.T_rem for f in flights], jnp.float32)
-        J_a, S_frozen, g_inv_a = gather_active(state, idx)
-
-        be = self._be_fn(sim)
-        x_c, I_a = state.x_c, J_a
-        tau, dt = float(tau0), float(state.dt_last)
-        n_sub = 0
-        while tau < tau1 - 1e-9 and n_sub < ccfg.max_substeps:
-            dt0 = min(dt, ccfg.dt_max, tau1 - tau)
-            res = be(
-                x_c, I_a, J_a, x_prev_a, x_new_a, T_a, g_inv_a, S_frozen,
-                jnp.asarray(tau, jnp.float32), jnp.asarray(dt0, jnp.float32),
-            )
-            x_c, I_a = res.x_c, res.I_a
-            used = float(res.dt_used)
-            tau += used
-            grow = 1.5 if float(res.eps) < 0.5 * ccfg.delta else 1.0
-            dt = min(used * grow, ccfg.dt_max)
-            n_sub += 1
-
-        sim.state = state._replace(
-            x_c=x_c,
-            I=put_rows(state.I, idx, I_a),
-            dt_last=jnp.asarray(dt, jnp.float32),
-            t=state.t + jnp.asarray(tau - tau0, jnp.float32),
-        )
-        return n_sub, tau
-
-    # ------------------------------------------------------------------
-    def run_round(self, sim, plan: CohortPlan):
-        cfg = sim.cfg
+    def _ensure(self, sim) -> None:
         if not sim.alg.has_flow_dynamics:
             raise ValueError(
                 "the event backend schedules flow dynamics and only supports "
                 "algorithms whose plugin declares has_flow_dynamics, got "
-                f"{cfg.algorithm!r}"
+                f"{sim.cfg.algorithm!r}"
             )
+        if self.sharded and not isinstance(sim.state.g_inv, jax.Array):
+            raise NotImplementedError(
+                "sharded event mode supports scalar sensitivity gains only "
+                "(FedSimConfig.sensitivity='scalar'); diagonal gains keep "
+                "their pytree layout on the dense path"
+            )
+        if self._owner is not sim:
+            # a backend instance may be reused across sims (the bench/sweep
+            # warm-up pattern keeps jit caches); the flight table is per-sim
+            # state and must reset with its owner
+            self._owner = sim
+            self._table = init_flight_table(
+                sim.state.x_c, self._a_pad(sim.n)
+            )
+            self.round_stats = []
+            self.total_dropped = 0
 
-        # 1. local integration for the newly dispatched cohort (batched).
-        # A client still in flight from a previous round is busy and cannot
-        # be re-dispatched (it would put the same flow row in two scheduler
-        # records and double-count it in the S_frozen bookkeeping), so busy
-        # draws are dropped from the plan BEFORE any local work runs.
-        busy = {f.cid for f in self.pending}
-        keep = [j for j in range(plan.cohort_size) if int(plan.idx[j]) not in busy]
-        fresh, losses = [], []
+    def _ccfg_key(self, sim):
+        return (
+            sim.cfg.consensus, self.horizon_quantile, self.max_waves,
+            self.sharded,
+        )
+
+    # ------------------------------------------------------------------
+    def run_rounds(self, sim, plans: List[CohortPlan]) -> List[Dict[str, Any]]:
+        if not plans:
+            return []
+        self._ensure(sim)
+        S_pad = max(
+            VectorizedBackend._pad_steps(sim),
+            int(max(int(p.n_steps.max()) for p in plans)),
+        )
+        A_pad = self._a_pad(plans[0].cohort_size)
+        sp = stack_plans(plans, sim.n, A_pad, S_pad)
+        if sp is None:
+            # ragged / uneven cohorts: per-round fallback (grouped local
+            # integration + the jitted insert/integrate event round)
+            return [self.run_round(sim, p) for p in plans]
+        return self._run_segment(sim, sp)
+
+    def run_round(self, sim, plan: CohortPlan) -> Dict[str, Any]:
+        self._ensure(sim)
+        S_pad = max(VectorizedBackend._pad_steps(sim), int(plan.n_steps.max()))
+        sp = stack_plans([plan], sim.n, self._a_pad(plan.cohort_size), S_pad)
+        if sp is not None:
+            return self._run_segment(sim, sp)[0]
+        return self._run_ragged(sim, plan)
+
+    # ------------------------------------------------------------------
+    def _run_segment(self, sim, sp: StackedPlan) -> List[Dict[str, Any]]:
+        cfg = sim.cfg
+        alg = sim.alg
+        R = sp.n_rounds
+        data = self._device_data(sim)
+        arr = jnp.asarray
+        ps = alg.client_weights(sim, sp.idx)
+        kind, mu = alg.client_kind, float(alg.client_mu())
+
+        if self.sharded:
+            builder = lambda: build_event_segment_sharded(
+                self.mesh, sim.loss_fn, cfg.consensus, kind, mu,
+                self.horizon_quantile, self.max_waves,
+            )
+        else:
+            builder = lambda: build_event_segment(
+                sim.loss_fn, cfg.consensus, kind, mu,
+                self.horizon_quantile, self.max_waves,
+            )
+        fn = self._fn(
+            ("event_seg", id(sim.loss_fn), kind, mu, self._ccfg_key(sim)),
+            builder,
+        )
+        st = sim.state
+        x_c, I, dt_last, t, tab, out = fn(
+            st.x_c, st.I, st.g_inv, st.dt_last, st.t, self._table, data,
+            arr(sp.idx), arr(sp.mask), arr(sp.lrs), arr(sp.n_steps),
+            arr(sp.Ts), arr(sp.sel), arr(ps),
+        )
+        sim.state = st._replace(
+            x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + R
+        )
+        self._table = tab
+        return self._emit_stats(np.asarray(out))    # ONE sync per segment
+
+    # ------------------------------------------------------------------
+    def _run_ragged(self, sim, plan: CohortPlan) -> Dict[str, Any]:
+        cfg = sim.cfg
+        alive = np.asarray(jax.device_get(self._table.alive))
+        busy = alive[plan.idx] > 0
+        keep = [j for j in range(plan.cohort_size) if not busy[j]]
+        dropped = plan.cohort_size - len(keep)
+
         if keep:
             sub = CohortPlan(
-                rnd=plan.rnd,
-                idx=plan.idx[keep],
-                lrs=plan.lrs[keep],
-                epochs=plan.epochs[keep],
-                n_steps=plan.n_steps[keep],
+                rnd=plan.rnd, idx=plan.idx[keep], lrs=plan.lrs[keep],
+                epochs=plan.epochs[keep], n_steps=plan.n_steps[keep],
                 batch_idx=[plan.batch_idx[j] for j in keep],
             )
-            result = self._cohort.run_cohort(sim, sub)
-            x_c_anchor = sim.state.x_c
-            fresh = [
-                InFlight(
-                    cid=int(sub.idx[j]),
-                    x_prev=x_c_anchor,
-                    x_new=jax.tree.map(lambda l, j=j: l[j], result.x_new_a),
-                    T_rem=float(result.Ts[j]),
-                )
-                for j in range(len(keep))
-            ]
-            losses = result.losses
-        flights = self.pending + fresh
+            result = self._vec.run_cohort(sim, sub)
+            x_new_a, idx = result.x_new_a, sub.idx
+            Ts = np.asarray(result.Ts, np.float32)
+            loss = float(np.mean(result.losses))
+        else:
+            # all-busy: no local work — the round still advances the server
+            # on pending arrivals; a dummy masked row keeps shapes static
+            x_new_a = broadcast_clients(sim.state.x_c, 1)
+            idx = np.zeros((1,), np.int64)
+            Ts = np.zeros((1,), np.float32)
+            loss = float("nan")
 
-        # 2. round horizon: quantile of remaining windows; always admit at
-        # least the earliest arrival so the server makes progress
-        rems = np.asarray([f.T_rem for f in flights], np.float64)
-        W = float(np.quantile(rems, self.horizon_quantile))
-        W = max(W, float(rems.min()))
-
-        arrived = sorted(
-            (f for f in flights if f.T_rem <= W + 1e-12), key=lambda f: f.T_rem
+        A = len(idx)
+        A_pad = self._a_pad(A)
+        idx_p, _, mask_p = pad_cohort_ids(np.asarray(idx), A_pad, sim.n)
+        if not keep:
+            mask_p = np.zeros_like(mask_p)
+        pad = A_pad - A
+        Ts_p = np.concatenate([Ts, np.zeros(pad, np.float32)])
+        x_ref = sim.state.x_c
+        x_new_p = jax.tree.map(
+            lambda l, xc: (
+                jnp.concatenate(
+                    [l, jnp.broadcast_to(xc[None], (pad,) + xc.shape)]
+                ) if pad else l
+            ),
+            x_new_a, x_ref,
         )
-        stale = [f for f in flights if f.T_rem > W + 1e-12]
 
-        # 3. waves: at most max_waves sync groups at arrival-time boundaries
-        n_waves = min(self.max_waves, len(arrived))
-        groups = [list(g) for g in np.array_split(np.arange(len(arrived)), n_waves)]
-        tau0, active, n_sub, n_waves_run = 0.0, [], 0, 0
-        for g in groups:
-            if not g:
-                continue
-            active = active + [arrived[k] for k in g]
-            tau1 = max(f.T_rem for f in active)
-            sub, reached = self._integrate_window(sim, active, tau0, tau1)
-            n_sub += sub
-            # continue from the τ actually integrated: when max_substeps
-            # caps a stiff window, restarting at the nominal boundary would
-            # silently skip (reached, tau1] of the central ODE
-            tau0 = max(tau0, reached)
-            n_waves_run += 1
-
-        # 4. stale clients: deduct only the centrally *integrated* window
-        # tau_end = max(arrived T_rem) <= W — deducting the full horizon W
-        # would skip the segment (tau_end, W] of each straggler's trajectory
-        # from every BE solve — and re-anchor Γ there (exact by linearity)
-        tau_end = tau0
-        frac = lambda f: tau_end / max(f.T_rem, 1e-12)
-        self.pending = [
-            InFlight(
-                cid=f.cid,
-                x_prev=jax.tree.map(
-                    lambda a, b, fr=frac(f): a + (b - a) * jnp.float32(fr),
-                    f.x_prev, f.x_new,
-                ),
-                x_new=f.x_new,
-                T_rem=f.T_rem - tau_end,
-                stale_rounds=f.stale_rounds + 1,
+        if self.sharded:
+            builder = lambda: build_event_apply_sharded(
+                self.mesh, cfg.consensus, self.horizon_quantile, self.max_waves
             )
-            for f in stale
-        ]
+        else:
+            builder = lambda: build_event_apply(
+                cfg.consensus, self.horizon_quantile, self.max_waves
+            )
+        fn = self._fn(("event_apply", self._ccfg_key(sim)), builder)
+        st = sim.state
+        x_c, I, dt_last, t, tab, stats = fn(
+            st.x_c, st.I, st.g_inv, st.dt_last, st.t, self._table,
+            x_new_p, jnp.asarray(idx_p), jnp.asarray(Ts_p),
+            jnp.asarray(mask_p),
+        )
+        sim.state = st._replace(
+            x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + 1
+        )
+        self._table = tab
+        out = np.array(stats, np.float32)[None, :]
+        out[0, 6] = float(dropped)
+        out[0, 7] = loss
+        return self._emit_stats(out)[0]
 
-        sim.state = sim.state._replace(round=sim.state.round + 1)
-        self.last_round_stats = {
-            "arrived": len(arrived),
-            "stale": len(self.pending),
-            "waves": n_waves_run,
-            "substeps": n_sub,
-            "horizon": W,
-            "tau_end": tau_end,
-        }
-        # all-busy cohorts dispatch no local work; nan marks the gap rather
-        # than pretending a loss was observed
-        loss = float(np.mean(losses)) if losses else float("nan")
-        return {"loss": loss, **self.last_round_stats}
+    # ------------------------------------------------------------------
+    def _emit_stats(self, out: np.ndarray) -> List[Dict[str, Any]]:
+        """(R, 8) stat rows -> per-round record dicts + running counters."""
+        recs = []
+        for row in out:
+            stats = {
+                "arrived": int(row[0]), "stale": int(row[1]),
+                "waves": int(row[2]), "substeps": int(row[3]),
+                "horizon": float(row[4]), "tau_end": float(row[5]),
+                "dropped": int(row[6]),
+            }
+            self.total_dropped += stats["dropped"]
+            self.round_stats.append(stats)
+            self.last_round_stats = stats
+            recs.append({"loss": float(row[7]), **stats})
+        return recs

@@ -66,9 +66,11 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.sim.engine import (
+    CLIENT_AXIS,
     CohortPlan,
     CohortResult,
     ExecutionBackend,
+    MeshedBackendMixin,
     StackedPlan,
     stack_plans,
 )
@@ -76,7 +78,7 @@ from repro.sim.vectorized import VectorizedBackend, cohort_vmap_fn
 
 Pytree = Any
 
-AXIS = "clients"
+AXIS = CLIENT_AXIS   # the 1-D launch mesh axis (launch/mesh.py)
 
 
 def _bcast(v: jax.Array, like: jax.Array) -> jax.Array:
@@ -258,7 +260,7 @@ def build_flow_apply(mesh, ccfg) -> Callable:
     return jax.jit(fn)
 
 
-class ShardedBackend(ExecutionBackend):
+class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
     """Multi-device cohort execution with on-device multi-round segments.
 
     Numerically equivalent to SequentialBackend on the same plan stream at
@@ -280,39 +282,11 @@ class ShardedBackend(ExecutionBackend):
 
     def __init__(self, pad_multiple: Optional[int] = None,
                  max_devices: Optional[int] = None):
-        self.pad_multiple = pad_multiple
-        self.max_devices = max_devices
-        self._mesh = None
-        self._fns: Dict[Tuple, Callable] = {}
+        self._init_mesh_infra(pad_multiple, max_devices)
         self._vec = VectorizedBackend()
-        # (data dict, device arrays) — holding the dict itself both keys the
-        # cache by identity and prevents id() reuse after gc
-        self._data_cache: Tuple[Optional[Dict], Optional[Dict]] = (None, None)
         self.last_segment_stats: Dict[str, Any] = {}
 
     # ------------------------------------------------------------------
-    @property
-    def mesh(self):
-        if self._mesh is None:
-            from repro.launch.mesh import make_client_mesh
-
-            self._mesh = make_client_mesh(self.max_devices)
-        return self._mesh
-
-    @property
-    def n_devices(self) -> int:
-        return self.mesh.shape[AXIS]
-
-    def _pad_unit(self) -> int:
-        n_dev = self.n_devices
-        if self.pad_multiple:
-            return int(np.lcm(n_dev, int(self.pad_multiple)))
-        return n_dev
-
-    def _a_pad(self, A: int) -> int:
-        unit = self._pad_unit()
-        return int(-(-A // unit) * unit)
-
     def _check(self, sim):
         if sim.state is not None and not isinstance(sim.state.g_inv, jax.Array):
             raise NotImplementedError(
@@ -331,18 +305,6 @@ class ShardedBackend(ExecutionBackend):
         return bool(alg.has_flow_dynamics) or callable(
             getattr(alg, "agg_weights", None)
         )
-
-    def _fn(self, key: Tuple, builder: Callable) -> Callable:
-        if key not in self._fns:
-            self._fns[key] = builder()
-        return self._fns[key]
-
-    def _device_data(self, sim) -> Dict[str, jax.Array]:
-        if self._data_cache[0] is not sim.data:
-            self._data_cache = (
-                sim.data, {k: jnp.asarray(v) for k, v in sim.data.items()}
-            )
-        return self._data_cache[1]
 
     # ------------------------------------------------------------------
     def run_rounds(self, sim, plans: List[CohortPlan]) -> List[Dict[str, Any]]:

@@ -41,10 +41,11 @@ from hypothesis import strategies as st
 from repro.core import ConsensusConfig
 from repro.data import make_classification
 from repro.fed import FedSim, FedSimConfig, HeteroConfig, dirichlet_partition
-from repro.fed.algorithms import available_algorithms
+from repro.fed.algorithms import available_algorithms, get_algorithm
 from repro.sim import CohortPlan, stack_plans
 
 ALGS = available_algorithms()
+FLOW_ALGS = [a for a in ALGS if get_algorithm(a).has_flow_dynamics]
 
 _PROBLEM = None
 
@@ -159,6 +160,58 @@ def test_every_registered_algorithm_matches_oracle(alg):
                 np.asarray(b), np.asarray(a), rtol=1e-6, atol=2e-7,
                 err_msg=f"{backend} params diverged from sequential ({alg})",
             )
+
+
+# ---------------------------------------------------------------------------
+# event backend: deterministic equivalence pin at the synchronous setting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alg", FLOW_ALGS)
+@pytest.mark.parametrize("mode", ["dense", "sharded"])
+@pytest.mark.parametrize("batch_size", [4, 16])
+def test_event_backend_matches_oracle_at_full_horizon(alg, mode, batch_size):
+    """At ``horizon_quantile=1.0, max_waves=1`` every flight arrives
+    in-round and the flight-table integrator is exactly the synchronous
+    Algorithm-2 round, so the event backend must reproduce the sequential
+    oracle at rtol 1e-5 — for every flow-capable registered algorithm
+    (future flow plugins are auto-checked via the registry), in both the
+    dense and the sharded (mesh-sharded flight table, psum wave solves)
+    event modes. ``batch_size=4`` keeps the plans stackable and pins the
+    jit-resident StackedPlan segment path; ``batch_size=16`` makes some
+    partitions ragged and pins the grouped-fallback path on the same
+    numbers."""
+    data, parts, params0, loss_fn = _problem()
+    runs = {}
+    for backend, kw in (
+        ("sequential", {}),
+        ("event", {"event_horizon": 1.0, "event_max_waves": 1,
+                   "event_sharded": mode == "sharded",
+                   "sharded_pad_multiple": 3 if mode == "sharded" else None}),
+    ):
+        cfg = FedSimConfig(
+            algorithm=alg, n_clients=len(parts), participation=0.5,
+            rounds=3, batch_size=batch_size, steps_per_epoch=2,
+            hetero=HeteroConfig(1e-3, 1e-2, 1, 3), seed=77,
+            backend=backend, consensus=ConsensusConfig(max_substeps=6), **kw,
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg)
+        hist = sim.run()
+        runs[backend] = (hist["loss"], sim.current_params())
+
+    ref_loss, ref_params = runs["sequential"]
+    loss, params = runs["event"]
+    np.testing.assert_allclose(
+        loss, ref_loss, rtol=1e-5, atol=1e-6,
+        err_msg=f"event[{mode}] history diverged from sequential ({alg})",
+    )
+    for a, b in zip(
+        jax.tree.leaves(ref_params), jax.tree.leaves(params), strict=True
+    ):
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), rtol=1e-5, atol=1e-6,
+            err_msg=f"event[{mode}] params diverged from sequential ({alg})",
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -6,7 +6,10 @@ benchmarks/run.py when it changes, and update this test in the same PR.
 
 Schema history: v1 = backend × n_clients (single hardwired algorithm);
 v2 = adds the per-algorithm axis ("algorithms" list + "algorithm" per
-results row, enumerable from the fed/algorithms registry)."""
+results row, enumerable from the fed/algorithms registry); v3 = adds the
+event backend (device-resident flight-table scheduler) — event rows exist
+only for flow-capable algorithms, and the config block records the event
+horizon/wave settings."""
 import importlib.util
 import json
 import os
@@ -24,12 +27,26 @@ def _bench_module():
     return mod
 
 
+def _expected_rows(report):
+    """One row per (algorithm × backend × n_clients), minus the event rows
+    of algorithms without flow dynamics (the event scheduler is flow-only)."""
+    from repro.fed.algorithms import get_algorithm
+
+    return {
+        (a, b, n)
+        for a in report["algorithms"]
+        for b in report["backends"]
+        for n in report["sizes"]
+        if not (b == "event" and not get_algorithm(a).has_flow_dynamics)
+    }
+
+
 def test_engine_bench_runs_and_json_schema_is_stable(tmp_path):
     bench = _bench_module()
     json_path = tmp_path / "BENCH_engine.json"
     report = bench.engine_bench(
         rounds=2, sizes=(4,),
-        backends=("sequential", "vectorized", "sharded"),
+        backends=("sequential", "vectorized", "event", "sharded"),
         algorithms=("fedecado", "fednova"),
         json_path=str(json_path),
     )
@@ -40,16 +57,20 @@ def test_engine_bench_runs_and_json_schema_is_stable(tmp_path):
     assert persisted == report
 
     # -- schema: top level ------------------------------------------------
-    assert persisted["schema_version"] == bench.ENGINE_BENCH_SCHEMA_VERSION == 2
+    assert persisted["schema_version"] == bench.ENGINE_BENCH_SCHEMA_VERSION == 3
     assert persisted["benchmark"] == "engine"
     assert isinstance(persisted["n_devices"], int) and persisted["n_devices"] >= 1
     assert persisted["rounds"] == 2
     assert persisted["sizes"] == [4]
-    assert persisted["backends"] == ["sequential", "vectorized", "sharded"]
+    assert persisted["backends"] == [
+        "sequential", "vectorized", "event", "sharded"
+    ]
     assert persisted["algorithms"] == ["fedecado", "fednova"]
     assert isinstance(persisted["config"], dict)
+    assert persisted["config"]["event_horizon"] == 1.0
+    assert isinstance(persisted["config"]["event_max_waves"], int)
 
-    # -- schema: results rows — one per (algorithm × backend × n_clients) --
+    # -- schema: results rows — full product minus flow-only event gaps ---
     rows = persisted["results"]
     assert isinstance(rows, list)
     seen = set()
@@ -61,18 +82,17 @@ def test_engine_bench_runs_and_json_schema_is_stable(tmp_path):
         assert isinstance(row["rounds_per_sec"], float)
         assert row["rounds_per_sec"] > 0
         seen.add((row["algorithm"], row["backend"], row["n_clients"]))
-    assert seen == {
-        (a, b, n)
-        for a in persisted["algorithms"]
-        for b in persisted["backends"]
-        for n in persisted["sizes"]
-    }
+    assert seen == _expected_rows(persisted)
 
 
 def test_repo_bench_artifact_matches_schema():
     """The committed BENCH_engine.json (produced on 8 forced host devices)
-    must parse under the same schema and witness the acceptance criterion:
-    sharded rounds/sec ≥ vectorized at the largest size (fedecado axis)."""
+    must parse under the same schema and witness the acceptance criteria:
+    sharded rounds/sec ≥ vectorized at the largest size, and the
+    jit-resident event backend present at every size on the fedecado axis
+    (the ≥2x-over-host-loop bar is measured at regeneration time and
+    recorded in CHANGES.md — rounds/sec is hardware-dependent, so the
+    artifact pins presence + internal ordering, not absolute numbers)."""
     path = os.path.join(
         os.path.dirname(__file__), os.pardir, "BENCH_engine.json"
     )
@@ -80,12 +100,19 @@ def test_repo_bench_artifact_matches_schema():
         pytest.skip("no committed BENCH_engine.json")
     with open(path) as f:
         report = json.load(f)
-    assert report["schema_version"] == 2
+    assert report["schema_version"] == 3
     assert "fedecado" in report["algorithms"]
-    n_max = max(report["sizes"])
+    assert "event" in report["backends"]
     rps = {
-        r["backend"]: r["rounds_per_sec"]
+        (r["backend"], r["n_clients"]): r["rounds_per_sec"]
         for r in report["results"]
-        if r["n_clients"] == n_max and r["algorithm"] == "fedecado"
+        if r["algorithm"] == "fedecado"
     }
-    assert rps["sharded"] >= rps["vectorized"]
+    n_max = max(report["sizes"])
+    assert rps[("sharded", n_max)] >= rps[("vectorized", n_max)]
+    for n in report["sizes"]:
+        assert rps[("event", n)] > 0
+    # jit-residency witness: the event scheduler must beat the per-client
+    # sequential dispatch at scale (the old host-loop event backend ran at
+    # roughly sequential speed — 2.9 vs 4.1 rounds/sec at n=100)
+    assert rps[("event", n_max)] > rps[("sequential", n_max)]

@@ -25,6 +25,10 @@ def _mk(rng, A, D):
         S_frozen=jnp.asarray(rng.randn(D) * 0.1, jnp.float32),
         I=jnp.asarray(rng.randn(A, D) * 0.1, jnp.float32),
         J=jnp.asarray(rng.randn(A, D) * 0.1, jnp.float32),
+        # explicit (re-based) Γ anchors — the event scheduler's stale-flight
+        # case; the synchronous round is the x_prev == broadcast x_c special
+        # case, checked separately in test_fused_step_matches_core_reference
+        x_prev=jnp.asarray(rng.randn(A, D), jnp.float32),
         x_new=jnp.asarray(rng.randn(A, D), jnp.float32),
         T=jnp.asarray(rng.uniform(0.01, 0.2, A), jnp.float32),
         g_inv=jnp.asarray(rng.uniform(0.01, 0.5, A), jnp.float32),
@@ -39,12 +43,12 @@ def test_consensus_kernel_shape_sweep(A, D, tile):
     m = _mk(rng, A, D)
     dt, tau, L = jnp.float32(0.05), jnp.float32(0.02), 1.0
     k = consensus_call(
-        m["x_c"], m["S_frozen"], m["I"], m["J"], m["x_new"],
+        m["x_c"], m["S_frozen"], m["I"], m["J"], m["x_prev"], m["x_new"],
         m["T"], m["g_inv"], m["mask"], dt, tau, L,
         interpret=True, tile_d=tile,
     )
     r = ref.consensus_ref(
-        m["x_c"], m["S_frozen"], m["I"], m["J"], m["x_new"],
+        m["x_c"], m["S_frozen"], m["I"], m["J"], m["x_prev"], m["x_new"],
         m["T"], m["g_inv"], m["mask"], dt, tau, L,
     )
     np.testing.assert_allclose(k[0], r[0], rtol=1e-5, atol=1e-6)
@@ -60,19 +64,59 @@ def test_consensus_kernel_masked_rows_are_inert():
     m = _mk(rng, A, D)
     dt, tau, L = jnp.float32(0.05), jnp.float32(0.02), 1.0
     full = consensus_call(
-        m["x_c"], m["S_frozen"], m["I"], m["J"], m["x_new"],
+        m["x_c"], m["S_frozen"], m["I"], m["J"], m["x_prev"], m["x_new"],
         m["T"], m["g_inv"], m["mask"], dt, tau, L, interpret=True,
     )
     # add 2 garbage rows with mask 0
     pad = lambda t: jnp.concatenate([t, 99.0 * jnp.ones((2,) + t.shape[1:], t.dtype)])
     mask2 = jnp.concatenate([m["mask"], jnp.zeros((2,))])
     padded = consensus_call(
-        m["x_c"], m["S_frozen"], pad(m["I"]), pad(m["J"]), pad(m["x_new"]),
-        pad(m["T"]), pad(m["g_inv"]), mask2, dt, tau, L, interpret=True,
+        m["x_c"], m["S_frozen"], pad(m["I"]), pad(m["J"]), pad(m["x_prev"]),
+        pad(m["x_new"]), pad(m["T"]), pad(m["g_inv"]), mask2, dt, tau, L,
+        interpret=True,
     )
     np.testing.assert_allclose(full[0], padded[0], rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(full[1], padded[1][:A], rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(full[2], padded[2], rtol=1e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("A,D,tile", [(3, 1024, 1024), (7, 2048, 512)])
+def test_anchor_rebase_kernel_vs_ref(A, D, tile):
+    """The event scheduler's staleness hot loop: masked Γ anchor rebase
+    (kernels/gamma.py::anchor_rebase_call) vs the jnp oracle; mask=0 rows
+    must pass through bitwise untouched."""
+    from repro.kernels.gamma import anchor_rebase_call
+
+    rng = np.random.RandomState(A * 10 + 1)
+    xp = jnp.asarray(rng.randn(A, D), jnp.float32)
+    xn = jnp.asarray(rng.randn(A, D), jnp.float32)
+    frac = jnp.asarray(rng.uniform(0.0, 1.5, A), jnp.float32)
+    mask = jnp.asarray((rng.rand(A) > 0.4).astype(np.float32))
+    k = anchor_rebase_call(xp, xn, frac, mask, interpret=True, tile_d=tile)
+    r = ref.anchor_rebase_ref(xp, xn, frac, mask)
+    np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(k)[np.asarray(mask) == 0], np.asarray(xp)[np.asarray(mask) == 0]
+    )
+
+
+def test_anchor_rebase_op_kernel_matches_jnp_path():
+    """The pytree entry (kernels/ops.py::anchor_rebase_op) agrees between
+    the Pallas and plain-jnp paths on a ragged-leaf flight table."""
+    from repro.kernels import anchor_rebase_op
+
+    rng = np.random.RandomState(9)
+    mk = lambda: {
+        "w": jnp.asarray(rng.randn(5, 13, 7), jnp.float32),
+        "b": jnp.asarray(rng.randn(5, 3), jnp.float32),
+    }
+    xp, xn = mk(), mk()
+    frac = jnp.asarray(rng.uniform(0.0, 1.2, 5), jnp.float32)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0, 1.0], jnp.float32)
+    a = anchor_rebase_op(xp, xn, frac, mask, use_kernel=True)
+    b = anchor_rebase_op(xp, xn, frac, mask, use_kernel=False)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6, atol=1e-7)
 
 
 @pytest.mark.parametrize("A,D", [(2, 1024), (5, 3072)])
@@ -174,14 +218,53 @@ def test_fused_step_matches_core_reference():
     gi = jnp.asarray([0.1, 0.05, 0.2])
     dt, tau = jnp.float32(0.03), jnp.float32(0.01)
 
-    xc_k, I_k, eps_k = fused_consensus_step(
-        tree, Sf, I_a, J_a, xn_a, T, gi, dt, tau, 1.0, use_kernel=True
-    )
     x_prev = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (A,) + l.shape), tree)
+    xc_k, I_k, eps_k = fused_consensus_step(
+        tree, Sf, I_a, J_a, x_prev, xn_a, T, gi, dt, tau, 1.0, use_kernel=True
+    )
     g_new = gamma_stacked(x_prev, xn_a, T, tau + dt)
     g_old = gamma_stacked(x_prev, xn_a, T, tau)
     xc_r, I_r = be_step(tree, I_a, J_a, g_new, gi, Sf, dt, 1.0)
     eps_r = lte(tree, I_a, xc_r, I_r, J_a, g_old, g_new, gi, dt, 1.0)
+    for a, b in zip(jax.tree.leaves(xc_k), jax.tree.leaves(xc_r)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(I_k), jax.tree.leaves(I_r)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(eps_k, eps_r, rtol=1e-4, atol=1e-7)
+
+
+def test_fused_step_anchored_masked_matches_core():
+    """The anchored-masked fused path (explicit stale-flight Γ anchors +
+    activity mask — what lets the event backend keep use_kernels on) equals
+    be_step + lte with the same mask."""
+    from repro.core.consensus import be_step, lte
+    from repro.core.gamma import gamma_stacked
+
+    rng = np.random.RandomState(6)
+    tree = {"w": jnp.asarray(rng.randn(13, 7), jnp.float32),
+            "b": jnp.asarray(rng.randn(5), jnp.float32)}
+    A = 4
+    stk = lambda s: jax.tree.map(
+        lambda l: jnp.stack([
+            l * (i + 1) * s + jnp.asarray(rng.randn(*l.shape) * 0.05, jnp.float32)
+            for i in range(A)
+        ]), tree
+    )
+    I_a, J_a, xp_a, xn_a = stk(0.1), stk(0.07), stk(0.8), stk(0.9)
+    Sf = jax.tree.map(lambda l: l * 0.01, tree)
+    T = jnp.asarray([0.05, 0.08, 0.02, 0.04])
+    gi = jnp.asarray([0.1, 0.05, 0.2, 0.15])
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    dt, tau = jnp.float32(0.03), jnp.float32(0.01)
+
+    xc_k, I_k, eps_k = fused_consensus_step(
+        tree, Sf, I_a, J_a, xp_a, xn_a, T, gi, dt, tau, 1.0,
+        mask=mask, use_kernel=True,
+    )
+    g_new = gamma_stacked(xp_a, xn_a, T, tau + dt)
+    g_old = gamma_stacked(xp_a, xn_a, T, tau)
+    xc_r, I_r = be_step(tree, I_a, J_a, g_new, gi, Sf, dt, 1.0, mask=mask)
+    eps_r = lte(tree, I_a, xc_r, I_r, J_a, g_old, g_new, gi, dt, 1.0, mask=mask)
     for a, b in zip(jax.tree.leaves(xc_k), jax.tree.leaves(xc_r)):
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
     for a, b in zip(jax.tree.leaves(I_k), jax.tree.leaves(I_r)):

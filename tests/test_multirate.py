@@ -1,0 +1,321 @@
+"""Flight-table multi-rate integrator invariants (core/multirate.py,
+DESIGN.md §8).
+
+* ``FlightTable`` mechanics: one-hot insert exactness (masked rows and
+  untouched slots bitwise identical), capacity-overflow refusal, busy-slot
+  refusal, masked-quantile parity with np.quantile;
+* the Σ_i I_i = 0 consensus fixed point is stationary under every event
+  slicing the new table supports — sub-1.0 horizons, multi-wave rounds, the
+  sharded event mode with uneven capacity padding, and the anchored-masked
+  fused-kernel path (``use_kernels`` no longer forced off);
+* nan-aware history handling: an all-busy cohort dispatches nothing, its
+  round reports ``loss = nan`` + a ``dropped`` count, and the fed/server.py
+  helpers summarize such histories without poisoning the endpoint.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConsensusConfig, FlightTable, init_flight_table
+from repro.core.multirate import flight_insert, masked_quantile
+from repro.data import make_classification
+from repro.fed import (
+    FedSim,
+    FedSimConfig,
+    HeteroConfig,
+    dirichlet_partition,
+    last_finite_loss,
+    mean_finite_loss,
+)
+from repro.sim import CohortPlan, EventBackend
+
+
+# ---------------------------------------------------------------------------
+# FlightTable mechanics
+# ---------------------------------------------------------------------------
+
+
+def _rows(rng, A, shape=(3,)):
+    return {
+        "w": jnp.asarray(rng.randn(A, *shape), jnp.float32),
+        "b": jnp.asarray(rng.randn(A, 2), jnp.float32),
+    }
+
+
+def test_flight_insert_one_hot_exactness():
+    """Inserted rows land exactly; masked rows and untouched slots stay
+    bitwise identical (the scatter is one-hot into zeros + select, never a
+    read-modify-write)."""
+    rng = np.random.RandomState(0)
+    params = {"w": jnp.zeros((3,)), "b": jnp.zeros((2,))}
+    tab = init_flight_table(params, capacity=6)
+    # pre-populate slots 1 and 4
+    pre = flight_insert(
+        tab, jnp.asarray([1, 4], jnp.int32), _rows(rng, 2), _rows(rng, 2),
+        jnp.asarray([0.3, 0.7], jnp.float32), jnp.ones((2,), jnp.float32),
+    )
+    before = jax.tree.map(np.asarray, pre)
+
+    xp, xn = _rows(rng, 3), _rows(rng, 3)
+    T = jnp.asarray([0.1, 0.2, 0.9], jnp.float32)
+    mask = jnp.asarray([1.0, 0.0, 1.0], jnp.float32)   # middle row masked out
+    new = flight_insert(pre, jnp.asarray([0, 2, 5], jnp.int32), xp, xn, T, mask)
+
+    assert float(new.alive[0]) == 1.0 and float(new.alive[5]) == 1.0
+    assert float(new.alive[2]) == 0.0                    # masked: not inserted
+    np.testing.assert_array_equal(np.asarray(new.cid)[[0, 5]], [0, 5])
+    for k in ("w", "b"):
+        np.testing.assert_array_equal(
+            np.asarray(new.x_new[k][0]), np.asarray(xn[k][0])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(new.x_new[k][5]), np.asarray(xn[k][2])
+        )
+        # pre-existing and masked slots: bitwise untouched
+        for slot in (1, 2, 3, 4):
+            np.testing.assert_array_equal(
+                np.asarray(new.x_new[k][slot]), before.x_new[k][slot]
+            )
+    np.testing.assert_array_equal(
+        np.asarray(new.T_rem)[[1, 4]], before.T_rem[[1, 4]]
+    )
+
+
+def test_flight_insert_refuses_capacity_overflow():
+    params = {"w": jnp.zeros((3,))}
+    tab = init_flight_table(params, capacity=4)
+    rng = np.random.RandomState(1)
+    rows = {"w": jnp.asarray(rng.randn(1, 3), jnp.float32)}
+    with pytest.raises(ValueError, match="overflow"):
+        flight_insert(
+            tab, jnp.asarray([4], jnp.int32), rows, rows,
+            jnp.asarray([0.5], jnp.float32), jnp.ones((1,), jnp.float32),
+        )
+
+
+def test_flight_insert_refuses_busy_slot():
+    """A client has at most one flight: inserting into an alive slot is a
+    scheduler bug (the backend masks busy draws out) and must refuse."""
+    params = {"w": jnp.zeros((3,))}
+    tab = init_flight_table(params, capacity=4)
+    rng = np.random.RandomState(2)
+    rows = lambda: {"w": jnp.asarray(rng.randn(1, 3), jnp.float32)}
+    tab = flight_insert(
+        tab, jnp.asarray([2], jnp.int32), rows(), rows(),
+        jnp.asarray([0.5], jnp.float32), jnp.ones((1,), jnp.float32),
+    )
+    with pytest.raises(ValueError, match="busy"):
+        flight_insert(
+            tab, jnp.asarray([2], jnp.int32), rows(), rows(),
+            jnp.asarray([0.5], jnp.float32), jnp.ones((1,), jnp.float32),
+        )
+    # masked re-draw of the same client is the legal path: a no-op
+    out = flight_insert(
+        tab, jnp.asarray([2], jnp.int32), rows(), rows(),
+        jnp.asarray([0.9], jnp.float32), jnp.zeros((1,), jnp.float32),
+    )
+    np.testing.assert_array_equal(np.asarray(out.T_rem), np.asarray(tab.T_rem))
+
+
+@pytest.mark.parametrize("q", [0.0, 0.25, 0.5, 0.75, 1.0])
+def test_masked_quantile_matches_numpy(q):
+    rng = np.random.RandomState(int(q * 100))
+    vals = rng.uniform(0.01, 1.0, 17).astype(np.float32)
+    mask = (rng.rand(17) > 0.4).astype(np.float32)
+    if mask.sum() == 0:
+        mask[3] = 1.0
+    got = float(masked_quantile(jnp.asarray(vals), jnp.asarray(mask), q))
+    want = float(np.quantile(vals[mask > 0].astype(np.float64), q))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_masked_quantile_empty_mask_is_nan():
+    v = jnp.asarray([1.0, 2.0], jnp.float32)
+    assert math.isnan(float(masked_quantile(v, jnp.zeros((2,)), 0.5)))
+
+
+# ---------------------------------------------------------------------------
+# Σ_i I_i = 0 fixed point under the new table (port + extensions of
+# tests/test_engine.py::test_event_staleness_preserves_flow_invariant)
+# ---------------------------------------------------------------------------
+
+
+def _fixed_point_problem():
+    n, dim = 4, 3
+    cs = np.asarray(
+        [[1.0, -2.0, 0.5], [-1.0, 2.0, -0.5], [2.0, 1.0, -1.0], [-2.0, -1.0, 1.0]],
+        np.float32,
+    )
+    assert np.abs(cs.sum(0)).max() == 0.0
+    data = {"x": cs, "y": np.zeros((n,), np.int64)}
+    parts = [np.asarray([i]) for i in range(n)]
+
+    def loss_fn(p, batch):
+        return 0.5 * jnp.mean(jnp.sum(jnp.square(p["w"][None] - batch["x"]), -1))
+
+    params0 = {"w": jnp.zeros((dim,), jnp.float32)}
+    return n, dim, cs, data, parts, loss_fn, params0
+
+
+@pytest.mark.parametrize(
+    "mode,kw",
+    [
+        ("dense-q0.5-w3", dict(event_horizon=0.5, event_max_waves=3)),
+        ("dense-q0.3-w1", dict(event_horizon=0.3, event_max_waves=1)),
+        ("dense-kernels", dict(
+            event_horizon=0.5, event_max_waves=2,
+            consensus=ConsensusConfig(L=0.1, max_substeps=16, use_kernels=True),
+        )),
+        ("sharded-q0.5", dict(
+            event_horizon=0.5, event_max_waves=3, event_sharded=True,
+            sharded_pad_multiple=3,      # uneven capacity/cohort padding
+        )),
+    ],
+)
+def test_flight_table_preserves_flow_invariant(mode, kw):
+    """At the consensus fixed point (x_i = x_c*, I_i = −p̂_i∇f_i(x_c*),
+    Σ_i I_i = 0) the flight-table integrator must leave the state
+    stationary no matter how arrivals are sliced into waves, delayed by
+    staleness, run through the anchored-masked fused kernel, or sharded
+    over the mesh with uneven padding (DESIGN.md §8)."""
+    n, dim, cs, data, parts, loss_fn, params0 = _fixed_point_problem()
+    kw.setdefault("consensus", ConsensusConfig(L=0.1, max_substeps=16))
+    cfg = FedSimConfig(
+        algorithm="fedecado", n_clients=n, participation=1.0, rounds=6,
+        batch_size=4, steps_per_epoch=3, lr_fixed=5e-3, epochs_fixed=2,
+        hetero=HeteroConfig(1e-3, 1e-2, 1, 5),    # heterogeneous windows
+        seed=0, backend="event", **kw,
+    )
+    sim = FedSim(loss_fn, params0, data, parts, cfg)
+    # place the server exactly at the fixed point: ∇f_i(0) = −c_i and
+    # p̂_i = 1, so I_i = −p̂_i·∇f_i(x*) = c_i with Σ_i I_i = 0
+    sim.state = sim.state._replace(I={"w": jnp.asarray(cs, jnp.float32)})
+
+    hist = sim.run()
+    x_c = np.asarray(sim.state.x_c["w"])
+    I_sum = np.asarray(jnp.sum(sim.state.I["w"], axis=0))
+    np.testing.assert_allclose(x_c, np.zeros(dim), atol=1e-5)
+    np.testing.assert_allclose(I_sum, np.zeros(dim), atol=1e-5)
+    assert np.isfinite(hist["loss"]).all()
+    # the table really carried flights across rounds in the sub-1 settings
+    assert sum(s["stale"] for s in sim.backend.round_stats) > 0
+
+
+def test_event_kernels_match_reference_path():
+    """Dense event rounds with ``use_kernels=True`` (the anchored-masked
+    fused Pallas path) reproduce the explicit be_step path."""
+    data = make_classification(256, dim=6, n_classes=3, seed=2)
+    parts = dirichlet_partition(data["y"], 6, alpha=0.5, seed=2)
+    params0 = {"w": jax.random.normal(jax.random.PRNGKey(2), (6, 3)) / 3.0}
+
+    def loss_fn(p, batch):
+        lp = jax.nn.log_softmax(batch["x"] @ p["w"])
+        return -jnp.mean(
+            jnp.take_along_axis(lp, batch["y"][:, None].astype(jnp.int32), -1)
+        )
+
+    hists = {}
+    for uk in (False, True):
+        cfg = FedSimConfig(
+            algorithm="fedecado", n_clients=6, participation=0.5, rounds=4,
+            batch_size=4, steps_per_epoch=2, hetero=HeteroConfig(1e-3, 1e-2, 1, 4),
+            seed=3, backend="event", event_horizon=0.6, event_max_waves=2,
+            consensus=ConsensusConfig(max_substeps=8, use_kernels=uk),
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg)
+        hists[uk] = (sim.run()["loss"], sim.current_params())
+    np.testing.assert_allclose(
+        hists[True][0], hists[False][0], rtol=1e-4, atol=1e-6
+    )
+    for a, b in zip(
+        jax.tree.leaves(hists[False][1]), jax.tree.leaves(hists[True][1]),
+        strict=True,
+    ):
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), rtol=1e-4, atol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# busy-drop reporting + nan-aware history handling
+# ---------------------------------------------------------------------------
+
+
+def _small_event_sim(rounds=1, **kw):
+    data = make_classification(128, dim=4, n_classes=2, seed=5)
+    parts = [np.arange(i, 128, 4) for i in range(4)]
+    params0 = {"w": jnp.zeros((4, 2), jnp.float32)}
+
+    def loss_fn(p, batch):
+        lp = jax.nn.log_softmax(batch["x"] @ p["w"])
+        return -jnp.mean(
+            jnp.take_along_axis(lp, batch["y"][:, None].astype(jnp.int32), -1)
+        )
+
+    cfg = FedSimConfig(
+        algorithm="fedecado", n_clients=4, participation=1.0, rounds=rounds,
+        batch_size=8, steps_per_epoch=2, hetero=HeteroConfig(1e-3, 1e-2, 1, 5),
+        seed=11, backend="event",
+        consensus=ConsensusConfig(max_substeps=4), **kw,
+    )
+    return FedSim(loss_fn, params0, data, parts, cfg)
+
+
+def test_all_busy_cohort_reports_nan_and_dropped():
+    """A cohort drawn entirely from in-flight clients dispatches no local
+    work: the round advances the server on pending arrivals, reports every
+    draw in ``dropped``, and marks the loss gap with nan instead of
+    pretending a loss was observed."""
+    sim = _small_event_sim(event_horizon=0.25, event_max_waves=2)
+    plan1 = sim._draw_plan(0, 4)
+    rec1 = sim.backend.run_round(sim, plan1)
+    assert np.isfinite(rec1["loss"]) and rec1["stale"] > 0
+
+    stale_cids = [
+        c for c in range(sim.n)
+        if float(np.asarray(sim.backend._table.alive)[c]) > 0
+    ]
+    assert stale_cids
+    j = [int(i) for i, c in enumerate(plan1.idx) if int(c) in stale_cids]
+    plan2 = CohortPlan(
+        rnd=1, idx=plan1.idx[j], lrs=plan1.lrs[j], epochs=plan1.epochs[j],
+        n_steps=plan1.n_steps[j], batch_idx=[plan1.batch_idx[k] for k in j],
+    )
+    x_before = np.asarray(sim.state.x_c["w"]).copy()
+    rec2 = sim.backend.run_round(sim, plan2)
+    assert math.isnan(rec2["loss"])
+    assert rec2["dropped"] == len(stale_cids)
+    assert sim.backend.total_dropped >= len(stale_cids)
+    # pending arrivals still advanced the server
+    assert rec2["arrived"] > 0
+    assert not np.array_equal(np.asarray(sim.state.x_c["w"]), x_before)
+
+
+def test_history_helpers_are_nan_aware():
+    assert last_finite_loss([0.5, float("nan")]) == 0.5
+    assert last_finite_loss([0.5, float("nan"), 0.25]) == 0.25
+    assert math.isnan(last_finite_loss([float("nan")]))
+    assert math.isnan(last_finite_loss([]))
+    np.testing.assert_allclose(
+        mean_finite_loss([1.0, float("nan"), 3.0]), 2.0
+    )
+    assert math.isnan(mean_finite_loss([float("nan")]))
+
+
+def test_fedsim_history_survives_loss_gaps():
+    """End-to-end: with a tight horizon the history may contain nan gap
+    markers; the nan-aware helpers must still summarize it, and FedSim must
+    not crash or mangle the finite entries."""
+    sim = _small_event_sim(rounds=8, event_horizon=0.25, event_max_waves=1)
+    hist = sim.run()
+    losses = np.asarray(hist["loss"], np.float64)
+    assert len(losses) == 8
+    assert np.isfinite(losses).any()
+    assert np.isfinite(last_finite_loss(hist["loss"]))
+    assert np.isfinite(mean_finite_loss(hist["loss"]))
+    # every round produced an observable stats record (arrived/stale/...)
+    assert len(sim.backend.round_stats) == 8
+    assert all("dropped" in s for s in sim.backend.round_stats)
