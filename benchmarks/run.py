@@ -14,7 +14,7 @@ System benches:
                         {10, 100, 1000} on 8 forced host devices, with a
                         per-algorithm axis (--algorithms, names from the
                         fed/algorithms registry; event rows are flow-only);
-                        persists BENCH_engine.json (schema v3)
+                        persists BENCH_engine.json (schema v4)
   scenarios           — a reduced algorithms × heterogeneity-scenarios
                         matrix through launch/sweep.py (the full
                         committed BENCH_scenarios.json is produced by
@@ -104,9 +104,9 @@ def _run_algorithms(data, params0, loss_fn, eval_fn, parts, rounds, hetero, seed
         sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
         hist = sim.run()
         out[alg] = {
-            "acc": hist["metrics"][-1][1]["acc"],
+            "acc": hist.metrics[-1]["acc"],
             # nan-aware: the event backend marks all-busy rounds with nan
-            "loss": last_finite_loss(hist["loss"]),
+            "loss": last_finite_loss(hist.loss),
             "wall_s": time.time() - t0,
         }
     return out
@@ -180,7 +180,7 @@ def ablation_ecado(rounds=60, seed=0):
         t0 = time.time()
         sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
         hist = sim.run()
-        out[label] = {"acc": hist["metrics"][-1][1]["acc"], "wall_s": time.time() - t0}
+        out[label] = {"acc": hist.metrics[-1]["acc"], "wall_s": time.time() - t0}
     derived = ";".join(f"{k}_acc={v['acc']:.3f}" for k, v in out.items())
     _row("ablation_ecado_vs_fedecado", sum(v["wall_s"] for v in out.values()) * 1e6, derived)
     return out
@@ -254,7 +254,10 @@ def adaptive_overhead_bench():
         )
 
 
-ENGINE_BENCH_SCHEMA_VERSION = 3
+# v4: rows gain compile_seconds (warm-up minus steady-state wall) and the
+# shared-telemetry solver/async columns (substeps_per_round, waves_per_round,
+# stale, dropped) from the timed run's RunHistory
+ENGINE_BENCH_SCHEMA_VERSION = 4
 
 
 def engine_bench(
@@ -282,8 +285,9 @@ def engine_bench(
     declares ``has_flow_dynamics``.
 
     Emits the usual CSV rows AND persists a machine-readable
-    ``BENCH_engine.json`` (algorithm × backend × n_clients → rounds/sec;
-    schema v3, pinned by tests/test_bench_engine.py). Returns the report
+    ``BENCH_engine.json`` (algorithm × backend × n_clients → rounds/sec +
+    compile_seconds + solver/async telemetry columns;
+    schema v4, pinned by tests/test_bench_engine.py). Returns the report
     dict. Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
     (main() sets it for ``--only engine``) to give the sharded backend a
     real device axis.
@@ -343,7 +347,9 @@ def engine_bench(
                 # segment shape), then a fresh sim SHARING the warmed
                 # backend is timed
                 warm = FedSim(loss_fn, params0, data, parts, cfg)
+                tw = time.perf_counter()
                 warm.run(rounds)
+                warm_wall = time.perf_counter() - tw
                 if backend == "sequential":
                     # prime the batch-shape jit variants the warm-up rounds
                     # happened not to draw
@@ -361,13 +367,23 @@ def engine_bench(
                 sim = FedSim(loss_fn, params0, data, parts, cfg)
                 sim.backend = warm.backend       # keep the warmed jit caches
                 t0 = time.perf_counter()
-                sim.run(rounds)
-                rps[backend] = rounds / (time.perf_counter() - t0)
+                hist = sim.run(rounds)
+                timed_wall = time.perf_counter() - t0
+                rps[backend] = rounds / timed_wall
+                # compile cost ≈ cold warm-up wall minus the steady-state
+                # wall the timed run just measured (recorded separately so
+                # rounds/sec stays a pure steady-state number)
+                summ = hist.summary()
                 report["results"].append({
                     "algorithm": algorithm,
                     "backend": backend,
                     "n_clients": int(n),
                     "rounds_per_sec": float(rps[backend]),
+                    "compile_seconds": max(0.0, warm_wall - timed_wall),
+                    "substeps_per_round": float(summ.get("substeps_per_round", 0.0)),
+                    "waves_per_round": float(summ.get("waves_per_round", 0.0)),
+                    "stale": int(summ.get("stale", 0)),
+                    "dropped": int(summ.get("dropped", 0)),
                 })
             base = rps.get("sequential", next(iter(rps.values())))
             derived = ";".join(f"{b}_rps={v:.3f}" for b, v in rps.items())

@@ -100,21 +100,19 @@ def main():
             )
             sim = FedSim(loss_fn, params0, data, None, cfg, eval_fn)
             hist = sim.run()
-            acc = hist["metrics"][-1][1]["acc"]
+            acc = hist.metrics[-1]["acc"]
             results[alg].append(acc)
             print(f"rep {rep} {alg:10s} acc={acc:.4f}", flush=True)
             if backend == "event" and rep == 0:
-                # make the async behaviour observable: per-round flight-table
-                # stats (arrivals absorbed, stragglers pending, BE waves,
-                # adaptive substeps, busy re-draws dropped from the plan)
-                for r, s in enumerate(sim.backend.round_stats):
-                    print(
-                        f"    round {r:3d}  arrived={s['arrived']:2d} "
-                        f"stale={s['stale']:2d} waves={s['waves']} "
-                        f"substeps={s['substeps']:3d} "
-                        f"dropped={s['dropped']}",
-                        flush=True,
-                    )
+                # make the async behaviour observable: the event backend's
+                # per-round shared-schema telemetry (arrivals absorbed,
+                # stragglers pending, BE waves, adaptive substeps, busy
+                # re-draws dropped from the plan), rendered through the
+                # same formatter the launch drivers use
+                from repro.obs import format_round_line
+
+                for rec in sim.backend.round_stats:
+                    print("    " + format_round_line(rec), flush=True)
 
     print(f"\n== Table-2-style summary ({scenario.name}: {scenario.axes()}; "
           "mean ± std over device draws) ==")

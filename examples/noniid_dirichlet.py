@@ -85,7 +85,7 @@ def main():
             )
             sim = FedSim(loss_fn, params0, data, None, cfg, eval_fn)
             hist = sim.run()
-            acc = hist["metrics"][-1][1]["acc"]
+            acc = hist.metrics[-1]["acc"]
             results[alg].append(acc)
             print(f"rep {rep} {alg:10s} acc={acc:.4f}", flush=True)
 

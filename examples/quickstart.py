@@ -48,7 +48,10 @@ def main():
         )
         sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
         hist = sim.run()
-        traj = " ".join(f"r{r}:{m['acc']:.3f}" for r, m in hist["metrics"])
+        traj = " ".join(
+            f"r{r}:{m['acc']:.3f}"
+            for r, m in zip(hist.eval_rounds, hist.metrics)
+        )
         print(f"{alg:10s} {traj}")
 
 

@@ -39,6 +39,11 @@ class RoundStats(NamedTuple):
     final_dt: jax.Array
     max_eps: jax.Array
     tau_end: jax.Array
+    # accepted-Δt envelope over the round's BE substeps (repro.obs rows;
+    # dt_min is 0 when no substep ran, dt_sum/n_substeps gives dt_mean)
+    dt_min: jax.Array
+    dt_max: jax.Array
+    dt_sum: jax.Array
 
 
 def consensus_integrate(
@@ -64,7 +69,9 @@ def consensus_integrate(
     horizon and every LTE scalar are then pmax/psum-replicated).
 
     Returns (x_c, I_a, tau_end, dt_next, stats) with stats =
-    (n_substeps, n_backtracks, final_dt, max_eps).
+    (n_substeps, n_backtracks, final_dt, max_eps, dt_min, dt_max, dt_sum)
+    — the last three the accepted-step envelope (telemetry; dt_min is 0
+    when the loop never ran).
     """
     T_eff = T_a if mask is None else jnp.where(mask > 0, T_a, 0.0)
     T_max = jnp.max(T_eff)
@@ -77,7 +84,7 @@ def consensus_integrate(
 
     def body(carry):
         x_c, I_a, tau, dt, stats = carry
-        n_sub, n_back, _, max_eps = stats
+        n_sub, n_back, _, max_eps, dt_mn, dt_mx, dt_sm = stats
         dt = jnp.minimum(dt, ccfg.dt_max)
         res = adaptive_be_step(
             x_c, I_a, J_a, x_prev_a, x_new_a, T_a, g_inv_a, S_frozen,
@@ -91,6 +98,9 @@ def consensus_integrate(
             n_back + res.n_backtracks,
             res.dt_used,
             jnp.maximum(max_eps, res.eps),
+            jnp.minimum(dt_mn, res.dt_used),
+            jnp.maximum(dt_mx, res.dt_used),
+            dt_sm + res.dt_used,
         )
         return res.x_c, res.I_a, tau + res.dt_used, new_dt, stats
 
@@ -99,9 +109,17 @@ def consensus_integrate(
         jnp.zeros((), jnp.int32),
         dt0,
         jnp.zeros((), jnp.float32),
+        jnp.full((), jnp.inf, jnp.float32),
+        jnp.zeros((), jnp.float32),
+        jnp.zeros((), jnp.float32),
     )
-    return jax.lax.while_loop(
+    x_c_f, I_a_f, tau_f, dt_f, stats = jax.lax.while_loop(
         cond, body, (x_c, I_a0, jnp.zeros((), jnp.float32), dt0, stats0)
+    )
+    n_sub, n_back, final_dt, max_eps, dt_mn, dt_mx, dt_sm = stats
+    dt_mn = jnp.where(n_sub > 0, dt_mn, 0.0)  # no substep: clear the +inf seed
+    return x_c_f, I_a_f, tau_f, dt_f, (
+        n_sub, n_back, final_dt, max_eps, dt_mn, dt_mx, dt_sm
     )
 
 
@@ -139,6 +157,7 @@ def server_round(
     rstats = RoundStats(
         n_substeps=stats[0], n_backtracks=stats[1],
         final_dt=stats[2], max_eps=stats[3], tau_end=tau_f,
+        dt_min=stats[4], dt_max=stats[5], dt_sum=stats[6],
     )
     return new_state, rstats
 

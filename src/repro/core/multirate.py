@@ -91,6 +91,11 @@ class MultirateStats(NamedTuple):
     substeps: jax.Array     # int32 total adaptive-BE substeps
     horizon: jax.Array      # float32 round horizon W
     tau_end: jax.Array      # float32 centrally integrated time
+    backtracks: jax.Array   # int32 LTE rejections across all waves
+    dt_min: jax.Array       # float32 smallest accepted step (0 if none)
+    dt_max: jax.Array       # float32 largest accepted step
+    dt_sum: jax.Array       # float32 Σ accepted steps
+    stale_hist: jax.Array   # (N_STALE_BUCKETS,) f32 pending-age histogram
 
 
 def init_flight_table(params_like: Pytree, capacity: int) -> FlightTable:
@@ -287,7 +292,7 @@ def multirate_integrate(
     S_all0 = tree_sum_clients(I)
 
     def wave_step(w, carry):
-        x_c, I_tab, tau, dt, n_sub, n_waves = carry
+        x_c, I_tab, tau, dt, n_sub, n_waves, n_back, dt_mn, dt_mx, dt_sm = carry
         qw = (w + 1).astype(jnp.float32) / max_waves
         tau1 = masked_quantile(T_all, arrived_all.astype(jnp.float32), qw)
         tau1 = jnp.where(n_arr > 0, tau1, 0.0)
@@ -300,11 +305,11 @@ def multirate_integrate(
         J_w = I_tab  # wave-start anchor for the (I − J)·g⁻¹ gain term
 
         def cond(c):
-            _, _, tau_c, _, k = c
+            _, _, tau_c, _, k, _, _, _, _ = c
             return (tau_c < tau1) & (k < ccfg.max_substeps)
 
         def body(c):
-            xc_c, I_c, tau_c, dt_c, k = c
+            xc_c, I_c, tau_c, dt_c, k, nb, dmn, dmx, dsm = c
             dt_c = jnp.minimum(dt_c, ccfg.dt_max)
             res = adaptive_be_step(
                 xc_c, I_c, J_w, table.x_prev, table.x_new, T, g_rows,
@@ -318,19 +323,32 @@ def multirate_integrate(
                 lambda new, old: jnp.where(_bcast(active, new) > 0, new, old),
                 res.I_a, I_c,
             )
-            return res.x_c, I_next, tau_c + res.dt_used, new_dt, k + 1
+            return (res.x_c, I_next, tau_c + res.dt_used, new_dt, k + 1,
+                    nb + res.n_backtracks,
+                    jnp.minimum(dmn, res.dt_used),
+                    jnp.maximum(dmx, res.dt_used),
+                    dsm + res.dt_used)
 
-        x_c, I_tab, tau_w, dt, k = jax.lax.while_loop(
-            cond, body, (x_c, I_tab, tau, dt, jnp.zeros((), jnp.int32))
+        x_c, I_tab, tau_w, dt, k, n_back, dt_mn, dt_mx, dt_sm = (
+            jax.lax.while_loop(
+                cond, body,
+                (x_c, I_tab, tau, dt, jnp.zeros((), jnp.int32),
+                 n_back, dt_mn, dt_mx, dt_sm),
+            )
         )
         return (x_c, I_tab, tau_w, dt, n_sub + k,
-                n_waves + (k > 0).astype(jnp.int32))
+                n_waves + (k > 0).astype(jnp.int32),
+                n_back, dt_mn, dt_mx, dt_sm)
 
     zero_i = jnp.zeros((), jnp.int32)
-    x_c, I_tab, tau_end, dt_f, n_sub, n_waves = jax.lax.fori_loop(
+    zero_f = jnp.zeros((), jnp.float32)
+    (x_c, I_tab, tau_end, dt_f, n_sub, n_waves,
+     n_back, dt_mn, dt_mx, dt_sm) = jax.lax.fori_loop(
         0, int(max_waves), wave_step,
-        (x_c, J0, jnp.zeros((), jnp.float32), dt_last, zero_i, zero_i),
+        (x_c, J0, zero_f, dt_last, zero_i, zero_i,
+         zero_i, jnp.full((), jnp.inf, jnp.float32), zero_f, zero_f),
     )
+    dt_mn = jnp.where(n_sub > 0, dt_mn, 0.0)  # no substep: clear the +inf seed
 
     # arrived flights: flow rows re-enter the replicated I through the
     # exact-set one-hot scatter (each real slot owned by exactly one shard)
@@ -373,6 +391,8 @@ def multirate_integrate(
         stale_rounds=jnp.where(stale > 0, table.stale_rounds + 1, 0),
         alive=stale,
     )
+    from repro.obs.telemetry import stale_histogram  # lazy: obs is a leaf dep
+
     stats = MultirateStats(
         arrived=_psum_scalar(jnp.sum(arrived_f), axis_name).astype(jnp.int32),
         stale=_psum_scalar(jnp.sum(stale), axis_name).astype(jnp.int32),
@@ -380,5 +400,12 @@ def multirate_integrate(
         substeps=n_sub,
         horizon=W,
         tau_end=tau_end,
+        backtracks=n_back,
+        dt_min=dt_mn,
+        dt_max=dt_mx,
+        dt_sum=dt_sm,
+        stale_hist=stale_histogram(
+            table_new.stale_rounds, table_new.alive, axis_name
+        ),
     )
     return x_c, I_new, dt_f, t + tau_end, table_new, stats

@@ -31,9 +31,10 @@ from repro.fed.server import (
     last_finite_loss,
     mean_finite_loss,
 )
+from repro.obs import RunHistory
 
 __all__ = [
-    "FedSim", "FedSimConfig", "ALGORITHMS",
+    "FedSim", "FedSimConfig", "ALGORITHMS", "RunHistory",
     "last_finite_loss", "mean_finite_loss",
     "FederatedAlgorithm", "WeightedDeltaAlgorithm",
     "available_algorithms", "get_algorithm", "make_algorithm", "register",

@@ -89,6 +89,13 @@ class FederatedAlgorithm:
         replays the same spec inside ``shard_map`` (DESIGN.md §6)."""
         raise NotImplementedError
 
+    def pop_round_stats(self):
+        """Device-resident solver stats stashed by the last ``aggregate``
+        (a ``core.fedecado.RoundStats``), or None for algorithms without an
+        adaptive solver. ``FedSim._apply_round`` pops them into the round's
+        shared telemetry record with one batched device_get."""
+        return None
+
 
 # ---------------------------------------------------------------------------
 # the shared weighted-delta aggregation primitive

@@ -91,12 +91,20 @@ class FedECADO(FederatedAlgorithm):
 
     # -------------------------------------------------------- aggregation --
     def aggregate(self, sim, plan, result) -> None:
-        sim.state, _stats = self._round_fn(
+        sim.state, stats = self._round_fn(
             sim.state,
             result.x_new_a,
             jnp.asarray(result.Ts, jnp.float32),
             jnp.asarray(plan.idx, jnp.int32),
         )
+        # stashed on-device; fed/server.py pops it into the round's shared
+        # telemetry record with one batched device_get alongside the loss
+        self._last_round_stats = stats
+
+    def pop_round_stats(self):
+        stats = getattr(self, "_last_round_stats", None)
+        self._last_round_stats = None
+        return stats
 
 
 class ECADO(FedECADO):

@@ -58,6 +58,7 @@ from repro.core import ConsensusConfig
 from repro.fed.algorithms import available_algorithms, make_algorithm
 from repro.fed.client import HeteroConfig
 from repro.fed.partition import data_fractions
+from repro.obs import RunHistory, RunLog, TraceRecorder, make_record, span
 
 Pytree = Any
 
@@ -138,6 +139,12 @@ class FedSimConfig:
     # device profiles, dropout) steers every round's CohortPlan. Scenario
     # device profiles take precedence over ``hetero``.
     scenario: Optional[Any] = None
+    # --- observability (repro/obs, DESIGN.md §9) ---
+    # structured JSONL run log: one header + one record per round + summary
+    log_jsonl: Optional[str] = None
+    # Chrome-trace JSON of host-side spans (plan draw, segment dispatch,
+    # gain refresh, eval) — load in chrome://tracing / ui.perfetto.dev
+    trace_json: Optional[str] = None
 
 
 class FedSim:
@@ -271,9 +278,22 @@ class FedSim:
     def _apply_round(self, plan, result) -> Dict[str, Any]:
         """Server aggregation shared by the sequential/vectorized backends
         and the sharded ragged fallback (the event backend interleaves its
-        own consensus integration): delegate to the algorithm plugin."""
+        own consensus integration): delegate to the algorithm plugin, then
+        build the round's shared telemetry record — the solver stats the
+        plugin stashed on device come back in one batched device_get (these
+        backends already sync per round, so this adds no sync points)."""
         self.alg.aggregate(self, plan, result)
-        return {"loss": float(np.mean(result.losses))}
+        loss = float(np.mean(result.losses))
+        stats = self.alg.pop_round_stats()
+        if stats is None:
+            return make_record(plan.rnd, loss=loss, cohort=plan.cohort_size)
+        s = jax.device_get(stats)
+        return make_record(
+            plan.rnd, loss=loss, cohort=plan.cohort_size,
+            substeps=s.n_substeps, backtracks=s.n_backtracks,
+            dt_min=s.dt_min, dt_max=s.dt_max, dt_sum=s.dt_sum,
+            tau_end=s.tau_end,
+        )
 
     # ------------------------------------------------------------------
     def _segment_end(self, rnd: int, rounds: int) -> int:
@@ -305,40 +325,84 @@ class FedSim:
                     break
         return max(end, rnd + 1)
 
-    def run(self, rounds: Optional[int] = None) -> Dict[str, list]:
+    def run(self, rounds: Optional[int] = None) -> RunHistory:
+        """Run ``rounds`` rounds and return the structured ``RunHistory``
+        (per-round loss + telemetry records, eval metrics, per-client
+        participation counts). With ``cfg.log_jsonl``/``cfg.trace_json``
+        set, a JSONL run log / Chrome-trace span file is written alongside
+        (repro/obs, DESIGN.md §9)."""
         cfg = self.cfg
         rounds = rounds or cfg.rounds
         A = max(1, int(round(cfg.participation * self.n)))
         if self.alg.full_participation_only:
             A = self.n
-        history: Dict[str, list] = {"round": [], "loss": [], "metrics": []}
+        history = RunHistory()
+        # plan-derived participation: exact for every backend that
+        # dispatches the plans verbatim; the event backend overrides it
+        # below with its device-exact counts (busy re-draws excluded)
+        part_plan = np.zeros((self.n,), np.int64)
 
-        rnd = 0
-        while rnd < rounds:
-            if self.scn is not None and self.scn.drift_due(rnd):
-                self._apply_drift()
-            if (
-                cfg.gain_update_every
-                and rnd
-                and rnd % cfg.gain_update_every == 0
-                and self.alg.refreshable_gains
-            ):
-                self._install_gains(round_idx=rnd)
-            end = self._segment_end(rnd, rounds)
-            # all host randomness for the segment up front — same rng
-            # consumption order as the per-round loop (run_round does not
-            # touch self.rng), so histories are backend-independent
-            plans = [self._draw_plan(r, A) for r in range(rnd, end)]
-            recs = self.backend.run_rounds(self, plans)
-            for r, rec in zip(range(rnd, end), recs):
-                history["round"].append(r)
-                history["loss"].append(rec["loss"])
-                if self.eval_fn is not None and (
-                    r % cfg.eval_every == 0 or r == rounds - 1
+        runlog = RunLog(cfg.log_jsonl) if cfg.log_jsonl else None
+        recorder = TraceRecorder(cfg.trace_json) if cfg.trace_json else None
+        if runlog is not None:
+            runlog.start(
+                config=cfg, algorithm=self.alg.name,
+                backend=self.backend.name, n_clients=self.n, rounds=rounds,
+            )
+        if recorder is not None:
+            recorder.install()
+        try:
+            rnd = 0
+            while rnd < rounds:
+                if self.scn is not None and self.scn.drift_due(rnd):
+                    with span("drift", round=rnd):
+                        self._apply_drift()
+                if (
+                    cfg.gain_update_every
+                    and rnd
+                    and rnd % cfg.gain_update_every == 0
+                    and self.alg.refreshable_gains
                 ):
-                    m = self.eval_fn(self.current_params())
-                    history["metrics"].append((r, m))
-            rnd = end
+                    with span("gain_refresh", round=rnd):
+                        self._install_gains(round_idx=rnd)
+                end = self._segment_end(rnd, rounds)
+                # all host randomness for the segment up front — same rng
+                # consumption order as the per-round loop (run_round does
+                # not touch self.rng), so histories are backend-independent
+                with span("plan_draw", rounds=end - rnd):
+                    plans = [self._draw_plan(r, A) for r in range(rnd, end)]
+                for p in plans:
+                    part_plan[np.asarray(p.idx, np.int64)] += 1
+                with span("segment", backend=self.backend.name,
+                          rounds=end - rnd):
+                    recs = self.backend.run_rounds(self, plans)
+                for r, rec in zip(range(rnd, end), recs):
+                    history.rounds.append(r)
+                    history.loss.append(rec["loss"])
+                    history.telemetry.append(rec)
+                    m = None
+                    if self.eval_fn is not None and (
+                        r % cfg.eval_every == 0 or r == rounds - 1
+                    ):
+                        with span("eval", round=r):
+                            m = self.eval_fn(self.current_params())
+                        history.eval_rounds.append(r)
+                        history.metrics.append(m)
+                    if runlog is not None:
+                        runlog.round(rec, metrics=m)
+                rnd = end
+            part_dev = self.backend.pop_participation()
+            history.participation = (
+                part_dev if part_dev is not None else part_plan
+            )
+            if runlog is not None:
+                runlog.summary(history.summary())
+        finally:
+            if runlog is not None:
+                runlog.close()
+            if recorder is not None:
+                recorder.uninstall()
+                recorder.save()
         return history
 
     def current_params(self) -> Pytree:

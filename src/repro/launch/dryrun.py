@@ -256,7 +256,7 @@ def build_consensus_specs(
     scalar_sh = NamedSharding(mesh, P())
     out_sh = (
         _named(state_specs, mesh),
-        RoundStats(scalar_sh, scalar_sh, scalar_sh, scalar_sh, scalar_sh),
+        RoundStats(*([scalar_sh] * len(RoundStats._fields))),
     )
     donate = (0,)
     return step, args, in_sh, out_sh, donate

@@ -44,7 +44,50 @@ from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core import ConsensusConfig, init_server_state, server_round, set_gains
 from repro.data import make_lm_stream
 from repro.models import init_params, loss_fn
+from repro.obs import (
+    RunLog,
+    TraceRecorder,
+    format_round_line,
+    make_record,
+    span,
+    summarize_records,
+)
 from repro.sim.vectorized import build_cohort_runner, cohort_vmap_fn
+
+
+class _Obs:
+    """Optional run-log + trace wiring shared by the three driver loops:
+    one header, one shared-schema record per round (also the printed round
+    line via the shared formatter), one summary."""
+
+    def __init__(self, args, backend: str):
+        self.records = []
+        self.runlog = RunLog(args.log_jsonl) if args.log_jsonl else None
+        if self.runlog is not None:
+            self.runlog.start(
+                config=vars(args), backend=backend,
+                n_clients=args.clients, rounds=args.rounds,
+            )
+        self.recorder = (
+            TraceRecorder(args.trace_json) if args.trace_json else None
+        )
+        if self.recorder is not None:
+            self.recorder.install()
+
+    def round(self, rec, t0, extra=None) -> None:
+        self.records.append(rec)
+        if self.runlog is not None:
+            self.runlog.round(rec)
+        print(format_round_line(rec, wall_s=time.time() - t0, extra=extra),
+              flush=True)
+
+    def close(self) -> None:
+        if self.runlog is not None:
+            self.runlog.summary(summarize_records(self.records))
+            self.runlog.close()
+        if self.recorder is not None:
+            self.recorder.uninstall()
+            self.recorder.save()
 
 
 def main() -> None:
@@ -88,6 +131,16 @@ def main() -> None:
     ap.add_argument(
         "--event-max-waves", type=int, default=2,
         help="event backend: BE sync groups per round",
+    )
+    ap.add_argument(
+        "--log-jsonl", default=None,
+        help="write a structured JSONL run log (header + one shared-schema "
+        "record per round + summary; repro/obs, DESIGN.md §9)",
+    )
+    ap.add_argument(
+        "--trace-json", default=None,
+        help="write Chrome-trace JSON of host-side spans (open in "
+        "chrome://tracing or ui.perfetto.dev)",
     )
     args = ap.parse_args()
 
@@ -135,26 +188,31 @@ def main() -> None:
 
     round_fn = jax.jit(lambda s, x, T, i: server_round(s, x, T, i, ccfg))
 
+    obs = _Obs(args, backend="vectorized")
     with mesh:
         t0 = time.time()
         for rnd in range(args.rounds):
-            idx = np.sort(rng.choice(args.clients, args.cohort, replace=False))
-            lrs = rng.uniform(5e-3, 2e-2, args.cohort).astype(np.float32)
-            toks = np.stack([batches_for(int(i), args.steps) for i in idx])
-            batches_a = {"tokens": jax.device_put(jnp.asarray(toks), cax)}
-            I_a = jax.tree.map(lambda l: l[jnp.asarray(idx)], state.I)
-            x_new_a, losses = cohort_train(
-                state.x_c, I_a, batches_a, jnp.asarray(lrs), ones_cohort, full_steps
-            )
-            T_a = jnp.asarray(lrs * args.steps, jnp.float32)
-            state, stats = round_fn(
-                state, x_new_a, T_a, jnp.asarray(idx, jnp.int32)
-            )
-            print(
-                f"round {rnd}  cohort-loss {float(jnp.mean(losses)):.4f}  "
-                f"substeps {int(stats.n_substeps)}  ({time.time()-t0:.0f}s)",
-                flush=True,
-            )
+            with span("round", round=rnd):
+                idx = np.sort(rng.choice(args.clients, args.cohort, replace=False))
+                lrs = rng.uniform(5e-3, 2e-2, args.cohort).astype(np.float32)
+                toks = np.stack([batches_for(int(i), args.steps) for i in idx])
+                batches_a = {"tokens": jax.device_put(jnp.asarray(toks), cax)}
+                I_a = jax.tree.map(lambda l: l[jnp.asarray(idx)], state.I)
+                x_new_a, losses = cohort_train(
+                    state.x_c, I_a, batches_a, jnp.asarray(lrs), ones_cohort, full_steps
+                )
+                T_a = jnp.asarray(lrs * args.steps, jnp.float32)
+                state, stats = round_fn(
+                    state, x_new_a, T_a, jnp.asarray(idx, jnp.int32)
+                )
+                s = jax.device_get(stats)
+            obs.round(make_record(
+                rnd, loss=float(jnp.mean(losses)), cohort=args.cohort,
+                substeps=s.n_substeps, backtracks=s.n_backtracks,
+                dt_min=s.dt_min, dt_max=s.dt_max, dt_sum=s.dt_sum,
+                tau_end=s.tau_end,
+            ), t0)
+    obs.close()
     print("done — cohort training and consensus both executed on the mesh")
 
 
@@ -188,38 +246,43 @@ def _run_event(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
             args.event_horizon, args.event_max_waves,
         )
 
+    obs = _Obs(args, backend="event")
     t0 = time.time()
     for rnd in range(args.rounds):
-        idx = np.sort(rng.choice(args.clients, args.cohort, replace=False))
-        lrs = rng.uniform(5e-3, 2e-2, args.cohort).astype(np.float32)
-        toks = np.stack([batches_for(int(i), args.steps) for i in idx])
-        I_a = jax.tree.map(lambda l: l[jnp.asarray(idx)], state.I)
-        x_new_a, losses = cohort_train(
-            state.x_c, I_a, {"tokens": jnp.asarray(toks)},
-            jnp.asarray(lrs), ones_cohort, full_steps,
-        )
-        busy = np.asarray(table.alive)[idx]
-        dmask = jnp.asarray(1.0 - busy, jnp.float32)
-        Ts = jnp.asarray(lrs * args.steps, jnp.float32)
-        x_c, I, dt_last, t, table, st = event_round(
-            (state.x_c, state.I, state.g_inv, state.dt_last, state.t),
-            table, x_new_a, jnp.asarray(idx, jnp.int32), Ts, dmask,
-        )
-        state = state._replace(
-            x_c=x_c, I=I, dt_last=dt_last, t=t, round=state.round + 1
-        )
+        with span("round", round=rnd):
+            idx = np.sort(rng.choice(args.clients, args.cohort, replace=False))
+            lrs = rng.uniform(5e-3, 2e-2, args.cohort).astype(np.float32)
+            toks = np.stack([batches_for(int(i), args.steps) for i in idx])
+            I_a = jax.tree.map(lambda l: l[jnp.asarray(idx)], state.I)
+            x_new_a, losses = cohort_train(
+                state.x_c, I_a, {"tokens": jnp.asarray(toks)},
+                jnp.asarray(lrs), ones_cohort, full_steps,
+            )
+            busy = np.asarray(table.alive)[idx]
+            dmask = jnp.asarray(1.0 - busy, jnp.float32)
+            Ts = jnp.asarray(lrs * args.steps, jnp.float32)
+            x_c, I, dt_last, t, table, st = event_round(
+                (state.x_c, state.I, state.g_inv, state.dt_last, state.t),
+                table, x_new_a, jnp.asarray(idx, jnp.int32), Ts, dmask,
+            )
+            state = state._replace(
+                x_c=x_c, I=I, dt_last=dt_last, t=t, round=state.round + 1
+            )
+            st = jax.device_get(st)
         kept = float(np.sum(1.0 - busy))
         loss = (
             float(np.sum(np.asarray(losses) * (1.0 - busy)) / kept)
             if kept else float("nan")
         )
-        print(
-            f"round {rnd}  cohort-loss {loss:.4f}  "
-            f"arrived {int(st.arrived)}  stale {int(st.stale)}  "
-            f"waves {int(st.waves)}  substeps {int(st.substeps)}  "
-            f"dropped {int(busy.sum())}  ({time.time()-t0:.0f}s)",
-            flush=True,
-        )
+        obs.round(make_record(
+            rnd, loss=loss, cohort=int(kept), dropped=int(busy.sum()),
+            substeps=st.substeps, backtracks=st.backtracks,
+            dt_min=st.dt_min, dt_max=st.dt_max, dt_sum=st.dt_sum,
+            waves=st.waves, arrived=st.arrived, stale=st.stale,
+            horizon=st.horizon, tau_end=st.tau_end,
+            stale_hist=np.asarray(st.stale_hist),
+        ), t0)
+    obs.close()
     print("done — flight-table event rounds executed on device")
 
 
@@ -244,39 +307,44 @@ def _run_sharded(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
     ))
     apply_fn = build_flow_apply(mesh, ccfg)
 
+    obs = _Obs(args, backend="sharded")
     t0 = time.time()
     for rnd in range(args.rounds):
-        idx = np.sort(rng.choice(args.clients, A, replace=False))
-        lrs = rng.uniform(5e-3, 2e-2, A).astype(np.float32)
-        toks = np.stack([batches_for(int(i), args.steps) for i in idx])
+        with span("round", round=rnd):
+            idx = np.sort(rng.choice(args.clients, A, replace=False))
+            lrs = rng.uniform(5e-3, 2e-2, A).astype(np.float32)
+            toks = np.stack([batches_for(int(i), args.steps) for i in idx])
 
-        pad = A_pad - A
-        idx_p, sidx, mask = pad_cohort_ids(idx, A_pad, args.clients)
-        lrs_p = np.concatenate([lrs, np.zeros(pad, np.float32)])
-        toks_p = np.pad(toks, ((0, pad),) + ((0, 0),) * (toks.ndim - 1), mode="edge")
-        n_valid = (mask * args.steps).astype(np.int32)
-        Ts = (lrs_p * n_valid).astype(np.float32)
+            pad = A_pad - A
+            idx_p, sidx, mask = pad_cohort_ids(idx, A_pad, args.clients)
+            lrs_p = np.concatenate([lrs, np.zeros(pad, np.float32)])
+            toks_p = np.pad(toks, ((0, pad),) + ((0, 0),) * (toks.ndim - 1), mode="edge")
+            n_valid = (mask * args.steps).astype(np.int32)
+            Ts = (lrs_p * n_valid).astype(np.float32)
 
-        I_a = jax.tree.map(lambda l: l[jnp.asarray(idx_p)], state.I)
-        x_new_a, losses = cohort_train(
-            state.x_c, I_a, {"tokens": jnp.asarray(toks_p)},
-            jnp.asarray(lrs_p), jnp.ones((A_pad,), jnp.float32),
-            jnp.asarray(n_valid),
-        )
-        x_c, I, dt_last, t = apply_fn(
-            state.x_c, state.I, state.g_inv, state.dt_last, state.t,
-            x_new_a, jnp.asarray(idx_p), jnp.asarray(sidx), jnp.asarray(mask),
-            jnp.asarray(Ts),
-        )
-        state = state._replace(
-            x_c=x_c, I=I, dt_last=dt_last, t=t, round=state.round + 1
-        )
+            I_a = jax.tree.map(lambda l: l[jnp.asarray(idx_p)], state.I)
+            x_new_a, losses = cohort_train(
+                state.x_c, I_a, {"tokens": jnp.asarray(toks_p)},
+                jnp.asarray(lrs_p), jnp.ones((A_pad,), jnp.float32),
+                jnp.asarray(n_valid),
+            )
+            x_c, I, dt_last, t, tel = apply_fn(
+                state.x_c, state.I, state.g_inv, state.dt_last, state.t,
+                x_new_a, jnp.asarray(idx_p), jnp.asarray(sidx), jnp.asarray(mask),
+                jnp.asarray(Ts),
+            )
+            state = state._replace(
+                x_c=x_c, I=I, dt_last=dt_last, t=t, round=state.round + 1
+            )
+            losses, tel = jax.device_get((losses, tel))
+            tel = np.asarray(tel)
         loss = float(np.mean(np.asarray(losses)[mask > 0]))
-        print(
-            f"round {rnd}  cohort-loss {loss:.4f}  "
-            f"devices {n_dev}  cohort {A}->{A_pad}  ({time.time()-t0:.0f}s)",
-            flush=True,
-        )
+        obs.round(make_record(
+            rnd, loss=loss, cohort=A,
+            substeps=tel[0], backtracks=tel[1],
+            dt_min=tel[2], dt_max=tel[3], dt_sum=tel[4], tau_end=tel[5],
+        ), t0, extra={"devices": n_dev, "padded": A_pad})
+    obs.close()
     print("done — sharded cohort training + psum consensus on the clients mesh")
 
 

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -40,7 +41,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-SCENARIO_BENCH_SCHEMA_VERSION = 1
+# v2: rows gain a "telemetry" summary (shared obs schema: substeps/waves/
+# staleness/dropped counters aggregated over the cell's rounds)
+SCENARIO_BENCH_SCHEMA_VERSION = 2
 
 EQUIV_BACKENDS = ("sequential", "vectorized", "sharded")
 
@@ -130,38 +133,38 @@ def _shared_backend(cache: Dict[object, object], name: str,
 
 def run_cell(algorithm: str, scenario: str, seed: int, backend: str,
              problem, backends_cache, *, event_horizon: float = 1.0,
-             **grid) -> Dict[str, object]:
-    """One matrix cell: train, eval once at the end, return the row (plus
-    the event backend's aggregated round stats under private keys)."""
+             log_dir: Optional[str] = None, **grid) -> Dict[str, object]:
+    """One matrix cell: train, eval once at the end, return the row with
+    its aggregated telemetry summary (shared obs schema)."""
     from repro.fed import FedSim, last_finite_loss
+    from repro.obs import jsonable
 
     data, params0, eval_fn = problem
     cfg = _make_cfg(algorithm, scenario, seed, backend,
                     event_horizon=event_horizon, **grid)
+    if log_dir:
+        # one structured run log per cell, named after its coordinates —
+        # CI uploads the directory as a workflow artifact
+        cfg.log_jsonl = os.path.join(
+            log_dir, f"{algorithm}-{scenario}-s{seed}-{backend}.jsonl"
+        )
     t0 = time.time()
     sim = FedSim(loss_fn, params0, data, None, cfg, eval_fn)
     sim.backend = _shared_backend(backends_cache, backend, event_horizon)
     hist = sim.run()
-    row = {
+    return {
         "algorithm": algorithm,
         "scenario": scenario,
         "seed": int(seed),
         "backend": backend,
-        "acc": float(hist["metrics"][-1][1]["acc"]),
+        "acc": float(hist.metrics[-1]["acc"]),
         # nan-aware: event rounds with an all-busy cohort mark the loss
         # gap with nan; the endpoint must skip it, not propagate it
-        "final_loss": last_finite_loss(hist["loss"]),
+        "final_loss": last_finite_loss(hist.loss),
         "wall_s": float(time.time() - t0),
-        "_history": [float(l) for l in hist["loss"]],
+        "telemetry": jsonable(hist.summary()),
+        "_history": [float(l) for l in hist.loss],
     }
-    stats = getattr(sim.backend, "round_stats", None)
-    if stats:      # event backend: per-round async counters for the logs
-        row["_event"] = {
-            "dropped": int(sum(s["dropped"] for s in stats)),
-            "stale": int(sum(s["stale"] for s in stats)),
-            "arrived": int(sum(s["arrived"] for s in stats)),
-        }
-    return row
 
 
 def _table(report) -> str:
@@ -205,13 +208,18 @@ def run_sweep(
     equiv_rounds: int = 2,
     equiv_rtol: float = 1e-6,
     json_path: Optional[str] = "BENCH_scenarios.json",
+    log_dir: Optional[str] = None,
     table: bool = True,
 ) -> Dict[str, object]:
     """Run the matrix + equivalence grids and return the report dict
     (persisted to ``json_path`` when set). Names are validated against both
     registries BEFORE any cell runs."""
     from repro.fed.algorithms import available_algorithms, get_algorithm
+    from repro.obs import format_counters
     from repro.scenarios import available_scenarios, get_scenario
+
+    if log_dir:
+        os.makedirs(log_dir, exist_ok=True)
 
     algorithms = tuple(algorithms or available_algorithms())
     scenarios = tuple(scenarios or available_scenarios())
@@ -271,21 +279,17 @@ def run_sweep(
             for algorithm in algorithms:
                 row = run_cell(algorithm, scenario, seed, backend,
                                problem, backends_cache,
-                               event_horizon=event_horizon, **grid)
+                               event_horizon=event_horizon,
+                               log_dir=log_dir, **grid)
                 row.pop("_history")
-                ev = row.pop("_event", None)
-                # event round log: surface the async counters — dropped
-                # (busy re-draws masked out of the plan) would otherwise be
-                # silent cohort shrinkage
-                extra = (
-                    f" dropped={ev['dropped']} stale={ev['stale']}"
-                    f" arrived={ev['arrived']}"
-                    if ev is not None and backend == "event" else ""
-                )
                 report["results"].append(row)
+                # shared-formatter counter suffix: surfaces solver effort
+                # and (event backend) async behaviour — dropped busy
+                # re-draws would otherwise be silent cohort shrinkage
                 print(
                     f"seed {seed} {scenario:16s} {algorithm:10s} "
-                    f"acc={row['acc']:.4f} ({row['wall_s']:.1f}s){extra}",
+                    f"acc={row['acc']:.4f} ({row['wall_s']:.1f}s)  "
+                    + format_counters(row["telemetry"]),
                     flush=True,
                 )
 
@@ -372,6 +376,11 @@ def main() -> None:
     ap.add_argument("--equiv-rtol", type=float, default=1e-6)
     ap.add_argument("--json", default="BENCH_scenarios.json",
                     help="report path ('' disables persisting)")
+    ap.add_argument(
+        "--log-dir", default=None,
+        help="directory for per-cell structured JSONL run logs (repro/obs "
+        "schema; one file per matrix cell, named by its coordinates)",
+    )
     ap.add_argument("--allow-equiv-fail", action="store_true",
                     help="do not exit non-zero on equivalence violations")
     args = ap.parse_args()
@@ -385,7 +394,7 @@ def main() -> None:
         event_horizon=args.event_horizon,
         equiv_scenarios=[s for s in args.equiv_scenarios.split(",") if s],
         equiv_rounds=args.equiv_rounds, equiv_rtol=args.equiv_rtol,
-        json_path=args.json or None,
+        json_path=args.json or None, log_dir=args.log_dir,
     )
     bad = [r for r in report["equivalence"] if not r["ok"]]
     if bad and not args.allow_equiv_fail:

@@ -110,9 +110,9 @@ def run_fed(args) -> None:
     )
     sim = FedSim(mlp_loss, init_mlp(jax.random.PRNGKey(0)), data, parts, cfg, eval_fn)
     hist = sim.run()
-    for rnd, m in hist["metrics"]:
+    for rnd, m in zip(hist.eval_rounds, hist.metrics):
         print(f"round {rnd:4d}  acc {m['acc']:.4f}")
-    print(f"final train-loss {hist['loss'][-1]:.4f}")
+    print(f"final train-loss {hist.loss[-1]:.4f}")
 
 
 def main() -> None:

@@ -1,0 +1,52 @@
+"""repro.obs — the telemetry layer: one per-round counter schema shared by
+all four execution backends (device half), plus JSONL run logs, Chrome
+trace spans, a structured run history and the shared round-line formatter
+(host half). See DESIGN.md §9."""
+from .format import format_counters, format_round_line
+from .history import RunHistory
+from .runlog import (
+    RUNLOG_SCHEMA_VERSION,
+    RunLog,
+    environment_stamp,
+    jsonable,
+    validate_jsonl,
+    validate_record,
+)
+from .telemetry import (
+    N_STALE_BUCKETS,
+    RECORD_FIELDS,
+    STALE_BUCKET_EDGES,
+    TELEMETRY_FIELDS,
+    field_index,
+    make_record,
+    pack_row,
+    rows_to_records,
+    stale_histogram,
+    summarize_records,
+)
+from .trace import TraceRecorder, span, validate_trace
+
+__all__ = [
+    "N_STALE_BUCKETS",
+    "RECORD_FIELDS",
+    "RUNLOG_SCHEMA_VERSION",
+    "RunHistory",
+    "RunLog",
+    "STALE_BUCKET_EDGES",
+    "TELEMETRY_FIELDS",
+    "TraceRecorder",
+    "environment_stamp",
+    "field_index",
+    "format_counters",
+    "format_round_line",
+    "jsonable",
+    "make_record",
+    "pack_row",
+    "rows_to_records",
+    "span",
+    "stale_histogram",
+    "summarize_records",
+    "validate_jsonl",
+    "validate_record",
+    "validate_trace",
+]

@@ -1,0 +1,76 @@
+"""The single source of truth for human-readable round lines.
+
+``launch/fedrun.py`` (all three backends), ``launch/sweep.py`` and
+``examples/heterogeneous_clients.py`` previously each hand-rolled their
+own per-round f-string; they now all render telemetry records through
+``format_round_line`` so the field set and formatting cannot diverge.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+
+def _num(v: float) -> str:
+    if isinstance(v, bool):
+        return str(int(v))
+    if isinstance(v, int):
+        return str(v)
+    if not math.isfinite(v):
+        return "nan"
+    if v == 0:
+        return "0"
+    if abs(v) >= 100:
+        return f"{v:.1f}"
+    if abs(v) >= 0.01:
+        return f"{v:.4f}"
+    return f"{v:.2e}"
+
+
+def format_round_line(
+    rec: Dict[str, Any],
+    wall_s: Optional[float] = None,
+    extra: Optional[Dict[str, Any]] = None,
+) -> str:
+    """One per-round status line from a shared telemetry record.
+
+    Always shows ``round``/``loss``/``substeps``; adds the cohort size,
+    the async counter group (arrived/stale/waves/dropped) whenever the
+    round was asynchronous (waves active, flights pending, or busy drops),
+    the ``extra`` dict as trailing ``key value`` pairs, and the wall time.
+    """
+    parts = [
+        f"round {rec['round']:>3d}",
+        f"loss {_num(rec['loss'])}",
+        f"substeps {rec.get('substeps', 0)}",
+    ]
+    if rec.get("backtracks"):
+        parts.append(f"backtracks {rec['backtracks']}")
+    if rec.get("cohort"):
+        parts.append(f"cohort {rec['cohort']}")
+    if rec.get("waves") or rec.get("stale") or rec.get("dropped"):
+        parts.append(
+            f"arrived {rec.get('arrived', 0)} stale {rec.get('stale', 0)} "
+            f"waves {rec.get('waves', 0)} dropped {rec.get('dropped', 0)}"
+        )
+    for key, v in (extra or {}).items():
+        parts.append(f"{key} {_num(v) if isinstance(v, (int, float)) else v}")
+    line = "  ".join(parts)
+    if wall_s is not None:
+        line += f"  ({wall_s:.2f}s)"
+    return line
+
+
+def format_counters(summary: Dict[str, Any]) -> str:
+    """Compact ``k=v`` suffix from a run-level telemetry summary — used by
+    the sweep runner's per-cell progress lines."""
+    if not summary or not summary.get("rounds"):
+        return ""
+    parts = [f"substeps/r={summary['substeps_per_round']:.1f}"]
+    if summary.get("waves_per_round"):
+        parts.append(f"waves/r={summary['waves_per_round']:.1f}")
+    if summary.get("stale"):
+        parts.append(f"stale={summary['stale']}")
+    if summary.get("dropped"):
+        parts.append(f"dropped={summary['dropped']}")
+    return " ".join(parts)

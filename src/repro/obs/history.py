@@ -1,0 +1,47 @@
+"""Structured run history returned by ``FedSim.run``.
+
+Replaces the old loosely-shaped dict (``{"round": [...], "loss": [...],
+"metrics": [(round, dict), ...]}``) whose ``metrics`` entries were tuples
+while ``loss`` was a flat list. ``RunHistory`` keeps the aligned per-round
+series flat (``rounds``/``loss``/``telemetry``), splits eval results into
+two aligned lists (``eval_rounds``/``metrics``), and carries the exact
+per-client participation counts accumulated by the backends.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from .telemetry import summarize_records
+
+
+@dataclass
+class RunHistory:
+    """Per-round series are index-aligned: ``loss[i]`` and ``telemetry[i]``
+    belong to ``rounds[i]``. ``metrics[j]`` belongs to ``eval_rounds[j]``.
+    ``participation[c]`` counts how many rounds client ``c`` was actually
+    dispatched (exact — padding and dropped/busy re-draws never count)."""
+
+    rounds: List[int] = field(default_factory=list)
+    loss: List[float] = field(default_factory=list)
+    eval_rounds: List[int] = field(default_factory=list)
+    metrics: List[Dict[str, Any]] = field(default_factory=list)
+    telemetry: List[Dict[str, Any]] = field(default_factory=list)
+    participation: Optional[np.ndarray] = None
+
+    def summary(self) -> Dict[str, Any]:
+        """Run-level telemetry aggregate (see ``summarize_records``), plus
+        the participation spread when the backend reported it."""
+        out = summarize_records(self.telemetry)
+        if self.participation is not None:
+            p = np.asarray(self.participation)
+            out["participation"] = {
+                "min": int(p.min()), "max": int(p.max()),
+                "mean": float(p.mean()),
+            }
+        return out
+
+    def __len__(self) -> int:
+        return len(self.rounds)

@@ -1,0 +1,202 @@
+"""Structured JSONL run logs — the host half of ``repro.obs``.
+
+A run log is a JSON-Lines file with three record kinds, discriminated by
+``"kind"``:
+
+  * one ``"run"`` header — schema version, run config, git SHA, jax
+    version, device topology, wall-clock timestamp;
+  * one ``"round"`` record per round — the shared telemetry record
+    (telemetry.RECORD_FIELDS) plus optional eval ``"metrics"``;
+  * one ``"summary"`` trailer — ``summarize_records`` over the round
+    records (plus participation spread).
+
+``validate_record``/``validate_jsonl`` pin the schema: tests/test_obs.py
+and the CI smoke cell both call them, and CI uploads the emitted files as
+workflow artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import time
+from typing import Any, Dict, Iterable, List, Optional
+
+from .telemetry import N_STALE_BUCKETS, RECORD_FIELDS
+
+RUNLOG_SCHEMA_VERSION = 1
+
+_KINDS = ("run", "round", "summary")
+
+
+def jsonable(obj: Any) -> Any:
+    """Best-effort conversion of run configs (nested dataclasses, numpy
+    scalars/arrays, tuples) into plain JSON values; unknown objects fall
+    back to ``str()`` so a log header can never fail to serialize."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {
+            f.name: jsonable(getattr(obj, f.name))
+            for f in dataclasses.fields(obj)
+        }
+    if isinstance(obj, dict):
+        return {str(k): jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return [jsonable(v) for v in obj]
+    if hasattr(obj, "item") and callable(obj.item):
+        try:
+            return obj.item()
+        except (TypeError, ValueError):
+            pass
+    if hasattr(obj, "tolist") and callable(obj.tolist):
+        try:
+            return jsonable(obj.tolist())
+        except (TypeError, ValueError):
+            pass
+    return str(obj)
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5,
+        )
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def environment_stamp() -> Dict[str, Any]:
+    """git SHA + jax version + device topology, for the run header."""
+    stamp: Dict[str, Any] = {"git_sha": _git_sha()}
+    try:
+        import jax
+
+        stamp["jax_version"] = jax.__version__
+        devs = jax.devices()
+        stamp["n_devices"] = len(devs)
+        stamp["platform"] = devs[0].platform if devs else "unknown"
+    except Exception:  # pragma: no cover - jax import failure
+        stamp["jax_version"] = "unavailable"
+        stamp["n_devices"] = 0
+        stamp["platform"] = "unknown"
+    return stamp
+
+
+class RunLog:
+    """Append-oriented JSONL sink. Construct with a path (parent dirs are
+    created), write the header once via ``start``, then one ``round`` per
+    round and a final ``summary``; ``close`` flushes and releases the file
+    handle. Usable as a context manager."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        self._f = open(self.path, "w")
+        self._started = False
+
+    def _emit(self, rec: Dict[str, Any]) -> None:
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+
+    def start(self, config: Any = None, **extra: Any) -> None:
+        header = {
+            "kind": "run",
+            "schema_version": RUNLOG_SCHEMA_VERSION,
+            "timestamp": time.time(),
+            **environment_stamp(),
+            "config": jsonable(config),
+        }
+        header.update({k: jsonable(v) for k, v in extra.items()})
+        self._started = True
+        self._emit(header)
+
+    def round(
+        self,
+        record: Dict[str, Any],
+        metrics: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        rec = {"kind": "round", **jsonable(record)}
+        if metrics is not None:
+            rec["metrics"] = jsonable(metrics)
+        self._emit(rec)
+
+    def summary(self, summary: Dict[str, Any]) -> None:
+        self._emit({"kind": "summary", **jsonable(summary)})
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self) -> "RunLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def validate_record(rec: Dict[str, Any]) -> None:
+    """Raise ValueError unless ``rec`` is a schema-valid run-log record."""
+    kind = rec.get("kind")
+    if kind not in _KINDS:
+        raise ValueError(f"unknown record kind {kind!r}")
+    if kind == "run":
+        for key in ("schema_version", "git_sha", "jax_version",
+                    "n_devices", "platform", "timestamp", "config"):
+            if key not in rec:
+                raise ValueError(f"run header missing {key!r}")
+        if rec["schema_version"] != RUNLOG_SCHEMA_VERSION:
+            raise ValueError(
+                f"schema_version {rec['schema_version']} != "
+                f"{RUNLOG_SCHEMA_VERSION}"
+            )
+    elif kind == "round":
+        missing = [k for k in RECORD_FIELDS if k not in rec]
+        if missing:
+            raise ValueError(f"round record missing {missing}")
+        if not isinstance(rec["round"], int):
+            raise ValueError("round stamp must be an int")
+        hist = rec["stale_hist"]
+        if not (isinstance(hist, list) and len(hist) == N_STALE_BUCKETS):
+            raise ValueError(
+                f"stale_hist must be a {N_STALE_BUCKETS}-list, got {hist!r}"
+            )
+        for key in ("cohort", "dropped", "substeps", "backtracks",
+                    "waves", "arrived", "stale"):
+            if not isinstance(rec[key], int):
+                raise ValueError(f"counter {key!r} must be an int")
+    else:  # summary
+        if "rounds" not in rec:
+            raise ValueError("summary record missing 'rounds'")
+
+
+def validate_jsonl(path: str) -> List[Dict[str, Any]]:
+    """Parse + validate a run-log file. Requires exactly one ``run`` header
+    (first line) and at least one ``round`` record; returns the records."""
+    records = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i + 1}: invalid JSON: {e}")
+            validate_record(rec)
+            records.append(rec)
+    if not records or records[0]["kind"] != "run":
+        raise ValueError(f"{path}: first record must be the run header")
+    if sum(1 for r in records if r["kind"] == "run") != 1:
+        raise ValueError(f"{path}: exactly one run header expected")
+    if not any(r["kind"] == "round" for r in records):
+        raise ValueError(f"{path}: no round records")
+    return records

@@ -1,0 +1,221 @@
+"""The shared per-round telemetry schema — device half of ``repro.obs``.
+
+FedECADO's claims are dynamical-system claims (adaptive Δt, LTE-driven BE
+iteration counts, wave activation, straggler staleness), so every execution
+backend reports the SAME typed per-round counters instead of the historical
+split (event backend: an opaque ``(R, 8)`` sync; everything else: loss
+only). The schema has two representations:
+
+  * a **device row** — a ``(len(TELEMETRY_FIELDS),)`` float32 vector packed
+    by ``pack_row`` inside a backend's jit segment (fori_loop carries an
+    ``(R, F)`` output it fills one row per round, optionally extended with
+    ``N_STALE_BUCKETS`` staleness-histogram columns), synced to the host
+    together with the segment's existing single transfer — telemetry never
+    adds a sync point to a jit-resident segment;
+  * a **host record** — the per-round dict produced by ``make_record`` /
+    ``rows_to_records`` with integral counters as python ints, ``dt_mean``
+    derived from ``dt_sum``/``substeps``, and the staleness histogram as a
+    ``N_STALE_BUCKETS``-list. ``RECORD_FIELDS`` pins the dict's key set
+    (tests/test_obs.py); the JSONL run log (runlog.py), ``FedSim`` history,
+    the sweep/bench summaries and the shared round-line formatter all
+    consume records.
+
+Counter semantics (exact-vs-padded rules in DESIGN.md §9): ``cohort`` is
+the number of clients actually dispatched (mask-summed under padding, so
+padding rows never count), ``dropped`` the busy re-draws masked out by the
+event backend, ``substeps``/``backtracks`` the Algorithm-1 adaptive-BE
+solver iterations / LTE rejections, ``dt_*`` the accepted step sizes,
+``waves``/``arrived``/``stale``/``horizon``/``tau_end`` the multi-rate
+event counters (zero / cohort-sized on synchronous backends).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence
+
+TELEMETRY_FIELDS = (
+    "loss",        # per-round cohort loss (nan on all-busy event rounds)
+    "cohort",      # clients dispatched this round (mask-summed: exact)
+    "dropped",     # busy re-draws masked out of the plan (event backend)
+    "substeps",    # adaptive-BE solver iterations (Algorithm 1)
+    "backtracks",  # LTE step rejections inside those iterations
+    "dt_min",      # smallest accepted BE step (0 when substeps == 0)
+    "dt_max",      # largest accepted BE step
+    "dt_sum",      # Σ accepted steps (host derives dt_mean; internal field)
+    "waves",       # event waves that integrated > 0 time
+    "arrived",     # flights absorbed (== cohort on synchronous backends)
+    "stale",       # flights left pending past the round horizon
+    "horizon",     # event round horizon W (quantile of in-flight windows)
+    "tau_end",     # centrally integrated time this round
+)
+
+# staleness histogram: bucket b counts pending flights whose stale_rounds
+# lies in [edge_b, next_edge) — [1], [2,3], [4,7], [8+). A fresh flight has
+# stale_rounds >= 1 by the time the histogram is taken (post-increment).
+STALE_BUCKET_EDGES = (1, 2, 4, 8)
+N_STALE_BUCKETS = len(STALE_BUCKET_EDGES)
+
+_F = {name: i for i, name in enumerate(TELEMETRY_FIELDS)}
+
+# integral counters (host records carry them as python ints)
+_INT_FIELDS = frozenset(
+    ("cohort", "dropped", "substeps", "backtracks", "waves", "arrived",
+     "stale")
+)
+
+# the pinned key set of a host record: every TELEMETRY_FIELDS entry except
+# the internal dt_sum, plus the round stamp, the derived dt_mean and the
+# staleness histogram
+RECORD_FIELDS = tuple(
+    ["round"]
+    + [f for f in TELEMETRY_FIELDS if f != "dt_sum"]
+    + ["dt_mean", "stale_hist"]
+)
+
+
+def field_index(name: str) -> int:
+    """Column of ``name`` in a device row (jit-safe: a python int)."""
+    return _F[name]
+
+
+def pack_row(**fields):
+    """Pack named telemetry scalars into the canonical device row.
+
+    Used inside jit segments (sim/events.py, sim/sharded.py): every value
+    may be a traced scalar; unset fields are zero (``loss`` defaults to
+    nan so a backend that fills loss host-side cannot silently report 0).
+    Returns a ``(len(TELEMETRY_FIELDS),)`` float32 array.
+    """
+    import jax.numpy as jnp
+
+    unknown = set(fields) - set(TELEMETRY_FIELDS)
+    if unknown:
+        raise ValueError(f"unknown telemetry fields {sorted(unknown)}")
+    cols = []
+    for name in TELEMETRY_FIELDS:
+        v = fields.get(name, jnp.nan if name == "loss" else 0.0)
+        cols.append(jnp.asarray(v, jnp.float32).reshape(()))
+    return jnp.stack(cols)
+
+
+def stale_histogram(stale_rounds, alive, axis_name: Optional[str] = None):
+    """(N_STALE_BUCKETS,) float32 histogram of pending-flight staleness.
+
+    ``stale_rounds`` (C,) int32 post-increment queue ages, ``alive`` (C,)
+    the pending mask; psum-reduced over ``axis_name`` when the capacity
+    axis is sharded (each shard owns disjoint slots, so the sum is exact).
+    """
+    import jax.numpy as jnp
+
+    s = stale_rounds.astype(jnp.float32)
+    edges = STALE_BUCKET_EDGES + (float("inf"),)
+    buckets = [
+        jnp.sum(alive * (s >= edges[b]) * (s < edges[b + 1]))
+        for b in range(N_STALE_BUCKETS)
+    ]
+    hist = jnp.stack(buckets)
+    if axis_name:
+        import jax
+
+        hist = jax.lax.psum(hist, axis_name)
+    return hist
+
+
+def _clean(name: str, v: float):
+    if name in _INT_FIELDS:
+        return int(v)
+    return float(v)
+
+
+def make_record(
+    rnd: int,
+    *,
+    loss: float,
+    cohort: int,
+    dropped: int = 0,
+    substeps: int = 0,
+    backtracks: int = 0,
+    dt_min: float = 0.0,
+    dt_max: float = 0.0,
+    dt_sum: float = 0.0,
+    waves: int = 0,
+    arrived: Optional[int] = None,
+    stale: int = 0,
+    horizon: float = 0.0,
+    tau_end: float = 0.0,
+    stale_hist: Optional[Sequence[int]] = None,
+) -> Dict[str, Any]:
+    """Host-side record constructor (the dense per-round backends and the
+    averaging segment build records directly; jit segments go through
+    ``rows_to_records``). ``arrived`` defaults to ``cohort`` — on a
+    synchronous backend every dispatched client is absorbed in-round."""
+    n_sub = int(substeps)
+    rec: Dict[str, Any] = {"round": int(rnd), "loss": float(loss)}
+    vals = dict(
+        cohort=cohort, dropped=dropped, substeps=n_sub,
+        backtracks=backtracks,
+        dt_min=dt_min if n_sub else 0.0, dt_max=dt_max,
+        waves=waves,
+        arrived=cohort if arrived is None else arrived,
+        stale=stale, horizon=horizon, tau_end=tau_end,
+    )
+    for name, v in vals.items():
+        rec[name] = _clean(name, v)
+    rec["dt_mean"] = float(dt_sum) / n_sub if n_sub else 0.0
+    rec["stale_hist"] = (
+        [0] * N_STALE_BUCKETS if stale_hist is None
+        else [int(b) for b in stale_hist]
+    )
+    assert set(rec) == set(RECORD_FIELDS)
+    return rec
+
+
+def rows_to_records(rnd0: int, rows, hists=None) -> List[Dict[str, Any]]:
+    """Synced ``(R, F)`` device rows (+ optional ``(R, B)`` staleness
+    histograms) -> per-round host records, stamped ``rnd0 + r``."""
+    recs = []
+    for r, row in enumerate(rows):
+        kw = {name: row[_F[name]] for name in TELEMETRY_FIELDS}
+        recs.append(make_record(
+            rnd0 + r,
+            stale_hist=None if hists is None else hists[r],
+            **kw,
+        ))
+    return recs
+
+
+def summarize_records(records: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    """Run-level aggregation of per-round records: per-round means for the
+    rate-like counters, totals for the event counters, and the accepted-Δt
+    envelope. Consumed by ``RunHistory.summary()``, the sweep's per-cell
+    telemetry block and the engine-bench columns."""
+    n = len(records)
+    if n == 0:
+        return {"rounds": 0}
+
+    def mean(key):
+        return float(sum(r[key] for r in records)) / n
+
+    finite = [r["loss"] for r in records if math.isfinite(r["loss"])]
+    dt_mins = [r["dt_min"] for r in records if r["substeps"]]
+    subs = sum(r["substeps"] for r in records)
+    dt_sum = sum(r["dt_mean"] * r["substeps"] for r in records)
+    hist = [0] * N_STALE_BUCKETS
+    for r in records:
+        for b, v in enumerate(r["stale_hist"]):
+            hist[b] += int(v)
+    return {
+        "rounds": n,
+        "mean_loss": float(sum(finite)) / len(finite) if finite else float("nan"),
+        "substeps_per_round": mean("substeps"),
+        "backtracks_per_round": mean("backtracks"),
+        "waves_per_round": mean("waves"),
+        "cohort_per_round": mean("cohort"),
+        "dropped": int(sum(r["dropped"] for r in records)),
+        "arrived": int(sum(r["arrived"] for r in records)),
+        "stale": int(sum(r["stale"] for r in records)),
+        "dt_min": float(min(dt_mins)) if dt_mins else 0.0,
+        "dt_max": float(max(r["dt_max"] for r in records)),
+        "dt_mean": float(dt_sum) / subs if subs else 0.0,
+        "stale_hist": hist,
+    }

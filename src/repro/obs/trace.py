@@ -1,0 +1,118 @@
+"""Chrome-trace span emitter — ``span()`` wraps host-side phases of a run
+(plan drawing, segment dispatch, gain refresh, eval) and ``TraceRecorder``
+writes the collected spans as Chrome-trace / Perfetto JSON
+(``{"traceEvents": [...]}`` with ``ph: "X"`` complete events, microsecond
+``ts``/``dur``). Load the file in ``chrome://tracing`` or ui.perfetto.dev.
+
+When no recorder is installed, ``span()`` is a cheap no-op so telemetry
+call sites never pay for tracing they didn't ask for. Spans also wrap
+``jax.profiler.TraceAnnotation`` so they show up inside a device profile
+when one is being captured.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional
+
+_state = threading.local()
+
+
+def _current() -> Optional["TraceRecorder"]:
+    return getattr(_state, "recorder", None)
+
+
+class TraceRecorder:
+    """Collects spans in memory; ``save()`` (or context-manager exit)
+    writes the Chrome-trace JSON. Install as the ambient recorder with
+    ``recorder.install()`` / ``recorder.uninstall()`` or by using it as a
+    context manager — ``span()`` calls anywhere on the thread then record
+    into it."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self.events: List[Dict[str, Any]] = []
+        self._t0 = time.perf_counter()
+
+    def add_event(
+        self, name: str, start_s: float, dur_s: float,
+        args: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        ev: Dict[str, Any] = {
+            "name": name,
+            "ph": "X",
+            "ts": round((start_s - self._t0) * 1e6, 3),
+            "dur": round(dur_s * 1e6, 3),
+            "pid": os.getpid(),
+            "tid": threading.get_ident() & 0xFFFF,
+        }
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def save(self) -> None:
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump({"traceEvents": self.events}, f)
+
+    def install(self) -> None:
+        _state.recorder = self
+
+    def uninstall(self) -> None:
+        if _current() is self:
+            _state.recorder = None
+
+    def __enter__(self) -> "TraceRecorder":
+        self.install()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+        self.save()
+
+
+@contextmanager
+def span(name: str, **args: Any):
+    """Trace the enclosed block. No-op (micro-cheap) when no recorder is
+    installed; otherwise records a complete event and nests inside an
+    active jax profiler capture via ``TraceAnnotation``."""
+    rec = _current()
+    if rec is None:
+        yield
+        return
+    try:
+        from jax.profiler import TraceAnnotation
+    except ImportError:  # pragma: no cover - ancient jax
+        TraceAnnotation = None
+    t0 = time.perf_counter()
+    try:
+        if TraceAnnotation is not None:
+            with TraceAnnotation(name):
+                yield
+        else:
+            yield
+    finally:
+        rec.add_event(name, t0, time.perf_counter() - t0,
+                      args=args or None)
+
+
+def validate_trace(path: str) -> List[Dict[str, Any]]:
+    """Parse + validate a Chrome-trace file; returns the events."""
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        raise ValueError(f"{path}: missing traceEvents list")
+    for ev in events:
+        for key in ("name", "ph", "ts", "dur", "pid", "tid"):
+            if key not in ev:
+                raise ValueError(f"{path}: event missing {key!r}: {ev}")
+        if ev["ph"] != "X":
+            raise ValueError(f"{path}: only complete events expected")
+        if ev["dur"] < 0 or ev["ts"] < 0:
+            raise ValueError(f"{path}: negative ts/dur in {ev}")
+    return events

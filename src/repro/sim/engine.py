@@ -218,8 +218,17 @@ class ExecutionBackend:
     def run_rounds(self, sim, plans: List[CohortPlan]) -> List[Dict[str, Any]]:
         """Execute a segment of pre-drawn plans. The default is the per-round
         Python loop; the sharded backend overrides this with one jit-resident
-        ``lax.fori_loop`` over the whole stacked segment."""
+        ``lax.fori_loop`` over the whole stacked segment. Every returned
+        record follows the shared telemetry schema (repro.obs.telemetry)."""
         return [self.run_round(sim, plan) for plan in plans]
+
+    def pop_participation(self) -> Optional["np.ndarray"]:
+        """Per-client dispatch counts accumulated since the last pop, or
+        None when the backend dispatches exactly what the plans say — the
+        caller (fed/server.py) then counts participation from the plans.
+        Only backends that drop planned clients (the event backend's busy
+        re-draws) need device-exact counts."""
+        return None
 
 
 CLIENT_AXIS = "clients"   # the 1-D launch mesh axis (launch/mesh.py)

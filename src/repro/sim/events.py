@@ -73,14 +73,25 @@ from repro.sim.engine import (
     pad_cohort_ids,
     stack_plans,
 )
+from repro.obs.telemetry import (
+    N_STALE_BUCKETS,
+    TELEMETRY_FIELDS,
+    field_index,
+    pack_row,
+    rows_to_records,
+)
 from repro.sim.vectorized import VectorizedBackend, cohort_vmap_fn
 
 Pytree = Any
 
 AXIS = CLIENT_AXIS   # the 1-D launch mesh axis (launch/mesh.py)
 
-_STAT_KEYS = ("arrived", "stale", "waves", "substeps", "horizon", "tau_end",
-              "dropped", "loss")
+# a device stat row is the shared telemetry vector plus the staleness
+# histogram columns (repro.obs.telemetry; DESIGN.md §9)
+_ROW_W = len(TELEMETRY_FIELDS) + N_STALE_BUCKETS
+_LOSS, _COHORT, _DROPPED = (
+    field_index("loss"), field_index("cohort"), field_index("dropped")
+)
 
 
 def _event_round(
@@ -91,8 +102,9 @@ def _event_round(
     """One event round given already-integrated cohort endpoints: mask-aware
     flight insertion + the wave integrator. ``x_new_rows``/``idx``/``Ts``/
     ``dmask`` are table-global (dense) or all-gathered-to-global (sharded)
-    cohort rows. Returns (x_c, I, dt_last, t, tab, stats (8,) f32 rows in
-    ``_STAT_KEYS`` order; dropped/loss slots filled by the caller)."""
+    cohort rows. Returns (x_c, I, dt_last, t, tab, stats (_ROW_W,) f32 —
+    the shared telemetry row + staleness-histogram columns; the loss /
+    cohort / dropped slots are filled by the caller)."""
     A = idx.shape[0]
     x_prev_rows = broadcast_clients(x_c, A)
     tab = flight_insert(tab, idx, x_prev_rows, x_new_rows, Ts, dmask, offset=offset)
@@ -100,16 +112,13 @@ def _event_round(
         x_c, I, g_inv, dt_last, t, tab, ccfg, hq, max_waves,
         axis_name=axis_name,
     )
-    stats = jnp.stack([
-        st.arrived.astype(jnp.float32),
-        st.stale.astype(jnp.float32),
-        st.waves.astype(jnp.float32),
-        st.substeps.astype(jnp.float32),
-        st.horizon,
-        st.tau_end,
-        jnp.zeros((), jnp.float32),     # dropped: filled by the caller
-        jnp.zeros((), jnp.float32),     # loss: filled by the caller
-    ])
+    row = pack_row(
+        substeps=st.substeps, backtracks=st.backtracks,
+        dt_min=st.dt_min, dt_max=st.dt_max, dt_sum=st.dt_sum,
+        waves=st.waves, arrived=st.arrived, stale=st.stale,
+        horizon=st.horizon, tau_end=st.tau_end,
+    )
+    stats = jnp.concatenate([row, st.stale_hist])
     return x_c, I, dt_last, t, tab, stats
 
 
@@ -130,16 +139,19 @@ def build_event_segment(
     """Jitted R-round dense event segment.
 
     ``fn(x_c, I, g_inv, dt_last, t, tab, data, idx, mask, lrs, ns, Ts, sel,
-    ps) -> (x_c, I, dt_last, t, tab, stats (R, 8))`` where the plan arrays
-    are ``StackedPlan`` fields and ``stats`` rows follow ``_STAT_KEYS``.
+    ps) -> (x_c, I, dt_last, t, tab, stats (R, _ROW_W), part (n,))`` where
+    the plan arrays are ``StackedPlan`` fields, ``stats`` rows follow the
+    shared telemetry schema (+ staleness-histogram columns) and ``part``
+    counts per-client dispatches (busy re-draws excluded).
     """
     cohort = cohort_vmap_fn(loss_fn, kind, mu)
 
     def body(x_c, I, g_inv, dt_last, t, tab, data, idx, mask, lrs, ns, Ts, sel, ps):
         R, A = idx.shape
+        n = jax.tree.leaves(I)[0].shape[0]
 
         def round_step(r, carry):
-            x_c, I, dt_last, t, tab, out = carry
+            x_c, I, dt_last, t, tab, out, part = carry
             batches = {k: v[sel[r]] for k, v in data.items()}
             I_rows = jax.tree.map(lambda l: l[idx[r]], I)
             x_new_a, loss_a = cohort(x_c, I_rows, batches, lrs[r], ps[r], ns[r])
@@ -153,14 +165,17 @@ def build_event_segment(
                 x_new_a, idx[r], Ts[r], dmask,
                 ccfg, hq, max_waves,
             )
-            loss_r, _ = _masked_loss(loss_a, dmask)
-            stats = stats.at[6].set(jnp.sum(mask[r] * busy))
-            stats = stats.at[7].set(loss_r)
-            return (x_c, I, dt_last, t, tab, out.at[r].set(stats))
+            loss_r, n_disp = _masked_loss(loss_a, dmask)
+            stats = stats.at[_DROPPED].set(jnp.sum(mask[r] * busy))
+            stats = stats.at[_LOSS].set(loss_r)
+            stats = stats.at[_COHORT].set(n_disp)
+            part = part.at[idx[r]].add(dmask, mode="drop")
+            return (x_c, I, dt_last, t, tab, out.at[r].set(stats), part)
 
-        out0 = jnp.zeros((R, len(_STAT_KEYS)), jnp.float32)
+        out0 = jnp.zeros((R, _ROW_W), jnp.float32)
+        part0 = jnp.zeros((n,), jnp.float32)
         return jax.lax.fori_loop(
-            0, R, round_step, (x_c, I, dt_last, t, tab, out0)
+            0, R, round_step, (x_c, I, dt_last, t, tab, out0, part0)
         )
 
     return jax.jit(body)
@@ -180,11 +195,12 @@ def build_event_segment_sharded(
     def body(x_c, I, g_inv, dt_last, t, tab, data, idx, mask, lrs, ns, Ts, sel, ps):
         R, A_loc = idx.shape
         C_loc = tab.alive.shape[0]
+        n = jax.tree.leaves(I)[0].shape[0]
         offset = jax.lax.axis_index(AXIS) * C_loc
         gather = lambda a: jax.lax.all_gather(a, AXIS, tiled=True)
 
         def round_step(r, carry):
-            x_c, I, dt_last, t, tab, out = carry
+            x_c, I, dt_last, t, tab, out, part = carry
             batches = {k: v[sel[r]] for k, v in data.items()}
             I_rows = jax.tree.map(lambda l: l[idx[r]], I)
             x_new_loc, loss_loc = cohort(x_c, I_rows, batches, lrs[r], ps[r], ns[r])
@@ -197,23 +213,30 @@ def build_event_segment_sharded(
                 gather(idx[r]), gather(Ts[r]), gather(dmask_loc),
                 ccfg, hq, max_waves, axis_name=AXIS, offset=offset,
             )
-            loss_r, _ = _masked_loss(loss_loc, dmask_loc, AXIS)
+            loss_r, n_disp = _masked_loss(loss_loc, dmask_loc, AXIS)
             dropped = jax.lax.psum(jnp.sum(mask[r] * busy_loc), AXIS)
-            stats = stats.at[6].set(dropped)
-            stats = stats.at[7].set(loss_r)
-            return (x_c, I, dt_last, t, tab, out.at[r].set(stats))
+            stats = stats.at[_DROPPED].set(dropped)
+            stats = stats.at[_LOSS].set(loss_r)
+            stats = stats.at[_COHORT].set(n_disp)
+            part = part.at[idx[r]].add(dmask_loc, mode="drop")
+            return (x_c, I, dt_last, t, tab, out.at[r].set(stats), part)
 
-        out0 = jnp.zeros((R, len(_STAT_KEYS)), jnp.float32)
-        return jax.lax.fori_loop(
-            0, R, round_step, (x_c, I, dt_last, t, tab, out0)
+        out0 = jnp.zeros((R, _ROW_W), jnp.float32)
+        part0 = jnp.zeros((n,), jnp.float32)
+        x_c, I, dt_last, t, tab, out, part = jax.lax.fori_loop(
+            0, R, round_step, (x_c, I, dt_last, t, tab, out0, part0)
         )
+        # each shard counted its local cohort rows; reduce to the replicated
+        # global participation vector
+        part = jax.lax.psum(part, AXIS)
+        return x_c, I, dt_last, t, tab, out, part
 
     c2 = P(None, AXIS)
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(), P(), P(), P(), P(AXIS), P(),
                   c2, c2, c2, c2, c2, c2, c2),
-        out_specs=(P(), P(), P(), P(), P(AXIS), P()),
+        out_specs=(P(), P(), P(), P(), P(AXIS), P(), P()),
         check_rep=False,
     )
     return jax.jit(fn)
@@ -287,6 +310,7 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
         self.last_round_stats: Dict[str, Any] = {}
         self.round_stats: List[Dict[str, Any]] = []   # one dict per round
         self.total_dropped = 0
+        self._part = None                # (n,) device-exact dispatch counts
 
     def _pad_unit(self) -> int:
         # the dense mode never touches the mesh: capacity = n_clients and
@@ -317,6 +341,7 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
             )
             self.round_stats = []
             self.total_dropped = 0
+            self._part = np.zeros((sim.n,), np.int64)
 
     def _ccfg_key(self, sim):
         return (
@@ -374,7 +399,7 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
             builder,
         )
         st = sim.state
-        x_c, I, dt_last, t, tab, out = fn(
+        x_c, I, dt_last, t, tab, out, part = fn(
             st.x_c, st.I, st.g_inv, st.dt_last, st.t, self._table, data,
             arr(sp.idx), arr(sp.mask), arr(sp.lrs), arr(sp.n_steps),
             arr(sp.Ts), arr(sp.sel), arr(ps),
@@ -383,7 +408,9 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
             x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + R
         )
         self._table = tab
-        return self._emit_stats(np.asarray(out))    # ONE sync per segment
+        out_h, part_h = jax.device_get((out, part))  # ONE sync per segment
+        self._part += np.rint(np.asarray(part_h)).astype(np.int64)
+        return self._emit_stats(sp.rnd0, np.asarray(out_h))
 
     # ------------------------------------------------------------------
     def _run_ragged(self, sim, plan: CohortPlan) -> Dict[str, Any]:
@@ -447,24 +474,32 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
             x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + 1
         )
         self._table = tab
+        if keep:
+            np.add.at(self._part, np.asarray(plan.idx)[keep], 1)
         out = np.array(stats, np.float32)[None, :]
-        out[0, 6] = float(dropped)
-        out[0, 7] = loss
-        return self._emit_stats(out)[0]
+        out[0, _DROPPED] = float(dropped)
+        out[0, _LOSS] = loss
+        out[0, _COHORT] = float(len(keep))
+        return self._emit_stats(plan.rnd, out)[0]
 
     # ------------------------------------------------------------------
-    def _emit_stats(self, out: np.ndarray) -> List[Dict[str, Any]]:
-        """(R, 8) stat rows -> per-round record dicts + running counters."""
-        recs = []
-        for row in out:
-            stats = {
-                "arrived": int(row[0]), "stale": int(row[1]),
-                "waves": int(row[2]), "substeps": int(row[3]),
-                "horizon": float(row[4]), "tau_end": float(row[5]),
-                "dropped": int(row[6]),
-            }
-            self.total_dropped += stats["dropped"]
-            self.round_stats.append(stats)
-            self.last_round_stats = stats
-            recs.append({"loss": float(row[7]), **stats})
+    def pop_participation(self) -> Optional[np.ndarray]:
+        """Device-exact per-client dispatch counts accumulated since the
+        last pop (busy re-draws excluded — plan-derived counts would
+        overcount exactly those)."""
+        if self._part is None:
+            return None
+        part, self._part = self._part, np.zeros_like(self._part)
+        return part
+
+    def _emit_stats(self, rnd0: int, out: np.ndarray) -> List[Dict[str, Any]]:
+        """(R, _ROW_W) stat rows -> shared per-round telemetry records +
+        the backend's running counters (round_stats / last_round_stats /
+        total_dropped keep their pre-telemetry keys, now as a superset)."""
+        F = len(TELEMETRY_FIELDS)
+        recs = rows_to_records(int(rnd0), out[:, :F], out[:, F:])
+        for rec in recs:
+            self.total_dropped += rec["dropped"]
+            self.round_stats.append(rec)
+            self.last_round_stats = rec
         return recs

@@ -65,6 +65,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.obs.telemetry import make_record
 from repro.sim.engine import (
     CLIENT_AXIS,
     CohortPlan,
@@ -116,7 +117,10 @@ def _flow_round_core(
     Runs inside ``shard_map``: (x_c, I, g_inv, dt_*, t) are replicated,
     ``*_loc`` carry this device's A_pad/n_dev cohort rows. The Σ_a
     reductions inside the BE solve psum over AXIS; the flow write-back uses
-    the shared one-hot scatter (``_scatter_rows``).
+    the shared one-hot scatter (``_scatter_rows``). Also returns a (6,)
+    replicated telemetry row [substeps, backtracks, dt_min, dt_max, dt_sum,
+    tau_end] — every LTE scalar is already psum/pmax-replicated, so the row
+    is identical on all devices and costs no extra reduction.
     """
     from repro.core.fedecado import consensus_integrate
     from repro.core.flow import broadcast_clients, tree_sum_clients
@@ -134,13 +138,18 @@ def _flow_round_core(
     x_prev_loc = broadcast_clients(x_c, A_loc)
     g_loc = jnp.take(g_inv, idx_loc, axis=0)
 
-    x_c_f, I_f, tau_f, dt_f, _stats = consensus_integrate(
+    x_c_f, I_f, tau_f, dt_f, stats = consensus_integrate(
         x_c, J_loc, J_loc, x_prev_loc, x_new_loc, T_loc, g_loc, S_frozen,
         dt_last, ccfg, axis_name=AXIS, mask=mask_loc,
     )
+    n_sub, n_back, _final_dt, _max_eps, dt_mn, dt_mx, dt_sm = stats
+    tel = jnp.stack([
+        n_sub.astype(jnp.float32), n_back.astype(jnp.float32),
+        dt_mn, dt_mx, dt_sm, tau_f,
+    ])
 
     I_new = _scatter_rows(I, I_f, sidx_loc, mask_loc)
-    return x_c_f, I_new, dt_f, t + tau_f
+    return x_c_f, I_new, dt_f, t + tau_f, tel
 
 
 def build_flow_segment(mesh, loss_fn: Callable, ccfg,
@@ -148,9 +157,11 @@ def build_flow_segment(mesh, loss_fn: Callable, ccfg,
     """Jitted R-round flow-dynamics segment, shard_map-ed over ``mesh``.
 
     ``fn(x_c, I, g_inv, dt_last, t, data, idx, sidx, mask, lrs, ns, Ts,
-    sel, ps) -> (x_c, I, dt_last, t, losses)`` where the plan arrays are the
-    ``StackedPlan`` fields (R, A_pad, ...) sharded on the cohort axis, and
-    ``losses`` comes back (R, A_pad) in global plan order.
+    sel, ps) -> (x_c, I, dt_last, t, losses, tel)`` where the plan arrays
+    are the ``StackedPlan`` fields (R, A_pad, ...) sharded on the cohort
+    axis, ``losses`` comes back (R, A_pad) in global plan order and ``tel``
+    (R, 6) carries the replicated per-round solver telemetry rows of
+    ``_flow_round_core`` — both ride the segment's single host sync.
     """
     cohort = cohort_vmap_fn(loss_fn, kind, mu)
 
@@ -158,27 +169,29 @@ def build_flow_segment(mesh, loss_fn: Callable, ccfg,
         R, A_loc = idx.shape
 
         def round_step(r, carry):
-            x_c, I, dt_last, t, losses = carry
+            x_c, I, dt_last, t, losses, tel = carry
             batches = {k: v[sel[r]] for k, v in data.items()}
             I_rows = jax.tree.map(lambda l: l[idx[r]], I)
             x_new_loc, loss_loc = cohort(x_c, I_rows, batches, lrs[r], ps[r], ns[r])
-            x_c, I, dt_last, t = _flow_round_core(
+            x_c, I, dt_last, t, tel_r = _flow_round_core(
                 x_c, I, g_inv, dt_last, t,
                 x_new_loc, idx[r], sidx[r], mask[r], Ts[r], ccfg,
             )
-            return (x_c, I, dt_last, t, losses.at[r].set(loss_loc))
+            return (x_c, I, dt_last, t, losses.at[r].set(loss_loc),
+                    tel.at[r].set(tel_r))
 
         losses0 = jnp.zeros((R, A_loc), jnp.float32)
-        x_c, I, dt_last, t, losses = jax.lax.fori_loop(
-            0, R, round_step, (x_c, I, dt_last, t, losses0)
+        tel0 = jnp.zeros((R, 6), jnp.float32)
+        x_c, I, dt_last, t, losses, tel = jax.lax.fori_loop(
+            0, R, round_step, (x_c, I, dt_last, t, losses0, tel0)
         )
-        return x_c, I, dt_last, t, losses
+        return x_c, I, dt_last, t, losses, tel
 
     c2 = P(None, AXIS)
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(), P(), P(), P(), P(), c2, c2, c2, c2, c2, c2, c2, c2),
-        out_specs=(P(), P(), P(), P(), c2),
+        out_specs=(P(), P(), P(), P(), c2, P()),
         check_rep=False,
     )
     return jax.jit(fn)
@@ -243,7 +256,9 @@ def build_avg_segment(mesh, alg, loss_fn: Callable, use_kernel: bool) -> Callabl
 def build_flow_apply(mesh, ccfg) -> Callable:
     """Consensus-only sharded round (ragged fallback): local integration
     already happened on the gathered cohort; this applies the psum BE solve.
-    ``fn(x_c, I, g_inv, dt_last, t, x_new_a, idx, sidx, mask, Ts)``."""
+    ``fn(x_c, I, g_inv, dt_last, t, x_new_a, idx, sidx, mask, Ts) ->
+    (x_c, I, dt_last, t, tel)`` with ``tel`` the (6,) solver telemetry
+    row."""
 
     def body(x_c, I, g_inv, dt_last, t, x_new_loc, idx, sidx, mask, Ts):
         return _flow_round_core(
@@ -254,7 +269,7 @@ def build_flow_apply(mesh, ccfg) -> Callable:
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(), P(), P(), P(), c1, c1, c1, c1, c1),
-        out_specs=(P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P()),
         check_rep=False,
     )
     return jax.jit(fn)
@@ -359,7 +374,7 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
                 ),
             )
             st = sim.state
-            x_c, I, dt_last, t, losses = fn(
+            x_c, I, dt_last, t, losses, tel = fn(
                 st.x_c, st.I, st.g_inv, st.dt_last, st.t, data,
                 arr(sp.idx), arr(sp.scatter_idx), arr(sp.mask), arr(sp.lrs),
                 arr(sp.n_steps), arr(sp.Ts), arr(sp.sel), arr(ps),
@@ -367,6 +382,9 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
             sim.state = st._replace(
                 x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + R
             )
+            # losses + telemetry ride the segment's ONE host sync
+            losses, tel = jax.device_get((losses, tel))
+            tel = np.asarray(tel)
         else:
             w, scale = self._avg_weights(sim, sp)
             rows = alg.client_state if alg.has_client_state else {}
@@ -384,16 +402,30 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
             )
             if alg.has_client_state:
                 alg.set_client_state(rows)
+            tel = None  # no BE solver on the averaging path
 
         losses = np.asarray(losses)
         self.last_segment_stats = {"rounds": R, "cohort_pad": sp.cohort_pad,
                                    "n_devices": self.n_devices}
         # host-side float64 mean over the real cohort rows, mirroring the
         # sequential backend's np.mean over per-client python floats
-        return [
-            {"loss": float(np.mean(losses[r][sp.mask[r] > 0].astype(np.float64)))}
-            for r in range(R)
-        ]
+        recs = []
+        for r in range(R):
+            loss_r = float(
+                np.mean(losses[r][sp.mask[r] > 0].astype(np.float64))
+            )
+            cohort_r = int(sp.mask[r].sum())  # mask-summed: padding excluded
+            if tel is None:
+                recs.append(make_record(sp.rnd0 + r, loss=loss_r,
+                                        cohort=cohort_r))
+            else:
+                recs.append(make_record(
+                    sp.rnd0 + r, loss=loss_r, cohort=cohort_r,
+                    substeps=tel[r, 0], backtracks=tel[r, 1],
+                    dt_min=tel[r, 2], dt_max=tel[r, 3], dt_sum=tel[r, 4],
+                    tau_end=tel[r, 5],
+                ))
+        return recs
 
     def _avg_weights(self, sim, sp: StackedPlan):
         """Host-precomputed per-round aggregation weights from the
@@ -440,7 +472,7 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
             lambda: build_flow_apply(self.mesh, cfg.consensus),
         )
         st = sim.state
-        x_c, I, dt_last, t = fn(
+        x_c, I, dt_last, t, tel = fn(
             st.x_c, st.I, st.g_inv, st.dt_last, st.t, x_new_pad,
             jnp.asarray(idx), jnp.asarray(sidx), jnp.asarray(mask),
             jnp.asarray(Ts),
@@ -448,4 +480,9 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
         sim.state = st._replace(
             x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + 1
         )
-        return {"loss": float(np.mean(result.losses))}
+        tel = np.asarray(tel)
+        return make_record(
+            plan.rnd, loss=float(np.mean(result.losses)), cohort=A,
+            substeps=tel[0], backtracks=tel[1], dt_min=tel[2],
+            dt_max=tel[3], dt_sum=tel[4], tau_end=tel[5],
+        )

@@ -154,7 +154,7 @@ def test_sharded_backend_runs_plugin_without_weighted_delta_spec():
     sim = FedSim(loss_fn, params0, data, parts, cfg)
     sim.alg = MeanOfEndpoints(cfg)        # swap in the bare-protocol plugin
     hist = sim.run()
-    assert len(hist["loss"]) == 2 and np.isfinite(hist["loss"]).all()
+    assert len(hist.loss) == 2 and np.isfinite(hist.loss).all()
 
 
 def test_make_algorithm_instances_are_per_config():

@@ -108,7 +108,7 @@ def test_backends_match_sequential_oracle(
         )
         sim = FedSim(loss_fn, params0, data, parts, cfg)
         hist = sim.run()
-        runs[backend] = (hist["loss"], sim.current_params())
+        runs[backend] = (hist.loss, sim.current_params())
 
     ref_loss, ref_params = runs["sequential"]
     for backend in ("vectorized", "sharded"):
@@ -144,7 +144,7 @@ def test_every_registered_algorithm_matches_oracle(alg):
         )
         sim = FedSim(loss_fn, params0, data, parts, cfg)
         hist = sim.run()
-        runs[backend] = (hist["loss"], sim.current_params())
+        runs[backend] = (hist.loss, sim.current_params())
 
     ref_loss, ref_params = runs["sequential"]
     for backend in ("vectorized", "sharded"):
@@ -197,7 +197,7 @@ def test_event_backend_matches_oracle_at_full_horizon(alg, mode, batch_size):
         )
         sim = FedSim(loss_fn, params0, data, parts, cfg)
         hist = sim.run()
-        runs[backend] = (hist["loss"], sim.current_params())
+        runs[backend] = (hist.loss, sim.current_params())
 
     ref_loss, ref_params = runs["sequential"]
     loss, params = runs["event"]
@@ -212,6 +212,101 @@ def test_event_backend_matches_oracle_at_full_horizon(alg, mode, batch_size):
             np.asarray(b), np.asarray(a), rtol=1e-5, atol=1e-6,
             err_msg=f"event[{mode}] params diverged from sequential ({alg})",
         )
+
+
+# ---------------------------------------------------------------------------
+# telemetry equivalence (repro/obs shared schema, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# the integer counters of the shared record schema: these are exact device
+# counts (never padded approximations), so equivalence is == not allclose
+_COUNTER_FIELDS = (
+    "cohort", "dropped", "substeps", "backtracks", "waves", "arrived", "stale"
+)
+
+
+def test_telemetry_counters_identical_across_backends():
+    """Every backend emits the same shared-schema telemetry, and the jit-safe
+    counters are exact: at the pinned equivalence settings the sequential,
+    vectorized and sharded backends must report identical integer counters
+    round for round (solver substeps, LTE backtracks, cohort sizes) and
+    matching dt extrema at the usual reassociation tolerance — plus
+    identical per-client participation counts."""
+    data, parts, params0, loss_fn = _problem()
+    tels, pcounts = {}, {}
+    for backend in ("sequential", "vectorized", "sharded"):
+        cfg = FedSimConfig(
+            algorithm="fedecado", n_clients=len(parts), participation=0.5,
+            rounds=3, batch_size=4, steps_per_epoch=2,
+            hetero=HeteroConfig(1e-3, 1e-2, 1, 3), seed=77,
+            backend=backend, consensus=ConsensusConfig(max_substeps=6),
+            sharded_pad_multiple=3,
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg)
+        hist = sim.run()
+        tels[backend] = hist.telemetry
+        pcounts[backend] = np.asarray(hist.participation)
+
+    ref = tels["sequential"]
+    assert len(ref) == 3
+    assert all(r["substeps"] > 0 for r in ref)    # non-trivial solver work
+    for backend in ("vectorized", "sharded"):
+        got = tels[backend]
+        assert len(got) == len(ref)
+        for r_ref, r_got in zip(ref, got):
+            assert r_got["round"] == r_ref["round"]
+            for f in _COUNTER_FIELDS:
+                assert r_got[f] == r_ref[f], (
+                    f"{backend} round {r_ref['round']}: counter {f} "
+                    f"{r_got[f]} != sequential {r_ref[f]}"
+                )
+            for f in ("loss", "dt_min", "dt_max", "dt_mean", "tau_end"):
+                np.testing.assert_allclose(
+                    r_got[f], r_ref[f], rtol=1e-5, atol=1e-7,
+                    err_msg=f"{backend} round {r_ref['round']}: {f}",
+                )
+        np.testing.assert_array_equal(
+            pcounts[backend], pcounts["sequential"],
+            err_msg=f"{backend} participation counts diverged",
+        )
+
+
+def test_event_telemetry_matches_sequential_at_full_horizon():
+    """At ``horizon_quantile=1.0, max_waves=1`` every dispatched flight is
+    absorbed in-round, so the event backend's async counters must collapse
+    to the synchronous reading: arrived == cohort, one wave, no stragglers
+    (stale == 0, empty staleness histogram), no busy drops — with the
+    telemetry loss matching the sequential oracle round for round and
+    device-exact participation equal to the plan-derived counts."""
+    data, parts, params0, loss_fn = _problem()
+    tels, pcounts = {}, {}
+    for backend, kw in (
+        ("sequential", {}),
+        ("event", {"event_horizon": 1.0, "event_max_waves": 1}),
+    ):
+        cfg = FedSimConfig(
+            algorithm="fedecado", n_clients=len(parts), participation=0.5,
+            rounds=3, batch_size=4, steps_per_epoch=2,
+            hetero=HeteroConfig(1e-3, 1e-2, 1, 3), seed=77,
+            backend=backend, consensus=ConsensusConfig(max_substeps=6), **kw,
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg)
+        hist = sim.run()
+        tels[backend] = hist.telemetry
+        pcounts[backend] = np.asarray(hist.participation)
+
+    for r_seq, r_ev in zip(tels["sequential"], tels["event"]):
+        assert r_ev["round"] == r_seq["round"]
+        assert r_ev["cohort"] == r_seq["cohort"]
+        assert r_ev["arrived"] == r_ev["cohort"]
+        assert r_ev["waves"] == 1
+        assert r_ev["stale"] == 0 and r_ev["dropped"] == 0
+        assert sum(r_ev["stale_hist"]) == 0
+        np.testing.assert_allclose(
+            r_ev["loss"], r_seq["loss"], rtol=1e-5, atol=1e-6,
+            err_msg=f"event telemetry loss, round {r_seq['round']}",
+        )
+    np.testing.assert_array_equal(pcounts["event"], pcounts["sequential"])
 
 
 # ---------------------------------------------------------------------------
@@ -322,7 +417,7 @@ def test_scenario_backends_match_sequential_oracle(case, alg):
         )
         sim = FedSim(loss_fn, params0, data, None, cfg)
         hist = sim.run()
-        runs[backend] = (hist["loss"], sim.current_params())
+        runs[backend] = (hist.loss, sim.current_params())
 
     ref_loss, ref_params = runs["sequential"]
     for backend in ("vectorized", "sharded"):

@@ -9,7 +9,10 @@ v2 = adds the per-algorithm axis ("algorithms" list + "algorithm" per
 results row, enumerable from the fed/algorithms registry); v3 = adds the
 event backend (device-resident flight-table scheduler) — event rows exist
 only for flow-capable algorithms, and the config block records the event
-horizon/wave settings."""
+horizon/wave settings; v4 = rows gain compile_seconds (warm-up minus
+steady-state wall, so rounds/sec stays a pure steady-state number) and the
+shared-telemetry columns substeps_per_round / waves_per_round / stale /
+dropped (repro/obs, DESIGN.md §9)."""
 import importlib.util
 import json
 import os
@@ -57,7 +60,7 @@ def test_engine_bench_runs_and_json_schema_is_stable(tmp_path):
     assert persisted == report
 
     # -- schema: top level ------------------------------------------------
-    assert persisted["schema_version"] == bench.ENGINE_BENCH_SCHEMA_VERSION == 3
+    assert persisted["schema_version"] == bench.ENGINE_BENCH_SCHEMA_VERSION == 4
     assert persisted["benchmark"] == "engine"
     assert isinstance(persisted["n_devices"], int) and persisted["n_devices"] >= 1
     assert persisted["rounds"] == 2
@@ -75,12 +78,24 @@ def test_engine_bench_runs_and_json_schema_is_stable(tmp_path):
     assert isinstance(rows, list)
     seen = set()
     for row in rows:
-        assert set(row) == {"algorithm", "backend", "n_clients", "rounds_per_sec"}
+        assert set(row) == {
+            "algorithm", "backend", "n_clients", "rounds_per_sec",
+            "compile_seconds", "substeps_per_round", "waves_per_round",
+            "stale", "dropped",
+        }
         assert row["algorithm"] in persisted["algorithms"]
         assert row["backend"] in persisted["backends"]
         assert row["n_clients"] in persisted["sizes"]
         assert isinstance(row["rounds_per_sec"], float)
         assert row["rounds_per_sec"] > 0
+        assert isinstance(row["compile_seconds"], float)
+        assert row["compile_seconds"] >= 0
+        assert isinstance(row["stale"], int) and isinstance(row["dropped"], int)
+        if row["algorithm"] == "fedecado":
+            # flow algorithms do adaptive-BE solver work every round
+            assert row["substeps_per_round"] > 0
+        if row["backend"] == "event":
+            assert row["waves_per_round"] > 0
         seen.add((row["algorithm"], row["backend"], row["n_clients"]))
     assert seen == _expected_rows(persisted)
 
@@ -100,7 +115,7 @@ def test_repo_bench_artifact_matches_schema():
         pytest.skip("no committed BENCH_engine.json")
     with open(path) as f:
         report = json.load(f)
-    assert report["schema_version"] == 3
+    assert report["schema_version"] == 4
     assert "fedecado" in report["algorithms"]
     assert "event" in report["backends"]
     rps = {

@@ -8,6 +8,9 @@ PR.
 Schema v1: accuracy matrix rows (algorithm × scenario × seed × backend ->
 acc/final_loss/wall_s) + a sequential/vectorized/sharded equivalence grid
 (max_abs_err of loss histories vs the sequential oracle at rtol 1e-6).
+Schema v2: accuracy rows gain a "telemetry" block — the run-level summary
+of the shared per-round telemetry schema (repro/obs: substeps/waves/
+staleness/dropped counters + accepted-Δt envelope, DESIGN.md §9).
 
 The committed repo artifact additionally witnesses the acceptance bar:
 >= 6 scenarios, every registered algorithm, all three backends in the
@@ -44,7 +47,7 @@ def test_sweep_runs_and_json_schema_is_stable(tmp_path):
     assert (
         persisted["schema_version"]
         == sweep.SCENARIO_BENCH_SCHEMA_VERSION
-        == 1
+        == 2
     )
     assert persisted["benchmark"] == "scenarios"
     assert persisted["rounds"] == 2
@@ -64,13 +67,18 @@ def test_sweep_runs_and_json_schema_is_stable(tmp_path):
     for row in rows:
         assert set(row) == {
             "algorithm", "scenario", "seed", "backend",
-            "acc", "final_loss", "wall_s",
+            "acc", "final_loss", "wall_s", "telemetry",
         }
         assert row["algorithm"] in persisted["algorithms"]
         assert row["scenario"] in persisted["scenarios"]
         assert row["backend"] == persisted["backend"]
         assert 0.0 <= row["acc"] <= 1.0
         assert np.isfinite(row["final_loss"])
+        tel = row["telemetry"]
+        assert tel["rounds"] == persisted["rounds"]
+        if row["algorithm"] == "fedecado":
+            # flow algorithms report adaptive-BE solver effort per cell
+            assert tel["substeps_per_round"] > 0
         seen.add((row["algorithm"], row["scenario"], row["seed"]))
     assert seen == {
         (a, s, sd)
@@ -100,7 +108,7 @@ def test_sweep_runs_and_json_schema_is_stable(tmp_path):
 
 
 def test_repo_bench_artifact_matches_schema_and_witnesses_claims():
-    """The committed BENCH_scenarios.json must parse under schema v1 and
+    """The committed BENCH_scenarios.json must parse under schema v2 and
     witness the acceptance criteria: every registered algorithm × >= 6
     scenarios, three-backend equivalence including an availability-trace
     and a feature-shift scenario, and FedECADO >= FedProx/FedNova on the
@@ -116,7 +124,7 @@ def test_repo_bench_artifact_matches_schema_and_witnesses_claims():
     with open(path) as f:
         report = json.load(f)
 
-    assert report["schema_version"] == 1
+    assert report["schema_version"] == 2
     assert set(available_algorithms()) <= set(report["algorithms"])
     assert len(report["scenarios"]) >= 6
     assert "dirichlet01" in report["scenarios"]

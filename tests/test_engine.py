@@ -67,7 +67,7 @@ def test_vectorized_matches_sequential(mlp_problem, alg):
     sim_v, hist_v = _run(loss_fn, params0, data, parts, alg, "vectorized")
 
     # same plan stream -> same rounds; histories agree to reduction-order ulps
-    np.testing.assert_allclose(hist_v["loss"], hist_s["loss"], rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(hist_v.loss, hist_s.loss, rtol=1e-6, atol=1e-7)
     for a, b in zip(
         jax.tree.leaves(sim_s.current_params()),
         jax.tree.leaves(sim_v.current_params()),
@@ -161,7 +161,7 @@ def test_event_staleness_preserves_flow_invariant():
     I_sum = np.asarray(jnp.sum(sim.state.I["w"], axis=0))
     np.testing.assert_allclose(x_c, np.zeros(dim), atol=1e-5)
     np.testing.assert_allclose(I_sum, np.zeros(dim), atol=1e-5)
-    assert np.isfinite(hist["loss"]).all()
+    assert np.isfinite(hist.loss).all()
 
 
 def test_event_backend_exercises_staleness():
@@ -254,7 +254,7 @@ def test_sharded_uneven_padding_preserves_flow_invariant():
     I_sum = np.asarray(jnp.sum(sim.state.I["w"], axis=0))
     np.testing.assert_allclose(x_c, np.zeros(dim), atol=1e-5)
     np.testing.assert_allclose(I_sum, np.zeros(dim), atol=1e-5)
-    assert np.isfinite(hist["loss"]).all()
+    assert np.isfinite(hist.loss).all()
 
 
 def test_sharded_matches_sequential(mlp_problem):
@@ -267,7 +267,7 @@ def test_sharded_matches_sequential(mlp_problem):
         loss_fn, params0, data, parts, "fedecado", "sharded",
         sharded_pad_multiple=3,
     )
-    np.testing.assert_allclose(hist_x["loss"], hist_s["loss"], rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(hist_x.loss, hist_s.loss, rtol=1e-6, atol=1e-7)
     for a, b in zip(
         jax.tree.leaves(sim_s.current_params()),
         jax.tree.leaves(sim_x.current_params()),
@@ -300,7 +300,7 @@ def test_agg_kernels_match_baseline_aggregation(mlp_problem):
         sim_b, hist_b = _run(
             loss_fn, params0, data, parts, alg, "vectorized", agg_kernels=True
         )
-        np.testing.assert_allclose(hist_b["loss"], hist_a["loss"], rtol=1e-5)
+        np.testing.assert_allclose(hist_b.loss, hist_a.loss, rtol=1e-5)
         for a, b in zip(
             jax.tree.leaves(sim_a.current_params()),
             jax.tree.leaves(sim_b.current_params()),

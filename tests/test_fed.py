@@ -172,7 +172,7 @@ def test_fedecado_beats_fedavg_on_heterogeneous_noniid(mlp_problem):
         )
         sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
         hist = sim.run()
-        accs[alg] = hist["metrics"][-1][1]["acc"]
+        accs[alg] = hist.metrics[-1]["acc"]
     # the paper's qualitative claim: FedECADO >= FedAvg under heterogeneity
     assert accs["fedecado"] >= accs["fedavg"] - 0.02, accs
 
@@ -189,8 +189,8 @@ def test_all_algorithms_run_one_round(mlp_problem):
         )
         sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
         hist = sim.run()
-        assert len(hist["loss"]) == 2
-        assert np.isfinite(hist["loss"][-1])
+        assert len(hist.loss) == 2
+        assert np.isfinite(hist.loss[-1])
 
 
 def test_diag_sensitivity_and_gain_refresh(mlp_problem):
@@ -208,7 +208,7 @@ def test_diag_sensitivity_and_gain_refresh(mlp_problem):
         )
         sim = FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
         hist = sim.run()
-        assert np.isfinite(hist["loss"][-1])
+        assert np.isfinite(hist.loss[-1])
         if sens == "diag":
             # diag gains live as a pytree of (n, ...) leaves
             import jax as _jax

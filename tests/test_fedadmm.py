@@ -89,7 +89,7 @@ def test_fedadmm_converges_on_noniid_task(problem):
     )
     sim = FedSim(loss_fn, params0, data, parts, cfg)
     hist = sim.run()
-    losses = np.asarray(hist["loss"])
+    losses = np.asarray(hist.loss)
     assert np.isfinite(losses).all()
     early, late = losses[:3].mean(), losses[-3:].mean()
     assert late < 0.8 * early, (early, late)
@@ -121,7 +121,7 @@ def test_fedadmm_sharded_segment_threads_duals(problem):
         )
         sim = FedSim(loss_fn, params0, data, parts, cfg)
         hist = sim.run()
-        states[backend] = (hist["loss"], sim.alg.client_state, sim.params)
+        states[backend] = (hist.loss, sim.alg.client_state, sim.params)
 
     for a, b in zip(
         jax.tree.leaves(states["sequential"][1]),

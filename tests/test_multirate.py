@@ -199,7 +199,7 @@ def test_flight_table_preserves_flow_invariant(mode, kw):
     I_sum = np.asarray(jnp.sum(sim.state.I["w"], axis=0))
     np.testing.assert_allclose(x_c, np.zeros(dim), atol=1e-5)
     np.testing.assert_allclose(I_sum, np.zeros(dim), atol=1e-5)
-    assert np.isfinite(hist["loss"]).all()
+    assert np.isfinite(hist.loss).all()
     # the table really carried flights across rounds in the sub-1 settings
     assert sum(s["stale"] for s in sim.backend.round_stats) > 0
 
@@ -226,7 +226,7 @@ def test_event_kernels_match_reference_path():
             consensus=ConsensusConfig(max_substeps=8, use_kernels=uk),
         )
         sim = FedSim(loss_fn, params0, data, parts, cfg)
-        hists[uk] = (sim.run()["loss"], sim.current_params())
+        hists[uk] = (sim.run().loss, sim.current_params())
     np.testing.assert_allclose(
         hists[True][0], hists[False][0], rtol=1e-4, atol=1e-6
     )
@@ -311,11 +311,11 @@ def test_fedsim_history_survives_loss_gaps():
     not crash or mangle the finite entries."""
     sim = _small_event_sim(rounds=8, event_horizon=0.25, event_max_waves=1)
     hist = sim.run()
-    losses = np.asarray(hist["loss"], np.float64)
+    losses = np.asarray(hist.loss, np.float64)
     assert len(losses) == 8
     assert np.isfinite(losses).any()
-    assert np.isfinite(last_finite_loss(hist["loss"]))
-    assert np.isfinite(mean_finite_loss(hist["loss"]))
+    assert np.isfinite(last_finite_loss(hist.loss))
+    assert np.isfinite(mean_finite_loss(hist.loss))
     # every round produced an observable stats record (arrived/stale/...)
     assert len(sim.backend.round_stats) == 8
     assert all("dropped" in s for s in sim.backend.round_stats)

@@ -1,0 +1,396 @@
+"""Schema pins + round-trips for the observability layer (repro/obs).
+
+The telemetry record schema is the contract between the device half (rows
+packed inside jit segments by every backend) and every host consumer (the
+JSONL run log, ``FedSim`` history, the sweep/bench summary columns, the
+shared round-line formatter, CI's ``--log-jsonl`` smoke cell). These tests
+pin that contract:
+
+  * the field tuples and bucket edges are frozen (changing them is a
+    schema bump, not a silent edit);
+  * ``pack_row``/``rows_to_records`` round-trip device rows into records;
+  * ``RunLog`` files round-trip through ``validate_jsonl`` and tampered
+    files are rejected;
+  * ``TraceRecorder``/``span`` emit valid Chrome-trace JSON and ``span``
+    is a no-op without a recorder;
+  * a real ``FedSim.run`` emits schema-valid log + trace files, and the
+    committed example artifacts under examples/artifacts keep validating.
+"""
+import json
+import math
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import (
+    N_STALE_BUCKETS,
+    RECORD_FIELDS,
+    RUNLOG_SCHEMA_VERSION,
+    STALE_BUCKET_EDGES,
+    TELEMETRY_FIELDS,
+    RunHistory,
+    RunLog,
+    TraceRecorder,
+    field_index,
+    format_counters,
+    format_round_line,
+    make_record,
+    pack_row,
+    rows_to_records,
+    span,
+    stale_histogram,
+    summarize_records,
+    validate_jsonl,
+    validate_record,
+    validate_trace,
+)
+
+_REPO = os.path.join(os.path.dirname(__file__), os.pardir)
+
+
+# ---------------------------------------------------------------------------
+# schema pins
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_schema_is_pinned():
+    assert TELEMETRY_FIELDS == (
+        "loss", "cohort", "dropped", "substeps", "backtracks",
+        "dt_min", "dt_max", "dt_sum", "waves", "arrived", "stale",
+        "horizon", "tau_end",
+    )
+    assert STALE_BUCKET_EDGES == (1, 2, 4, 8)
+    assert N_STALE_BUCKETS == 4
+    assert RUNLOG_SCHEMA_VERSION == 1
+    # host records: every device field except the internal dt_sum, plus the
+    # round stamp, derived dt_mean and the staleness histogram
+    assert RECORD_FIELDS == (
+        "round", "loss", "cohort", "dropped", "substeps", "backtracks",
+        "dt_min", "dt_max", "waves", "arrived", "stale", "horizon",
+        "tau_end", "dt_mean", "stale_hist",
+    )
+    for i, name in enumerate(TELEMETRY_FIELDS):
+        assert field_index(name) == i
+
+
+# ---------------------------------------------------------------------------
+# device rows
+# ---------------------------------------------------------------------------
+
+
+def test_pack_row_defaults_and_layout():
+    row = np.asarray(pack_row(cohort=3, substeps=5, dt_max=0.25))
+    assert row.shape == (len(TELEMETRY_FIELDS),)
+    assert row.dtype == np.float32
+    assert math.isnan(row[field_index("loss")])   # loss must be set on host
+    assert row[field_index("cohort")] == 3
+    assert row[field_index("substeps")] == 5
+    assert row[field_index("dt_max")] == np.float32(0.25)
+    assert row[field_index("waves")] == 0
+
+
+def test_pack_row_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown telemetry fields"):
+        pack_row(cohort=1, solver_iters=2)
+
+
+def test_stale_histogram_buckets():
+    # ages 1, 2, 3, 4, 7, 8, 40 with one dead slot -> [1], [2,3], [4,7], [8+)
+    ages = jnp.asarray([1, 2, 3, 4, 7, 8, 40, 99], jnp.int32)
+    alive = jnp.asarray([1, 1, 1, 1, 1, 1, 1, 0], jnp.float32)
+    hist = np.asarray(stale_histogram(ages, alive))
+    np.testing.assert_array_equal(hist, [1, 2, 2, 2])
+
+
+# ---------------------------------------------------------------------------
+# host records
+# ---------------------------------------------------------------------------
+
+
+def test_make_record_semantics():
+    rec = make_record(
+        7, loss=0.5, cohort=4.0, substeps=6.0, backtracks=2.0,
+        dt_min=0.01, dt_max=0.04, dt_sum=0.12,
+    )
+    assert set(rec) == set(RECORD_FIELDS)
+    # integral counters become python ints (JSON round-trip stays exact)
+    for key in ("round", "cohort", "dropped", "substeps", "backtracks",
+                "waves", "arrived", "stale"):
+        assert isinstance(rec[key], int), key
+    assert rec["round"] == 7 and rec["cohort"] == 4
+    assert rec["arrived"] == 4          # defaults to cohort (synchronous)
+    assert rec["dt_mean"] == pytest.approx(0.02)
+    assert rec["stale_hist"] == [0] * N_STALE_BUCKETS
+
+
+def test_make_record_zero_substeps_clears_dt():
+    rec = make_record(0, loss=1.0, cohort=2, substeps=0, dt_min=math.inf)
+    assert rec["dt_min"] == 0.0 and rec["dt_mean"] == 0.0
+
+
+def test_rows_to_records_roundtrip():
+    rows = np.stack([
+        np.asarray(pack_row(
+            loss=1.5, cohort=3, substeps=4, backtracks=1,
+            dt_min=0.01, dt_max=0.02, dt_sum=0.06, waves=2, arrived=2,
+            stale=1, horizon=0.5, tau_end=0.04,
+        )),
+        np.asarray(pack_row(loss=1.25, cohort=3, substeps=2, dt_sum=0.02)),
+    ])
+    hists = np.asarray([[1, 0, 0, 0], [0, 0, 0, 0]], np.float32)
+    recs = rows_to_records(10, rows, hists)
+    assert [r["round"] for r in recs] == [10, 11]
+    assert recs[0]["waves"] == 2 and recs[0]["stale"] == 1
+    assert recs[0]["stale_hist"] == [1, 0, 0, 0]
+    assert recs[0]["dt_mean"] == pytest.approx(0.015)
+    # device rows carry arrived explicitly, so the cohort default never
+    # applies on this path (pack_row's unset fields are 0)
+    assert recs[1]["arrived"] == 0
+    for rec in recs:
+        validate_record({"kind": "round", **rec})
+
+
+def test_summarize_records():
+    recs = [
+        make_record(0, loss=1.0, cohort=4, substeps=4, dt_sum=0.08,
+                    dt_min=0.01, dt_max=0.03, waves=1,
+                    stale_hist=[2, 1, 0, 0]),
+        make_record(1, loss=float("nan"), cohort=0, dropped=2, substeps=0),
+    ]
+    s = summarize_records(recs)
+    assert s["rounds"] == 2
+    assert s["mean_loss"] == pytest.approx(1.0)   # nan round excluded
+    assert s["substeps_per_round"] == pytest.approx(2.0)
+    assert s["dropped"] == 2
+    assert s["dt_min"] == pytest.approx(0.01)     # substeps==0 round excluded
+    assert s["dt_mean"] == pytest.approx(0.02)
+    assert s["stale_hist"] == [2, 1, 0, 0]
+    assert summarize_records([]) == {"rounds": 0}
+
+
+# ---------------------------------------------------------------------------
+# JSONL run logs
+# ---------------------------------------------------------------------------
+
+
+def _write_log(path, rounds=3):
+    with RunLog(str(path)) as log:
+        log.start(config={"rounds": rounds}, backend="vectorized")
+        recs = [
+            make_record(r, loss=1.0 / (r + 1), cohort=2, substeps=3,
+                        dt_sum=0.03, dt_min=0.01, dt_max=0.02)
+            for r in range(rounds)
+        ]
+        for rec in recs:
+            log.round(rec, metrics={"acc": 0.5} if rec["round"] == 2 else None)
+        log.summary(summarize_records(recs))
+
+
+def test_runlog_roundtrip(tmp_path):
+    path = tmp_path / "run.jsonl"
+    _write_log(path)
+    records = validate_jsonl(str(path))
+    kinds = [r["kind"] for r in records]
+    assert kinds == ["run", "round", "round", "round", "summary"]
+    header = records[0]
+    assert header["schema_version"] == RUNLOG_SCHEMA_VERSION
+    for key in ("git_sha", "jax_version", "n_devices", "platform"):
+        assert key in header
+    assert header["config"] == {"rounds": 3}
+    assert records[3]["metrics"] == {"acc": 0.5}
+
+
+def test_runlog_rejects_tampered_records(tmp_path):
+    path = tmp_path / "run.jsonl"
+    _write_log(path)
+    lines = path.read_text().splitlines()
+
+    # drop a pinned field from a round record
+    bad = json.loads(lines[1])
+    del bad["substeps"]
+    (tmp_path / "t1.jsonl").write_text(
+        "\n".join([lines[0], json.dumps(bad)] + lines[2:])
+    )
+    with pytest.raises(ValueError, match="substeps"):
+        validate_jsonl(str(tmp_path / "t1.jsonl"))
+
+    # header must come first and be unique
+    (tmp_path / "t2.jsonl").write_text("\n".join(lines[1:]))
+    with pytest.raises(ValueError, match="run header"):
+        validate_jsonl(str(tmp_path / "t2.jsonl"))
+
+    # wrong schema version
+    hdr = json.loads(lines[0])
+    hdr["schema_version"] = RUNLOG_SCHEMA_VERSION + 1
+    (tmp_path / "t3.jsonl").write_text("\n".join([json.dumps(hdr)] + lines[1:]))
+    with pytest.raises(ValueError, match="schema_version"):
+        validate_jsonl(str(tmp_path / "t3.jsonl"))
+
+    # float counters are rejected (padding leaks would show up this way)
+    bad = json.loads(lines[1])
+    bad["cohort"] = 2.0
+    (tmp_path / "t4.jsonl").write_text(
+        "\n".join([lines[0], json.dumps(bad)] + lines[2:])
+    )
+    with pytest.raises(ValueError, match="cohort"):
+        validate_jsonl(str(tmp_path / "t4.jsonl"))
+
+
+def test_validate_record_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        validate_record({"kind": "telemetry"})
+
+
+# ---------------------------------------------------------------------------
+# trace spans
+# ---------------------------------------------------------------------------
+
+
+def test_span_is_noop_without_recorder():
+    with span("unrecorded", x=1):
+        pass        # must not raise, must not require a recorder
+
+
+def test_trace_recorder_roundtrip(tmp_path):
+    path = tmp_path / "trace.json"
+    with TraceRecorder(str(path)) as rec:
+        with span("segment", backend="vectorized", rounds=2):
+            with span("inner"):
+                pass
+    events = validate_trace(str(path))
+    names = [e["name"] for e in events]
+    assert names == ["inner", "segment"]     # completion order
+    seg = events[1]
+    assert seg["args"] == {"backend": "vectorized", "rounds": 2}
+    assert seg["dur"] >= events[0]["dur"]
+    # recorder uninstalled on exit: span() is a no-op again
+    with span("after"):
+        pass
+    assert len(rec.events) == 2
+
+
+# ---------------------------------------------------------------------------
+# shared formatter
+# ---------------------------------------------------------------------------
+
+
+def test_format_round_line():
+    sync = make_record(3, loss=0.25, cohort=4, substeps=5, backtracks=1,
+                       dt_sum=0.05)
+    line = format_round_line(sync, wall_s=1.5)
+    assert "round   3" in line and "loss 0.2500" in line
+    assert "substeps 5" in line and "backtracks 1" in line
+    assert "cohort 4" in line and "(1.50s)" in line
+    assert "arrived" not in line        # async group only when async
+
+    ev = make_record(4, loss=0.5, cohort=3, substeps=2, waves=2, arrived=2,
+                     stale=1, dropped=1)
+    line = format_round_line(ev, extra={"devices": 8})
+    assert "arrived 2 stale 1 waves 2 dropped 1" in line
+    assert "devices 8" in line
+
+
+def test_format_counters():
+    s = summarize_records([
+        make_record(0, loss=1.0, cohort=2, substeps=4, waves=2, stale=1,
+                    dropped=1),
+    ])
+    out = format_counters(s)
+    assert "substeps/r=4.0" in out and "waves/r=2.0" in out
+    assert "stale=1" in out and "dropped=1" in out
+    assert format_counters({"rounds": 0}) == ""
+
+
+# ---------------------------------------------------------------------------
+# FedSim end-to-end: history, log + trace files
+# ---------------------------------------------------------------------------
+
+
+def _tiny_sim(tmp_path, backend="vectorized", **cfg_kw):
+    import jax
+
+    from repro.data import make_classification
+    from repro.fed import FedSim, FedSimConfig, iid_partition
+
+    data = make_classification(96, dim=4, n_classes=3, seed=3)
+    parts = iid_partition(len(data["y"]), 4, seed=3)
+    k = jax.random.PRNGKey(3)
+    params0 = {"w": jax.random.normal(k, (4, 3)) / 2.0, "b": jnp.zeros((3,))}
+
+    def loss_fn(p, batch):
+        lp = jax.nn.log_softmax(batch["x"] @ p["w"] + p["b"])
+        return -jnp.mean(jnp.take_along_axis(
+            lp, batch["y"][:, None].astype(jnp.int32), -1
+        ))
+
+    def eval_fn(p):
+        return {"acc": 0.5}
+
+    cfg = FedSimConfig(
+        algorithm="fedecado", n_clients=4, participation=0.5, rounds=3,
+        batch_size=8, steps_per_epoch=1, seed=5, eval_every=3,
+        backend=backend,
+        log_jsonl=str(tmp_path / f"{backend}.jsonl"),
+        trace_json=str(tmp_path / f"{backend}.json"),
+        **cfg_kw,
+    )
+    return FedSim(loss_fn, params0, data, parts, cfg, eval_fn)
+
+
+@pytest.mark.parametrize("backend", ["vectorized", "event"])
+def test_fedsim_emits_valid_log_and_trace(tmp_path, backend):
+    sim = _tiny_sim(tmp_path, backend=backend)
+    hist = sim.run()
+
+    assert isinstance(hist, RunHistory)
+    assert len(hist) == 3 and hist.rounds == [0, 1, 2]
+    assert len(hist.telemetry) == 3
+    for rec in hist.telemetry:
+        validate_record({"kind": "round", **rec})
+    assert len(hist.eval_rounds) == len(hist.metrics)   # aligned lists
+    assert hist.eval_rounds[-1] == 2 and hist.metrics[-1] == {"acc": 0.5}
+    assert hist.participation is not None and hist.participation.sum() > 0
+    assert hist.summary()["rounds"] == 3
+
+    records = validate_jsonl(str(tmp_path / f"{backend}.jsonl"))
+    rounds = [r for r in records if r["kind"] == "round"]
+    assert [r["round"] for r in rounds] == [0, 1, 2]
+    assert rounds[2]["metrics"] == {"acc": 0.5}
+    summary = [r for r in records if r["kind"] == "summary"]
+    assert len(summary) == 1 and summary[0]["rounds"] == 3
+
+    events = validate_trace(str(tmp_path / f"{backend}.json"))
+    names = {e["name"] for e in events}
+    assert "segment" in names and "eval" in names and "plan_draw" in names
+
+
+def test_history_loss_endpoints_still_work(tmp_path):
+    from repro.fed import last_finite_loss, mean_finite_loss
+
+    hist = _tiny_sim(tmp_path).run()
+    assert np.isfinite(last_finite_loss(hist.loss))
+    assert np.isfinite(mean_finite_loss(hist.loss))
+
+
+# ---------------------------------------------------------------------------
+# committed example artifacts
+# ---------------------------------------------------------------------------
+
+
+def test_committed_artifacts_validate():
+    """The committed example run log + trace (examples/artifacts, produced
+    by launch/fedrun.py --log-jsonl/--trace-json) must keep round-tripping
+    through the schema validators."""
+    log = os.path.join(_REPO, "examples", "artifacts", "fedrun_event.jsonl")
+    trace = os.path.join(_REPO, "examples", "artifacts", "fedrun_event_trace.json")
+    if not (os.path.exists(log) and os.path.exists(trace)):
+        pytest.skip("no committed example artifacts")
+    records = validate_jsonl(log)
+    rounds = [r for r in records if r["kind"] == "round"]
+    assert rounds, "committed run log has no round records"
+    # the event backend's async counters are present and consistent
+    assert any(r["waves"] > 0 for r in rounds)
+    events = validate_trace(trace)
+    assert any(e["name"] == "round" for e in events)

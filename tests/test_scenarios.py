@@ -314,8 +314,8 @@ def test_every_registered_scenario_runs_end_to_end(name):
     )
     sim = FedSim(loss_fn, params0, data, None, cfg)
     hist = sim.run()
-    assert len(hist["loss"]) == 2
-    assert np.isfinite(hist["loss"]).all()
+    assert len(hist.loss) == 2
+    assert np.isfinite(hist.loss).all()
 
 
 def test_scenario_rejects_explicit_partitions():
@@ -336,7 +336,7 @@ def test_drift_scenario_rebuilds_partitions_midrun():
     sim = FedSim(loss_fn, params0, data, None, cfg)
     before = [p.copy() for p in sim.partitions]
     hist = sim.run()
-    assert np.isfinite(hist["loss"]).all()
+    assert np.isfinite(hist.loss).all()
     assert sim.scn.drift_count == 2     # initial materialize + one drift
     changed = any(
         len(a) != len(b) or (a != b).any()
@@ -360,7 +360,7 @@ def test_dropout_scenario_exercises_event_staleness():
     total_stale = 0
     for _ in range(6):
         hist = sim.run(1)
-        assert np.isfinite(hist["loss"]).all()
+        assert np.isfinite(hist.loss).all()
         total_stale += sim.backend.last_round_stats["stale"]
     assert total_stale > 0, "sub-1.0 horizon under dropout must leave stragglers"
 
