@@ -9,12 +9,14 @@ System benches:
   consensus_step      — fused Pallas kernel vs jnp reference (µs/call)
   gamma_kernel        — Γ kernel vs reference
   adaptive_overhead   — Algorithm-1 substeps/backtracks per round vs δ
-  engine              — sequential vs vectorized vs event vs sharded
-                        execution backend rounds/sec at n_clients ∈
+  engine              — sequential vs vectorized vs event vs sharded vs
+                        event_buffered (fully-asynchronous K-trigger
+                        server) execution backend rounds/sec at n_clients ∈
                         {10, 100, 1000} on 8 forced host devices, with a
                         per-algorithm axis (--algorithms, names from the
-                        fed/algorithms registry; event rows are flow-only);
-                        persists BENCH_engine.json (schema v4)
+                        fed/algorithms registry; event rows are flow-only)
+                        plus an n=10^4 heavy-traffic buffered cell;
+                        persists BENCH_engine.json (schema v5)
   scenarios           — a reduced algorithms × heterogeneity-scenarios
                         matrix through launch/sweep.py (the full
                         committed BENCH_scenarios.json is produced by
@@ -257,15 +259,72 @@ def adaptive_overhead_bench():
 # v4: rows gain compile_seconds (warm-up minus steady-state wall) and the
 # shared-telemetry solver/async columns (substeps_per_round, waves_per_round,
 # stale, dropped) from the timed run's RunHistory
-ENGINE_BENCH_SCHEMA_VERSION = 4
+# v5: adds the event_buffered backend axis (fully-asynchronous buffered
+# server on the flight table: K-trigger drains at K = cohort/2 with
+# staleness-weighted merges), a max_stale column on every row, and the
+# heavy_traffic section (sustained buffered rounds/sec at n=10^4 under the
+# Poisson-arrival scenario, with the bounded max-staleness witness)
+ENGINE_BENCH_SCHEMA_VERSION = 5
+
+
+def _heavy_traffic_cell(rounds=20, n=10_000, buffer_size=16, batch=8):
+    """Sustained buffered-server throughput under the ``heavy-traffic``
+    arrival scenario: n clients, Poisson endpoint arrivals, K-trigger
+    drains with staleness-weighted merges — the fully-asynchronous regime
+    where cohort sizes vary per round and no round barrier exists. The
+    dataset is sized so every client holds >= batch samples (uniform batch
+    shape keeps the stacked segment jit-resident)."""
+    from repro.fed import FedSim, FedSimConfig, last_finite_loss
+
+    data, params0, loss_fn, _ = _mlp_problem(n=n * 2 * batch, seed=0)
+    cfg = FedSimConfig(
+        algorithm="fedecado", n_clients=n, participation=1.0,
+        rounds=rounds, batch_size=batch, steps_per_epoch=1,
+        hetero=None, seed=0, eval_every=1 << 30, backend="event",
+        scenario="heavy-traffic", event_buffered=True,
+        event_buffer_size=buffer_size,
+    )
+    warm = FedSim(loss_fn, params0, data, None, cfg)
+    tw = time.perf_counter()
+    warm.run(rounds)
+    warm_wall = time.perf_counter() - tw
+    sim = FedSim(loss_fn, params0, data, None, cfg)
+    sim.backend = warm.backend        # keep the warmed jit caches
+    t0 = time.perf_counter()
+    hist = sim.run(rounds)
+    wall = time.perf_counter() - t0
+    summ = hist.summary()
+    row = {
+        "scenario": "heavy-traffic",
+        "algorithm": "fedecado",
+        "n_clients": int(n),
+        "rounds": int(rounds),
+        "buffer_size": int(buffer_size),
+        "stale_gamma": float(cfg.event_stale_gamma),
+        "rounds_per_sec": float(rounds / wall),
+        "compile_seconds": max(0.0, warm_wall - wall),
+        "waves_per_round": float(summ.get("waves_per_round", 0.0)),
+        "stale": int(summ.get("stale", 0)),
+        "dropped": int(summ.get("dropped", 0)),
+        "final_loss": last_finite_loss(hist.loss),
+        "max_stale": int(getattr(sim.backend, "max_stale", 0) or 0),
+    }
+    _row(
+        f"engine_heavy_traffic_n{n}", 1e6 * wall / rounds,
+        f"rps={row['rounds_per_sec']:.3f};K={buffer_size};"
+        f"max_stale={row['max_stale']};stale={row['stale']}",
+    )
+    return row
 
 
 def engine_bench(
     rounds=10,
     sizes=(10, 100, 1000),
-    backends=("sequential", "vectorized", "event", "sharded"),
+    backends=("sequential", "vectorized", "event", "sharded",
+              "event_buffered"),
     algorithms=("fedecado",),
     json_path="BENCH_engine.json",
+    heavy_traffic=None,
 ):
     """Multi-rate execution engine: sequential (one jit dispatch per client,
     the seed hot path) vs vectorized (whole cohort in one vmap-over-scan
@@ -284,10 +343,17 @@ def engine_bench(
     flow dynamics, so event rows exist only for algorithms whose plugin
     declares ``has_flow_dynamics``.
 
+    The ``event_buffered`` backend is the event scheduler in
+    fully-asynchronous buffered-server mode (K = cohort/2 endpoints
+    trigger each staleness-weighted aggregation — no round barrier), and
+    ``heavy_traffic`` (a kwargs dict for ``_heavy_traffic_cell``) appends
+    the sustained n=10^4 Poisson-arrival cell with its bounded
+    max-staleness witness.
+
     Emits the usual CSV rows AND persists a machine-readable
     ``BENCH_engine.json`` (algorithm × backend × n_clients → rounds/sec +
     compile_seconds + solver/async telemetry columns;
-    schema v4, pinned by tests/test_bench_engine.py). Returns the report
+    schema v5, pinned by tests/test_bench_engine.py). Returns the report
     dict. Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
     (main() sets it for ``--only engine``) to give the sharded backend a
     real device axis.
@@ -304,11 +370,17 @@ def engine_bench(
     data, params0, loss_fn, _ = _mlp_problem(n=16384, dim=32, classes=10, seed=0)
 
     def make_cfg(n, backend, algorithm):
+        # "event_buffered" is the event backend in fully-asynchronous
+        # buffered-server mode: K = cohort/2 endpoints trigger each
+        # staleness-weighted aggregation instead of the round barrier
+        buffered = backend == "event_buffered"
         return FedSimConfig(
             algorithm=algorithm, n_clients=n, participation=1.0,
             rounds=rounds, batch_size=8, steps_per_epoch=1,
             hetero=HeteroConfig(1e-3, 1e-2, 1, 5), seed=0,
-            eval_every=1 << 30, backend=backend,
+            eval_every=1 << 30, backend="event" if buffered else backend,
+            event_buffered=buffered,
+            event_buffer_size=max(1, n // 2) if buffered else 0,
         )
 
     # the report's config block is derived from the ACTUAL benched config so
@@ -331,6 +403,9 @@ def engine_bench(
             "seed": cfg0.seed,
             "event_horizon": cfg0.event_horizon,
             "event_max_waves": cfg0.event_max_waves,
+            "event_stale_gamma": cfg0.event_stale_gamma,
+            # the buffered axis triggers at K = n_clients // 2
+            "event_buffered_k": "n_clients//2",
         },
         "results": [],
     }
@@ -339,7 +414,8 @@ def engine_bench(
         for algorithm in algorithms:
             rps = {}
             for backend in backends:
-                if backend == "event" and not get_algorithm(algorithm).has_flow_dynamics:
+                if (backend in ("event", "event_buffered")
+                        and not get_algorithm(algorithm).has_flow_dynamics):
                     continue       # the event scheduler is flow-only
                 cfg = make_cfg(n, backend, algorithm)
                 # warm-up covers every jit variant the timed run will hit
@@ -384,6 +460,9 @@ def engine_bench(
                     "waves_per_round": float(summ.get("waves_per_round", 0.0)),
                     "stale": int(summ.get("stale", 0)),
                     "dropped": int(summ.get("dropped", 0)),
+                    # buffered-mode staleness witness (event backend only;
+                    # 0 on barrier backends by construction)
+                    "max_stale": int(getattr(sim.backend, "max_stale", 0) or 0),
                 })
             base = rps.get("sequential", next(iter(rps.values())))
             derived = ";".join(f"{b}_rps={v:.3f}" for b, v in rps.items())
@@ -393,9 +472,12 @@ def engine_bench(
                     f"{rps['sharded'] / rps['vectorized']:.2f}x"
                 )
             _row(f"engine_round_us_{algorithm}_n{n}", 1e6 / base, derived)
+    if heavy_traffic:
+        report["heavy_traffic"] = _heavy_traffic_cell(**heavy_traffic)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(report, f, indent=2)
+            f.write("\n")
         print(f"# wrote {json_path}", flush=True)
     return report
 
@@ -502,6 +584,11 @@ def main() -> None:
         engine_bench(
             algorithms=algorithms,
             json_path=args.engine_json if sel == {"engine"} else None,
+            # the n=10^4 heavy-traffic cell only on the dedicated run that
+            # persists the artifact — it would dominate a full bench sweep
+            heavy_traffic=(
+                {"n": 10_000, "rounds": 20} if sel == {"engine"} else None
+            ),
         )
     if want("scenarios"):
         scenario_matrix_bench(rounds=min(args.rounds, 10))

@@ -12,6 +12,7 @@ from repro.core.multirate import (
     FlightTable,
     MultirateStats,
     flight_insert,
+    flight_insert_checked,
     init_flight_table,
     masked_quantile,
     multirate_integrate,
@@ -29,6 +30,7 @@ __all__ = [
     "consensus_integrate",
     "ServerState", "init_server_state",
     "FlightTable", "MultirateStats", "init_flight_table", "flight_insert",
+    "flight_insert_checked",
     "masked_quantile", "multirate_integrate",
     "gamma", "gamma_leaf", "gamma_stacked",
     "hutchinson_scalar", "hutchinson_diag", "hvp", "make_gain",

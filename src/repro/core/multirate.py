@@ -96,6 +96,7 @@ class MultirateStats(NamedTuple):
     dt_max: jax.Array       # float32 largest accepted step
     dt_sum: jax.Array       # float32 Σ accepted steps
     stale_hist: jax.Array   # (N_STALE_BUCKETS,) f32 pending-age histogram
+    max_stale: jax.Array    # int32 oldest pending flight (rounds queued)
 
 
 def init_flight_table(params_like: Pytree, capacity: int) -> FlightTable:
@@ -209,6 +210,44 @@ def flight_insert(
     )
 
 
+def flight_insert_checked(
+    table: FlightTable,
+    cid: jax.Array,         # (A,) int32 global client ids
+    x_prev_a: Pytree,       # leaves (A, ...)
+    x_new_a: Pytree,        # leaves (A, ...)
+    T_a: jax.Array,         # (A,) float32 windows
+    mask: jax.Array,        # (A,) float32 1 = insert, 0 = leave untouched
+    offset: int = 0,
+):
+    """Jit-safe insert with an explicit masked-drop contract.
+
+    ``flight_insert``'s busy-slot refusal only fires on concrete inputs —
+    under a jit trace an unmasked busy row would one-hot-scatter on top of
+    the live flight, silently aliasing two flights of one client. This
+    wrapper enforces the contract inside the trace: rows whose target slot
+    is already alive are masked out of the insert and counted, so callers
+    that cannot (or did not) pre-mask busy draws get explicit ``dropped``
+    accounting instead of wrong-slot writes. Out-of-range rows (another
+    shard's slots in sharded mode) are masked but NOT counted — they are
+    that shard's to claim, not drops.
+
+    Returns ``(table, dropped)`` where ``dropped`` is the float32 count of
+    in-range busy refusals. Pre-masked callers see ``dropped == 0`` and a
+    bitwise-identical table to plain ``flight_insert``.
+    """
+    C = table.capacity
+    raw_slots = cid.astype(jnp.int32) - jnp.int32(offset)
+    in_range = (raw_slots >= 0) & (raw_slots < C)
+    slots = jnp.clip(raw_slots, 0, C - 1)
+    busy = jnp.take(table.alive, slots) > 0
+    refused = mask * in_range.astype(mask.dtype) * busy.astype(mask.dtype)
+    safe = mask * (in_range & ~busy).astype(mask.dtype)
+    table = flight_insert(
+        table, cid, x_prev_a, x_new_a, T_a, safe, offset=offset
+    )
+    return table, jnp.sum(refused)
+
+
 def masked_quantile(vals: jax.Array, mask: jax.Array, q) -> jax.Array:
     """``np.quantile`` (linear interpolation) over the masked entries of
     ``vals``; nan when the mask is empty."""
@@ -243,6 +282,8 @@ def multirate_integrate(
     horizon_quantile: float,
     max_waves: int,
     axis_name: Optional[str] = None,
+    buffer_k: Optional[int] = None,
+    stale_gamma: float = 0.0,
 ):
     """One event round over the flight table (Algorithm 2, multi-rate form).
 
@@ -257,8 +298,21 @@ def multirate_integrate(
     steering the wave/substep loops is replicated, so all devices branch
     identically.
 
+    ``buffer_k`` switches the horizon to the *buffered-server* K-trigger
+    (DESIGN.md §10): the round drains nothing until at least K flights are
+    in the table, then absorbs exactly the K earliest windows (ties drain
+    together) — the continuous-time analogue of a size-K aggregation
+    buffer, with no per-round barrier. ``stale_gamma > 0`` additionally
+    damps each *arrived* stale flight's endpoint toward its Γ-rebased
+    anchor with weight w_i = 1/(1 + γ·stale_rounds_i) before the wave
+    solves — the staleness-weighted aggregation rule (fresh flights,
+    stale_rounds = 0, are bitwise untouched; ``stale_gamma = 0`` skips the
+    damping entirely, so the buffer=cohort equivalence pin is exact).
+
     Returns ``(x_c, I, dt_last, t, table, MultirateStats)``.
     """
+    from repro.kernels.ops import anchor_rebase_op  # lazy: kernels are leaf deps
+
     alive = table.alive
     T = table.T_rem
 
@@ -269,11 +323,24 @@ def multirate_integrate(
         T_all, alive_all = T, alive
 
     m = jnp.sum(alive_all)
-    # round horizon: quantile of alive windows, but always admit the
-    # earliest arrival so the server makes progress
-    W = masked_quantile(T_all, alive_all, horizon_quantile)
-    W = jnp.maximum(W, jnp.min(jnp.where(alive_all > 0, T_all, jnp.inf)))
-    W = jnp.where(m > 0, W, 0.0)
+    if buffer_k is None:
+        # round horizon: quantile of alive windows, but always admit the
+        # earliest arrival so the server makes progress. The empty-table
+        # quantile is all-NaN — sanitize BEFORE any comparison so a NaN can
+        # never leak into wave activation, then zero the horizon explicitly
+        # (m = 0 rounds integrate nothing; non-empty tables see values
+        # bitwise identical to the unguarded computation).
+        W = masked_quantile(T_all, alive_all, horizon_quantile)
+        earliest = jnp.min(jnp.where(alive_all > 0, T_all, jnp.inf))
+        W = jnp.maximum(jnp.nan_to_num(W), earliest)
+        W = jnp.where(m > 0, W, 0.0)
+    else:
+        # buffered K-trigger: the K-th order statistic of alive windows when
+        # >= K flights are queued, else a negative sentinel no window can
+        # satisfy (T_rem is clamped >= 1e-6) — the server waits, flights age
+        kk = int(min(max(1, buffer_k), T_all.shape[0]))
+        sortedT = jnp.sort(jnp.where(alive_all > 0, T_all, jnp.inf))
+        W = jnp.where(m >= kk, sortedT[kk - 1], -1.0)
 
     arrived = (alive > 0) & (T <= W + 1e-12)
     arrived_f = arrived.astype(jnp.float32)
@@ -290,6 +357,24 @@ def multirate_integrate(
         else take_rows(g_inv, gather_ids)
     )
     S_all0 = tree_sum_clients(I)
+
+    # staleness-weighted aggregation (buffered server, DESIGN.md §10): an
+    # arrived flight that waited s rounds contributes its endpoint damped
+    # toward the Γ-rebased anchor with weight 1/(1 + γ·s). Statically gated
+    # on γ so the γ = 0 path (and every pre-existing caller) stays bitwise
+    # identical — a lerp at weight 1.0 is NOT a bitwise no-op.
+    x_new_eff = table.x_new
+    if float(stale_gamma) != 0.0:
+        w_s = 1.0 / (1.0 + float(stale_gamma)
+                     * table.stale_rounds.astype(jnp.float32))
+        damp = arrived_f * (table.stale_rounds > 0).astype(jnp.float32)
+        damped = anchor_rebase_op(
+            table.x_prev, table.x_new, w_s, damp, use_kernel=ccfg.use_kernels
+        )
+        x_new_eff = jax.tree.map(
+            lambda d, o: jnp.where(_bcast(damp, d) > 0, d, o),
+            damped, table.x_new,
+        )
 
     def wave_step(w, carry):
         x_c, I_tab, tau, dt, n_sub, n_waves, n_back, dt_mn, dt_mx, dt_sm = carry
@@ -312,7 +397,7 @@ def multirate_integrate(
             xc_c, I_c, tau_c, dt_c, k, nb, dmn, dmx, dsm = c
             dt_c = jnp.minimum(dt_c, ccfg.dt_max)
             res = adaptive_be_step(
-                xc_c, I_c, J_w, table.x_prev, table.x_new, T, g_rows,
+                xc_c, I_c, J_w, table.x_prev, x_new_eff, T, g_rows,
                 S_frozen, tau_c, dt_c, ccfg,
                 axis_name=axis_name, mask=active,
             )
@@ -374,8 +459,6 @@ def multirate_integrate(
     # there (exact by Theorem-1 linearity) with one batched masked lerp
     stale = alive * (1.0 - arrived_f)
     frac = tau_end / jnp.maximum(T, 1e-12)
-    from repro.kernels.ops import anchor_rebase_op  # lazy: kernels are leaf deps
-
     x_prev_new = anchor_rebase_op(
         table.x_prev, table.x_new, frac, stale,
         use_kernel=ccfg.use_kernels,
@@ -393,12 +476,19 @@ def multirate_integrate(
     )
     from repro.obs.telemetry import stale_histogram  # lazy: obs is a leaf dep
 
+    max_stale = jnp.max(
+        jnp.where(table_new.alive > 0, table_new.stale_rounds, 0)
+    )
+    if axis_name:
+        max_stale = jax.lax.pmax(max_stale, axis_name)
     stats = MultirateStats(
         arrived=_psum_scalar(jnp.sum(arrived_f), axis_name).astype(jnp.int32),
         stale=_psum_scalar(jnp.sum(stale), axis_name).astype(jnp.int32),
         waves=n_waves,
         substeps=n_sub,
-        horizon=W,
+        # a no-trigger buffered round carries the -1 sentinel internally;
+        # report it as a zero-width horizon
+        horizon=jnp.maximum(W, 0.0) if buffer_k is not None else W,
         tau_end=tau_end,
         backtracks=n_back,
         dt_min=dt_mn,
@@ -407,5 +497,6 @@ def multirate_integrate(
         stale_hist=stale_histogram(
             table_new.stale_rounds, table_new.alive, axis_name
         ),
+        max_stale=max_stale,
     )
     return x_c, I_new, dt_f, t + tau_end, table_new, stats

@@ -125,6 +125,14 @@ class FedSimConfig:
     # run the event backend's flight table sharded over the client mesh
     # (psum-reduced wave solves, DESIGN.md §8); False = dense single-device
     event_sharded: bool = False
+    # fully-asynchronous buffered server (DESIGN.md §10): replace the
+    # quantile horizon with a K-trigger — the server aggregates whenever
+    # event_buffer_size endpoints are in flight, no round barrier; pending
+    # flights age and their endpoints are damped by the staleness weight
+    # 1/(1 + event_stale_gamma · stale_rounds) when absorbed
+    event_buffered: bool = False
+    event_buffer_size: int = 0      # required >= 1 (and <= n_clients) when buffered
+    event_stale_gamma: float = 0.25
     # fuse the averaging-family cohort aggregation with the Pallas
     # batched-aggregation kernel (kernels/batch_agg.py)
     agg_kernels: bool = False

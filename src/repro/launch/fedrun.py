@@ -126,11 +126,24 @@ def main() -> None:
     ap.add_argument(
         "--event-horizon", type=float, default=0.7,
         help="event backend: quantile of in-flight windows absorbed per "
-        "round (< 1.0 leaves stragglers pending across rounds)",
+        "round, in (0, 1] (< 1.0 leaves stragglers pending across rounds)",
     )
     ap.add_argument(
         "--event-max-waves", type=int, default=2,
-        help="event backend: BE sync groups per round",
+        help="event backend: BE sync groups per round (>= 1)",
+    )
+    ap.add_argument(
+        "--buffer-size", type=int, default=0,
+        help="event backend: fully-asynchronous buffered server (DESIGN.md "
+        "§10) — aggregate whenever this many endpoints are in flight "
+        "instead of draining a per-round horizon quantile; 0 disables, "
+        "otherwise must be in [1, --clients]",
+    )
+    ap.add_argument(
+        "--stale-gamma", type=float, default=0.25,
+        help="buffered event mode: staleness-weight decay — an endpoint "
+        "that waited s rounds is absorbed with weight 1/(1 + gamma*s); "
+        "0 disables the damping (>= 0)",
     )
     ap.add_argument(
         "--log-jsonl", default=None,
@@ -143,6 +156,32 @@ def main() -> None:
         "chrome://tracing or ui.perfetto.dev)",
     )
     args = ap.parse_args()
+
+    # reject bad event-path knobs HERE with actionable messages — a horizon
+    # outside (0, 1] or an unsatisfiable buffer size would otherwise surface
+    # rounds later as NaN losses or a stalled server
+    if not (0.0 < args.event_horizon <= 1.0):
+        ap.error(
+            f"--event-horizon must be in (0, 1], got {args.event_horizon} "
+            "(1.0 = absorb every in-flight window each round)"
+        )
+    if args.event_max_waves < 1:
+        ap.error(
+            f"--event-max-waves must be >= 1, got {args.event_max_waves}"
+        )
+    if args.buffer_size < 0 or args.buffer_size > args.clients:
+        ap.error(
+            f"--buffer-size must be in [1, --clients={args.clients}] "
+            f"(0 disables buffered mode), got {args.buffer_size} — a buffer "
+            "larger than the client population can never fill, so the "
+            "server would stall forever"
+        )
+    if args.stale_gamma < 0.0:
+        ap.error(f"--stale-gamma must be >= 0, got {args.stale_gamma}")
+    if args.buffer_size and args.backend != "event":
+        ap.error(
+            "--buffer-size is an event-backend knob; add --backend event"
+        )
 
     cfg = get_smoke_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
@@ -219,12 +258,14 @@ def main() -> None:
 def _run_event(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
     """Cohort training + the flight-table event round on device: busy draws
     are masked before dispatch, stragglers carry across rounds, and the
-    per-round multi-rate stats are printed."""
+    per-round multi-rate stats are printed. ``--buffer-size K`` switches
+    the horizon to the buffered-server K-trigger with ``--stale-gamma``
+    staleness weighting (DESIGN.md §10)."""
     from functools import partial
 
     from repro.core.flow import broadcast_clients
     from repro.core.multirate import (
-        flight_insert,
+        flight_insert_checked,
         init_flight_table,
         multirate_integrate,
     )
@@ -233,18 +274,22 @@ def _run_event(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
     table = init_flight_table(state.x_c, args.clients)
     ones_cohort = jnp.ones((args.cohort,), jnp.float32)
     full_steps = jnp.full((args.cohort,), args.steps, jnp.int32)
+    buffer_k = args.buffer_size or None
+    stale_gamma = args.stale_gamma if buffer_k else 0.0
 
     @partial(jax.jit, static_argnums=())
     def event_round(state_tup, tab, x_new_a, idx, Ts, dmask):
         x_c, I, g_inv, dt_last, t = state_tup
         A = idx.shape[0]
-        tab = flight_insert(
+        tab, refused = flight_insert_checked(
             tab, idx, broadcast_clients(x_c, A), x_new_a, Ts, dmask
         )
-        return multirate_integrate(
+        out = multirate_integrate(
             x_c, I, g_inv, dt_last, t, tab, ccfg,
             args.event_horizon, args.event_max_waves,
+            buffer_k=buffer_k, stale_gamma=stale_gamma,
         )
+        return out + (refused,)
 
     obs = _Obs(args, backend="event")
     t0 = time.time()
@@ -261,27 +306,30 @@ def _run_event(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
             busy = np.asarray(table.alive)[idx]
             dmask = jnp.asarray(1.0 - busy, jnp.float32)
             Ts = jnp.asarray(lrs * args.steps, jnp.float32)
-            x_c, I, dt_last, t, table, st = event_round(
+            x_c, I, dt_last, t, table, st, refused = event_round(
                 (state.x_c, state.I, state.g_inv, state.dt_last, state.t),
                 table, x_new_a, jnp.asarray(idx, jnp.int32), Ts, dmask,
             )
             state = state._replace(
                 x_c=x_c, I=I, dt_last=dt_last, t=t, round=state.round + 1
             )
-            st = jax.device_get(st)
+            st, refused = jax.device_get((st, refused))
         kept = float(np.sum(1.0 - busy))
         loss = (
             float(np.sum(np.asarray(losses) * (1.0 - busy)) / kept)
             if kept else float("nan")
         )
         obs.round(make_record(
-            rnd, loss=loss, cohort=int(kept), dropped=int(busy.sum()),
+            rnd, loss=loss, cohort=int(kept),
+            dropped=int(busy.sum()) + int(refused),
             substeps=st.substeps, backtracks=st.backtracks,
             dt_min=st.dt_min, dt_max=st.dt_max, dt_sum=st.dt_sum,
             waves=st.waves, arrived=st.arrived, stale=st.stale,
             horizon=st.horizon, tau_end=st.tau_end,
             stale_hist=np.asarray(st.stale_hist),
-        ), t0)
+        ), t0, extra=(
+            {"max_stale": int(st.max_stale)} if buffer_k else None
+        ))
     obs.close()
     print("done — flight-table event rounds executed on device")
 

@@ -92,7 +92,8 @@ def build_problem(seed: int, n_samples: int = 2048, dim: int = 32,
 
 
 def _make_cfg(algorithm, scenario, seed, backend, *, rounds, clients,
-              participation, batch_size, steps_per_epoch, event_horizon=1.0):
+              participation, batch_size, steps_per_epoch, event_horizon=1.0,
+              buffer_size=0, stale_gamma=0.25):
     from repro.core import ConsensusConfig
     from repro.fed import FedSimConfig
 
@@ -102,20 +103,26 @@ def _make_cfg(algorithm, scenario, seed, backend, *, rounds, clients,
         lr_fixed=1e-2, epochs_fixed=2, hetero=None, seed=1000 + seed,
         eval_every=rounds, backend=backend, scenario=scenario,
         event_horizon=event_horizon,
+        event_buffered=buffer_size > 0, event_buffer_size=buffer_size,
+        event_stale_gamma=stale_gamma,
         # L tuned on the table-1 config (benchmarks/run.py)
         consensus=ConsensusConfig(L=0.01),
     )
 
 
 def _shared_backend(cache: Dict[object, object], name: str,
-                    event_horizon: float = 1.0):
+                    event_horizon: float = 1.0, buffer_size: int = 0,
+                    stale_gamma: float = 0.25):
     """One backend instance per cache key for the whole sweep — their
     per-(kind, mu) jit caches then amortize compilation across the matrix
     (the engine-bench warm-up pattern). The event backend's flight table is
     per-sim state and resets itself when its owner changes; its key
-    includes the horizon so cells at different horizons can never silently
-    share one instance."""
-    key = (name, float(event_horizon)) if name == "event" else name
+    includes the horizon/buffer knobs so cells at different settings can
+    never silently share one instance."""
+    key = (
+        (name, float(event_horizon), int(buffer_size), float(stale_gamma))
+        if name == "event" else name
+    )
     if key not in cache:
         from repro.sim.engine import SequentialBackend
         from repro.sim.events import EventBackend
@@ -126,13 +133,18 @@ def _shared_backend(cache: Dict[object, object], name: str,
             "sequential": SequentialBackend,
             "vectorized": VectorizedBackend,
             "sharded": ShardedBackend,
-            "event": lambda: EventBackend(horizon_quantile=event_horizon),
+            "event": lambda: EventBackend(
+                horizon_quantile=event_horizon,
+                buffered=buffer_size > 0, buffer_size=buffer_size,
+                stale_gamma=stale_gamma if buffer_size > 0 else 0.0,
+            ),
         }[name]()
     return cache[key]
 
 
 def run_cell(algorithm: str, scenario: str, seed: int, backend: str,
              problem, backends_cache, *, event_horizon: float = 1.0,
+             buffer_size: int = 0, stale_gamma: float = 0.25,
              log_dir: Optional[str] = None, **grid) -> Dict[str, object]:
     """One matrix cell: train, eval once at the end, return the row with
     its aggregated telemetry summary (shared obs schema)."""
@@ -141,7 +153,8 @@ def run_cell(algorithm: str, scenario: str, seed: int, backend: str,
 
     data, params0, eval_fn = problem
     cfg = _make_cfg(algorithm, scenario, seed, backend,
-                    event_horizon=event_horizon, **grid)
+                    event_horizon=event_horizon, buffer_size=buffer_size,
+                    stale_gamma=stale_gamma, **grid)
     if log_dir:
         # one structured run log per cell, named after its coordinates —
         # CI uploads the directory as a workflow artifact
@@ -150,7 +163,8 @@ def run_cell(algorithm: str, scenario: str, seed: int, backend: str,
         )
     t0 = time.time()
     sim = FedSim(loss_fn, params0, data, None, cfg, eval_fn)
-    sim.backend = _shared_backend(backends_cache, backend, event_horizon)
+    sim.backend = _shared_backend(backends_cache, backend, event_horizon,
+                                  buffer_size, stale_gamma)
     hist = sim.run()
     return {
         "algorithm": algorithm,
@@ -204,6 +218,8 @@ def run_sweep(
     steps_per_epoch: int = 5,
     backend: str = "vectorized",
     event_horizon: float = 1.0,
+    buffer_size: int = 0,
+    stale_gamma: float = 0.25,
     equiv_scenarios: Sequence[str] = DEFAULT_EQUIV_SCENARIOS,
     equiv_rounds: int = 2,
     equiv_rtol: float = 1e-6,
@@ -228,6 +244,19 @@ def run_sweep(
         get_algorithm(a)
     for s in (*scenarios, *equiv_scenarios):
         get_scenario(s)
+    if buffer_size and backend != "event":
+        raise ValueError(
+            f"buffer_size={buffer_size} requires backend='event' (the "
+            f"buffered server lives on the event backend's flight table); "
+            f"got backend='{backend}'"
+        )
+    if buffer_size < 0 or buffer_size > clients:
+        raise ValueError(
+            f"buffer_size must be in [0, clients={clients}] (0 disables "
+            f"buffered mode); got {buffer_size}"
+        )
+    if stale_gamma < 0:
+        raise ValueError(f"stale_gamma must be >= 0; got {stale_gamma}")
     if backend == "event":
         # the event scheduler is flow-only; fail before any cell runs
         bad = [a for a in algorithms if not get_algorithm(a).has_flow_dynamics]
@@ -269,6 +298,11 @@ def run_sweep(
         "results": [],
         "equivalence": [],
     }
+    if buffer_size:
+        report["buffered"] = {
+            "buffer_size": int(buffer_size),
+            "stale_gamma": float(stale_gamma),
+        }
 
     backends_cache: Dict[str, object] = {}
 
@@ -280,6 +314,8 @@ def run_sweep(
                 row = run_cell(algorithm, scenario, seed, backend,
                                problem, backends_cache,
                                event_horizon=event_horizon,
+                               buffer_size=buffer_size,
+                               stale_gamma=stale_gamma,
                                log_dir=log_dir, **grid)
                 row.pop("_history")
                 report["results"].append(row)
@@ -292,6 +328,38 @@ def run_sweep(
                     + format_counters(row["telemetry"]),
                     flush=True,
                 )
+
+    # ---- buffered-vs-synchronous comparison pin --------------------------
+    # when the matrix runs the buffered server, pin a synchronous FedADMM
+    # baseline cell (vectorized backend, same problem/grid) per scenario so
+    # the report always carries the paper-style async-vs-ADMM comparison
+    if buffer_size:
+        report["buffered_comparison"] = []
+        problem = build_problem(0)
+        for scenario in scenarios:
+            base = run_cell("fedadmm", scenario, 0, "vectorized",
+                            problem, backends_cache, log_dir=log_dir, **grid)
+            buffered_accs = {
+                r["algorithm"]: r["acc"] for r in report["results"]
+                if r["scenario"] == scenario and r["seed"] == 0
+            }
+            report["buffered_comparison"].append({
+                "scenario": scenario,
+                "baseline_algorithm": "fedadmm",
+                "baseline_backend": "vectorized",
+                "baseline_acc": base["acc"],
+                "baseline_final_loss": base["final_loss"],
+                "buffered_acc": buffered_accs,
+            })
+            gaps = ", ".join(
+                f"{a}={100 * (acc - base['acc']):+.1f}pp"
+                for a, acc in sorted(buffered_accs.items())
+            )
+            print(
+                f"buffered-vs-fedadmm {scenario:16s} "
+                f"baseline acc={base['acc']:.4f}  {gaps}",
+                flush=True,
+            )
 
     # ---- backend-equivalence grid ---------------------------------------
     if equiv_scenarios:
@@ -368,6 +436,17 @@ def main() -> None:
         "round (< 1.0 exercises staleness/busy-drop in the sweep)",
     )
     ap.add_argument(
+        "--buffer-size", type=int, default=0,
+        help="event backend: fully-asynchronous buffered server — apply a "
+        "staleness-weighted aggregation whenever K endpoints land (no round "
+        "barrier); 0 keeps the synchronous cohort semantics",
+    )
+    ap.add_argument(
+        "--stale-gamma", type=float, default=0.25,
+        help="buffered mode: staleness damping w = 1/(1 + gamma*rounds) "
+        "applied to endpoints that waited in the buffer",
+    )
+    ap.add_argument(
         "--equiv-scenarios", default=",".join(DEFAULT_EQUIV_SCENARIOS),
         help="scenarios for the sequential/vectorized/sharded equivalence "
         "grid ('' disables it)",
@@ -385,6 +464,22 @@ def main() -> None:
                     help="do not exit non-zero on equivalence violations")
     args = ap.parse_args()
 
+    if not 0.0 < args.event_horizon <= 1.0:
+        ap.error(f"--event-horizon must be in (0, 1]; got {args.event_horizon}")
+    if args.buffer_size < 0 or args.buffer_size > args.clients:
+        ap.error(
+            f"--buffer-size must be in [0, --clients={args.clients}] "
+            f"(0 disables buffered mode); got {args.buffer_size}"
+        )
+    if args.buffer_size and args.backend != "event":
+        ap.error(
+            f"--buffer-size requires --backend event (the buffered server "
+            f"lives on the event backend's flight table); got "
+            f"--backend {args.backend}"
+        )
+    if args.stale_gamma < 0:
+        ap.error(f"--stale-gamma must be >= 0; got {args.stale_gamma}")
+
     report = run_sweep(
         [a for a in args.algorithms.split(",") if a],
         [s for s in args.scenarios.split(",") if s],
@@ -392,6 +487,7 @@ def main() -> None:
         participation=args.participation, batch_size=args.batch_size,
         steps_per_epoch=args.steps_per_epoch, backend=args.backend,
         event_horizon=args.event_horizon,
+        buffer_size=args.buffer_size, stale_gamma=args.stale_gamma,
         equiv_scenarios=[s for s in args.equiv_scenarios.split(",") if s],
         equiv_rounds=args.equiv_rounds, equiv_rtol=args.equiv_rtol,
         json_path=args.json or None, log_dir=args.log_dir,

@@ -15,8 +15,10 @@ from __future__ import annotations
 from typing import Dict, Tuple, Union
 
 from repro.scenarios.base import (
+    ARRIVAL_KINDS,
     AVAILABILITY_KINDS,
     PARTITION_KINDS,
+    ArrivalSpec,
     AvailabilitySpec,
     DeviceProfile,
     DropoutSpec,
@@ -79,8 +81,8 @@ for _spec in BUILTIN_SCENARIOS:
 __all__ = [
     "Scenario", "ScenarioRuntime",
     "PartitionSpec", "FeatureShiftSpec", "DeviceProfile",
-    "AvailabilitySpec", "DropoutSpec",
-    "PARTITION_KINDS", "AVAILABILITY_KINDS",
+    "AvailabilitySpec", "ArrivalSpec", "DropoutSpec",
+    "PARTITION_KINDS", "AVAILABILITY_KINDS", "ARRIVAL_KINDS",
     "register_scenario", "available_scenarios", "get_scenario",
     "make_scenario",
     "BUILTIN_SCENARIOS", "THREE_TIERS",

@@ -142,6 +142,31 @@ class AvailabilitySpec:
     p_recover: float = 0.5
 
 
+ARRIVAL_KINDS = ("poisson", "diurnal")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    """Arrival-process client traces (the buffered server's workload model,
+    DESIGN.md §10) — generalizes the availability traces: availability
+    restricts *who* can show up, arrivals decide *how many* endpoints land
+    each server tick.
+
+    * ``poisson`` — homogeneous arrivals: the round's cohort size is
+                    k ~ Poisson(rate), clipped to [1, |pool|];
+    * ``diurnal`` — a sinusoidally modulated rate: λ(rnd) = rate_min +
+                    (rate − rate_min)·(1 + sin(2π·rnd/period))/2, then
+                    k ~ Poisson(λ) as above.
+
+    Draws consume the sim's plan rng inside ``_draw_plan`` (one Poisson +
+    one choice per round), so the trace is deterministic in the run seed
+    and byte-identical across execution backends."""
+    kind: str = "poisson"
+    rate: float = 8.0
+    period: int = 12
+    rate_min: float = 1.0
+
+
 @dataclasses.dataclass(frozen=True)
 class DropoutSpec:
     """Mid-round dropout: with probability ``prob`` a participating client
@@ -163,6 +188,7 @@ class Scenario:
     # --- systems axis ---
     profiles: Tuple[DeviceProfile, ...] = ()
     availability: Optional[AvailabilitySpec] = None
+    arrivals: Optional[ArrivalSpec] = None
     dropout: Optional[DropoutSpec] = None
 
     def axes(self) -> str:
@@ -178,6 +204,8 @@ class Scenario:
             tags.append(f"{len(self.profiles)}tier")
         if self.availability:
             tags.append(self.availability.kind)
+        if self.arrivals:
+            tags.append(f"arr-{self.arrivals.kind}")
         if self.dropout:
             tags.append("dropout")
         return "+".join(tags)
@@ -252,11 +280,17 @@ class ScenarioRuntime:
         """Participating client ids for round ``rnd``: the availability
         trace restricts the candidate pool, then up to ``A`` clients are
         drawn uniformly from it. No trace => the uniform draw of the
-        default plan path (same rng consumption)."""
+        default plan path (same rng consumption). An arrival trace
+        (``ArrivalSpec``) replaces the fixed cohort size with a
+        round-varying Poisson arrival count over the (possibly
+        availability-restricted) pool."""
         av = self.spec.availability
-        if av is None:
+        ar = self.spec.arrivals
+        if av is None and ar is None:
             return np.sort(rng.choice(n, A, replace=False))
-        if av.kind == "sine":
+        if av is None:
+            up = np.ones(n, bool)
+        elif av.kind == "sine":
             phase = 2.0 * np.pi * (rnd / max(av.period, 1) + np.arange(n) / n)
             p = av.p_min + (av.p_max - av.p_min) * 0.5 * (1.0 + np.sin(phase))
             up = rng.rand(n) < p
@@ -278,6 +312,20 @@ class ScenarioRuntime:
         ids = np.where(up)[0]
         if len(ids) == 0:
             ids = np.arange(n)       # never stall the server on an empty round
+        if ar is not None:
+            if ar.kind == "poisson":
+                lam = float(ar.rate)
+            elif ar.kind == "diurnal":
+                lam = ar.rate_min + (ar.rate - ar.rate_min) * 0.5 * (
+                    1.0 + np.sin(2.0 * np.pi * rnd / max(ar.period, 1))
+                )
+            else:
+                raise ValueError(
+                    f"unknown arrival kind {ar.kind!r}; "
+                    f"choose from {ARRIVAL_KINDS}"
+                )
+            k = int(np.clip(rng.poisson(lam), 1, len(ids)))
+            return np.sort(rng.choice(ids, k, replace=False))
         return np.sort(rng.choice(ids, min(A, len(ids)), replace=False))
 
     def draw_rates(

@@ -15,6 +15,7 @@ up with zero further edits, exactly like the fed/algorithms registry.
 from __future__ import annotations
 
 from repro.scenarios.base import (
+    ArrivalSpec,
     AvailabilitySpec,
     DeviceProfile,
     DropoutSpec,
@@ -93,6 +94,19 @@ BUILTIN_SCENARIOS = (
         "device tiers + 30% mid-round dropout (prefix windows -> staleness)",
         profiles=THREE_TIERS,
         dropout=DropoutSpec(prob=0.3, min_frac=0.25),
+    ),
+    Scenario(
+        "heavy-traffic",
+        "buffered-server workload: Poisson endpoint arrivals + device tiers",
+        profiles=THREE_TIERS,
+        arrivals=ArrivalSpec("poisson", rate=8.0),
+    ),
+    Scenario(
+        "diurnal-traffic",
+        "Dir(0.3) skew + diurnally modulated Poisson arrivals + tiers",
+        partition=PartitionSpec("dirichlet", alpha=0.3),
+        profiles=THREE_TIERS,
+        arrivals=ArrivalSpec("diurnal", rate=10.0, period=12, rate_min=2.0),
     ),
     Scenario(
         "worst-case",

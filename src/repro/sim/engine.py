@@ -144,21 +144,29 @@ def pad_cohort_ids(
 
 
 def stack_plans(
-    plans: List[CohortPlan], n_clients: int, A_pad: int, S_pad: int
+    plans: List[CohortPlan], n_clients: int, A_pad: int, S_pad: int,
+    allow_uneven: bool = False,
 ) -> Optional[StackedPlan]:
     """Densify a segment of plans into a StackedPlan, or None if the
     segment cannot share one dense tensor layout: ragged cohorts (mixed
     per-client batch sizes change the minibatch-mean arithmetic) or uneven
     cohort sizes across rounds (availability-trace scenarios admit fewer
     clients on sparse rounds). Refused segments fall back to per-round
-    execution."""
+    execution.
+
+    ``allow_uneven=True`` lifts the uneven-cohort refusal by padding every
+    round to the segment's largest cohort with the §5.5 sentinels (mask 0,
+    n_steps 0, T 0) — the buffered event backend uses this so
+    arrival-process cohorts of varying size still run as one jit-resident
+    segment. Mixed per-client batch sizes always refuse: padding cannot fix
+    minibatch-mean arithmetic."""
     bss = {p.batch_idx[j].shape[1] for p in plans for j in range(p.cohort_size)}
     if len(bss) != 1:
         return None
     bs = bss.pop()
     R = len(plans)
-    A = plans[0].cohort_size
-    if any(p.cohort_size != A for p in plans):
+    A = max(p.cohort_size for p in plans)
+    if not allow_uneven and any(p.cohort_size != A for p in plans):
         return None
     assert A_pad >= A and S_pad >= int(max(p.n_steps.max() for p in plans))
 
@@ -170,11 +178,12 @@ def stack_plans(
     Ts = np.zeros((R, A_pad), np.float32)
     sel = np.zeros((R, A_pad, S_pad, bs), np.int32)
     for r, p in enumerate(plans):
+        a = p.cohort_size
         idx[r], sidx[r], mask[r] = pad_cohort_ids(p.idx, A_pad, n_clients)
-        lrs[r, :A] = p.lrs
-        n_steps[r, :A] = p.n_steps
-        Ts[r, :A] = p.windows()
-        for j in range(A):
+        lrs[r, :a] = p.lrs
+        n_steps[r, :a] = p.n_steps
+        Ts[r, :a] = p.windows()
+        for j in range(a):
             sel[r, j] = np.pad(
                 p.batch_idx[j],
                 ((0, S_pad - p.batch_idx[j].shape[0]), (0, 0)),
@@ -359,6 +368,9 @@ def get_backend(cfg) -> ExecutionBackend:
             horizon_quantile=cfg.event_horizon, max_waves=cfg.event_max_waves,
             sharded=cfg.event_sharded,
             pad_multiple=cfg.sharded_pad_multiple,
+            buffered=cfg.event_buffered,
+            buffer_size=cfg.event_buffer_size,
+            stale_gamma=cfg.event_stale_gamma if cfg.event_buffered else 0.0,
         )
     if cfg.backend == "sharded":
         return ShardedBackend(pad_multiple=cfg.sharded_pad_multiple)

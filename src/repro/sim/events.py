@@ -60,7 +60,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.flow import broadcast_clients
 from repro.core.multirate import (
     FlightTable,
-    flight_insert,
+    flight_insert_checked,
     init_flight_table,
     multirate_integrate,
 )
@@ -87,8 +87,11 @@ Pytree = Any
 AXIS = CLIENT_AXIS   # the 1-D launch mesh axis (launch/mesh.py)
 
 # a device stat row is the shared telemetry vector plus the staleness
-# histogram columns (repro.obs.telemetry; DESIGN.md §9)
+# histogram columns (repro.obs.telemetry; DESIGN.md §9) plus one trailing
+# backend-internal column (max_stale — stripped before records are emitted,
+# so the shared record schema stays unchanged)
 _ROW_W = len(TELEMETRY_FIELDS) + N_STALE_BUCKETS
+_XROW_W = _ROW_W + 1
 _LOSS, _COHORT, _DROPPED = (
     field_index("loss"), field_index("cohort"), field_index("dropped")
 )
@@ -98,19 +101,27 @@ def _event_round(
     x_c, I, g_inv, dt_last, t, tab,
     x_new_rows, idx, Ts, dmask,
     ccfg, hq, max_waves, axis_name=None, offset=0,
+    buffer_k=None, stale_gamma=0.0,
 ):
     """One event round given already-integrated cohort endpoints: mask-aware
     flight insertion + the wave integrator. ``x_new_rows``/``idx``/``Ts``/
     ``dmask`` are table-global (dense) or all-gathered-to-global (sharded)
-    cohort rows. Returns (x_c, I, dt_last, t, tab, stats (_ROW_W,) f32 —
-    the shared telemetry row + staleness-histogram columns; the loss /
-    cohort / dropped slots are filled by the caller)."""
+    cohort rows. Returns (x_c, I, dt_last, t, tab, stats (_XROW_W,) f32 —
+    the shared telemetry row + staleness-histogram columns + the trailing
+    max_stale column; the loss / cohort slots are filled by the caller and
+    the dropped slot seeded with the traced insert's busy refusals — the
+    jit-safe masked-drop contract — for the caller to ``.add`` its own
+    pre-insert drops onto)."""
     A = idx.shape[0]
     x_prev_rows = broadcast_clients(x_c, A)
-    tab = flight_insert(tab, idx, x_prev_rows, x_new_rows, Ts, dmask, offset=offset)
+    tab, refused = flight_insert_checked(
+        tab, idx, x_prev_rows, x_new_rows, Ts, dmask, offset=offset
+    )
+    if axis_name:
+        refused = jax.lax.psum(refused, axis_name)
     x_c, I, dt_last, t, tab, st = multirate_integrate(
         x_c, I, g_inv, dt_last, t, tab, ccfg, hq, max_waves,
-        axis_name=axis_name,
+        axis_name=axis_name, buffer_k=buffer_k, stale_gamma=stale_gamma,
     )
     row = pack_row(
         substeps=st.substeps, backtracks=st.backtracks,
@@ -118,7 +129,10 @@ def _event_round(
         waves=st.waves, arrived=st.arrived, stale=st.stale,
         horizon=st.horizon, tau_end=st.tau_end,
     )
-    stats = jnp.concatenate([row, st.stale_hist])
+    row = row.at[_DROPPED].set(refused)
+    stats = jnp.concatenate(
+        [row, st.stale_hist, st.max_stale.astype(jnp.float32)[None]]
+    )
     return x_c, I, dt_last, t, tab, stats
 
 
@@ -135,14 +149,17 @@ def _masked_loss(loss, dmask, axis_name=None):
 
 def build_event_segment(
     loss_fn: Callable, ccfg, kind: str, mu: float, hq: float, max_waves: int,
+    buffer_k: Optional[int] = None, stale_gamma: float = 0.0,
 ) -> Callable:
     """Jitted R-round dense event segment.
 
     ``fn(x_c, I, g_inv, dt_last, t, tab, data, idx, mask, lrs, ns, Ts, sel,
-    ps) -> (x_c, I, dt_last, t, tab, stats (R, _ROW_W), part (n,))`` where
+    ps) -> (x_c, I, dt_last, t, tab, stats (R, _XROW_W), part (n,))`` where
     the plan arrays are ``StackedPlan`` fields, ``stats`` rows follow the
-    shared telemetry schema (+ staleness-histogram columns) and ``part``
-    counts per-client dispatches (busy re-draws excluded).
+    shared telemetry schema (+ staleness-histogram + max_stale columns) and
+    ``part`` counts per-client dispatches (busy re-draws excluded).
+    ``buffer_k``/``stale_gamma`` select the buffered-server K-trigger and
+    staleness weighting (DESIGN.md §10).
     """
     cohort = cohort_vmap_fn(loss_fn, kind, mu)
 
@@ -164,15 +181,16 @@ def build_event_segment(
                 x_c, I, g_inv, dt_last, t, tab,
                 x_new_a, idx[r], Ts[r], dmask,
                 ccfg, hq, max_waves,
+                buffer_k=buffer_k, stale_gamma=stale_gamma,
             )
             loss_r, n_disp = _masked_loss(loss_a, dmask)
-            stats = stats.at[_DROPPED].set(jnp.sum(mask[r] * busy))
+            stats = stats.at[_DROPPED].add(jnp.sum(mask[r] * busy))
             stats = stats.at[_LOSS].set(loss_r)
             stats = stats.at[_COHORT].set(n_disp)
             part = part.at[idx[r]].add(dmask, mode="drop")
             return (x_c, I, dt_last, t, tab, out.at[r].set(stats), part)
 
-        out0 = jnp.zeros((R, _ROW_W), jnp.float32)
+        out0 = jnp.zeros((R, _XROW_W), jnp.float32)
         part0 = jnp.zeros((n,), jnp.float32)
         return jax.lax.fori_loop(
             0, R, round_step, (x_c, I, dt_last, t, tab, out0, part0)
@@ -183,7 +201,7 @@ def build_event_segment(
 
 def build_event_segment_sharded(
     mesh, loss_fn: Callable, ccfg, kind: str, mu: float, hq: float,
-    max_waves: int,
+    max_waves: int, buffer_k: Optional[int] = None, stale_gamma: float = 0.0,
 ) -> Callable:
     """The sharded event segment: same contract as ``build_event_segment``
     but shard_map-ed over the client mesh — cohort axis and flight-table
@@ -212,16 +230,17 @@ def build_event_segment_sharded(
                 jax.tree.map(gather, x_new_loc),
                 gather(idx[r]), gather(Ts[r]), gather(dmask_loc),
                 ccfg, hq, max_waves, axis_name=AXIS, offset=offset,
+                buffer_k=buffer_k, stale_gamma=stale_gamma,
             )
             loss_r, n_disp = _masked_loss(loss_loc, dmask_loc, AXIS)
             dropped = jax.lax.psum(jnp.sum(mask[r] * busy_loc), AXIS)
-            stats = stats.at[_DROPPED].set(dropped)
+            stats = stats.at[_DROPPED].add(dropped)
             stats = stats.at[_LOSS].set(loss_r)
             stats = stats.at[_COHORT].set(n_disp)
             part = part.at[idx[r]].add(dmask_loc, mode="drop")
             return (x_c, I, dt_last, t, tab, out.at[r].set(stats), part)
 
-        out0 = jnp.zeros((R, _ROW_W), jnp.float32)
+        out0 = jnp.zeros((R, _XROW_W), jnp.float32)
         part0 = jnp.zeros((n,), jnp.float32)
         x_c, I, dt_last, t, tab, out, part = jax.lax.fori_loop(
             0, R, round_step, (x_c, I, dt_last, t, tab, out0, part0)
@@ -242,7 +261,10 @@ def build_event_segment_sharded(
     return jax.jit(fn)
 
 
-def build_event_apply(ccfg, hq: float, max_waves: int) -> Callable:
+def build_event_apply(
+    ccfg, hq: float, max_waves: int,
+    buffer_k: Optional[int] = None, stale_gamma: float = 0.0,
+) -> Callable:
     """Insert+integrate-only dense event round (the ragged fallback): local
     integration already happened on the gathered cohort."""
 
@@ -250,12 +272,16 @@ def build_event_apply(ccfg, hq: float, max_waves: int) -> Callable:
         return _event_round(
             x_c, I, g_inv, dt_last, t, tab, x_new_a, idx, Ts, dmask,
             ccfg, hq, max_waves,
+            buffer_k=buffer_k, stale_gamma=stale_gamma,
         )
 
     return jax.jit(body)
 
 
-def build_event_apply_sharded(mesh, ccfg, hq: float, max_waves: int) -> Callable:
+def build_event_apply_sharded(
+    mesh, ccfg, hq: float, max_waves: int,
+    buffer_k: Optional[int] = None, stale_gamma: float = 0.0,
+) -> Callable:
     """Sharded ragged fallback: cohort rows arrive device-sharded, the
     table shards claim their slots after an all-gather."""
 
@@ -268,6 +294,7 @@ def build_event_apply_sharded(mesh, ccfg, hq: float, max_waves: int) -> Callable
             jax.tree.map(gather, x_new_loc),
             gather(idx_loc), gather(Ts_loc), gather(dm_loc),
             ccfg, hq, max_waves, axis_name=AXIS, offset=offset,
+            buffer_k=buffer_k, stale_gamma=stale_gamma,
         )
 
     c1 = P(AXIS)
@@ -287,6 +314,16 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
     client mesh (``FedSimConfig.event_sharded``); ``pad_multiple`` forces
     the cohort/capacity padding unit above the device count so tests can
     exercise uneven padding on any host (DESIGN.md §5.5 sentinels).
+
+    ``buffered=True`` (``FedSimConfig.event_buffered``) switches the
+    per-round horizon to the fully-asynchronous buffered-server K-trigger
+    (DESIGN.md §10): the server drains only when ``buffer_size`` endpoints
+    are in flight, aging flights' endpoints are damped by the
+    ``stale_gamma`` staleness weight, and arrival-process scenario cohorts
+    (uneven sizes across rounds) stay jit-resident through padded
+    ``StackedPlan`` stacking instead of the per-round fallback. The
+    ``max_stale`` attribute tracks the oldest flight ever left pending —
+    the bounded-staleness metric BENCH_engine.json reports.
     """
 
     name = "event"
@@ -298,11 +335,26 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
 
     def __init__(self, horizon_quantile: float = 1.0, max_waves: int = 4,
                  sharded: bool = False, pad_multiple: Optional[int] = None,
-                 max_devices: Optional[int] = None):
+                 max_devices: Optional[int] = None, buffered: bool = False,
+                 buffer_size: int = 0, stale_gamma: float = 0.0):
         assert 0.0 < horizon_quantile <= 1.0, horizon_quantile
         self.horizon_quantile = float(horizon_quantile)
         self.max_waves = max(1, int(max_waves))
         self.sharded = bool(sharded)
+        self.buffered = bool(buffered)
+        self.buffer_size = int(buffer_size)
+        self.stale_gamma = float(stale_gamma)
+        if self.buffered and self.buffer_size < 1:
+            raise ValueError(
+                "buffered event mode needs a positive aggregation buffer: "
+                f"got buffer_size={buffer_size!r} (set "
+                "FedSimConfig.event_buffer_size >= 1, <= n_clients)"
+            )
+        if self.stale_gamma < 0.0:
+            raise ValueError(
+                f"stale_gamma must be >= 0 (got {stale_gamma!r}); 0 disables "
+                "staleness weighting"
+            )
         self._init_mesh_infra(pad_multiple, max_devices)
         self._vec = VectorizedBackend()
         self._table: Optional[FlightTable] = None
@@ -310,7 +362,12 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
         self.last_round_stats: Dict[str, Any] = {}
         self.round_stats: List[Dict[str, Any]] = []   # one dict per round
         self.total_dropped = 0
+        self.max_stale = 0               # oldest flight ever left pending
         self._part = None                # (n,) device-exact dispatch counts
+
+    @property
+    def _buffer_k(self) -> Optional[int]:
+        return self.buffer_size if self.buffered else None
 
     def _pad_unit(self) -> int:
         # the dense mode never touches the mesh: capacity = n_clients and
@@ -331,6 +388,12 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
                 "(FedSimConfig.sensitivity='scalar'); diagonal gains keep "
                 "their pytree layout on the dense path"
             )
+        if self.buffered and self.buffer_size > sim.n:
+            raise ValueError(
+                f"buffer_size={self.buffer_size} exceeds the flight table "
+                f"capacity (n_clients={sim.n}): the K-trigger could never "
+                "fire and the server would stall forever"
+            )
         if self._owner is not sim:
             # a backend instance may be reused across sims (the bench/sweep
             # warm-up pattern keeps jit caches); the flight table is per-sim
@@ -341,12 +404,13 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
             )
             self.round_stats = []
             self.total_dropped = 0
+            self.max_stale = 0
             self._part = np.zeros((sim.n,), np.int64)
 
     def _ccfg_key(self, sim):
         return (
             sim.cfg.consensus, self.horizon_quantile, self.max_waves,
-            self.sharded,
+            self.sharded, self._buffer_k, self.stale_gamma,
         )
 
     # ------------------------------------------------------------------
@@ -358,8 +422,12 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
             VectorizedBackend._pad_steps(sim),
             int(max(int(p.n_steps.max()) for p in plans)),
         )
-        A_pad = self._a_pad(plans[0].cohort_size)
-        sp = stack_plans(plans, sim.n, A_pad, S_pad)
+        # buffered mode consumes arrival-process cohorts whose sizes vary
+        # round to round; pad them into one dense segment so the whole
+        # buffered loop stays jit-resident instead of falling back per-round
+        A_pad = self._a_pad(max(p.cohort_size for p in plans))
+        sp = stack_plans(plans, sim.n, A_pad, S_pad,
+                         allow_uneven=self.buffered)
         if sp is None:
             # ragged / uneven cohorts: per-round fallback (grouped local
             # integration + the jitted insert/integrate event round)
@@ -388,11 +456,13 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
             builder = lambda: build_event_segment_sharded(
                 self.mesh, sim.loss_fn, cfg.consensus, kind, mu,
                 self.horizon_quantile, self.max_waves,
+                buffer_k=self._buffer_k, stale_gamma=self.stale_gamma,
             )
         else:
             builder = lambda: build_event_segment(
                 sim.loss_fn, cfg.consensus, kind, mu,
                 self.horizon_quantile, self.max_waves,
+                buffer_k=self._buffer_k, stale_gamma=self.stale_gamma,
             )
         fn = self._fn(
             ("event_seg", id(sim.loss_fn), kind, mu, self._ccfg_key(sim)),
@@ -457,11 +527,14 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
 
         if self.sharded:
             builder = lambda: build_event_apply_sharded(
-                self.mesh, cfg.consensus, self.horizon_quantile, self.max_waves
+                self.mesh, cfg.consensus, self.horizon_quantile,
+                self.max_waves,
+                buffer_k=self._buffer_k, stale_gamma=self.stale_gamma,
             )
         else:
             builder = lambda: build_event_apply(
-                cfg.consensus, self.horizon_quantile, self.max_waves
+                cfg.consensus, self.horizon_quantile, self.max_waves,
+                buffer_k=self._buffer_k, stale_gamma=self.stale_gamma,
             )
         fn = self._fn(("event_apply", self._ccfg_key(sim)), builder)
         st = sim.state
@@ -477,7 +550,7 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
         if keep:
             np.add.at(self._part, np.asarray(plan.idx)[keep], 1)
         out = np.array(stats, np.float32)[None, :]
-        out[0, _DROPPED] = float(dropped)
+        out[0, _DROPPED] += float(dropped)   # on top of traced-insert refusals
         out[0, _LOSS] = loss
         out[0, _COHORT] = float(len(keep))
         return self._emit_stats(plan.rnd, out)[0]
@@ -493,10 +566,17 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
         return part
 
     def _emit_stats(self, rnd0: int, out: np.ndarray) -> List[Dict[str, Any]]:
-        """(R, _ROW_W) stat rows -> shared per-round telemetry records +
+        """(R, _XROW_W) stat rows -> shared per-round telemetry records +
         the backend's running counters (round_stats / last_round_stats /
-        total_dropped keep their pre-telemetry keys, now as a superset)."""
+        total_dropped keep their pre-telemetry keys, now as a superset).
+        The trailing backend-internal max_stale column feeds the
+        ``max_stale`` attribute and is stripped before records are built —
+        the shared record schema (obs/telemetry.py) is pinned to an exact
+        key set and stays unchanged."""
         F = len(TELEMETRY_FIELDS)
+        if out.shape[1] > _ROW_W:
+            self.max_stale = max(self.max_stale, int(out[:, _ROW_W].max()))
+            out = out[:, :_ROW_W]
         recs = rows_to_records(int(rnd0), out[:, :F], out[:, F:])
         for rec in recs:
             self.total_dropped += rec["dropped"]

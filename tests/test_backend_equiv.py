@@ -214,6 +214,52 @@ def test_event_backend_matches_oracle_at_full_horizon(alg, mode, batch_size):
         )
 
 
+@pytest.mark.parametrize("alg", FLOW_ALGS)
+@pytest.mark.parametrize("mode", ["dense", "sharded"])
+def test_buffered_event_backend_matches_oracle_at_cohort_buffer(alg, mode):
+    """Equivalence pin for the fully-asynchronous buffered server
+    (DESIGN.md §10): with buffer size K = cohort size, zero staleness
+    damping and a full horizon, every round's buffer fills and drains
+    in-round — the K-th order statistic of the queued windows equals the
+    q = 1.0 quantile horizon — so buffered mode must reproduce the
+    sequential oracle at rtol 1e-5 for every flow-capable registered
+    algorithm, dense and sharded."""
+    data, parts, params0, loss_fn = _problem()
+    cohort = max(1, round(0.5 * len(parts)))
+    runs = {}
+    for backend, kw in (
+        ("sequential", {}),
+        ("event", {"event_horizon": 1.0, "event_max_waves": 1,
+                   "event_buffered": True, "event_buffer_size": cohort,
+                   "event_stale_gamma": 0.0,
+                   "event_sharded": mode == "sharded",
+                   "sharded_pad_multiple": 3 if mode == "sharded" else None}),
+    ):
+        cfg = FedSimConfig(
+            algorithm=alg, n_clients=len(parts), participation=0.5,
+            rounds=3, batch_size=4, steps_per_epoch=2,
+            hetero=HeteroConfig(1e-3, 1e-2, 1, 3), seed=77,
+            backend=backend, consensus=ConsensusConfig(max_substeps=6), **kw,
+        )
+        sim = FedSim(loss_fn, params0, data, parts, cfg)
+        hist = sim.run()
+        runs[backend] = (hist.loss, sim.current_params())
+
+    ref_loss, ref_params = runs["sequential"]
+    loss, params = runs["event"]
+    np.testing.assert_allclose(
+        loss, ref_loss, rtol=1e-5, atol=1e-6,
+        err_msg=f"buffered[{mode}] history diverged from sequential ({alg})",
+    )
+    for a, b in zip(
+        jax.tree.leaves(ref_params), jax.tree.leaves(params), strict=True
+    ):
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), rtol=1e-5, atol=1e-6,
+            err_msg=f"buffered[{mode}] params diverged from sequential ({alg})",
+        )
+
+
 # ---------------------------------------------------------------------------
 # telemetry equivalence (repro/obs shared schema, DESIGN.md §9)
 # ---------------------------------------------------------------------------
@@ -462,3 +508,28 @@ def test_stack_plans_refuses_uneven_cohort_sizes():
     plans = _draw_plans(rng, 2, 4, 9, 3, 3)
     small = _draw_plans(rng, 1, 2, 9, 3, 3)
     assert stack_plans(plans + small, 9, 4, 4) is None
+
+
+def test_stack_plans_allow_uneven_pads_with_sentinels():
+    """The buffered event backend opts in to uneven cohorts (arrival-trace
+    rounds have varying sizes): short rounds must pad with the §5.5
+    sentinels (mask 0, zero steps/window, out-of-bounds scatter) so padded
+    rows are arithmetic no-ops — while mixed per-client batch sizes still
+    refuse even under allow_uneven."""
+    rng = np.random.RandomState(0)
+    plans = _draw_plans(rng, 2, 4, 9, 3, 3)
+    small = _draw_plans(rng, 1, 2, 9, 3, 3)
+    sp = stack_plans(plans + small, 9, 4, 4, allow_uneven=True)
+    assert sp is not None
+    assert sp.mask[2].sum() == 2
+    np.testing.assert_array_equal(sp.idx[2, :2], small[0].idx)
+    assert (sp.n_steps[2, 2:] == 0).all()
+    assert (sp.Ts[2, 2:] == 0).all()
+    assert (sp.scatter_idx[2, 2:] == 9).all()
+    # full-size rounds are stacked exactly as in the even path
+    for r in range(2):
+        assert sp.mask[r].sum() == 4
+        np.testing.assert_array_equal(sp.idx[r, :4], plans[r].idx)
+
+    ragged = _draw_plans(rng, 1, 4, 9, 3, 3, ragged_client=1)
+    assert stack_plans(plans + ragged, 9, 4, 4, allow_uneven=True) is None

@@ -19,8 +19,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ConsensusConfig, FlightTable, init_flight_table
-from repro.core.multirate import flight_insert, masked_quantile
+from repro.core import (
+    ConsensusConfig,
+    FlightTable,
+    flight_insert_checked,
+    init_flight_table,
+)
+from repro.core.multirate import flight_insert, masked_quantile, multirate_integrate
 from repro.data import make_classification
 from repro.fed import (
     FedSim,
@@ -237,6 +242,202 @@ def test_event_kernels_match_reference_path():
         np.testing.assert_allclose(
             np.asarray(b), np.asarray(a), rtol=1e-4, atol=1e-6
         )
+
+
+# ---------------------------------------------------------------------------
+# event-path edge cases: empty-table horizon guard, jit-safe checked insert,
+# buffered K-trigger semantics (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def _integrator_fixture(capacity=6, dim=3, seed=3):
+    rng = np.random.RandomState(seed)
+    params0 = {"w": jnp.zeros((dim,), jnp.float32)}
+    tab = init_flight_table(params0, capacity=capacity)
+    rows = lambda A: {"w": jnp.asarray(rng.randn(A, dim), jnp.float32)}
+    I = {"w": jnp.asarray(rng.randn(capacity, dim) * 0.01, jnp.float32)}
+    x_c = {"w": jnp.asarray(rng.randn(dim), jnp.float32)}
+    g = jnp.full((capacity,), 0.1, jnp.float32)
+    ccfg = ConsensusConfig(L=0.1, max_substeps=8)
+    return tab, rows, I, x_c, g, ccfg
+
+
+def test_multirate_empty_table_round_is_nan_free():
+    """Regression (DESIGN.md §10 hardening): an empty flight table makes the
+    masked horizon quantile all-NaN; the guard must sanitize it BEFORE wave
+    activation so the round is an exact no-op — zero horizon, no arrivals,
+    bitwise-unchanged state, and no NaN in any stat — including under jit."""
+    tab, _, I, x_c, g, ccfg = _integrator_fixture()
+
+    fn = jax.jit(lambda xc, ii, tb: multirate_integrate(
+        xc, ii, g, jnp.float32(0.01), jnp.float32(0.0), tb, ccfg, 0.5, 2
+    ))
+    x2, I2, dt2, t2, tab2, st = fn(x_c, I, tab)
+
+    assert float(st.horizon) == 0.0 and float(st.tau_end) == 0.0
+    assert int(st.arrived) == 0 and int(st.stale) == 0
+    assert int(st.max_stale) == 0
+    np.testing.assert_array_equal(np.asarray(x2["w"]), np.asarray(x_c["w"]))
+    np.testing.assert_array_equal(np.asarray(I2["w"]), np.asarray(I["w"]))
+    for leaf in (st.horizon, st.tau_end, st.dt_min, st.dt_max, st.dt_sum,
+                 dt2, t2):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert int(jnp.sum(tab2.alive)) == 0
+
+
+def test_all_busy_round_leaves_server_state_finite():
+    """Companion regression to the nan-loss record test: after an all-busy
+    round (no inserts, pending arrivals only) every piece of server state
+    the next round consumes must be finite."""
+    sim = _small_event_sim(event_horizon=0.25, event_max_waves=2)
+    plan1 = sim._draw_plan(0, 4)
+    sim.backend.run_round(sim, plan1)
+    stale_cids = [
+        c for c in range(sim.n)
+        if float(np.asarray(sim.backend._table.alive)[c]) > 0
+    ]
+    assert stale_cids
+    j = [int(i) for i, c in enumerate(plan1.idx) if int(c) in stale_cids]
+    plan2 = CohortPlan(
+        rnd=1, idx=plan1.idx[j], lrs=plan1.lrs[j], epochs=plan1.epochs[j],
+        n_steps=plan1.n_steps[j], batch_idx=[plan1.batch_idx[k] for k in j],
+    )
+    sim.backend.run_round(sim, plan2)
+    assert np.isfinite(np.asarray(sim.state.x_c["w"])).all()
+    assert np.isfinite(np.asarray(sim.state.I["w"])).all()
+    assert np.isfinite(np.asarray(sim.backend._table.T_rem)).all()
+    rec = sim.backend.round_stats[-1]
+    assert np.isfinite(rec["horizon"])
+
+
+def test_flight_insert_checked_is_jit_safe_with_drop_accounting():
+    """Under a jit trace ``flight_insert``'s concrete busy/overflow refusals
+    cannot fire; the checked variant must mask busy rows out of the scatter
+    (busy slot bitwise untouched), count them in ``dropped``, and leave
+    out-of-range rows (another shard's slots) masked but UNcounted."""
+    rng = np.random.RandomState(4)
+    params = {"w": jnp.zeros((3,))}
+    rows = lambda A: {"w": jnp.asarray(rng.randn(A, 3), jnp.float32)}
+    tab = init_flight_table(params, capacity=4)
+    tab = flight_insert(
+        tab, jnp.asarray([1], jnp.int32), rows(1), rows(1),
+        jnp.asarray([0.5], jnp.float32), jnp.ones((1,), jnp.float32),
+    )
+    before = jax.tree.map(np.asarray, tab)
+
+    step = jax.jit(flight_insert_checked)
+    xp, xn = rows(2), rows(2)
+    T = jnp.asarray([0.9, 0.2], jnp.float32)
+    cid = jnp.asarray([1, 3], jnp.int32)
+
+    out, dropped = step(tab, cid, xp, xn, T, jnp.ones((2,), jnp.float32))
+    assert float(dropped) == 1.0
+    # busy slot 1: bitwise untouched (no silent wrong-slot write)
+    np.testing.assert_array_equal(
+        np.asarray(out.x_new["w"][1]), before.x_new["w"][1]
+    )
+    np.testing.assert_array_equal(np.asarray(out.T_rem)[1], before.T_rem[1])
+    assert int(out.cid[1]) == 1
+    # free slot 3: inserted exactly
+    assert float(out.alive[3]) == 1.0
+    np.testing.assert_array_equal(
+        np.asarray(out.x_new["w"][3]), np.asarray(xn["w"][1])
+    )
+
+    # pre-masked call: dropped == 0 and bitwise equal to plain flight_insert
+    mask = jnp.asarray([0.0, 1.0], jnp.float32)
+    got, d0 = step(tab, cid, xp, xn, T, mask)
+    assert float(d0) == 0.0
+    want = flight_insert(tab, cid, xp, xn, T, mask)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want), strict=True):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # out-of-range row (another shard's slot in sharded mode): not counted,
+    # not written
+    far, d_far = step(
+        tab, jnp.asarray([7], jnp.int32), rows(1), rows(1),
+        jnp.asarray([0.4], jnp.float32), jnp.ones((1,), jnp.float32),
+    )
+    assert float(d_far) == 0.0
+    for a, b in zip(
+        jax.tree.leaves(far), jax.tree.leaves(tab), strict=True
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_buffered_no_trigger_round_ages_flights_bitwise():
+    """Buffered server, fewer than K flights queued: the round must be a
+    pure ageing step — zero horizon, no arrivals, bitwise-unchanged x_c/I
+    and windows, stale_rounds incremented — until the K-th flight lands,
+    at which point all K drain together."""
+    tab, rows, I, x_c, g, ccfg = _integrator_fixture()
+    tab = flight_insert(
+        tab, jnp.asarray([0, 2], jnp.int32), rows(2), rows(2),
+        jnp.asarray([0.2, 0.4], jnp.float32), jnp.ones((2,), jnp.float32),
+    )
+
+    x2, I2, dt2, t2, tab2, st = multirate_integrate(
+        x_c, I, g, jnp.float32(0.01), jnp.float32(0.0), tab, ccfg,
+        1.0, 2, buffer_k=3,
+    )
+    assert int(st.arrived) == 0 and float(st.horizon) == 0.0
+    np.testing.assert_array_equal(np.asarray(x2["w"]), np.asarray(x_c["w"]))
+    np.testing.assert_array_equal(np.asarray(I2["w"]), np.asarray(I["w"]))
+    np.testing.assert_array_equal(
+        np.asarray(tab2.T_rem)[[0, 2]], np.asarray(tab.T_rem)[[0, 2]]
+    )
+    assert [int(s) for s in np.asarray(tab2.stale_rounds)[[0, 2]]] == [1, 1]
+    assert int(st.max_stale) == 1
+    assert int(st.stale) == 2
+
+    # K-th flight lands: the trigger fires and the whole buffer drains
+    tab3 = flight_insert(
+        tab2, jnp.asarray([4], jnp.int32), rows(1), rows(1),
+        jnp.asarray([0.3], jnp.float32), jnp.ones((1,), jnp.float32),
+    )
+    x3, I3, dt3, t3, tab4, st2 = multirate_integrate(
+        x2, I2, g, dt2, t2, tab3, ccfg, 1.0, 4, buffer_k=3,
+    )
+    assert int(st2.arrived) == 3
+    assert int(jnp.sum(tab4.alive)) == 0
+    assert int(st2.max_stale) == 0
+    np.testing.assert_allclose(float(st2.horizon), 0.4, rtol=1e-6)
+
+
+def test_buffered_stale_gamma_damps_toward_anchor():
+    """γ > 0: an arrived flight that waited s rounds contributes its
+    endpoint damped toward the Γ anchor with w = 1/(1 + γ·s); fresh flights
+    (s = 0) are bitwise untouched, so γ only changes history-bearing rows."""
+    tab, rows, I, x_c, g, ccfg = _integrator_fixture()
+    tab = flight_insert(
+        tab, jnp.asarray([0, 2], jnp.int32), rows(2), rows(2),
+        jnp.asarray([0.2, 0.4], jnp.float32), jnp.ones((2,), jnp.float32),
+    )
+    # age the buffer one round (no trigger), then land the K-th flight
+    _, _, _, _, aged, _ = multirate_integrate(
+        x_c, I, g, jnp.float32(0.01), jnp.float32(0.0), tab, ccfg,
+        1.0, 2, buffer_k=3,
+    )
+    full = flight_insert(
+        aged, jnp.asarray([4], jnp.int32), rows(1), rows(1),
+        jnp.asarray([0.3], jnp.float32), jnp.ones((1,), jnp.float32),
+    )
+    out0 = multirate_integrate(
+        x_c, I, g, jnp.float32(0.01), jnp.float32(0.0), full, ccfg,
+        1.0, 4, buffer_k=3, stale_gamma=0.0,
+    )
+    out1 = multirate_integrate(
+        x_c, I, g, jnp.float32(0.01), jnp.float32(0.0), full, ccfg,
+        1.0, 4, buffer_k=3, stale_gamma=0.5,
+    )
+    assert int(out0[5].arrived) == int(out1[5].arrived) == 3
+    # the damped run integrates a genuinely different trajectory
+    assert not np.array_equal(
+        np.asarray(out0[0]["w"]), np.asarray(out1[0]["w"])
+    )
+    # both stay finite (the damping is a convex combination)
+    assert np.isfinite(np.asarray(out1[0]["w"])).all()
+    assert np.isfinite(np.asarray(out1[1]["w"])).all()
 
 
 # ---------------------------------------------------------------------------

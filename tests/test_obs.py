@@ -23,6 +23,8 @@ import os
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.obs import (
     N_STALE_BUCKETS,
@@ -102,6 +104,26 @@ def test_stale_histogram_buckets():
     alive = jnp.asarray([1, 1, 1, 1, 1, 1, 1, 0], jnp.float32)
     hist = np.asarray(stale_histogram(ages, alive))
     np.testing.assert_array_equal(hist, [1, 2, 2, 2])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_stale_histogram_sums_to_stale_counter(seed):
+    """Property: the 4 staleness buckets partition the stale flights, so
+    the histogram always sums to the ``stale`` counter — i.e. the number
+    of alive flights, every one of which a round ages to >= 1 (the bucket
+    edges start at 1, so no alive flight can fall outside all buckets)."""
+    rng = np.random.RandomState(seed)
+    C = rng.randint(1, 33)
+    alive = (rng.rand(C) < 0.6).astype(np.float32)
+    # after a round, every surviving flight has stale_rounds >= 1; dead
+    # slots carry 0 (exactly what multirate_integrate writes)
+    ages = np.where(alive > 0, rng.randint(1, 50, C), 0)
+    hist = np.asarray(stale_histogram(
+        jnp.asarray(ages, jnp.int32), jnp.asarray(alive)
+    ))
+    assert hist.shape == (N_STALE_BUCKETS,)
+    assert int(hist.sum()) == int((alive > 0).sum())
 
 
 # ---------------------------------------------------------------------------
@@ -364,6 +386,37 @@ def test_fedsim_emits_valid_log_and_trace(tmp_path, backend):
     events = validate_trace(str(tmp_path / f"{backend}.json"))
     names = {e["name"] for e in events}
     assert "segment" in names and "eval" in names and "plan_draw" in names
+
+
+def test_buffered_records_validate_and_histogram_matches_stale(tmp_path):
+    """Buffered-server rounds (K-trigger drains, no-trigger ageing rounds)
+    must emit the SAME pinned record schema: every record passes
+    validate_record, the staleness histogram sums to the ``stale`` counter
+    round for round, and the run log + trace round-trip through the
+    validators unchanged."""
+    sim = _tiny_sim(
+        tmp_path, backend="event",
+        event_buffered=True, event_buffer_size=3,
+    )
+    hist = sim.run()
+
+    assert len(hist.telemetry) == 3
+    aged = False
+    for rec in hist.telemetry:
+        validate_record({"kind": "round", **rec})
+        assert sum(rec["stale_hist"]) == rec["stale"]
+        aged = aged or rec["stale"] > 0
+    # buffer K=3 > cohort 2: round 0 cannot trigger, so flights aged
+    assert aged
+
+    records = validate_jsonl(str(tmp_path / "event.jsonl"))
+    rounds = [r for r in records if r["kind"] == "round"]
+    assert [r["round"] for r in rounds] == [0, 1, 2]
+    for r in rounds:
+        assert sum(r["stale_hist"]) == r["stale"]
+    validate_trace(str(tmp_path / "event.json"))
+    # the backend's max-staleness witness saw the ageing too
+    assert sim.backend.max_stale >= 1
 
 
 def test_history_loss_endpoints_still_work(tmp_path):

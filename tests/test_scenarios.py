@@ -246,6 +246,82 @@ def test_availability_cohorts_are_valid_subsets(kind):
             assert (blocks[idx] == rnd % 3).all()   # deterministic membership
 
 
+def test_arrival_poisson_trace_is_deterministic_and_clipped():
+    """Arrival traces replace the fixed cohort size with k ~ Poisson(rate)
+    clipped to [1, |pool|]; the draw consumes the given rng stream only, so
+    identical streams yield identical traces (the backend-equivalence
+    determinism contract)."""
+    from repro.scenarios import ArrivalSpec
+
+    rt = make_scenario(Scenario("t", arrivals=ArrivalSpec("poisson", rate=5.0)))
+    rng = np.random.RandomState(0)
+    cohorts = [rt.draw_cohort(rng, r, 20, 4) for r in range(12)]
+    sizes = [len(c) for c in cohorts]
+    assert all(1 <= k <= 20 for k in sizes)
+    assert len(set(sizes)) > 1                 # round-varying, ignores A=4
+    for idx in cohorts:
+        assert (np.diff(idx) > 0).all()        # sorted, unique
+        assert idx.min() >= 0 and idx.max() < 20
+    rng2 = np.random.RandomState(0)
+    replay = [rt.draw_cohort(rng2, r, 20, 4) for r in range(12)]
+    for a, b in zip(cohorts, replay, strict=True):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_arrival_diurnal_trace_modulates_rate():
+    """λ(rnd) = rate_min + (rate − rate_min)·(1 + sin(2π·rnd/period))/2:
+    peak rounds (sin = +1) must land far more endpoints than troughs."""
+    from repro.scenarios import ArrivalSpec
+
+    spec = ArrivalSpec("diurnal", rate=30.0, period=8, rate_min=1.0)
+    rt = make_scenario(Scenario("t", arrivals=spec))
+    peaks = [
+        len(rt.draw_cohort(np.random.RandomState(t), 2, 64, 4))
+        for t in range(30)
+    ]
+    troughs = [
+        len(rt.draw_cohort(np.random.RandomState(100 + t), 6, 64, 4))
+        for t in range(30)
+    ]
+    assert np.mean(peaks) > 3 * np.mean(troughs)
+
+
+def test_arrivals_compose_with_availability_pool():
+    """Availability restricts WHO can land, arrivals decide HOW MANY: with
+    a blocks trace the Poisson count is clipped to the active block and
+    every drawn id stays inside it."""
+    from repro.scenarios import ArrivalSpec
+
+    rt = make_scenario(Scenario(
+        "t",
+        availability=AvailabilitySpec("blocks", n_blocks=3),
+        arrivals=ArrivalSpec("poisson", rate=6.0),
+    ))
+    n = 12
+    blocks = np.arange(n) * 3 // n
+    for rnd in range(6):
+        idx = rt.draw_cohort(np.random.RandomState(rnd), rnd, n, 5)
+        assert (blocks[idx] == rnd % 3).all()
+        assert 1 <= len(idx) <= 4              # block size caps the clip
+
+
+def test_arrival_unknown_kind_raises_actionably():
+    from repro.scenarios import ARRIVAL_KINDS, ArrivalSpec
+
+    rt = make_scenario(Scenario("t", arrivals=ArrivalSpec("weibull")))
+    with pytest.raises(ValueError, match="weibull"):
+        rt.draw_cohort(np.random.RandomState(0), 0, 8, 4)
+    assert ARRIVAL_KINDS == ("poisson", "diurnal")
+
+
+def test_arrival_axes_tag():
+    from repro.scenarios import ArrivalSpec
+
+    s = Scenario("t", arrivals=ArrivalSpec("diurnal"))
+    assert "arr-diurnal" in s.axes()
+    assert "arr" not in Scenario("t2").axes()
+
+
 def test_device_profiles_draw_within_tier_ranges_and_persist_over_drift():
     rt = make_scenario("diurnal")
     data = _data()
