@@ -482,6 +482,192 @@ def engine_bench(
     return report
 
 
+# v1: accuracy-vs-bytes frontier rows (algorithm × scenario × compressor ×
+# level → final acc + measured bytes_up/bytes_down totals + ratios vs the
+# lossless baseline row), a per-family bytes-monotonicity witness (higher
+# compression level → strictly fewer bytes_up), and the dirichlet01
+# acceptance criterion block (>= 95% of the uncompressed accuracy at
+# <= 25% of its uplink bytes)
+COMM_BENCH_SCHEMA_VERSION = 1
+
+# (compressor, level) grid: the lossless baseline first, then the quantizer
+# tiers and the top-k keep-fraction tiers; forbidden compressor × algorithm
+# combos (topk × flow dynamics) are skipped per row, mirroring the engine
+# bench's flow-only event rows
+COMM_SETTINGS = (
+    (None, None),
+    ("int8", None),
+    ("int4", None),
+    ("topk", 1),
+    ("topk", 2),
+)
+
+
+def comm_bench(
+    rounds=30,
+    clients=10,
+    participation=0.4,
+    scenarios=("dirichlet01", "feature-shift"),
+    algorithms=("fedecado", "fedprox", "fednova"),
+    settings=COMM_SETTINGS,
+    json_path="BENCH_comm.json",
+    seed=0,
+):
+    """Accuracy-vs-bytes frontier for the repro/comm wire models: every
+    (algorithm × scenario) trains once per compressor setting on the
+    vectorized backend, and the row records the measured telemetry bytes
+    totals next to final accuracy. FedECADO compresses its consensus
+    endpoints EF-free (flow family); FedProx/FedNova carry error-feedback
+    residuals, and additionally admit top-k sparsification (refused for
+    flow dynamics — ``repro.comm.check_algorithm``). Persists
+    ``BENCH_comm.json`` (schema v1, pinned by tests/test_bench_comm.py)."""
+    from repro.comm import check_algorithm, get_compressor
+    from repro.core import ConsensusConfig
+    from repro.fed import FedSim, FedSimConfig, last_finite_loss
+    from repro.fed.algorithms import get_algorithm
+
+    # validate names + levels against the registry before any cell runs
+    for name, level in settings:
+        if name is not None:
+            get_compressor(name)(level)
+    for a in algorithms:
+        get_algorithm(a)
+
+    data, params0, loss_fn, eval_fn = _mlp_problem(seed=seed)
+    report = {
+        "schema_version": COMM_BENCH_SCHEMA_VERSION,
+        "benchmark": "comm",
+        "rounds": int(rounds),
+        "clients": int(clients),
+        "participation": float(participation),
+        "scenarios": list(scenarios),
+        "algorithms": list(algorithms),
+        "settings": [
+            {"compress": n or "identity", "level": level}
+            for n, level in settings
+        ],
+        "config": {
+            "batch_size": 32,
+            "steps_per_epoch": 5,
+            "lr_fixed": 1e-2,
+            "epochs_fixed": 2,
+            "consensus_L": 0.01,
+            "backend": "vectorized",
+            "seed": int(seed),
+        },
+        "results": [],
+    }
+
+    for scenario in scenarios:
+        for algorithm in algorithms:
+            base = None
+            for name, level in settings:
+                if name is not None:
+                    try:
+                        check_algorithm(name, get_algorithm(algorithm))
+                    except ValueError:
+                        continue   # forbidden combo (topk × flow dynamics)
+                cfg = FedSimConfig(
+                    algorithm=algorithm, n_clients=clients,
+                    participation=participation, rounds=rounds,
+                    batch_size=32, steps_per_epoch=5, lr_fixed=1e-2,
+                    epochs_fixed=2, hetero=None, seed=1000 + seed,
+                    eval_every=rounds, backend="vectorized",
+                    scenario=scenario, compress=name, compress_level=level,
+                    consensus=ConsensusConfig(L=0.01),
+                )
+                t0 = time.time()
+                sim = FedSim(loss_fn, params0, data, None, cfg, eval_fn)
+                hist = sim.run()
+                summ = hist.summary()
+                row = {
+                    "algorithm": algorithm,
+                    "scenario": scenario,
+                    "compress": name or "identity",
+                    "level": None if level is None else int(level),
+                    "acc": float(hist.metrics[-1]["acc"]),
+                    "final_loss": last_finite_loss(hist.loss),
+                    "bytes_up": int(summ["bytes_up"]),
+                    "bytes_down": int(summ["bytes_down"]),
+                    "wall_s": float(time.time() - t0),
+                }
+                if name is None:
+                    base = row
+                # ratios vs the lossless baseline row of the same
+                # (algorithm, scenario) — the frontier coordinates
+                row["bytes_ratio"] = row["bytes_up"] / base["bytes_up"]
+                row["acc_ratio"] = (
+                    row["acc"] / base["acc"] if base["acc"] > 0 else 0.0
+                )
+                report["results"].append(row)
+                _row(
+                    f"comm_{scenario}_{algorithm}_{row['compress']}"
+                    + ("" if level is None else f"_l{level}"),
+                    row["wall_s"] * 1e6,
+                    f"acc={row['acc']:.3f};bytes_ratio={row['bytes_ratio']:.3f};"
+                    f"acc_ratio={row['acc_ratio']:.3f}",
+                )
+
+    # -- bytes monotonicity: within a family, a higher compression tier
+    # must measure strictly fewer uplink bytes on the same cell
+    families = (("topk", [("topk", 1), ("topk", 2)]),
+                ("quant", [("int8", None), ("int4", None)]))
+    rows_by = {
+        (r["algorithm"], r["scenario"], r["compress"], r["level"]): r
+        for r in report["results"]
+    }
+    report["monotonicity"] = []
+    for scenario in scenarios:
+        for algorithm in algorithms:
+            for fam, tiers in families:
+                got = [
+                    rows_by.get((algorithm, scenario, n, level))
+                    for n, level in tiers
+                ]
+                if not all(got):
+                    continue
+                ups = [g["bytes_up"] for g in got]
+                report["monotonicity"].append({
+                    "algorithm": algorithm,
+                    "scenario": scenario,
+                    "family": fam,
+                    "settings": [
+                        {"compress": n, "level": level} for n, level in tiers
+                    ],
+                    "bytes_up": ups,
+                    "ok": all(a > b for a, b in zip(ups, ups[1:])),
+                })
+
+    # -- the acceptance frontier: on dirichlet01, at least one lossy
+    # setting must hold >= 95% of its algorithm's uncompressed accuracy
+    # at <= 25% of its uplink bytes
+    witnesses = [
+        {k: r[k] for k in ("algorithm", "compress", "level",
+                           "acc_ratio", "bytes_ratio")}
+        for r in report["results"]
+        if r["scenario"] == "dirichlet01" and r["compress"] != "identity"
+        and r["acc_ratio"] >= 0.95 and r["bytes_ratio"] <= 0.25
+    ]
+    report["criterion"] = {
+        "scenario": "dirichlet01",
+        "acc_floor": 0.95,
+        "bytes_ceiling": 0.25,
+        "witnesses": witnesses,
+        "ok": bool(witnesses),
+    }
+    _row(
+        "comm_criterion_dirichlet01", 0.0,
+        f"witnesses={len(witnesses)};ok={bool(witnesses)}",
+    )
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {json_path}", flush=True)
+    return report
+
+
 def scenario_matrix_bench(rounds=10):
     """Reduced scenario × algorithm matrix via the sweep runner
     (launch/sweep.py): CSV rows with final accuracy + wall time per cell.
@@ -532,7 +718,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="subset: table1,table2,fig6,kernels,adaptive,"
-                    "engine,scenarios,roofline")
+                    "engine,scenarios,comm,roofline")
+    ap.add_argument("--comm-json", default="BENCH_comm.json",
+                    help="where the comm bench persists its JSON report")
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--engine-json", default="BENCH_engine.json",
                     help="where the engine bench persists its JSON report")
@@ -589,6 +777,13 @@ def main() -> None:
             heavy_traffic=(
                 {"n": 10_000, "rounds": 20} if sel == {"engine"} else None
             ),
+        )
+    if want("comm"):
+        # persist the JSON artifact only on a dedicated --only comm run,
+        # mirroring the engine bench's overwrite guard
+        comm_bench(
+            rounds=min(args.rounds, 30),
+            json_path=args.comm_json if sel == {"comm"} else None,
         )
     if want("scenarios"):
         scenario_matrix_bench(rounds=min(args.rounds, 10))

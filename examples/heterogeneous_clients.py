@@ -59,7 +59,24 @@ def main():
         "--event-horizon", type=float, default=0.75,
         help="event backend: quantile of in-flight windows absorbed per round",
     )
+    from repro.comm import available_compressors
+
+    ap.add_argument(
+        "--compress", choices=available_compressors(), default=None,
+        help="lossy uplink compressor (repro/comm registry); combos are "
+        "validated against every compared algorithm's capability flags "
+        "(e.g. topk is refused when a flow-dynamics algorithm is in the "
+        "comparison)",
+    )
+    ap.add_argument(
+        "--compress-level", type=int, default=None,
+        help="compressor-specific level (omit for the default; invalid "
+        "levels are rejected with the valid set listed)",
+    )
     args = ap.parse_args()
+    if args.compress_level is not None and args.compress is None:
+        ap.error("--compress-level requires --compress (one of: "
+                 f"{', '.join(available_compressors())})")
 
     data = make_classification(2048, dim=32, n_classes=10, seed=0)
     key = jax.random.PRNGKey(7)
@@ -84,6 +101,16 @@ def main():
 
     scenario = get_scenario(args.scenario)
     algs = [get_algorithm(a).name for a in args.algorithms.split(",") if a]
+    if args.compress:
+        # fail before any training: level + compressor × algorithm combos
+        from repro.comm import check_algorithm, get_compressor
+
+        try:
+            get_compressor(args.compress)(args.compress_level)
+            for a in algs:
+                check_algorithm(args.compress, get_algorithm(a))
+        except ValueError as e:
+            ap.error(str(e))
     results = {a: [] for a in algs}
     for rep in range(args.repeats):
         for alg in results:
@@ -97,12 +124,18 @@ def main():
                 rounds=args.rounds, batch_size=32, steps_per_epoch=3,
                 seed=200 + rep, eval_every=args.rounds, scenario=scenario,
                 backend=backend, event_horizon=args.event_horizon,
+                compress=args.compress, compress_level=args.compress_level,
             )
             sim = FedSim(loss_fn, params0, data, None, cfg, eval_fn)
             hist = sim.run()
             acc = hist.metrics[-1]["acc"]
             results[alg].append(acc)
-            print(f"rep {rep} {alg:10s} acc={acc:.4f}", flush=True)
+            wire = ""
+            if args.compress:
+                from repro.obs import format_bytes
+
+                wire = f"  up={format_bytes(hist.summary()['bytes_up'])}"
+            print(f"rep {rep} {alg:10s} acc={acc:.4f}{wire}", flush=True)
             if backend == "event" and rep == 0:
                 # make the async behaviour observable: the event backend's
                 # per-round shared-schema telemetry (arrivals absorbed,

@@ -1,0 +1,199 @@
+"""``Compressor`` protocol + ``CommSpec``: the model of the client→server wire.
+
+A compressor, to this codebase, is three things:
+
+  1. a **lossy round-trip** ``roundtrip(rows, key) -> rows`` on raveled
+     stacked update deltas (A, D) — compress-then-decompress fused, because
+     the server decompresses immediately before aggregating. It MUST be
+     elementwise per client row: the sharded backends call it device-local
+     on their cohort shard before the existing psum reductions
+     (``batch_agg_psum`` / the BE Schur sums), so a row's compressed value
+     may depend only on that row;
+  2. **bytes accounting** — ``payload_bytes(d)``, the exact bytes one
+     client ships for a d-parameter update (values + scales/indices), the
+     basis of the ``bytes_up`` telemetry column;
+  3. **capability flags** the config layer queries instead of
+     string-matching names: ``lossless`` (the identity/no-compression
+     contract — endpoints pass through BITWISE untouched, no arithmetic),
+     ``uses_error_feedback`` (per-client residual rows accumulate the
+     compression error, averaging family only) and ``supports_flow``
+     (whether the round-trip is safe for the flow family's Γ-windowed
+     consensus endpoints — top-k is not: zeroing most of a BE endpoint
+     delta breaks the window semantics, so the combo is refused loudly).
+
+``CommSpec`` binds a compressor instance to a concrete model (d_model raw
+fp32 parameters) and seed, precomputes the per-client payload sizes, and
+owns the one composition every backend shares::
+
+    raw  = (x_new − x_ref) + e          # e: error-feedback residual rows
+    c    = roundtrip(raw, key(round))
+    e'   = raw − c                      # what the wire dropped, kept local
+    x'   = x_ref + c                    # the server's reconstructed endpoint
+
+Registration mirrors fed/algorithms/__init__.py (same decorator/registry
+pattern); built-ins live in comm/quantize.py and comm/topk.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+FP32_BYTES = 4
+
+
+class Compressor:
+    """Base protocol. Subclass, set ``name`` + flags + ``levels``, implement
+    ``roundtrip``/``payload_bytes``, and decorate with ``@register``
+    (comm/__init__.py). ``level`` indexes the compressor's own ordered
+    aggressiveness ladder — higher level, fewer bytes (the monotonicity
+    witness BENCH_comm.json pins)."""
+
+    name: ClassVar[str] = "base"
+    lossless: ClassVar[bool] = False
+    uses_error_feedback: ClassVar[bool] = True
+    supports_flow: ClassVar[bool] = True
+    levels: ClassVar[Tuple[int, ...]] = (0,)
+    default_level: ClassVar[int] = 0
+
+    def __init__(self, level: Optional[int] = None):
+        self.level = self.default_level if level is None else int(level)
+        if self.level not in self.levels:
+            raise ValueError(
+                f"compressor {self.name!r} has no level {level!r}; "
+                f"valid levels: {list(self.levels)}"
+            )
+
+    # ------------------------------------------------------------------
+    def payload_bytes(self, d: int) -> int:
+        """Exact bytes one client uploads for a d-parameter update."""
+        raise NotImplementedError
+
+    def roundtrip(self, rows: jax.Array, key: jax.Array) -> jax.Array:
+        """Lossy compress-decompress of raveled stacked deltas (A, D),
+        elementwise per row; ``key`` drives any stochastic rounding."""
+        raise NotImplementedError
+
+
+class Identity(Compressor):
+    """The uncompressed fp32 wire: full byte accounting, zero arithmetic.
+
+    ``lossless`` is the contract the equivalence pins rely on
+    (tests/test_backend_equiv.py): the comm layer short-circuits BEFORE any
+    delta/rebase arithmetic, so ``--compress identity`` is bitwise
+    identical to no ``--compress`` at all on every backend — a floating
+    point round-trip ``x_ref + (x − x_ref)`` would NOT be."""
+
+    name = "identity"
+    lossless = True
+    uses_error_feedback = False
+
+    def payload_bytes(self, d: int) -> int:
+        return FP32_BYTES * int(d)
+
+    def roundtrip(self, rows, key):
+        return rows
+
+
+def tree_dim(tree: Pytree) -> int:
+    """Raw fp32 parameter count of a model pytree (padding excluded) — the
+    d every bytes formula is quoted against."""
+    return int(sum(int(jnp.size(l)) for l in jax.tree.leaves(tree)))
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSpec:
+    """A compressor bound to a model: the object the backends close over.
+
+    Frozen + hashable via ``cache_key`` so the jit-cache keys of the
+    segment builders (sim/sharded.py, sim/events.py) can include it."""
+
+    comp: Compressor
+    d_model: int
+    seed: int = 0
+
+    @property
+    def lossless(self) -> bool:
+        return bool(self.comp.lossless)
+
+    @property
+    def error_feedback(self) -> bool:
+        return bool(self.comp.uses_error_feedback) and not self.lossless
+
+    @property
+    def payload_up(self) -> int:
+        """Bytes one client ships per absorbed endpoint (compressed)."""
+        return int(self.comp.payload_bytes(self.d_model))
+
+    @property
+    def payload_down(self) -> int:
+        """Bytes the server broadcasts per dispatched client: the full
+        fp32 model (compression is an uplink affair — the broadcast anchor
+        must be exact for Γ and the proximal pulls)."""
+        return FP32_BYTES * int(self.d_model)
+
+    def cache_key(self) -> Tuple:
+        return (self.comp.name, self.comp.level, self.d_model, self.seed)
+
+    # ------------------------------------------------------------------
+    def roundtrip(self, tree: Pytree, rnd) -> Pytree:
+        """Lossy round-trip of a stacked delta pytree (leaves (A, ...)),
+        raveled through the shared (A, D)+tile-padding helpers. ``rnd``
+        (python int or traced int scalar) folds into the stochastic-
+        rounding key so every round draws fresh noise deterministically."""
+        from repro.kernels.ops import ravel_stacked, unravel_stacked
+
+        flat, meta = ravel_stacked(tree)
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.seed),
+            jnp.asarray(rnd, jnp.uint32),
+        )
+        return unravel_stacked(self.comp.roundtrip(flat, key), meta)
+
+    def compress_endpoints(
+        self,
+        x_ref: Pytree,
+        x_new_a: Pytree,
+        ef_rows: Optional[Pytree],
+        rnd,
+    ) -> Tuple[Pytree, Optional[Pytree]]:
+        """THE shared composition: compress cohort endpoints against the
+        broadcast reference, with optional error-feedback residual rows.
+
+        Returns ``(x_new_a', ef_rows')`` — the server-reconstructed
+        endpoints and the updated residuals (None in, None out). Lossless
+        compressors return both inputs untouched (bitwise, no arithmetic).
+        Elementwise per cohort row, so it runs identically in the dense
+        per-round paths and device-local inside shard_map segments."""
+        if self.lossless:
+            return x_new_a, ef_rows
+        raw = jax.tree.map(
+            lambda xa, xc: xa.astype(jnp.float32)
+            - xc.astype(jnp.float32)[None],
+            x_new_a, x_ref,
+        )
+        if ef_rows is not None:
+            raw = jax.tree.map(jnp.add, raw, ef_rows)
+        c = self.roundtrip(raw, rnd)
+        ef_new = (
+            jax.tree.map(jnp.subtract, raw, c)
+            if ef_rows is not None else None
+        )
+        x_new = jax.tree.map(
+            lambda xc, d: xc.astype(jnp.float32)[None] + d, x_ref, c
+        )
+        return x_new, ef_new
+
+    # -- error-feedback residual state (algorithm-owned rows) --------------
+    def init_ef_state(self, params: Pytree, n: int) -> Pytree:
+        """Fresh per-client residual rows, leaves (n, ...): zeros — the
+        same layout as WeightedDeltaAlgorithm.init_client_state, and
+        threaded through the backends by the same gather/one-hot-scatter
+        machinery (DESIGN.md §11)."""
+        return jax.tree.map(
+            lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params
+        )

@@ -1,0 +1,25 @@
+"""Pallas kernels for the client→server wire (repro.comm).
+
+quantize.py — int8/int4 stochastic quantize-dequantize round-trip
+topk.py     — top-k magnitude sparsification mask
+
+Both follow the kernels/batch_agg.py idiom (grid over D tiles, cohort axis
+resident per tile, CPU interpret mode as the correctness target) and are
+elementwise per client row — the property that makes them psum-compatible
+device-local calls under the sharded backends (DESIGN.md §11).
+"""
+from repro.comm.kernels.quantize import (
+    quant_scale,
+    stoch_quant_call,
+    stoch_quant_ref,
+)
+from repro.comm.kernels.topk import (
+    topk_mask_call,
+    topk_mask_ref,
+    topk_threshold,
+)
+
+__all__ = [
+    "quant_scale", "stoch_quant_call", "stoch_quant_ref",
+    "topk_mask_call", "topk_mask_ref", "topk_threshold",
+]

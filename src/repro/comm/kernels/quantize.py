@@ -1,0 +1,81 @@
+"""Stochastic fixed-point quantization kernels (Pallas TPU).
+
+The client→server wire for a quantizing compressor carries, per client, one
+fp32 scale plus one b-bit integer per parameter; the server immediately
+dequantizes before aggregating. This module implements the *simulated
+round-trip* q(x) = clip(⌊x/s + u⌋, −Q, Q)·s with per-client-row absmax
+scales s = max|x|/Q and u ~ U[0,1) stochastic-rounding noise (E[q(x)] = x,
+the unbiasedness error-feedback relies on).
+
+Engineering shape mirrors kernels/batch_agg.py: grid over D tiles with the
+whole cohort axis resident per tile, full-array BlockSpecs for the (A,)
+scale vector, CPU interpret mode as the correctness target. The uniform
+noise is drawn OUTSIDE the kernel with ``jax.random`` and passed in as an
+(A, D) operand — the TPU-native in-kernel PRNG (pltpu.prng_random_bits) has
+no interpret-mode contract on this container, and an explicit operand keeps
+the kernel bitwise reproducible against the numpy reference below.
+
+The round-trip is elementwise per client row, which is exactly what makes
+it psum-compatible: each shard of the sharded backends quantizes its local
+cohort rows device-side and the existing psum reductions aggregate the
+dequantized values unchanged (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+TILE_D = 1024
+
+# guard for all-zero rows: scale 0 would divide out to inf; the clamped
+# scale sends them through q = ⌊u⌋ = 0 → out 0 (bitwise what the raw row was)
+_EPS = 1e-12
+
+
+def _stoch_quant_kernel(scale_ref, x_ref, u_ref, out_ref, *, q_max: float):
+    s = jnp.maximum(scale_ref[:], _EPS)[:, None]
+    q = jnp.clip(jnp.floor(x_ref[:, :] / s + u_ref[:, :]), -q_max, q_max)
+    out_ref[:, :] = q * s
+
+
+def stoch_quant_call(
+    x, u, scale, q_max: float, *, interpret: bool = True, tile_d: int = TILE_D
+):
+    """Quantize-dequantize round-trip: out (A, D) = clip(⌊x/s + u⌋, ±Q)·s.
+
+    x, u (A, D); scale (A,) per-row absmax/Q. Caller guarantees
+    D % tile_d == 0 (comm/base.py ravels through kernels/ops.py padding).
+    """
+    A, D = x.shape
+    assert D % tile_d == 0, (D, tile_d)
+    full = lambda s: pl.BlockSpec(s, lambda i: (0,) * len(s))
+    tile = pl.BlockSpec((A, tile_d), lambda i: (0, i))
+    return pl.pallas_call(
+        partial(_stoch_quant_kernel, q_max=float(q_max)),
+        grid=(D // tile_d,),
+        in_specs=[full((A,)), tile, tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((A, D), jnp.float32),
+        interpret=interpret,
+    )(scale, x, u)
+
+
+def quant_scale(x, q_max: float):
+    """Per-row quantization scale s_a = max_d |x[a, d]| / Q, shape (A,)."""
+    return jnp.max(jnp.abs(x), axis=-1) / float(q_max)
+
+
+def stoch_quant_ref(x, u, scale, q_max: float) -> np.ndarray:
+    """Numpy oracle for ``stoch_quant_call`` (same clamped-scale formula, so
+    tests assert bitwise-level agreement in interpret mode)."""
+    x = np.asarray(x, np.float32)
+    s = np.maximum(np.asarray(scale, np.float32), np.float32(_EPS))[:, None]
+    q = np.clip(
+        np.floor(x / s + np.asarray(u, np.float32)),
+        -np.float32(q_max), np.float32(q_max),
+    )
+    return (q * s).astype(np.float32)

@@ -1,0 +1,70 @@
+"""Top-k sparsification kernel (Pallas TPU).
+
+The top-k wire carries, per client, k (value, index) pairs — the k
+largest-magnitude entries of the update delta; everything else is dropped
+on the client and reconstructed as zero on the server. The simulated
+round-trip is a per-row magnitude threshold mask: out = x·1[|x| ≥ t_a]
+with t_a the k-th largest |x[a, :]| (computed outside the kernel with
+``jax.lax.top_k`` — a D-length sort per row is host-of-kernel work, the
+masked select is the bandwidth-bound part the kernel fuses).
+
+Ties at the threshold all survive (the mask is ≥, not a strict count), so
+the kept set can exceed k by the tie multiplicity; the bytes accounting
+(comm/base.py) charges the nominal k. Deterministic — no rounding noise —
+so the sharded device-local call matches the dense call exactly.
+
+Blocking mirrors kernels/batch_agg.py: grid over D tiles, cohort axis
+resident, (A,) threshold vector as a full-array operand, interpret mode on
+CPU validated against the numpy reference in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+TILE_D = 1024
+
+
+def _topk_mask_kernel(thr_ref, x_ref, out_ref):
+    t = thr_ref[:][:, None]
+    x = x_ref[:, :]
+    out_ref[:, :] = jnp.where(jnp.abs(x) >= t, x, 0.0)
+
+
+def topk_mask_call(x, thr, *, interpret: bool = True, tile_d: int = TILE_D):
+    """out (A, D) = x masked to entries with |x| >= thr_a (per-row).
+
+    Caller guarantees D % tile_d == 0 (comm/base.py ravels through the
+    kernels/ops.py padding helpers).
+    """
+    A, D = x.shape
+    assert D % tile_d == 0, (D, tile_d)
+    full = lambda s: pl.BlockSpec(s, lambda i: (0,) * len(s))
+    tile = pl.BlockSpec((A, tile_d), lambda i: (0, i))
+    return pl.pallas_call(
+        _topk_mask_kernel,
+        grid=(D // tile_d,),
+        in_specs=[full((A,)), tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((A, D), jnp.float32),
+        interpret=interpret,
+    )(thr, x)
+
+
+def topk_threshold(x, k: int):
+    """(A,) k-th largest |x[a, :]| per row. ``k`` is a static python int
+    clamped to [1, D]; an all-zero row yields threshold 0 (every entry
+    survives the ≥ mask bitwise — they are all zeros anyway)."""
+    D = x.shape[-1]
+    k = int(min(max(1, k), D))
+    vals = jax.lax.top_k(jnp.abs(x), k)[0]
+    return vals[..., -1]
+
+
+def topk_mask_ref(x, thr) -> np.ndarray:
+    """Numpy oracle for ``topk_mask_call``."""
+    x = np.asarray(x, np.float32)
+    t = np.asarray(thr, np.float32)[:, None]
+    return np.where(np.abs(x) >= t, x, np.float32(0.0)).astype(np.float32)

@@ -50,6 +50,12 @@ class FederatedAlgorithm:
 
     def __init__(self, cfg=None):
         self.cfg = cfg
+        # the wire model (repro.comm.CommSpec) FedSim binds after it knows
+        # the model, plus the error-feedback residual rows it allocates when
+        # the compressor calls for them (averaging family only) — None until
+        # then so direct-construction tests stay valid
+        self.comm = None
+        self.comm_state = None
 
     # ------------------------------------------------------------- client --
     def client_mu(self) -> float:
@@ -185,13 +191,43 @@ class WeightedDeltaAlgorithm(FederatedAlgorithm):
         full (n, ...) tensor from its jit-resident fori_loop)."""
         self.client_state = state
 
+    # -- error-feedback residual rows (comm, DESIGN.md §11) ----------------
+    def comm_rows(self, idx) -> Optional[Pytree]:
+        """Per-client error-feedback residual rows gathered at ``idx``
+        (leaves (A, ...)), or None when the wire is lossless / EF-free.
+        Same gather as ``client_rows`` — residuals are algorithm-owned rows
+        exactly like FedADMM's duals, just keyed by the compressor."""
+        if self.comm_state is None:
+            return None
+        return jax.tree.map(lambda l: l[jnp.asarray(idx)], self.comm_state)
+
+    def set_comm_state(self, state: Pytree) -> None:
+        """Install updated residual rows wholesale (sharded segment)."""
+        self.comm_state = state
+
     # -- dense aggregation -------------------------------------------------
     def aggregate(self, sim, plan, result) -> None:
         p_a = jnp.asarray(sim.p_hat[plan.idx], jnp.float32)
         tau_a = jnp.asarray(result.taus, jnp.float32)
         w, scale = self.agg_weights(p_a, tau_a)
         rows = self.client_rows(sim, plan.idx)
-        y_a, new_rows = self.agg_transform(sim.params, result.x_new_a, rows)
+        x_new_a = result.x_new_a
+        comm = self.comm
+        if comm is not None and not comm.lossless:
+            # compress the cohort endpoints against the broadcast reference
+            # BEFORE the endpoint transform, so the transform (and the one
+            # shared weighted-delta) consumes exactly what the wire carried
+            ef = self.comm_rows(plan.idx)
+            x_new_a, ef_new = comm.compress_endpoints(
+                sim.params, x_new_a, ef, plan.rnd
+            )
+            if ef_new is not None:
+                from repro.core.flow import put_rows
+
+                self.comm_state = put_rows(
+                    self.comm_state, jnp.asarray(plan.idx), ef_new
+                )
+        y_a, new_rows = self.agg_transform(sim.params, x_new_a, rows)
         sim.params = apply_weighted_delta(
             sim.params, y_a, w, scale, use_kernel=sim.cfg.agg_kernels
         )

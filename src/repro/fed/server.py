@@ -153,6 +153,15 @@ class FedSimConfig:
     # Chrome-trace JSON of host-side spans (plan draw, segment dispatch,
     # gain refresh, eval) — load in chrome://tracing / ui.perfetto.dev
     trace_json: Optional[str] = None
+    # --- client→server wire (repro/comm, DESIGN.md §11) ---
+    # a registered compressor name (identity | int8 | int4 | topk); None =
+    # the uncompressed fp32 wire (still accounted: every record carries
+    # bytes_up/bytes_down). Compressor × algorithm combos the capability
+    # flags forbid (topk × flow dynamics) are refused at construction.
+    compress: Optional[str] = None
+    # the compressor's own aggressiveness ladder (topk kept-fraction level);
+    # None = the plugin's default_level
+    compress_level: Optional[int] = None
 
 
 class FedSim:
@@ -195,6 +204,21 @@ class FedSim:
 
         self.params = jax.tree.map(lambda l: l.astype(jnp.float32), params0)
         self.state = None
+        # the wire model: ALWAYS built (identity when cfg.compress is None)
+        # so bytes accounting is unconditional; refuses forbidden
+        # compressor × algorithm combos with an actionable error
+        from repro.comm import make_comm_spec  # lazy: kernels import chain
+
+        self.comm = make_comm_spec(
+            cfg.compress, cfg.compress_level, self.params,
+            seed=cfg.seed, alg_cls=type(self.alg),
+        )
+        self.alg.comm = self.comm
+        if self.comm.error_feedback and not self.alg.has_flow_dynamics:
+            # error-feedback residual rows: averaging family only — the flow
+            # family compresses EF-free on every backend so the dense and
+            # event/sharded paths agree on what the wire carries
+            self.alg.comm_state = self.comm.init_ef_state(self.params, self.n)
         # algorithm-owned server state (flow variables + gains, dual rows,
         # ...); any host rng it draws (gain estimation batches) comes first
         # in the consumption order, exactly as the seed behaviour
@@ -290,17 +314,32 @@ class FedSim:
         build the round's shared telemetry record — the solver stats the
         plugin stashed on device come back in one batched device_get (these
         backends already sync per round, so this adds no sync points)."""
+        if self.alg.has_flow_dynamics and not self.comm.lossless:
+            # flow family: compress the consensus endpoints against the
+            # dispatch reference x_c before the BE round consumes them
+            # (EF-free by design — the averaging family hooks compression
+            # inside WeightedDeltaAlgorithm.aggregate with residual rows)
+            result.x_new_a, _ = self.comm.compress_endpoints(
+                self.current_params(), result.x_new_a, None, plan.rnd
+            )
         self.alg.aggregate(self, plan, result)
         loss = float(np.mean(result.losses))
+        cohort = plan.cohort_size
+        bytes_up = cohort * self.comm.payload_up
+        bytes_down = cohort * self.comm.payload_down
         stats = self.alg.pop_round_stats()
         if stats is None:
-            return make_record(plan.rnd, loss=loss, cohort=plan.cohort_size)
+            return make_record(
+                plan.rnd, loss=loss, cohort=cohort,
+                bytes_up=bytes_up, bytes_down=bytes_down,
+            )
         s = jax.device_get(stats)
         return make_record(
-            plan.rnd, loss=loss, cohort=plan.cohort_size,
+            plan.rnd, loss=loss, cohort=cohort,
             substeps=s.n_substeps, backtracks=s.n_backtracks,
             dt_min=s.dt_min, dt_max=s.dt_max, dt_sum=s.dt_sum,
             tau_end=s.tau_end,
+            bytes_up=bytes_up, bytes_down=bytes_down,
         )
 
     # ------------------------------------------------------------------

@@ -91,6 +91,7 @@ class _Obs:
 
 
 def main() -> None:
+    from repro.comm import available_compressors, make_comm_spec
     from repro.fed.algorithms import available_algorithms, get_algorithm
 
     # this driver runs the consensus machinery directly, so only registered
@@ -146,6 +147,20 @@ def main() -> None:
         "0 disables the damping (>= 0)",
     )
     ap.add_argument(
+        "--compress", choices=available_compressors(), default=None,
+        help="lossy uplink compressor from the repro/comm registry applied "
+        "to each cohort endpoint before it reaches the server (identity = "
+        "full-precision accounting only); this driver is flow-only, so "
+        "compressors whose plugin declares supports_flow=False are "
+        "rejected with the eligible names listed",
+    )
+    ap.add_argument(
+        "--compress-level", type=int, default=None,
+        help="compressor-specific level (e.g. topk keep-fraction tier); "
+        "omit for the compressor's default — invalid levels are rejected "
+        "with the valid set listed",
+    )
+    ap.add_argument(
         "--log-jsonl", default=None,
         help="write a structured JSONL run log (header + one shared-schema "
         "record per round + summary; repro/obs, DESIGN.md §9)",
@@ -183,11 +198,27 @@ def main() -> None:
             "--buffer-size is an event-backend knob; add --backend event"
         )
 
+    if args.compress_level is not None and args.compress is None:
+        ap.error("--compress-level requires --compress (pick a compressor "
+                 f"from: {', '.join(available_compressors())})")
+
     cfg = get_smoke_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
     lf = lambda p, b: loss_fn(p, b, cfg)
     client_kind = get_algorithm(args.algorithm).client_kind
+
+    # wire model: always built (identity when --compress is absent) so
+    # bytes_up/bytes_down accounting is unconditional; level and the
+    # compressor × flow-algorithm combo are validated here, before any
+    # training work
+    try:
+        comm = make_comm_spec(
+            args.compress, args.compress_level, params,
+            seed=args.seed, alg_cls=get_algorithm(args.algorithm),
+        )
+    except ValueError as e:
+        ap.error(str(e))
 
     ccfg = ConsensusConfig(L=0.05, delta=1e-3, dt_init=0.05, max_substeps=16)
     state = init_server_state(params, args.clients, ccfg.dt_init)
@@ -205,10 +236,12 @@ def main() -> None:
         return np.stack([[s[a:a + args.seq_len] for a in row] for row in starts])
 
     if args.backend == "sharded":
-        _run_sharded(args, lf, ccfg, state, batches_for, rng, client_kind)
+        _run_sharded(args, lf, ccfg, state, batches_for, rng, client_kind,
+                     comm)
         return
     if args.backend == "event":
-        _run_event(args, lf, ccfg, state, batches_for, rng, client_kind)
+        _run_event(args, lf, ccfg, state, batches_for, rng, client_kind,
+                   comm)
         return
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -240,6 +273,12 @@ def main() -> None:
                 x_new_a, losses = cohort_train(
                     state.x_c, I_a, batches_a, jnp.asarray(lrs), ones_cohort, full_steps
                 )
+                if not comm.lossless:
+                    # lossy wire: the server only ever sees the compressed
+                    # endpoints (flow family — no error feedback)
+                    x_new_a, _ = comm.compress_endpoints(
+                        state.x_c, x_new_a, None, rnd
+                    )
                 T_a = jnp.asarray(lrs * args.steps, jnp.float32)
                 state, stats = round_fn(
                     state, x_new_a, T_a, jnp.asarray(idx, jnp.int32)
@@ -250,12 +289,15 @@ def main() -> None:
                 substeps=s.n_substeps, backtracks=s.n_backtracks,
                 dt_min=s.dt_min, dt_max=s.dt_max, dt_sum=s.dt_sum,
                 tau_end=s.tau_end,
+                bytes_up=args.cohort * comm.payload_up,
+                bytes_down=args.cohort * comm.payload_down,
             ), t0)
     obs.close()
     print("done — cohort training and consensus both executed on the mesh")
 
 
-def _run_event(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
+def _run_event(args, lf, ccfg, state, batches_for, rng, client_kind,
+               comm) -> None:
     """Cohort training + the flight-table event round on device: busy draws
     are masked before dispatch, stragglers carry across rounds, and the
     per-round multi-rate stats are printed. ``--buffer-size K`` switches
@@ -278,9 +320,13 @@ def _run_event(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
     stale_gamma = args.stale_gamma if buffer_k else 0.0
 
     @partial(jax.jit, static_argnums=())
-    def event_round(state_tup, tab, x_new_a, idx, Ts, dmask):
+    def event_round(state_tup, tab, x_new_a, idx, Ts, dmask, rnd):
         x_c, I, g_inv, dt_last, t = state_tup
         A = idx.shape[0]
+        if not comm.lossless:
+            # lossy wire: endpoints enter the flight table compressed, so
+            # stragglers age and re-base on exactly what the wire carried
+            x_new_a, _ = comm.compress_endpoints(x_c, x_new_a, None, rnd)
         tab, refused = flight_insert_checked(
             tab, idx, broadcast_clients(x_c, A), x_new_a, Ts, dmask
         )
@@ -309,6 +355,7 @@ def _run_event(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
             x_c, I, dt_last, t, table, st, refused = event_round(
                 (state.x_c, state.I, state.g_inv, state.dt_last, state.t),
                 table, x_new_a, jnp.asarray(idx, jnp.int32), Ts, dmask,
+                jnp.asarray(rnd, jnp.int32),
             )
             state = state._replace(
                 x_c=x_c, I=I, dt_last=dt_last, t=t, round=state.round + 1
@@ -327,6 +374,10 @@ def _run_event(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
             waves=st.waves, arrived=st.arrived, stale=st.stale,
             horizon=st.horizon, tau_end=st.tau_end,
             stale_hist=np.asarray(st.stale_hist),
+            # uplink charged at absorption, downlink at dispatch — busy
+            # re-draws were never dispatched, so they cost nothing
+            bytes_up=int(st.arrived) * comm.payload_up,
+            bytes_down=int(kept) * comm.payload_down,
         ), t0, extra=(
             {"max_stale": int(st.max_stale)} if buffer_k else None
         ))
@@ -334,7 +385,8 @@ def _run_event(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
     print("done — flight-table event rounds executed on device")
 
 
-def _run_sharded(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
+def _run_sharded(args, lf, ccfg, state, batches_for, rng, client_kind,
+                 comm) -> None:
     """Cohort training + consensus through the sharded backend's building
     blocks: shard_map local integration over the 1-D clients mesh and the
     psum Schur-arrowhead solve, with the cohort padded to the device count."""
@@ -376,6 +428,12 @@ def _run_sharded(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
                 jnp.asarray(lrs_p), jnp.ones((A_pad,), jnp.float32),
                 jnp.asarray(n_valid),
             )
+            if not comm.lossless:
+                # padded rows ride along (their masked weights discard the
+                # result); real rows enter the psum consensus compressed
+                x_new_a, _ = comm.compress_endpoints(
+                    state.x_c, x_new_a, None, rnd
+                )
             x_c, I, dt_last, t, tel = apply_fn(
                 state.x_c, state.I, state.g_inv, state.dt_last, state.t,
                 x_new_a, jnp.asarray(idx_p), jnp.asarray(sidx), jnp.asarray(mask),
@@ -391,6 +449,7 @@ def _run_sharded(args, lf, ccfg, state, batches_for, rng, client_kind) -> None:
             rnd, loss=loss, cohort=A,
             substeps=tel[0], backtracks=tel[1],
             dt_min=tel[2], dt_max=tel[3], dt_sum=tel[4], tau_end=tel[5],
+            bytes_up=A * comm.payload_up, bytes_down=A * comm.payload_down,
         ), t0, extra={"devices": n_dev, "padded": A_pad})
     obs.close()
     print("done — sharded cohort training + psum consensus on the clients mesh")

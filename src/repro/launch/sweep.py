@@ -93,7 +93,8 @@ def build_problem(seed: int, n_samples: int = 2048, dim: int = 32,
 
 def _make_cfg(algorithm, scenario, seed, backend, *, rounds, clients,
               participation, batch_size, steps_per_epoch, event_horizon=1.0,
-              buffer_size=0, stale_gamma=0.25):
+              buffer_size=0, stale_gamma=0.25, compress=None,
+              compress_level=None):
     from repro.core import ConsensusConfig
     from repro.fed import FedSimConfig
 
@@ -105,6 +106,7 @@ def _make_cfg(algorithm, scenario, seed, backend, *, rounds, clients,
         event_horizon=event_horizon,
         event_buffered=buffer_size > 0, event_buffer_size=buffer_size,
         event_stale_gamma=stale_gamma,
+        compress=compress, compress_level=compress_level,
         # L tuned on the table-1 config (benchmarks/run.py)
         consensus=ConsensusConfig(L=0.01),
     )
@@ -220,6 +222,8 @@ def run_sweep(
     event_horizon: float = 1.0,
     buffer_size: int = 0,
     stale_gamma: float = 0.25,
+    compress: Optional[str] = None,
+    compress_level: Optional[int] = None,
     equiv_scenarios: Sequence[str] = DEFAULT_EQUIV_SCENARIOS,
     equiv_rounds: int = 2,
     equiv_rtol: float = 1e-6,
@@ -257,6 +261,19 @@ def run_sweep(
         )
     if stale_gamma < 0:
         raise ValueError(f"stale_gamma must be >= 0; got {stale_gamma}")
+    if compress_level is not None and compress is None:
+        raise ValueError(
+            f"compress_level={compress_level} requires a compressor name; "
+            "pass compress= as well"
+        )
+    if compress is not None:
+        # validate the name, the level AND every compressor × algorithm
+        # combo against the comm registry before any cell runs
+        from repro.comm import check_algorithm, get_compressor
+
+        get_compressor(compress)(compress_level)
+        for a in algorithms:
+            check_algorithm(compress, get_algorithm(a))
     if backend == "event":
         # the event scheduler is flow-only; fail before any cell runs
         bad = [a for a in algorithms if not get_algorithm(a).has_flow_dynamics]
@@ -271,7 +288,8 @@ def run_sweep(
             )
 
     grid = dict(rounds=rounds, clients=clients, participation=participation,
-                batch_size=batch_size, steps_per_epoch=steps_per_epoch)
+                batch_size=batch_size, steps_per_epoch=steps_per_epoch,
+                compress=compress, compress_level=compress_level)
     report: Dict[str, object] = {
         "schema_version": SCENARIO_BENCH_SCHEMA_VERSION,
         "benchmark": "scenarios",
@@ -302,6 +320,13 @@ def run_sweep(
         report["buffered"] = {
             "buffer_size": int(buffer_size),
             "stale_gamma": float(stale_gamma),
+        }
+    if compress:
+        # record the wire model so compressed matrices are self-describing
+        # (telemetry bytes_up/bytes_down columns carry the measured totals)
+        report["compression"] = {
+            "compress": compress,
+            "level": None if compress_level is None else int(compress_level),
         }
 
     backends_cache: Dict[str, object] = {}
@@ -364,7 +389,13 @@ def run_sweep(
     # ---- backend-equivalence grid ---------------------------------------
     if equiv_scenarios:
         problem = build_problem(0)
-        egrid = dict(grid, rounds=equiv_rounds)
+        # the equivalence grid always runs the lossless wire: its contract
+        # is backend-vs-oracle bitwise-level agreement, and stochastic
+        # quantization draws its noise in backend-specific shapes (the
+        # identity==off equivalence is pinned separately in
+        # tests/test_backend_equiv.py)
+        egrid = dict(grid, rounds=equiv_rounds,
+                     compress=None, compress_level=None)
         for scenario in equiv_scenarios:
             for algorithm in algorithms:
                 hists = {}
@@ -446,6 +477,20 @@ def main() -> None:
         help="buffered mode: staleness damping w = 1/(1 + gamma*rounds) "
         "applied to endpoints that waited in the buffer",
     )
+    from repro.comm import available_compressors
+
+    ap.add_argument(
+        "--compress", choices=available_compressors(), default=None,
+        help="lossy uplink compressor (repro/comm registry) applied to "
+        "every accuracy-matrix cell; the equivalence grid always runs "
+        "lossless. Compressor × algorithm combos are validated before any "
+        "cell runs (e.g. topk is refused for flow-dynamics algorithms)",
+    )
+    ap.add_argument(
+        "--compress-level", type=int, default=None,
+        help="compressor-specific level; omit for the compressor's default "
+        "— invalid levels are rejected with the valid set listed",
+    )
     ap.add_argument(
         "--equiv-scenarios", default=",".join(DEFAULT_EQUIV_SCENARIOS),
         help="scenarios for the sequential/vectorized/sharded equivalence "
@@ -479,6 +524,22 @@ def main() -> None:
         )
     if args.stale_gamma < 0:
         ap.error(f"--stale-gamma must be >= 0; got {args.stale_gamma}")
+    if args.compress_level is not None and args.compress is None:
+        ap.error(
+            f"--compress-level requires --compress (pick one of: "
+            f"{', '.join(available_compressors())})"
+        )
+    if args.compress:
+        from repro.comm import check_algorithm, get_compressor
+        from repro.fed.algorithms import get_algorithm
+
+        try:
+            get_compressor(args.compress)(args.compress_level)
+            for a in args.algorithms.split(","):
+                if a:
+                    check_algorithm(args.compress, get_algorithm(a))
+        except ValueError as e:
+            ap.error(str(e))
 
     report = run_sweep(
         [a for a in args.algorithms.split(",") if a],
@@ -488,6 +549,7 @@ def main() -> None:
         steps_per_epoch=args.steps_per_epoch, backend=args.backend,
         event_horizon=args.event_horizon,
         buffer_size=args.buffer_size, stale_gamma=args.stale_gamma,
+        compress=args.compress, compress_level=args.compress_level,
         equiv_scenarios=[s for s in args.equiv_scenarios.split(",") if s],
         equiv_rounds=args.equiv_rounds, equiv_rtol=args.equiv_rtol,
         json_path=args.json or None, log_dir=args.log_dir,

@@ -2,7 +2,7 @@
 all four execution backends (device half), plus JSONL run logs, Chrome
 trace spans, a structured run history and the shared round-line formatter
 (host half). See DESIGN.md §9."""
-from .format import format_counters, format_round_line
+from .format import format_bytes, format_counters, format_round_line
 from .history import RunHistory
 from .runlog import (
     RUNLOG_SCHEMA_VERSION,
@@ -37,6 +37,7 @@ __all__ = [
     "TraceRecorder",
     "environment_stamp",
     "field_index",
+    "format_bytes",
     "format_counters",
     "format_round_line",
     "jsonable",

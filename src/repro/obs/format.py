@@ -11,6 +11,16 @@ import math
 from typing import Any, Dict, Optional
 
 
+def format_bytes(n: int) -> str:
+    """Human-scale byte count: 812B, 14.2KB, 3.1MB, 1.2GB."""
+    n = float(n)
+    for unit in ("B", "KB", "MB", "GB"):
+        if abs(n) < 1024.0 or unit == "GB":
+            return f"{n:.0f}{unit}" if unit == "B" else f"{n:.1f}{unit}"
+        n /= 1024.0
+    return f"{n:.1f}GB"  # pragma: no cover - unreachable
+
+
 def _num(v: float) -> str:
     if isinstance(v, bool):
         return str(int(v))
@@ -53,6 +63,11 @@ def format_round_line(
             f"arrived {rec.get('arrived', 0)} stale {rec.get('stale', 0)} "
             f"waves {rec.get('waves', 0)} dropped {rec.get('dropped', 0)}"
         )
+    if rec.get("bytes_up"):
+        parts.append(
+            f"up {format_bytes(rec['bytes_up'])} "
+            f"down {format_bytes(rec.get('bytes_down', 0))}"
+        )
     for key, v in (extra or {}).items():
         parts.append(f"{key} {_num(v) if isinstance(v, (int, float)) else v}")
     line = "  ".join(parts)
@@ -73,4 +88,6 @@ def format_counters(summary: Dict[str, Any]) -> str:
         parts.append(f"stale={summary['stale']}")
     if summary.get("dropped"):
         parts.append(f"dropped={summary['dropped']}")
+    if summary.get("bytes_up"):
+        parts.append(f"up={format_bytes(summary['bytes_up'])}")
     return " ".join(parts)

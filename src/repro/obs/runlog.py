@@ -170,7 +170,7 @@ def validate_record(rec: Dict[str, Any]) -> None:
                 f"stale_hist must be a {N_STALE_BUCKETS}-list, got {hist!r}"
             )
         for key in ("cohort", "dropped", "substeps", "backtracks",
-                    "waves", "arrived", "stale"):
+                    "waves", "arrived", "stale", "bytes_up", "bytes_down"):
             if not isinstance(rec[key], int):
                 raise ValueError(f"counter {key!r} must be an int")
     else:  # summary

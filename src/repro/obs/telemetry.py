@@ -47,6 +47,8 @@ TELEMETRY_FIELDS = (
     "stale",       # flights left pending past the round horizon
     "horizon",     # event round horizon W (quantile of in-flight windows)
     "tau_end",     # centrally integrated time this round
+    "bytes_up",    # client→server bytes this round (Σ absorbed payloads)
+    "bytes_down",  # server→client bytes this round (full fp32 broadcast)
 )
 
 # staleness histogram: bucket b counts pending flights whose stale_rounds
@@ -60,7 +62,7 @@ _F = {name: i for i, name in enumerate(TELEMETRY_FIELDS)}
 # integral counters (host records carry them as python ints)
 _INT_FIELDS = frozenset(
     ("cohort", "dropped", "substeps", "backtracks", "waves", "arrived",
-     "stale")
+     "stale", "bytes_up", "bytes_down")
 )
 
 # the pinned key set of a host record: every TELEMETRY_FIELDS entry except
@@ -143,6 +145,8 @@ def make_record(
     stale: int = 0,
     horizon: float = 0.0,
     tau_end: float = 0.0,
+    bytes_up: int = 0,
+    bytes_down: int = 0,
     stale_hist: Optional[Sequence[int]] = None,
 ) -> Dict[str, Any]:
     """Host-side record constructor (the dense per-round backends and the
@@ -158,6 +162,7 @@ def make_record(
         waves=waves,
         arrived=cohort if arrived is None else arrived,
         stale=stale, horizon=horizon, tau_end=tau_end,
+        bytes_up=bytes_up, bytes_down=bytes_down,
     )
     for name, v in vals.items():
         rec[name] = _clean(name, v)
@@ -214,6 +219,8 @@ def summarize_records(records: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
         "dropped": int(sum(r["dropped"] for r in records)),
         "arrived": int(sum(r["arrived"] for r in records)),
         "stale": int(sum(r["stale"] for r in records)),
+        "bytes_up": int(sum(r["bytes_up"] for r in records)),
+        "bytes_down": int(sum(r["bytes_down"] for r in records)),
         "dt_min": float(min(dt_mins)) if dt_mins else 0.0,
         "dt_max": float(max(r["dt_max"] for r in records)),
         "dt_mean": float(dt_sum) / subs if subs else 0.0,

@@ -95,13 +95,14 @@ _XROW_W = _ROW_W + 1
 _LOSS, _COHORT, _DROPPED = (
     field_index("loss"), field_index("cohort"), field_index("dropped")
 )
+_BYTES_DOWN = field_index("bytes_down")
 
 
 def _event_round(
     x_c, I, g_inv, dt_last, t, tab,
     x_new_rows, idx, Ts, dmask,
     ccfg, hq, max_waves, axis_name=None, offset=0,
-    buffer_k=None, stale_gamma=0.0,
+    buffer_k=None, stale_gamma=0.0, comm=None, rnd=0,
 ):
     """One event round given already-integrated cohort endpoints: mask-aware
     flight insertion + the wave integrator. ``x_new_rows``/``idx``/``Ts``/
@@ -114,6 +115,12 @@ def _event_round(
     pre-insert drops onto)."""
     A = idx.shape[0]
     x_prev_rows = broadcast_clients(x_c, A)
+    if comm is not None and not comm.lossless:
+        # lossy wire: the endpoints enter the flight table already
+        # compressed against the dispatch reference x_c — stragglers then
+        # age and re-base on the COMPRESSED endpoint, exactly what a real
+        # buffered server would hold. EF-free (flow family contract).
+        x_new_rows, _ = comm.compress_endpoints(x_c, x_new_rows, None, rnd)
     tab, refused = flight_insert_checked(
         tab, idx, x_prev_rows, x_new_rows, Ts, dmask, offset=offset
     )
@@ -123,11 +130,17 @@ def _event_round(
         x_c, I, g_inv, dt_last, t, tab, ccfg, hq, max_waves,
         axis_name=axis_name, buffer_k=buffer_k, stale_gamma=stale_gamma,
     )
+    # uplink bytes are charged at ABSORPTION (arrived × payload): a flight's
+    # endpoint reaches the server when its window closes, not at dispatch —
+    # so stragglers' bytes land in the round that drains them. The payload
+    # sizes are static python ints, so this stays jit-safe.
+    payload_up = 0 if comm is None else comm.payload_up
     row = pack_row(
         substeps=st.substeps, backtracks=st.backtracks,
         dt_min=st.dt_min, dt_max=st.dt_max, dt_sum=st.dt_sum,
         waves=st.waves, arrived=st.arrived, stale=st.stale,
         horizon=st.horizon, tau_end=st.tau_end,
+        bytes_up=st.arrived * float(payload_up),
     )
     row = row.at[_DROPPED].set(refused)
     stats = jnp.concatenate(
@@ -149,7 +162,7 @@ def _masked_loss(loss, dmask, axis_name=None):
 
 def build_event_segment(
     loss_fn: Callable, ccfg, kind: str, mu: float, hq: float, max_waves: int,
-    buffer_k: Optional[int] = None, stale_gamma: float = 0.0,
+    buffer_k: Optional[int] = None, stale_gamma: float = 0.0, comm=None,
 ) -> Callable:
     """Jitted R-round dense event segment.
 
@@ -162,8 +175,10 @@ def build_event_segment(
     staleness weighting (DESIGN.md §10).
     """
     cohort = cohort_vmap_fn(loss_fn, kind, mu)
+    payload_down = 0 if comm is None else comm.payload_down
 
-    def body(x_c, I, g_inv, dt_last, t, tab, data, idx, mask, lrs, ns, Ts, sel, ps):
+    def body(x_c, I, g_inv, dt_last, t, tab, data, idx, mask, lrs, ns, Ts,
+             sel, ps, rnd0):
         R, A = idx.shape
         n = jax.tree.leaves(I)[0].shape[0]
 
@@ -182,11 +197,15 @@ def build_event_segment(
                 x_new_a, idx[r], Ts[r], dmask,
                 ccfg, hq, max_waves,
                 buffer_k=buffer_k, stale_gamma=stale_gamma,
+                comm=comm, rnd=rnd0 + r,
             )
             loss_r, n_disp = _masked_loss(loss_a, dmask)
             stats = stats.at[_DROPPED].add(jnp.sum(mask[r] * busy))
             stats = stats.at[_LOSS].set(loss_r)
             stats = stats.at[_COHORT].set(n_disp)
+            # downlink: the broadcast reference ships to each client actually
+            # dispatched this round (busy re-draws receive nothing)
+            stats = stats.at[_BYTES_DOWN].set(n_disp * float(payload_down))
             part = part.at[idx[r]].add(dmask, mode="drop")
             return (x_c, I, dt_last, t, tab, out.at[r].set(stats), part)
 
@@ -202,15 +221,20 @@ def build_event_segment(
 def build_event_segment_sharded(
     mesh, loss_fn: Callable, ccfg, kind: str, mu: float, hq: float,
     max_waves: int, buffer_k: Optional[int] = None, stale_gamma: float = 0.0,
+    comm=None,
 ) -> Callable:
     """The sharded event segment: same contract as ``build_event_segment``
     but shard_map-ed over the client mesh — cohort axis and flight-table
     capacity axis sharded, wave solves psum-reduced, plan arrays (R, A_pad)
     sharded on the cohort axis. Freshly dispatched endpoints are
-    all-gathered once per round so each shard can claim its table slots."""
+    all-gathered once per round so each shard can claim its table slots
+    (the lossy round-trip runs on the gathered rows inside ``_event_round``
+    — replicated per-row compute, one compression site for both modes)."""
     cohort = cohort_vmap_fn(loss_fn, kind, mu)
+    payload_down = 0 if comm is None else comm.payload_down
 
-    def body(x_c, I, g_inv, dt_last, t, tab, data, idx, mask, lrs, ns, Ts, sel, ps):
+    def body(x_c, I, g_inv, dt_last, t, tab, data, idx, mask, lrs, ns, Ts,
+             sel, ps, rnd0):
         R, A_loc = idx.shape
         C_loc = tab.alive.shape[0]
         n = jax.tree.leaves(I)[0].shape[0]
@@ -231,12 +255,14 @@ def build_event_segment_sharded(
                 gather(idx[r]), gather(Ts[r]), gather(dmask_loc),
                 ccfg, hq, max_waves, axis_name=AXIS, offset=offset,
                 buffer_k=buffer_k, stale_gamma=stale_gamma,
+                comm=comm, rnd=rnd0 + r,
             )
             loss_r, n_disp = _masked_loss(loss_loc, dmask_loc, AXIS)
             dropped = jax.lax.psum(jnp.sum(mask[r] * busy_loc), AXIS)
             stats = stats.at[_DROPPED].add(dropped)
             stats = stats.at[_LOSS].set(loss_r)
             stats = stats.at[_COHORT].set(n_disp)
+            stats = stats.at[_BYTES_DOWN].set(n_disp * float(payload_down))
             part = part.at[idx[r]].add(dmask_loc, mode="drop")
             return (x_c, I, dt_last, t, tab, out.at[r].set(stats), part)
 
@@ -254,7 +280,7 @@ def build_event_segment_sharded(
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(), P(), P(), P(), P(AXIS), P(),
-                  c2, c2, c2, c2, c2, c2, c2),
+                  c2, c2, c2, c2, c2, c2, c2, P()),
         out_specs=(P(), P(), P(), P(), P(AXIS), P(), P()),
         check_rep=False,
     )
@@ -263,16 +289,16 @@ def build_event_segment_sharded(
 
 def build_event_apply(
     ccfg, hq: float, max_waves: int,
-    buffer_k: Optional[int] = None, stale_gamma: float = 0.0,
+    buffer_k: Optional[int] = None, stale_gamma: float = 0.0, comm=None,
 ) -> Callable:
     """Insert+integrate-only dense event round (the ragged fallback): local
     integration already happened on the gathered cohort."""
 
-    def body(x_c, I, g_inv, dt_last, t, tab, x_new_a, idx, Ts, dmask):
+    def body(x_c, I, g_inv, dt_last, t, tab, x_new_a, idx, Ts, dmask, rnd):
         return _event_round(
             x_c, I, g_inv, dt_last, t, tab, x_new_a, idx, Ts, dmask,
             ccfg, hq, max_waves,
-            buffer_k=buffer_k, stale_gamma=stale_gamma,
+            buffer_k=buffer_k, stale_gamma=stale_gamma, comm=comm, rnd=rnd,
         )
 
     return jax.jit(body)
@@ -280,12 +306,13 @@ def build_event_apply(
 
 def build_event_apply_sharded(
     mesh, ccfg, hq: float, max_waves: int,
-    buffer_k: Optional[int] = None, stale_gamma: float = 0.0,
+    buffer_k: Optional[int] = None, stale_gamma: float = 0.0, comm=None,
 ) -> Callable:
     """Sharded ragged fallback: cohort rows arrive device-sharded, the
     table shards claim their slots after an all-gather."""
 
-    def body(x_c, I, g_inv, dt_last, t, tab, x_new_loc, idx_loc, Ts_loc, dm_loc):
+    def body(x_c, I, g_inv, dt_last, t, tab, x_new_loc, idx_loc, Ts_loc,
+             dm_loc, rnd):
         C_loc = tab.alive.shape[0]
         offset = jax.lax.axis_index(AXIS) * C_loc
         gather = lambda a: jax.lax.all_gather(a, AXIS, tiled=True)
@@ -294,13 +321,13 @@ def build_event_apply_sharded(
             jax.tree.map(gather, x_new_loc),
             gather(idx_loc), gather(Ts_loc), gather(dm_loc),
             ccfg, hq, max_waves, axis_name=AXIS, offset=offset,
-            buffer_k=buffer_k, stale_gamma=stale_gamma,
+            buffer_k=buffer_k, stale_gamma=stale_gamma, comm=comm, rnd=rnd,
         )
 
     c1 = P(AXIS)
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(), P(), P(), P(), P(AXIS), c1, c1, c1, c1),
+        in_specs=(P(), P(), P(), P(), P(), P(AXIS), c1, c1, c1, c1, P()),
         out_specs=(P(), P(), P(), P(), P(AXIS), P()),
         check_rep=False,
     )
@@ -411,6 +438,7 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
         return (
             sim.cfg.consensus, self.horizon_quantile, self.max_waves,
             self.sharded, self._buffer_k, self.stale_gamma,
+            sim.comm.cache_key(),
         )
 
     # ------------------------------------------------------------------
@@ -457,12 +485,14 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
                 self.mesh, sim.loss_fn, cfg.consensus, kind, mu,
                 self.horizon_quantile, self.max_waves,
                 buffer_k=self._buffer_k, stale_gamma=self.stale_gamma,
+                comm=sim.comm,
             )
         else:
             builder = lambda: build_event_segment(
                 sim.loss_fn, cfg.consensus, kind, mu,
                 self.horizon_quantile, self.max_waves,
                 buffer_k=self._buffer_k, stale_gamma=self.stale_gamma,
+                comm=sim.comm,
             )
         fn = self._fn(
             ("event_seg", id(sim.loss_fn), kind, mu, self._ccfg_key(sim)),
@@ -472,7 +502,7 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
         x_c, I, dt_last, t, tab, out, part = fn(
             st.x_c, st.I, st.g_inv, st.dt_last, st.t, self._table, data,
             arr(sp.idx), arr(sp.mask), arr(sp.lrs), arr(sp.n_steps),
-            arr(sp.Ts), arr(sp.sel), arr(ps),
+            arr(sp.Ts), arr(sp.sel), arr(ps), jnp.asarray(sp.rnd0, jnp.int32),
         )
         sim.state = st._replace(
             x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + R
@@ -530,18 +560,20 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
                 self.mesh, cfg.consensus, self.horizon_quantile,
                 self.max_waves,
                 buffer_k=self._buffer_k, stale_gamma=self.stale_gamma,
+                comm=sim.comm,
             )
         else:
             builder = lambda: build_event_apply(
                 cfg.consensus, self.horizon_quantile, self.max_waves,
                 buffer_k=self._buffer_k, stale_gamma=self.stale_gamma,
+                comm=sim.comm,
             )
         fn = self._fn(("event_apply", self._ccfg_key(sim)), builder)
         st = sim.state
         x_c, I, dt_last, t, tab, stats = fn(
             st.x_c, st.I, st.g_inv, st.dt_last, st.t, self._table,
             x_new_p, jnp.asarray(idx_p), jnp.asarray(Ts_p),
-            jnp.asarray(mask_p),
+            jnp.asarray(mask_p), jnp.asarray(plan.rnd, jnp.int32),
         )
         sim.state = st._replace(
             x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + 1
@@ -553,6 +585,9 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
         out[0, _DROPPED] += float(dropped)   # on top of traced-insert refusals
         out[0, _LOSS] = loss
         out[0, _COHORT] = float(len(keep))
+        # bytes_up is already in the stats row (absorbed × payload, device-
+        # side); the downlink is host-known — dispatched clients only
+        out[0, _BYTES_DOWN] = float(len(keep) * sim.comm.payload_down)
         return self._emit_stats(plan.rnd, out)[0]
 
     # ------------------------------------------------------------------

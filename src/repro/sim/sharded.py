@@ -111,6 +111,7 @@ def _scatter_rows(full, rows_loc, sidx_loc, mask_loc):
 def _flow_round_core(
     x_c, I, g_inv, dt_last, t,
     x_new_loc, idx_loc, sidx_loc, mask_loc, T_loc, ccfg,
+    comm=None, rnd=0,
 ):
     """One flow-consensus round on a device-local cohort shard.
 
@@ -136,6 +137,14 @@ def _flow_round_core(
 
     A_loc = T_loc.shape[0]
     x_prev_loc = broadcast_clients(x_c, A_loc)
+    if comm is not None and not comm.lossless:
+        # lossy wire, flow family: compress this shard's endpoints against
+        # the replicated dispatch reference x_c before the BE solve consumes
+        # them. The round-trip is elementwise per row, so the device-local
+        # call IS the sharded variant — padded rows carry a zero delta and
+        # compress back to zero (their mask excludes them regardless). EF-
+        # free by design, matching the dense flow hook in FedSim._apply_round.
+        x_new_loc, _ = comm.compress_endpoints(x_c, x_new_loc, None, rnd)
     g_loc = jnp.take(g_inv, idx_loc, axis=0)
 
     x_c_f, I_f, tau_f, dt_f, stats = consensus_integrate(
@@ -153,7 +162,8 @@ def _flow_round_core(
 
 
 def build_flow_segment(mesh, loss_fn: Callable, ccfg,
-                       kind: str = "fedecado", mu: float = 0.0) -> Callable:
+                       kind: str = "fedecado", mu: float = 0.0,
+                       comm=None) -> Callable:
     """Jitted R-round flow-dynamics segment, shard_map-ed over ``mesh``.
 
     ``fn(x_c, I, g_inv, dt_last, t, data, idx, sidx, mask, lrs, ns, Ts,
@@ -165,7 +175,8 @@ def build_flow_segment(mesh, loss_fn: Callable, ccfg,
     """
     cohort = cohort_vmap_fn(loss_fn, kind, mu)
 
-    def body(x_c, I, g_inv, dt_last, t, data, idx, sidx, mask, lrs, ns, Ts, sel, ps):
+    def body(x_c, I, g_inv, dt_last, t, data, idx, sidx, mask, lrs, ns, Ts,
+             sel, ps, rnd0):
         R, A_loc = idx.shape
 
         def round_step(r, carry):
@@ -176,6 +187,7 @@ def build_flow_segment(mesh, loss_fn: Callable, ccfg,
             x_c, I, dt_last, t, tel_r = _flow_round_core(
                 x_c, I, g_inv, dt_last, t,
                 x_new_loc, idx[r], sidx[r], mask[r], Ts[r], ccfg,
+                comm=comm, rnd=rnd0 + r,
             )
             return (x_c, I, dt_last, t, losses.at[r].set(loss_loc),
                     tel.at[r].set(tel_r))
@@ -190,19 +202,21 @@ def build_flow_segment(mesh, loss_fn: Callable, ccfg,
     c2 = P(None, AXIS)
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(), P(), P(), P(), P(), c2, c2, c2, c2, c2, c2, c2, c2),
+        in_specs=(P(), P(), P(), P(), P(), P(),
+                  c2, c2, c2, c2, c2, c2, c2, c2, P()),
         out_specs=(P(), P(), P(), P(), c2, P()),
         check_rep=False,
     )
     return jax.jit(fn)
 
 
-def build_avg_segment(mesh, alg, loss_fn: Callable, use_kernel: bool) -> Callable:
+def build_avg_segment(mesh, alg, loss_fn: Callable, use_kernel: bool,
+                      comm=None) -> Callable:
     """Jitted R-round weighted-delta segment for the averaging family.
 
-    ``fn(params, rows, data, idx, sidx, mask, sel, lrs, ns, ps, w, scale)
-    -> (params, rows, losses)`` — ``w`` (R, A_pad) carries the
-    host-precomputed aggregation weights from the algorithm's
+    ``fn(params, rows, ef, data, idx, sidx, mask, sel, lrs, ns, ps, w,
+    scale, rnd0) -> (params, rows, ef, losses)`` — ``w`` (R, A_pad) carries
+    the host-precomputed aggregation weights from the algorithm's
     ``agg_weights`` spec with cohort padding already zeroed, ``scale`` (R,)
     the per-round update scale (FedNova's τ_eff; ones otherwise), ``ps``
     (R, A_pad) the per-client objective weights, and ``rows`` the
@@ -211,17 +225,29 @@ def build_avg_segment(mesh, alg, loss_fn: Callable, use_kernel: bool) -> Callabl
     (``agg_transform``, e.g. FedADMM's dual update) runs device-local on
     each shard; updated rows re-enter the replicated tensor through the
     same one-hot psum scatter as the flow write-back.
+
+    ``ef`` threads the comm layer's error-feedback residual rows (leaves
+    (n, ...); empty pytree when the wire is lossless or EF-free) through
+    the fori_loop by exactly the same gather / one-hot-psum-scatter
+    machinery as the algorithm rows — the lossy round-trip itself is
+    elementwise per cohort row, so the device-local call before the psum
+    aggregation IS the sharded variant (DESIGN.md §11). ``rnd0`` (traced
+    scalar) stamps the segment's first round into the stochastic-rounding
+    key so recompiles don't depend on the round counter.
     """
     from repro.kernels.ops import batch_agg_psum
 
     cohort = cohort_vmap_fn(loss_fn, alg.client_kind, alg.client_mu())
     takes_rows = bool(alg.has_client_state)
+    lossy = comm is not None and not comm.lossless
+    takes_ef = lossy and comm.error_feedback
 
-    def body(params, rows, data, idx, sidx, mask, sel, lrs, ns, ps, w, scale):
+    def body(params, rows, ef, data, idx, sidx, mask, sel, lrs, ns, ps,
+             w, scale, rnd0):
         R, A_loc = lrs.shape
 
         def round_step(r, carry):
-            params, rows, losses = carry
+            params, rows, ef, losses = carry
             batches = {k: v[sel[r]] for k, v in data.items()}
             rows_loc = (
                 jax.tree.map(lambda l: l[idx[r]], rows) if takes_rows else None
@@ -229,6 +255,18 @@ def build_avg_segment(mesh, alg, loss_fn: Callable, use_kernel: bool) -> Callabl
             x_new_loc, loss_loc = cohort(
                 params, rows_loc, batches, lrs[r], ps[r], ns[r]
             )
+            if lossy:
+                # padded rows gather a real client's residual but their
+                # w/mask are zero and their scatter index is out of bounds,
+                # so neither the aggregation nor the EF write-back sees them
+                ef_loc = (
+                    jax.tree.map(lambda l: l[idx[r]], ef) if takes_ef else None
+                )
+                x_new_loc, ef_new_loc = comm.compress_endpoints(
+                    params, x_new_loc, ef_loc, rnd0 + r
+                )
+                if takes_ef:
+                    ef = _scatter_rows(ef, ef_new_loc, sidx[r], mask[r])
             y_loc, new_rows_loc = alg.agg_transform(params, x_new_loc, rows_loc)
             delta = batch_agg_psum(
                 params, y_loc, w[r], AXIS, use_kernel=use_kernel
@@ -238,16 +276,19 @@ def build_avg_segment(mesh, alg, loss_fn: Callable, use_kernel: bool) -> Callabl
             )
             if takes_rows:
                 rows = _scatter_rows(rows, new_rows_loc, sidx[r], mask[r])
-            return (params, rows, losses.at[r].set(loss_loc))
+            return (params, rows, ef, losses.at[r].set(loss_loc))
 
         losses0 = jnp.zeros((R, A_loc), jnp.float32)
-        return jax.lax.fori_loop(0, R, round_step, (params, rows, losses0))
+        return jax.lax.fori_loop(
+            0, R, round_step, (params, rows, ef, losses0)
+        )
 
     c2 = P(None, AXIS)
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(), P(), c2, c2, c2, c2, c2, c2, c2, c2, P()),
-        out_specs=(P(), P(), c2),
+        in_specs=(P(), P(), P(), P(),
+                  c2, c2, c2, c2, c2, c2, c2, c2, P(), P()),
+        out_specs=(P(), P(), P(), c2),
         check_rep=False,
     )
     return jax.jit(fn)
@@ -361,16 +402,19 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
         arr = jnp.asarray
         ps = alg.client_weights(sim, sp.idx)
 
+        comm = sim.comm
         if alg.has_flow_dynamics:
             fn = self._fn(
                 # keyed on the loss fn too: the built closure captures it,
                 # and a backend instance may be reused across sims (the
-                # bench warm-up pattern)
+                # bench warm-up pattern); the comm cache key separates
+                # compressor settings (different static closures)
                 ("flow_seg", id(sim.loss_fn), alg.client_kind,
-                 float(alg.client_mu()), cfg.consensus),
+                 float(alg.client_mu()), cfg.consensus, comm.cache_key()),
                 lambda: build_flow_segment(
                     self.mesh, sim.loss_fn, cfg.consensus,
                     kind=alg.client_kind, mu=float(alg.client_mu()),
+                    comm=comm,
                 ),
             )
             st = sim.state
@@ -378,6 +422,7 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
                 st.x_c, st.I, st.g_inv, st.dt_last, st.t, data,
                 arr(sp.idx), arr(sp.scatter_idx), arr(sp.mask), arr(sp.lrs),
                 arr(sp.n_steps), arr(sp.Ts), arr(sp.sel), arr(ps),
+                jnp.asarray(sp.rnd0, jnp.int32),
             )
             sim.state = st._replace(
                 x_c=x_c, I=I, dt_last=dt_last, t=t, round=st.round + R
@@ -388,20 +433,25 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
         else:
             w, scale = self._avg_weights(sim, sp)
             rows = alg.client_state if alg.has_client_state else {}
+            ef = alg.comm_state if alg.comm_state is not None else {}
             fn = self._fn(
                 ("avg_seg", id(sim.loss_fn), alg.name,
-                 float(alg.client_mu()), bool(cfg.agg_kernels)),
+                 float(alg.client_mu()), bool(cfg.agg_kernels),
+                 comm.cache_key()),
                 lambda: build_avg_segment(
-                    self.mesh, alg, sim.loss_fn, bool(cfg.agg_kernels)
+                    self.mesh, alg, sim.loss_fn, bool(cfg.agg_kernels),
+                    comm=comm,
                 ),
             )
-            sim.params, rows, losses = fn(
-                sim.params, rows, data, arr(sp.idx), arr(sp.scatter_idx),
+            sim.params, rows, ef, losses = fn(
+                sim.params, rows, ef, data, arr(sp.idx), arr(sp.scatter_idx),
                 arr(sp.mask), arr(sp.sel), arr(sp.lrs), arr(sp.n_steps),
-                arr(ps), arr(w), arr(scale),
+                arr(ps), arr(w), arr(scale), jnp.asarray(sp.rnd0, jnp.int32),
             )
             if alg.has_client_state:
                 alg.set_client_state(rows)
+            if alg.comm_state is not None:
+                alg.set_comm_state(ef)
             tel = None  # no BE solver on the averaging path
 
         losses = np.asarray(losses)
@@ -415,15 +465,19 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
                 np.mean(losses[r][sp.mask[r] > 0].astype(np.float64))
             )
             cohort_r = int(sp.mask[r].sum())  # mask-summed: padding excluded
+            # host-side bytes accounting from the mask-exact cohort — the
+            # payload sizes are static per run, so no extra device sync
+            byt = dict(bytes_up=cohort_r * comm.payload_up,
+                       bytes_down=cohort_r * comm.payload_down)
             if tel is None:
                 recs.append(make_record(sp.rnd0 + r, loss=loss_r,
-                                        cohort=cohort_r))
+                                        cohort=cohort_r, **byt))
             else:
                 recs.append(make_record(
                     sp.rnd0 + r, loss=loss_r, cohort=cohort_r,
                     substeps=tel[r, 0], backtracks=tel[r, 1],
                     dt_min=tel[r, 2], dt_max=tel[r, 3], dt_sum=tel[r, 4],
-                    tau_end=tel[r, 5],
+                    tau_end=tel[r, 5], **byt,
                 ))
         return recs
 
@@ -454,6 +508,14 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
         pad = A_pad - A
 
         x_ref = sim.state.x_c
+        if not sim.comm.lossless:
+            # same dense flow hook as FedSim._apply_round: compress the
+            # gathered endpoints against the dispatch reference before the
+            # sharded consensus apply (padding rows are added after, so they
+            # stay exactly x_c)
+            result.x_new_a, _ = sim.comm.compress_endpoints(
+                x_ref, result.x_new_a, None, plan.rnd
+            )
         x_new_pad = jax.tree.map(
             lambda l, xc: (
                 jnp.concatenate(
@@ -485,4 +547,6 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
             plan.rnd, loss=float(np.mean(result.losses)), cohort=A,
             substeps=tel[0], backtracks=tel[1], dt_min=tel[2],
             dt_max=tel[3], dt_sum=tel[4], tau_end=tel[5],
+            bytes_up=A * sim.comm.payload_up,
+            bytes_down=A * sim.comm.payload_down,
         )

@@ -533,3 +533,78 @@ def test_stack_plans_allow_uneven_pads_with_sentinels():
 
     ragged = _draw_plans(rng, 1, 4, 9, 3, 3, ragged_client=1)
     assert stack_plans(plans + ragged, 9, 4, 4, allow_uneven=True) is None
+
+
+# ---------------------------------------------------------------------------
+# identity wire == no wire, bitwise, on every backend (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def _run_with_wire(alg, backend, compress, level=None, **kw):
+    data, parts, params0, loss_fn = _problem()
+    cfg = FedSimConfig(
+        algorithm=alg, n_clients=len(parts), participation=0.5,
+        rounds=2, batch_size=4, steps_per_epoch=2,
+        hetero=HeteroConfig(1e-3, 1e-2, 1, 2), seed=55,
+        backend=backend, consensus=ConsensusConfig(max_substeps=6),
+        compress=compress, compress_level=level, **kw,
+    )
+    sim = FedSim(loss_fn, params0, data, parts, cfg)
+    hist = sim.run()
+    return hist, sim.current_params()
+
+
+def _assert_bitwise(ref, got, msg):
+    h1, p1 = ref
+    h2, p2 = got
+    assert h1.loss == h2.loss, msg
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2), strict=True):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=msg)
+
+
+@pytest.mark.parametrize("alg", ALGS)
+@pytest.mark.parametrize("backend", ["sequential", "vectorized", "sharded"])
+def test_identity_wire_is_bitwise_off(alg, backend):
+    """``--compress identity`` must equal no ``--compress`` flag BITWISE on
+    every registered algorithm × backend: the lossless short-circuit in
+    ``CommSpec.compress_endpoints`` returns its inputs untouched before any
+    arithmetic, so threading the comm hook through a backend cannot perturb
+    the trajectory. Bytes accounting must be on in BOTH runs (the identity
+    wire still counts fp32 payloads)."""
+    ref = _run_with_wire(alg, backend, None)
+    got = _run_with_wire(alg, backend, "identity")
+    _assert_bitwise(ref, got, f"identity wire perturbed {backend}/{alg}")
+    for hist, _ in (ref, got):
+        s = hist.summary()
+        assert s["bytes_up"] > 0 and s["bytes_down"] > 0
+    assert ref[0].summary()["bytes_up"] == got[0].summary()["bytes_up"]
+
+
+@pytest.mark.parametrize("alg", FLOW_ALGS)
+@pytest.mark.parametrize("mode,kw", [
+    ("dense", {"event_horizon": 1.0, "event_max_waves": 1}),
+    ("sharded", {"event_horizon": 1.0, "event_max_waves": 1,
+                 "event_sharded": True, "sharded_pad_multiple": 3}),
+    ("buffered", {"event_horizon": 1.0, "event_buffered": True,
+                  "event_buffer_size": 2, "event_stale_gamma": 0.0}),
+])
+def test_identity_wire_is_bitwise_off_event(alg, mode, kw):
+    """Same identity==off bitwise pin on the event backend's three modes
+    (dense flight table, mesh-sharded waves, buffered K-trigger)."""
+    ref = _run_with_wire(alg, "event", None, **kw)
+    got = _run_with_wire(alg, "event", "identity", **kw)
+    _assert_bitwise(ref, got, f"identity wire perturbed event[{mode}]/{alg}")
+
+
+@pytest.mark.parametrize("backend", ["sequential", "vectorized", "sharded"])
+def test_lossy_wire_is_live_on_every_backend(backend):
+    """Anti-dead-code witness for the comm hook: an int8 wire must (a)
+    actually change the trajectory vs lossless and (b) report the smaller
+    quantized uplink payload — on every backend. A refactor that silently
+    drops the compress call would keep every identity pin green; this
+    catches it."""
+    ref = _run_with_wire("fednova", backend, None)
+    got = _run_with_wire("fednova", backend, "int8")
+    assert ref[0].loss != got[0].loss, f"int8 wire dead on {backend}"
+    assert got[0].summary()["bytes_up"] < ref[0].summary()["bytes_up"] // 3

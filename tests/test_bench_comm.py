@@ -1,0 +1,155 @@
+"""Comm-bench harness smoke test: ``benchmarks/run.py --only comm`` must run
+end-to-end and persist a ``BENCH_comm.json`` whose schema downstream tooling
+can rely on (algorithm × scenario × compressor × level → accuracy +
+measured bytes totals). The schema is pinned here — bump
+``COMM_BENCH_SCHEMA_VERSION`` in benchmarks/run.py when it changes, and
+update this test in the same PR.
+
+Schema v1: frontier rows with acc/bytes ratios against the per-(algorithm,
+scenario) lossless baseline row, a per-family bytes-monotonicity section
+(higher compression tier → strictly fewer measured uplink bytes), and the
+``criterion`` block — the acceptance frontier on dirichlet01 (>= 95% of the
+uncompressed accuracy at <= 25% of its uplink bytes, witnessed by at least
+one lossy setting). Forbidden compressor × algorithm combos (topk × flow
+dynamics) have no rows, mirroring the engine bench's flow-only event rows.
+"""
+import importlib.util
+import json
+import os
+
+import pytest
+
+
+def _bench_module():
+    path = os.path.join(
+        os.path.dirname(__file__), os.pardir, "benchmarks", "run.py"
+    )
+    spec = importlib.util.spec_from_file_location("bench_run_comm", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _expected_rows(report):
+    """One row per (algorithm × scenario × setting), minus forbidden
+    compressor × algorithm combos (the comm registry's capability guard)."""
+    from repro.comm import get_compressor
+    from repro.fed.algorithms import get_algorithm
+
+    out = set()
+    for a in report["algorithms"]:
+        for s in report["scenarios"]:
+            for st in report["settings"]:
+                cls = get_compressor(st["compress"])
+                if (get_algorithm(a).has_flow_dynamics
+                        and not cls.supports_flow):
+                    continue
+                out.add((a, s, st["compress"], st["level"]))
+    return out
+
+
+def test_comm_bench_runs_and_json_schema_is_stable(tmp_path):
+    bench = _bench_module()
+    json_path = tmp_path / "BENCH_comm.json"
+    report = bench.comm_bench(
+        rounds=2, clients=6, participation=0.5,
+        scenarios=("dirichlet01",),
+        algorithms=("fedecado", "fednova"),
+        json_path=str(json_path),
+    )
+
+    assert json_path.exists()
+    with open(json_path) as f:
+        persisted = json.load(f)
+    assert persisted == report
+
+    # -- schema: top level ------------------------------------------------
+    assert persisted["schema_version"] == bench.COMM_BENCH_SCHEMA_VERSION == 1
+    assert persisted["benchmark"] == "comm"
+    assert persisted["rounds"] == 2
+    assert persisted["scenarios"] == ["dirichlet01"]
+    assert persisted["algorithms"] == ["fedecado", "fednova"]
+    assert persisted["settings"][0] == {"compress": "identity", "level": None}
+    assert isinstance(persisted["config"], dict)
+    assert persisted["config"]["backend"] == "vectorized"
+
+    # -- schema: frontier rows -------------------------------------------
+    seen = set()
+    for row in persisted["results"]:
+        assert set(row) == {
+            "algorithm", "scenario", "compress", "level", "acc",
+            "final_loss", "bytes_up", "bytes_down", "wall_s",
+            "bytes_ratio", "acc_ratio",
+        }
+        assert 0.0 <= row["acc"] <= 1.0
+        assert row["bytes_up"] > 0 and row["bytes_down"] > 0
+        assert isinstance(row["bytes_up"], int)
+        if row["compress"] == "identity":
+            assert row["bytes_ratio"] == 1.0 and row["acc_ratio"] == 1.0
+        else:
+            # a lossy wire can never cost MORE than fp32
+            assert row["bytes_ratio"] < 1.0
+        seen.add((row["algorithm"], row["scenario"],
+                  row["compress"], row["level"]))
+    assert seen == _expected_rows(persisted)
+    # the capability guard held: no topk rows on the flow algorithm
+    assert not any(
+        r["algorithm"] == "fedecado" and r["compress"] == "topk"
+        for r in persisted["results"]
+    )
+
+    # -- schema: monotonicity + criterion blocks --------------------------
+    assert persisted["monotonicity"], "no monotonicity witnesses"
+    for m in persisted["monotonicity"]:
+        assert set(m) == {
+            "algorithm", "scenario", "family", "settings", "bytes_up", "ok",
+        }
+        ups = m["bytes_up"]
+        assert m["ok"] == all(a > b for a, b in zip(ups, ups[1:]))
+        assert m["ok"], (
+            f"bytes_up not monotone for {m['family']}/{m['algorithm']}: {ups}"
+        )
+    crit = persisted["criterion"]
+    assert crit["scenario"] == "dirichlet01"
+    assert crit["acc_floor"] == 0.95 and crit["bytes_ceiling"] == 0.25
+    assert isinstance(crit["witnesses"], list)
+    assert crit["ok"] == bool(crit["witnesses"])
+
+
+def test_repo_comm_artifact_matches_schema_and_witnesses_frontier():
+    """The committed BENCH_comm.json must parse under schema v1 and witness
+    the acceptance criteria: at least one lossy setting holds >= 95% of the
+    uncompressed dirichlet01 accuracy at <= 25% of its uplink bytes, every
+    in-family bytes ladder is strictly monotone, and the grid covers
+    fedecado vs the fedprox/fednova baselines."""
+    path = os.path.join(
+        os.path.dirname(__file__), os.pardir, "BENCH_comm.json"
+    )
+    if not os.path.exists(path):
+        pytest.skip("no committed BENCH_comm.json")
+    with open(path) as f:
+        report = json.load(f)
+
+    assert report["schema_version"] == 1
+    assert "dirichlet01" in report["scenarios"]
+    assert set(("fedecado", "fedprox", "fednova")) <= set(report["algorithms"])
+    names = {s["compress"] for s in report["settings"]}
+    assert set(("identity", "int8", "int4", "topk")) <= names
+
+    crit = report["criterion"]
+    assert crit["ok"], "no accuracy-vs-bytes frontier witness on dirichlet01"
+    for w in crit["witnesses"]:
+        assert w["acc_ratio"] >= crit["acc_floor"]
+        assert w["bytes_ratio"] <= crit["bytes_ceiling"]
+        assert w["compress"] != "identity"
+
+    assert report["monotonicity"]
+    assert all(m["ok"] for m in report["monotonicity"]), (
+        "committed artifact has a non-monotone bytes ladder"
+    )
+
+    # fedecado appears on the frontier with a quantized wire (the flow
+    # family's only lossy option) and its rows never use topk
+    fe = [r for r in report["results"] if r["algorithm"] == "fedecado"]
+    assert any(r["compress"] in ("int8", "int4") for r in fe)
+    assert not any(r["compress"] == "topk" for r in fe)

@@ -1,0 +1,302 @@
+"""repro/comm subsystem tests (DESIGN.md §11): compressor registry +
+capability guards, payload-byte formulas, Pallas-kernel-vs-numpy-ref
+round-trip parity, the error-feedback sum-preservation invariant
+(compressed delta + residual == raw delta, exactly the telescoping the EF
+convergence argument needs), the identity wire's short-circuit contract
+(the basis of the identity==off bitwise equivalence pins in
+tests/test_backend_equiv.py), and the per-row locality property that makes
+the device-local call under shard_map THE sharded variant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (
+    CommSpec,
+    available_compressors,
+    check_algorithm,
+    get_compressor,
+    make_comm_spec,
+)
+from repro.comm.base import FP32_BYTES, Identity, tree_dim
+
+LOSSY = ("int8", "int4", "topk")
+
+
+def _params(d0=6, d1=5, seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "w": jnp.asarray(rng.randn(d0, d1), jnp.float32),
+        "b": jnp.asarray(rng.randn(d1), jnp.float32),
+    }
+
+
+def _endpoints(params, A=4, seed=1, scale=0.1):
+    rng = np.random.RandomState(seed)
+    return jax.tree.map(
+        lambda p: p[None] + scale * jnp.asarray(
+            rng.randn(A, *p.shape), jnp.float32
+        ),
+        params,
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry + capability guards
+# ---------------------------------------------------------------------------
+
+
+def test_registry_names_and_lookup():
+    names = available_compressors()
+    assert set(("identity", "int8", "int4", "topk")) <= set(names)
+    for n in names:
+        assert get_compressor(n).name == n
+
+
+def test_unknown_compressor_lists_registry():
+    with pytest.raises(ValueError, match="identity"):
+        get_compressor("gzip")
+
+
+def test_invalid_level_lists_valid_levels():
+    with pytest.raises(ValueError, match="valid levels"):
+        get_compressor("int8")(7)
+    with pytest.raises(ValueError, match="valid levels"):
+        get_compressor("topk")(99)
+    # every advertised level constructs
+    for name in available_compressors():
+        cls = get_compressor(name)
+        for level in cls.levels:
+            assert cls(level).level == level
+
+
+def test_topk_refused_for_flow_dynamics():
+    from repro.fed.algorithms import get_algorithm
+
+    with pytest.raises(ValueError, match="has_flow_dynamics"):
+        check_algorithm("topk", get_algorithm("fedecado"))
+    # quantizers and identity pass for flow algorithms; everything passes
+    # for the averaging family
+    for name in ("identity", "int8", "int4"):
+        check_algorithm(name, get_algorithm("fedecado"))
+    for name in available_compressors():
+        check_algorithm(name, get_algorithm("fednova"))
+
+
+def test_make_comm_spec_defaults_to_identity():
+    params = _params()
+    spec = make_comm_spec(None, None, params)
+    assert spec.lossless and spec.comp.name == "identity"
+    assert spec.d_model == tree_dim(params) == 6 * 5 + 5
+    assert spec.payload_down == FP32_BYTES * spec.d_model
+    # a level without a compressor hits the identity ladder and is refused
+    with pytest.raises(ValueError, match="valid levels"):
+        make_comm_spec(None, 2, params)
+
+
+# ---------------------------------------------------------------------------
+# payload formulas
+# ---------------------------------------------------------------------------
+
+
+def test_payload_byte_formulas():
+    d = 1000
+    assert Identity().payload_bytes(d) == 4 * d
+    # quantized payload: ceil(d*bits/8) data bytes + one fp32 scale
+    assert get_compressor("int8")().payload_bytes(d) == d + 4
+    assert get_compressor("int4")().payload_bytes(d) == d // 2 + 4
+    # top-k: (int32 coordinate, fp32 value) per kept coordinate
+    for level, frac in ((1, 0.25), (2, 0.10), (3, 0.05), (4, 0.01)):
+        k = get_compressor("topk")(level)._k(d)
+        assert k == max(1, int(np.ceil(frac * d)))
+        assert get_compressor("topk")(level).payload_bytes(d) == 8 * k
+
+
+def test_payloads_monotone_in_aggressiveness():
+    d = 4096
+    up = lambda name, level=None: get_compressor(name)(level).payload_bytes(d)
+    assert up("int4") < up("int8") < Identity().payload_bytes(d)
+    assert up("topk", 4) < up("topk", 3) < up("topk", 2) < up("topk", 1)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs numpy ref
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,level", [("int8", None), ("int4", None),
+                                        ("topk", 1), ("topk", 2)])
+@pytest.mark.parametrize("A,D", [(1, 1024), (4, 2048), (3, 4096)])
+def test_roundtrip_matches_numpy_ref(name, level, A, D):
+    """The Pallas round-trip (interpret mode on CPU) must match the
+    plugin's numpy oracle on the same noise draw. Widths here are
+    tile-aligned — the plugin-level round-trip contract (CommSpec.roundtrip
+    zero-pads arbitrary models up to the tile, pinned separately below)."""
+    rng = np.random.RandomState(A * 100 + D)
+    rows = jnp.asarray(rng.randn(A, D), jnp.float32)
+    comp = get_compressor(name)(level)
+    key = jax.random.PRNGKey(5)
+    got = np.asarray(comp.roundtrip(rows, key))
+    want = comp.ref_roundtrip(rows, key)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    if name != "topk":
+        # quantization error is bounded by one step of the per-row grid
+        step = np.max(np.abs(np.asarray(rows)), -1) / comp.q_max
+        assert np.all(
+            np.abs(got - np.asarray(rows)) <= step[:, None] + 1e-6
+        )
+
+
+def test_topk_keeps_exactly_k_per_row():
+    rng = np.random.RandomState(3)
+    D = 1024
+    rows = jnp.asarray(rng.randn(4, D), jnp.float32)
+    for level in (1, 2, 3, 4):
+        comp = get_compressor("topk")(level)
+        out = np.asarray(comp.roundtrip(rows, jax.random.PRNGKey(0)))
+        kept = np.sum(out != 0.0, axis=-1)
+        # ties in |x| are measure-zero under randn; k exact per row
+        np.testing.assert_array_equal(kept, comp._k(D))
+        # surviving coordinates are unchanged
+        mask = out != 0.0
+        np.testing.assert_array_equal(out[mask], np.asarray(rows)[mask])
+
+
+@pytest.mark.parametrize("name,level", [("topk", 2), ("int8", None)])
+def test_rowwise_locality_makes_device_local_call_the_sharded_variant(
+    name, level
+):
+    """Every compressor is elementwise per ROW on the stacked (A, d) delta
+    matrix, so compressing a shard of the rows equals slicing the full
+    compressed matrix — the property that lets the sharded backend call the
+    same round-trip device-locally under shard_map with no collective. The
+    stochastic quantizers hold it only on a shared noise draw, so their
+    per-row noise is sliced alongside the rows here (the backends draw
+    noise at full-cohort shape for exactly this reason — see the int8
+    cross-backend tolerance note in DESIGN.md §11)."""
+    rng = np.random.RandomState(9)
+    A, D = 6, 1024
+    rows = jnp.asarray(rng.randn(A, D), jnp.float32)
+    comp = get_compressor(name)(level)
+    key = jax.random.PRNGKey(11)
+    if name == "topk":
+        full = np.asarray(comp.roundtrip(rows, key))
+        for lo, hi in ((0, 2), (2, 4), (4, 6)):
+            shard = np.asarray(comp.roundtrip(rows[lo:hi], key))
+            np.testing.assert_allclose(shard, full[lo:hi], rtol=1e-7)
+    else:
+        from repro.comm.kernels import stoch_quant_call
+        from repro.comm.quantize import quant_scale
+
+        u = jax.random.uniform(key, rows.shape, rows.dtype)
+        full = np.asarray(stoch_quant_call(
+            rows, u, quant_scale(rows, comp.q_max), comp.q_max,
+            interpret=True,
+        ))
+        for lo, hi in ((0, 3), (3, 6)):
+            r = rows[lo:hi]
+            shard = np.asarray(stoch_quant_call(
+                r, u[lo:hi], quant_scale(r, comp.q_max), comp.q_max,
+                interpret=True,
+            ))
+            np.testing.assert_allclose(shard, full[lo:hi], rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# CommSpec: identity short-circuit, EF sum preservation
+# ---------------------------------------------------------------------------
+
+
+def test_identity_compress_endpoints_is_a_short_circuit():
+    """The lossless wire must return its inputs UNTOUCHED — no ravel, no
+    arithmetic — which is what makes identity==off bitwise-equal on every
+    backend (pinned end-to-end in tests/test_backend_equiv.py)."""
+    params = _params()
+    x_a = _endpoints(params)
+    spec = make_comm_spec(None, None, params)
+    out, ef = spec.compress_endpoints(params, x_a, None, 3)
+    assert ef is None
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(x_a), strict=True):
+        assert a is b
+
+
+@pytest.mark.parametrize("name,level", [("int8", None), ("int4", None),
+                                        ("topk", 2)])
+def test_error_feedback_sum_preservation(name, level):
+    """EF invariant: for raw = (x_a − x_c) + ef, the compressed delta and
+    the new residual must satisfy c + ef' == raw exactly — the residual
+    carries precisely what the wire dropped, so nothing is ever lost, only
+    delayed. The model is sized well past one kernel tile so top-k's
+    padded-width k stays below d and the wire is genuinely lossy."""
+    params = _params(d0=40, d1=30)
+    x_a = _endpoints(params)
+    spec = CommSpec(comp=get_compressor(name)(level),
+                    d_model=tree_dim(params), seed=7)
+    A = 4
+    ef = jax.tree.map(
+        lambda p: 0.05 * jnp.ones((A,) + p.shape, jnp.float32), params
+    )
+    out, ef_new = spec.compress_endpoints(params, x_a, ef, rnd=2)
+    assert ef_new is not None
+    for xc, xa, e, o, en in zip(
+        jax.tree.leaves(params), jax.tree.leaves(x_a), jax.tree.leaves(ef),
+        jax.tree.leaves(out), jax.tree.leaves(ef_new), strict=True,
+    ):
+        raw = (np.asarray(xa) - np.asarray(xc)[None]) + np.asarray(e)
+        c = np.asarray(o) - np.asarray(xc)[None]
+        np.testing.assert_allclose(c + np.asarray(en), raw,
+                                   rtol=1e-5, atol=1e-6)
+        # and the wire was genuinely lossy (ef' != 0 somewhere)
+        assert np.max(np.abs(np.asarray(en))) > 0
+
+
+def test_flow_path_compresses_without_error_feedback():
+    params = _params()
+    x_a = _endpoints(params)
+    spec = CommSpec(comp=get_compressor("int8")(), d_model=tree_dim(params))
+    out, ef_new = spec.compress_endpoints(params, x_a, None, rnd=0)
+    assert ef_new is None
+    # lossy: the endpoints moved
+    diffs = [
+        np.max(np.abs(np.asarray(a) - np.asarray(b)))
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(x_a))
+    ]
+    assert max(diffs) > 0
+
+
+def test_compress_endpoints_is_deterministic_in_rnd():
+    params = _params()
+    x_a = _endpoints(params)
+    spec = CommSpec(comp=get_compressor("int8")(), d_model=tree_dim(params),
+                    seed=3)
+    a1, _ = spec.compress_endpoints(params, x_a, None, rnd=5)
+    a2, _ = spec.compress_endpoints(params, x_a, None, rnd=5)
+    b, _ = spec.compress_endpoints(params, x_a, None, rnd=6)
+    for l1, l2 in zip(jax.tree.leaves(a1), jax.tree.leaves(a2), strict=True):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    assert any(
+        np.any(np.asarray(l1) != np.asarray(l3))
+        for l1, l3 in zip(jax.tree.leaves(a1), jax.tree.leaves(b))
+    )
+
+
+def test_init_ef_state_zero_rows():
+    params = _params()
+    spec = CommSpec(comp=get_compressor("int4")(), d_model=tree_dim(params))
+    assert spec.error_feedback
+    st = spec.init_ef_state(params, n=9)
+    for p, s in zip(jax.tree.leaves(params), jax.tree.leaves(st), strict=True):
+        assert s.shape == (9,) + p.shape and s.dtype == jnp.float32
+        assert not np.any(np.asarray(s))
+
+
+def test_cache_key_distinguishes_wire_models():
+    params = _params()
+    keys = {
+        make_comm_spec(c, l, params, seed=s).cache_key()
+        for c, l, s in (
+            (None, None, 0), ("int8", None, 0), ("int4", None, 0),
+            ("topk", 1, 0), ("topk", 2, 0), ("int8", None, 1),
+        )
+    }
+    assert len(keys) == 6

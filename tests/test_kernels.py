@@ -294,3 +294,68 @@ def test_ssm_scan_kernel_vs_ref(B, S, inner, N, tile):
     yr, hr = ssm_scan_ref(dt, Bt, Ct, u, a_log, d, h0)
     np.testing.assert_allclose(yk, yr, rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(hk, hr, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# comm compression kernels (src/repro/comm/kernels, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("A", [1, 3, 8])
+@pytest.mark.parametrize("D,tile", [(1024, 1024), (4096, 1024), (2048, 512)])
+@pytest.mark.parametrize("q_max", [127.0, 7.0])
+def test_stoch_quant_kernel_vs_ref(A, D, tile, q_max):
+    from repro.comm.kernels import quant_scale, stoch_quant_call, stoch_quant_ref
+
+    rng = np.random.RandomState(A * 31 + D)
+    x = jnp.asarray(rng.randn(A, D), jnp.float32)
+    u = jnp.asarray(rng.uniform(0.0, 1.0, (A, D)), jnp.float32)
+    s = quant_scale(x, q_max)
+    k = stoch_quant_call(x, u, s, q_max, interpret=True, tile_d=tile)
+    r = stoch_quant_ref(x, u, s, q_max)
+    np.testing.assert_allclose(np.asarray(k), r, rtol=1e-6, atol=1e-7)
+    # the round-trip is inside one grid step of the per-row lattice
+    step = np.asarray(s)[:, None] + 1e-7
+    assert np.all(np.abs(np.asarray(k) - np.asarray(x)) <= step)
+
+
+def test_stoch_quant_kernel_zero_rows_stay_zero():
+    """All-zero rows have scale 0; the clamped-eps scale must send them
+    through the round-trip bitwise unchanged (padded cohort rows rely on
+    this: a zero delta compresses to a zero delta)."""
+    from repro.comm.kernels import quant_scale, stoch_quant_call
+
+    x = jnp.zeros((3, 1024), jnp.float32)
+    u = jnp.full((3, 1024), 0.999, jnp.float32)
+    out = stoch_quant_call(x, u, quant_scale(x, 127.0), 127.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize("A", [1, 4])
+@pytest.mark.parametrize("D,tile", [(1024, 1024), (2048, 512)])
+@pytest.mark.parametrize("k", [1, 16, 200])
+def test_topk_mask_kernel_vs_ref(A, D, tile, k):
+    from repro.comm.kernels import topk_mask_call, topk_mask_ref, topk_threshold
+
+    rng = np.random.RandomState(A * 7 + D + k)
+    x = jnp.asarray(rng.randn(A, D), jnp.float32)
+    thr = topk_threshold(x, k)
+    got = topk_mask_call(x, thr, interpret=True, tile_d=tile)
+    want = topk_mask_ref(np.asarray(x), np.asarray(thr))
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert np.all(np.sum(np.asarray(got) != 0.0, axis=-1) == k)
+
+
+def test_topk_threshold_clamps_k():
+    from repro.comm.kernels import topk_threshold
+
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 64), jnp.float32)
+    # k beyond the width keeps everything; k < 1 keeps at least one
+    lo = topk_threshold(x, 1000)
+    np.testing.assert_allclose(
+        np.asarray(lo), np.min(np.abs(np.asarray(x)), -1), rtol=1e-7
+    )
+    hi = topk_threshold(x, 0)
+    np.testing.assert_allclose(
+        np.asarray(hi), np.max(np.abs(np.asarray(x)), -1), rtol=1e-7
+    )

@@ -61,7 +61,7 @@ def test_telemetry_schema_is_pinned():
     assert TELEMETRY_FIELDS == (
         "loss", "cohort", "dropped", "substeps", "backtracks",
         "dt_min", "dt_max", "dt_sum", "waves", "arrived", "stale",
-        "horizon", "tau_end",
+        "horizon", "tau_end", "bytes_up", "bytes_down",
     )
     assert STALE_BUCKET_EDGES == (1, 2, 4, 8)
     assert N_STALE_BUCKETS == 4
@@ -71,7 +71,7 @@ def test_telemetry_schema_is_pinned():
     assert RECORD_FIELDS == (
         "round", "loss", "cohort", "dropped", "substeps", "backtracks",
         "dt_min", "dt_max", "waves", "arrived", "stale", "horizon",
-        "tau_end", "dt_mean", "stale_hist",
+        "tau_end", "bytes_up", "bytes_down", "dt_mean", "stale_hist",
     )
     for i, name in enumerate(TELEMETRY_FIELDS):
         assert field_index(name) == i
@@ -139,7 +139,7 @@ def test_make_record_semantics():
     assert set(rec) == set(RECORD_FIELDS)
     # integral counters become python ints (JSON round-trip stays exact)
     for key in ("round", "cohort", "dropped", "substeps", "backtracks",
-                "waves", "arrived", "stale"):
+                "waves", "arrived", "stale", "bytes_up", "bytes_down"):
         assert isinstance(rec[key], int), key
     assert rec["round"] == 7 and rec["cohort"] == 4
     assert rec["arrived"] == 4          # defaults to cohort (synchronous)
@@ -263,6 +263,56 @@ def test_runlog_rejects_tampered_records(tmp_path):
 def test_validate_record_rejects_unknown_kind():
     with pytest.raises(ValueError, match="kind"):
         validate_record({"kind": "telemetry"})
+
+
+def test_runlog_rejects_tampered_bytes_fields(tmp_path):
+    """The PR-8 bytes columns are part of the pinned schema: a round record
+    with a missing or non-integral bytes counter must be rejected exactly
+    like the older counters (no silent fp-bytes drift in committed logs)."""
+    path = tmp_path / "run.jsonl"
+    _write_log(path)
+    lines = path.read_text().splitlines()
+
+    bad = json.loads(lines[1])
+    del bad["bytes_up"]
+    (tmp_path / "b1.jsonl").write_text(
+        "\n".join([lines[0], json.dumps(bad)] + lines[2:])
+    )
+    with pytest.raises(ValueError, match="bytes_up"):
+        validate_jsonl(str(tmp_path / "b1.jsonl"))
+
+    bad = json.loads(lines[1])
+    bad["bytes_down"] = 104.5
+    (tmp_path / "b2.jsonl").write_text(
+        "\n".join([lines[0], json.dumps(bad)] + lines[2:])
+    )
+    with pytest.raises(ValueError, match="bytes_down"):
+        validate_jsonl(str(tmp_path / "b2.jsonl"))
+
+
+def test_bytes_accounting_summary_and_format():
+    """bytes_up/bytes_down total across rounds in the run summary, render
+    in round lines only when nonzero, and surface in format_counters."""
+    from repro.obs.format import format_bytes
+
+    recs = [
+        make_record(0, loss=1.0, cohort=4, bytes_up=400, bytes_down=1600),
+        make_record(1, loss=0.9, cohort=2, bytes_up=200, bytes_down=800),
+    ]
+    s = summarize_records(recs)
+    assert s["bytes_up"] == 600 and s["bytes_down"] == 2400
+
+    line = format_round_line(recs[0])
+    assert "up 400B" in line and "down " in line
+    assert "up=" in format_counters(s)
+
+    # uncounted (legacy zero) rounds don't clutter the line
+    quiet = make_record(2, loss=0.5, cohort=1)
+    assert "up " not in format_round_line(quiet)
+
+    assert format_bytes(812) == "812B"
+    assert format_bytes(14540) == "14.2KB"
+    assert format_bytes(3 * 1024 * 1024) == "3.0MB"
 
 
 # ---------------------------------------------------------------------------
