@@ -475,9 +475,9 @@ def engine_bench(
     if heavy_traffic:
         report["heavy_traffic"] = _heavy_traffic_cell(**heavy_traffic)
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
-            f.write("\n")
+        from repro.tune.bench_io import write_bench_report
+
+        write_bench_report(report, json_path)
         print(f"# wrote {json_path}", flush=True)
     return report
 
@@ -661,9 +661,9 @@ def comm_bench(
     )
 
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
-            f.write("\n")
+        from repro.tune.bench_io import write_bench_report
+
+        write_bench_report(report, json_path)
         print(f"# wrote {json_path}", flush=True)
     return report
 
@@ -712,26 +712,145 @@ def roofline_summary(results_dir="results/dryrun"):
         )
 
 
+KNOWN_BENCHES = (
+    "table1", "table2", "fig6", "kernels", "adaptive", "engine",
+    "scenarios", "comm", "ablation", "roofline",
+)
+
+
+def run_perf_gate(args) -> int:
+    """``--gate``: regenerate a small bench slice on THIS machine and
+    compare it against the committed BENCH_engine.json / BENCH_comm.json
+    via the repro.tune.gate comparators (machine-normalized rounds/sec
+    floor; per-round bytes-frontier erosion). Writes one comparator report
+    per kind under ``--gate-report``. Returns the exit status: 0 = pass
+    (or --gate-warn-only), 1 = regression, 2 = missing baseline."""
+    from repro.tune.bench_io import machine_block
+    from repro.tune.gate import compare_comm, compare_engine, write_report
+
+    kinds = tuple(k for k in args.gate_kinds.split(",") if k)
+    unknown = [k for k in kinds if k not in ("engine", "comm")]
+    if unknown:
+        print(f"--gate-kinds: unknown kind(s) {unknown}; "
+              "choose from engine,comm", flush=True)
+        return 2
+    sizes = tuple(int(s) for s in args.gate_sizes.split(",") if s)
+    status = 0
+    reports = {}
+    for kind in kinds:
+        baseline_path = (
+            args.engine_json if kind == "engine" else args.comm_json
+        )
+        try:
+            with open(baseline_path) as f:
+                baseline = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"[gate:{kind}] cannot load baseline "
+                  f"{baseline_path!r}: {e}", flush=True)
+            return 2
+        if kind == "engine":
+            cand = engine_bench(
+                rounds=args.gate_rounds, sizes=sizes,
+                algorithms=tuple(a for a in args.algorithms.split(",") if a),
+                json_path=None, heavy_traffic=None,
+            )
+        else:
+            cand = comm_bench(
+                rounds=args.gate_rounds,
+                scenarios=("dirichlet01",),
+                json_path=None,
+            )
+        cand["machine"] = machine_block()
+        cmp_fn = compare_engine if kind == "engine" else compare_comm
+        rep = cmp_fn(baseline, cand, threshold=args.gate_threshold)
+        rep["warn_only"] = args.gate_warn_only
+        write_report(rep, os.path.join(args.gate_report, f"{kind}.json"))
+        reports[kind] = rep
+        verdict = (
+            "PASS" if rep["ok"] else
+            "WARN" if args.gate_warn_only else "FAIL"
+        )
+        print(
+            f"# gate:{kind} {verdict} — {len(rep['violations'])} "
+            f"violation(s) over {rep['n_checked']} matched row(s) at "
+            f"threshold {args.gate_threshold:.0%}",
+            flush=True,
+        )
+        for v in rep["violations"]:
+            print(f"#   {v['key']}: "
+                  f"{v.get('problems') or v}", flush=True)
+        if not rep["ok"] and not args.gate_warn_only:
+            status = 1
+    return status
+
+
 def main() -> None:
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="subset: table1,table2,fig6,kernels,adaptive,"
-                    "engine,scenarios,comm,roofline")
+                    help="comma-separated subset of benches to run; "
+                    f"choices: {','.join(KNOWN_BENCHES)}")
     ap.add_argument("--comm-json", default="BENCH_comm.json",
-                    help="where the comm bench persists its JSON report")
+                    help="where the comm bench persists its JSON report "
+                    "(and the comm gate's committed baseline)")
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--engine-json", default="BENCH_engine.json",
-                    help="where the engine bench persists its JSON report")
+                    help="where the engine bench persists its JSON report "
+                    "(and the engine gate's committed baseline)")
     ap.add_argument("--algorithms", default="fedecado",
                     help="comma-separated fed/algorithms registry names for "
                     "the engine bench's per-algorithm axis")
     ap.add_argument("--devices", type=int, default=8,
                     help="host devices forced for the engine bench (via "
                     "XLA_FLAGS, only when not already set)")
+    # --- BENCH_* perf regression gate (repro.tune.gate, DESIGN.md §12) ---
+    ap.add_argument("--gate", action="store_true",
+                    help="regenerate a small bench slice and compare it "
+                    "against the committed BENCH_*.json baselines; exits "
+                    "non-zero on a regression (unless --gate-warn-only)")
+    ap.add_argument("--gate-kinds", default="engine,comm",
+                    help="which gates to run: engine,comm")
+    ap.add_argument("--gate-threshold", type=float, default=None,
+                    help="allowed rounds/sec regression fraction "
+                    "(default: repro.tune.gate.DEFAULT_THRESHOLD)")
+    ap.add_argument("--gate-warn-only", action="store_true",
+                    help="report regressions but exit 0 (CI noise mode)")
+    ap.add_argument("--gate-report", default="gate-report",
+                    help="directory for the comparator report JSONs")
+    ap.add_argument("--gate-sizes", default="10,100",
+                    help="engine-bench n_clients slice for the gate run")
+    ap.add_argument("--gate-rounds", type=int, default=10,
+                    help="rounds per gate bench cell")
     args = ap.parse_args()
-    sel = set(args.only.split(",")) if args.only else None
+    if args.only is not None:
+        sel = set(s for s in args.only.split(",") if s)
+        unknown = sorted(sel - set(KNOWN_BENCHES))
+        if unknown:
+            ap.error(
+                f"--only: unknown bench name(s) {', '.join(unknown)}; "
+                f"choose from: {', '.join(KNOWN_BENCHES)}"
+            )
+        if not sel:
+            ap.error(
+                "--only needs at least one bench name; "
+                f"choose from: {', '.join(KNOWN_BENCHES)}"
+            )
+    else:
+        sel = None
+
+    if args.gate:
+        if args.gate_threshold is None:
+            from repro.tune.gate import DEFAULT_THRESHOLD
+
+            args.gate_threshold = DEFAULT_THRESHOLD
+        if args.devices > 1 and "XLA_FLAGS" not in os.environ:
+            # the committed engine baseline was measured on a forced
+            # multi-device axis; the candidate slice must match it
+            os.environ["XLA_FLAGS"] = (
+                f"--xla_force_host_platform_device_count={args.devices}"
+            )
+        raise SystemExit(run_perf_gate(args))
 
     def want(name):
         return sel is None or name in sel

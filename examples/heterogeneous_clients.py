@@ -46,14 +46,16 @@ def main():
         f"(registered: {', '.join(available_algorithms())})",
     )
     ap.add_argument(
-        "--backend", choices=("sequential", "vectorized", "event", "sharded"),
+        "--backend",
+        choices=("sequential", "vectorized", "event", "sharded", "auto"),
         default="vectorized",
         help="execution engine (repro/sim): vectorized = whole cohort in one "
         "dispatch; event = async arrivals with staleness (fedecado only); "
         "sharded = shard_map over every local device with psum consensus "
         "reductions and jit-resident multi-round segments (run under "
         "XLA_FLAGS=--xla_force_host_platform_device_count=8 to see true "
-        "multi-device execution on CPU)",
+        "multi-device execution on CPU); auto = let the HLO cost model pick "
+        "(repro.tune.autotune, decision recorded in the run-log header)",
     )
     ap.add_argument(
         "--event-horizon", type=float, default=0.75,

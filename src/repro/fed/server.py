@@ -117,7 +117,9 @@ class FedSimConfig:
     seed: int = 0
     eval_every: int = 5
     # --- multi-rate execution engine (repro/sim, DESIGN.md §5) ---
-    backend: str = "sequential"     # sequential | vectorized | event | sharded
+    # sequential | vectorized | event | sharded, or "auto" to let the HLO
+    # cost model pick at construction (repro.tune.autotune, DESIGN.md §12)
+    backend: str = "sequential"
     # event backend: quantile of in-flight windows absorbed per round
     # (< 1.0 leaves stragglers in the queue -> mid-round returns next round)
     event_horizon: float = 1.0
@@ -226,6 +228,18 @@ class FedSim:
 
         from repro.sim.engine import get_backend  # lazy: sim imports fed.client
 
+        # backend="auto": score the candidate backends against the HLO cost
+        # model (repro.tune, DESIGN.md §12) for THIS algorithm/model/n and
+        # replace cfg with the resolved copy; the decision rides the run-log
+        # header so predicted-vs-measured gaps stay auditable
+        self.tune_decision = None
+        if cfg.backend == "auto":
+            from repro.tune.autotune import resolve_auto  # lazy: tune→sim
+
+            cfg, self.tune_decision = resolve_auto(
+                cfg, self.alg, loss_fn, self.params, self.data
+            )
+            self.cfg = cfg
         self.backend = get_backend(cfg)
 
     # ------------------------------------------------------------------
@@ -392,9 +406,14 @@ class FedSim:
         runlog = RunLog(cfg.log_jsonl) if cfg.log_jsonl else None
         recorder = TraceRecorder(cfg.trace_json) if cfg.trace_json else None
         if runlog is not None:
+            tune_extra = (
+                {"autotune": self.tune_decision.to_dict()}
+                if self.tune_decision is not None else {}
+            )
             runlog.start(
                 config=cfg, algorithm=self.alg.name,
                 backend=self.backend.name, n_clients=self.n, rounds=rounds,
+                **tune_extra,
             )
         if recorder is not None:
             recorder.install()

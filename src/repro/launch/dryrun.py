@@ -1,8 +1,30 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+
+def _with_forced_device_count(flags: str, n: int) -> str:
+    """Merge ``--xla_force_host_platform_device_count=n`` into an existing
+    XLA_FLAGS value: every OTHER user/CI flag is preserved, any previous
+    device-count flag is replaced (last one wins in XLA, but dropping the
+    stale one keeps the env readable)."""
+    kept = [
+        t for t in flags.split()
+        if not t.startswith("--xla_force_host_platform_device_count")
+    ]
+    kept.append(f"--xla_force_host_platform_device_count={n}")
+    return " ".join(kept)
+
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = _with_forced_device_count(
+        os.environ.get("XLA_FLAGS", ""), 512
+    )
 # ^ MUST precede every other import: jax locks the device count on first init.
 # The dry-run (and only the dry-run) needs 512 placeholder host devices to
-# build the production meshes. Smoke tests / benches see 1 device.
+# build the production meshes — but ONLY when dryrun is the program
+# (``python -m repro.launch.dryrun``). A plain import (tests, tooling
+# reusing the helpers) must not poison the process: forcing 512 host
+# devices onto however many cores the host has makes every later psum
+# rendezvous thrash, and it leaks into any subprocess via the env.
 
 import argparse
 import json

@@ -427,8 +427,9 @@ def run_sweep(
     if table:
         print("\n" + _table(report), flush=True)
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
+        from repro.tune.bench_io import write_bench_report
+
+        write_bench_report(report, json_path)
         print(f"# wrote {json_path}", flush=True)
     return report
 

@@ -374,4 +374,11 @@ def get_backend(cfg) -> ExecutionBackend:
         )
     if cfg.backend == "sharded":
         return ShardedBackend(pad_multiple=cfg.sharded_pad_multiple)
+    if cfg.backend == "auto":
+        raise ValueError(
+            "backend='auto' is resolved at FedSim construction "
+            "(repro.tune.autotune.resolve_auto scores the candidates "
+            "against the HLO cost model); get_backend needs a concrete "
+            f"name from {BACKENDS}"
+        )
     raise ValueError(f"unknown backend {cfg.backend!r}; choose from {BACKENDS}")

@@ -1,0 +1,28 @@
+"""repro.tune — the cost-model subsystem (DESIGN.md §12).
+
+Four pieces, one story: measure the machine (``calibrate``), lower the
+real fed hot paths to HLO and count what they cost (``hlocost``,
+``roofline``, ``costmodel``), pick the execution backend from those costs
+(``autotune`` — ``FedSimConfig.backend = "auto"``), and hold every future
+speed claim to the committed BENCH_* baselines (``gate``, ``bench_io``).
+"""
+from repro.tune.autotune import (  # noqa: F401
+    TuneDecision,
+    candidate_backends,
+    resolve_auto,
+    score_backends,
+)
+from repro.tune.bench_io import machine_block, write_bench_report  # noqa: F401
+from repro.tune.calibrate import (  # noqa: F401
+    Calibration,
+    calib_score,
+    measure_calibration,
+)
+from repro.tune.dtypes import DTYPE_BYTES, SHAPE_RE  # noqa: F401
+from repro.tune.gate import (  # noqa: F401
+    DEFAULT_THRESHOLD,
+    compare_comm,
+    compare_engine,
+    run_gate,
+)
+from repro.tune.roofline import roofline_terms  # noqa: F401

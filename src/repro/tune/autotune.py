@@ -1,0 +1,275 @@
+"""Cost-model-driven backend selection: ``FedSimConfig.backend = "auto"``.
+
+``resolve_auto`` scores every candidate execution backend for the concrete
+(algorithm, n_clients, model shape, participation, consensus config) the
+user is about to run, using per-dispatch hot-path costs lowered from real
+HLO (``repro.tune.costmodel``) plus the machine's measured dispatch
+overhead and parallel efficiency (``repro.tune.calibrate``). The scoring
+rule (DESIGN.md §12) predicts seconds/round:
+
+  sequential  = (A+1)·d + Tc + Ts            (A per-client dispatches)
+  vectorized  =     2·d + Tc + Ts            (one cohort dispatch)
+  sharded     = 2·d/S_sh + (Tc + Ts)/E + Xs  (jit-resident segments,
+                                              E = max(1, n_dev·eff))
+  event       = 2·d/S_ev + Tc + Tf/W + Xe    (flow dynamics only; the
+                                              wave loop's static bound W
+                                              overcounts coalesced rounds)
+
+with d = measured dispatch overhead, Tc = cohort client compute,
+Ts = server aggregation (consensus BE round for the flow family, batched
+aggregation for the averaging family), Tf = flight-table integrate,
+S_sh/S_ev = the backends' jit-resident segment lengths, and Xs/Xe the
+calibrated collective-traffic terms of the respective hot paths. The
+decision — chosen backend, every candidate's score, the raw cost terms,
+the calibration, and the agreement with the committed BENCH_engine.json
+row when one matches — is recorded in the PR-6 run-log header under
+``autotune`` so predicted-vs-measured gaps stay auditable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from repro.tune import costmodel
+from repro.tune.calibrate import Calibration, measure_calibration
+
+Pytree = Any
+
+# jit-resident segment lengths (sim/sharded.py, sim/events.py class attrs;
+# imported lazily in _segment_rounds to keep this module import-light)
+_FALLBACK_SEGMENTS = {"sharded": 32, "event": 16}
+
+
+def _segment_rounds(backend: str) -> int:
+    try:
+        if backend == "sharded":
+            from repro.sim.sharded import ShardedBackend
+
+            return int(ShardedBackend.max_segment_rounds)
+        if backend == "event":
+            from repro.sim.events import EventBackend
+
+            return int(EventBackend.max_segment_rounds)
+    except Exception:
+        pass
+    return _FALLBACK_SEGMENTS.get(backend, 1)
+
+
+@dataclasses.dataclass
+class TuneDecision:
+    """What the autotuner picked and why — run-log header material."""
+
+    chosen: str
+    scores: Dict[str, float]            # backend -> predicted s/round
+    terms: Dict[str, Dict[str, Any]]    # hot path -> cost dict
+    method: str                         # worst cost method used: hlo|measured
+    kernel_flags: Dict[str, bool]
+    calibration: Dict[str, float]
+    n_clients: int
+    cohort: int
+    algorithm: str
+    bench_reference: Optional[Dict[str, Any]] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def candidate_backends(alg) -> list:
+    """The backends this algorithm can legally run on: the event scheduler
+    integrates flow dynamics, so the averaging family skips it."""
+    from repro.sim.engine import BACKENDS
+
+    return [
+        b for b in BACKENDS
+        if b != "event" or getattr(alg, "has_flow_dynamics", False)
+    ]
+
+
+def find_bench_baseline(path: Optional[str] = None) -> Optional[Dict]:
+    """Locate a committed BENCH_engine.json: explicit path, then
+    $REPRO_BENCH_DIR, then cwd, then the repo root above this file."""
+    candidates = []
+    if path:
+        candidates.append(path)
+    env = os.environ.get("REPRO_BENCH_DIR")
+    if env:
+        candidates.append(os.path.join(env, "BENCH_engine.json"))
+    candidates.append("BENCH_engine.json")
+    here = os.path.dirname(os.path.abspath(__file__))
+    candidates.append(
+        os.path.join(here, "..", "..", "..", "BENCH_engine.json")
+    )
+    for c in candidates:
+        try:
+            with open(c) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            continue
+    return None
+
+
+def _bench_reference(
+    algorithm: str, n: int, chosen: str, scores: Dict[str, float]
+) -> Optional[Dict[str, Any]]:
+    """Compare the model's pick with the committed measurement, when the
+    baseline has a row for this (algorithm, n_clients). ``event_buffered``
+    rows are a config variant, not a backend name, so they are excluded."""
+    bench = find_bench_baseline()
+    if not bench:
+        return None
+    rows = [
+        r for r in bench.get("results", [])
+        if r.get("algorithm") == algorithm
+        and int(r.get("n_clients", -1)) == int(n)
+        and r.get("backend") in scores
+    ]
+    if not rows:
+        return None
+    fastest = max(rows, key=lambda r: r.get("rounds_per_sec", 0.0))
+    measured = {
+        r["backend"]: float(r["rounds_per_sec"]) for r in rows
+    }
+    pred_rps = {
+        b: (1.0 / s if s > 0 else float("inf")) for b, s in scores.items()
+    }
+    return {
+        "fastest_measured": fastest["backend"],
+        "agrees": fastest["backend"] == chosen,
+        "measured_rounds_per_sec": measured,
+        "predicted_rounds_per_sec": {
+            b: v for b, v in pred_rps.items() if np.isfinite(v)
+        },
+        # predicted-vs-measured gap of the chosen backend, when measurable
+        "chosen_gap_ratio": (
+            pred_rps[chosen] / measured[chosen]
+            if chosen in measured and np.isfinite(pred_rps.get(chosen, np.inf))
+            and measured[chosen] > 0 else None
+        ),
+    }
+
+
+def score_backends(
+    candidates: list,
+    costs: Dict[str, costmodel.HotPathCost],
+    cal: Calibration,
+    A: int,
+    server_path: str,
+) -> Dict[str, float]:
+    """Predicted seconds/round per candidate (the DESIGN.md §12 rule)."""
+    d = max(cal.dispatch_s, 1e-7)
+    Tc = costs["client_cohort"].seconds
+    Ts = costs[server_path].seconds
+    eff = max(1.0, cal.n_devices * cal.parallel_eff)
+    scores: Dict[str, float] = {}
+    for b in candidates:
+        if b == "sequential":
+            scores[b] = (A + 1) * d + Tc + Ts
+        elif b == "vectorized":
+            scores[b] = 2 * d + Tc + Ts
+        elif b == "sharded":
+            xs = costs[server_path].collective_bytes / max(cal.bytes_per_s, 1.0)
+            scores[b] = (
+                2 * d / _segment_rounds("sharded") + (Tc + Ts) / eff + xs
+            )
+        elif b == "event":
+            fc = costs["flight_integrate"]
+            waves = max(1, int(costs.get("_event_waves", 1) or 1))
+            xe = fc.collective_bytes / max(cal.bytes_per_s, 1.0)
+            scores[b] = (
+                2 * d / _segment_rounds("event")
+                + Tc + fc.seconds / waves + xe
+            )
+    return scores
+
+
+def resolve_auto(
+    cfg,
+    alg,
+    loss_fn: Callable,
+    params: Pytree,
+    data: Dict[str, np.ndarray],
+) -> tuple:
+    """Resolve ``backend="auto"`` → (concrete cfg copy, TuneDecision).
+
+    Pure with respect to the simulation: consumes no host rng, mutates
+    nothing — FedSim calls it right before ``get_backend``.
+    """
+    cal = measure_calibration()
+    n = cfg.n_clients
+    A = n if alg.full_participation_only else max(
+        1, int(round(cfg.participation * n))
+    )
+    epochs_max = (
+        cfg.hetero.epochs_max if cfg.hetero is not None else cfg.epochs_fixed
+    )
+    s_pad = max(1, int(epochs_max) * int(cfg.steps_per_epoch))
+
+    kind = alg.client_kind
+    mu = float(alg.client_mu()) if hasattr(alg, "client_mu") else 0.0
+    flow = bool(getattr(alg, "has_flow_dynamics", False))
+
+    costs: Dict[str, Any] = {
+        "client_cohort": costmodel.client_cohort_cost(
+            loss_fn, kind, mu, params, data, A, s_pad, cfg.batch_size, cal
+        ),
+    }
+    if flow:
+        costs["consensus"] = costmodel.consensus_cost(
+            params, n, A, cfg.consensus, cal
+        )
+        costs["flight_integrate"] = costmodel.flight_integrate_cost(
+            params, n, cfg.consensus, cfg.event_horizon,
+            cfg.event_max_waves, cal,
+        )
+        costs["anchor_rebase"] = costmodel.anchor_rebase_cost(params, n, cal)
+        costs["_event_waves"] = int(cfg.event_max_waves)
+        server_path = "consensus"
+    else:
+        costs["batch_agg"] = costmodel.batch_agg_cost(
+            params, A, cal, use_kernel=cfg.agg_kernels
+        )
+        server_path = "batch_agg"
+
+    candidates = candidate_backends(alg)
+    scores = score_backends(candidates, costs, cal, A, server_path)
+    chosen = min(scores, key=scores.get)
+
+    # Pallas kernels run in interpret mode off-accelerator, where they never
+    # beat the fused jnp path — only keep user-requested kernels on cpu
+    kernel_flags = {
+        "agg_kernels": bool(cfg.agg_kernels) and cal.platform != "cpu",
+    }
+
+    methods = [
+        c.method for c in costs.values()
+        if isinstance(c, costmodel.HotPathCost)
+    ]
+    method = (
+        "measured" if "measured" in methods
+        else "unavailable" if all(m == "unavailable" for m in methods)
+        else "hlo"
+    )
+
+    decision = TuneDecision(
+        chosen=chosen,
+        scores={b: float(s) for b, s in scores.items()},
+        terms={
+            k: v.to_dict() for k, v in costs.items()
+            if isinstance(v, costmodel.HotPathCost)
+        },
+        method=method,
+        kernel_flags=kernel_flags,
+        calibration=cal.to_dict(),
+        n_clients=int(n),
+        cohort=int(A),
+        algorithm=alg.name,
+        bench_reference=_bench_reference(alg.name, n, chosen, scores),
+    )
+    new_cfg = dataclasses.replace(
+        cfg, backend=chosen, agg_kernels=kernel_flags["agg_kernels"]
+    )
+    return new_cfg, decision

@@ -1,0 +1,72 @@
+"""Shared schema-versioned bench-report emitter.
+
+The three bench writers (``benchmarks/run.py`` engine + comm,
+``launch/sweep.py`` scenarios) historically each open-coded their
+``json.dump``; this is the one place a BENCH_*.json gets persisted now.
+The emitter
+
+  * refuses reports without the ``schema_version``/``benchmark`` envelope
+    (the gate and the artifact tests key on them),
+  * stamps a top-level ``machine`` block — platform, device count, jax
+    version, and the measured calibration (``repro.tune.calibrate``) that
+    ``tune/gate.py`` uses to normalize rounds/sec across machines,
+  * writes deterministic ``indent=2`` JSON with a trailing newline.
+
+The block is stamped into the SAME dict the bench returns, so the
+``persisted == report`` pin in tests/test_bench_engine.py stays exact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Any, Dict
+
+BENCH_ENVELOPE_KEYS = ("schema_version", "benchmark")
+
+
+def machine_block(calibrate: bool = True) -> Dict[str, Any]:
+    import jax
+
+    block: Dict[str, Any] = {
+        "platform": jax.default_backend(),
+        "n_devices": jax.device_count(),
+        "jax_version": jax.__version__,
+        "python": sys.version.split()[0],
+    }
+    if calibrate:
+        try:
+            from repro.tune.calibrate import measure_calibration
+
+            block["calibration"] = measure_calibration().to_dict()
+        except Exception as e:  # never let calibration sink a bench write
+            block["calibration"] = None
+            block["calibration_error"] = f"{type(e).__name__}: {e}"
+    else:
+        block["calibration"] = None
+    return block
+
+
+def write_bench_report(
+    report: Dict[str, Any], path: str, calibrate: bool = True
+) -> Dict[str, Any]:
+    """Stamp the machine block into ``report`` and persist it at ``path``.
+
+    Returns the (mutated) report. Raises ``ValueError`` on a report that
+    lacks the schema envelope — catching drift at the writer, not in CI.
+    """
+    missing = [k for k in BENCH_ENVELOPE_KEYS if k not in report]
+    if missing:
+        raise ValueError(
+            f"bench report for {path!r} is missing envelope key(s) "
+            f"{missing}; every persisted bench carries "
+            f"{list(BENCH_ENVELOPE_KEYS)} (repro.tune.bench_io)"
+        )
+    report["machine"] = machine_block(calibrate=calibrate)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return report

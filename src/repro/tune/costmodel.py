@@ -1,0 +1,277 @@
+"""Hot-path cost extraction: lower the fed engine's real programs to HLO.
+
+The autotuner does not guess what a backend costs — it lowers the actual
+jitted hot paths (the vmap-over-scan client cohort, the FedECADO consensus
+BE round, the averaging-family batched aggregation, the event scheduler's
+flight-table integrate, the Γ anchor rebase) through ``jax.jit(...).lower``
+on ``ShapeDtypeStruct``s (no real data, no execution), feeds the compiled
+module text through the trip-count-aware analyzer (``repro.tune.hlocost``),
+and converts FLOPs/bytes into seconds with the *measured* machine rates
+from ``repro.tune.calibrate``.
+
+When HLO text is unavailable on a platform (or the analyzer chokes on an
+exotic module), ``job.cost()`` falls back to compiling and timing one real
+execution on zero-filled inputs — the measured micro-calibration fallback.
+
+Costs are cached per process keyed by (job, shape fingerprint, platform):
+lowering the consensus round for a given (model, n, A) happens once even
+when the autotuner scores many algorithms/backends against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tune import hlocost
+from repro.tune.calibrate import Calibration
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class HotPathCost:
+    """One lowered hot path, costed per dispatch."""
+
+    name: str
+    flops: float
+    bytes: float
+    collective_bytes: float
+    seconds: float          # calibrated wall-seconds estimate per dispatch
+    method: str             # "hlo" | "measured" | "unavailable"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def _seconds_from_counts(
+    flops: float, nbytes: float, cal: Calibration
+) -> float:
+    """Roofline with the machine's measured rates: the path takes at least
+    as long as its compute and at least as long as its memory traffic."""
+    return max(
+        flops / max(cal.flops_per_s, 1.0),
+        nbytes / max(cal.bytes_per_s, 1.0),
+    )
+
+
+def _sds(tree: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(jnp.shape(l), jnp.result_type(l)), tree
+    )
+
+
+def _zeros_of(tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
+
+def _fingerprint(tree: Pytree) -> Tuple:
+    return tuple(
+        (l.shape, str(l.dtype)) for l in jax.tree.leaves(_sds(tree))
+    )
+
+
+_COST_CACHE: Dict[Tuple, HotPathCost] = {}
+
+
+def clear_cache() -> None:
+    _COST_CACHE.clear()
+
+
+def path_cost(
+    name: str,
+    fn: Callable,
+    args: Tuple,
+    cal: Calibration,
+    extra_key: Tuple = (),
+) -> HotPathCost:
+    """Cost one hot path: lower+analyze, else compile+time, else zero."""
+    key = (name, cal.platform, _fingerprint(args), extra_key)
+    hit = _COST_CACHE.get(key)
+    if hit is not None:
+        return hit
+    sds = _sds(args)
+    cost: Optional[HotPathCost] = None
+    try:
+        compiled = jax.jit(fn).lower(*sds).compile()
+        hc = hlocost.analyze(compiled.as_text())
+        cost = HotPathCost(
+            name=name,
+            flops=float(hc["flops"]),
+            bytes=float(hc["bytes"]),
+            collective_bytes=float(hc["collective_bytes"]),
+            seconds=_seconds_from_counts(hc["flops"], hc["bytes"], cal),
+            method="hlo",
+        )
+        if cost.flops == 0.0 and cost.bytes == 0.0:
+            cost = None  # analyzer found nothing it understands: measure
+    except Exception:
+        cost = None
+    if cost is None:
+        try:
+            jfn = jax.jit(fn)
+            z = _zeros_of(sds)
+            jax.block_until_ready(jfn(*z))  # compile + warm
+            t0 = time.perf_counter()
+            jax.block_until_ready(jfn(*z))
+            cost = HotPathCost(
+                name=name, flops=0.0, bytes=0.0, collective_bytes=0.0,
+                seconds=time.perf_counter() - t0, method="measured",
+            )
+        except Exception:
+            cost = HotPathCost(
+                name=name, flops=0.0, bytes=0.0, collective_bytes=0.0,
+                seconds=0.0, method="unavailable",
+            )
+    _COST_CACHE[key] = cost
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# the four fed hot paths
+# ---------------------------------------------------------------------------
+
+
+def client_cohort_cost(
+    loss_fn: Callable,
+    kind: str,
+    mu: float,
+    params: Pytree,
+    data: Dict[str, np.ndarray],
+    A: int,
+    s_pad: int,
+    batch_size: int,
+    cal: Calibration,
+) -> HotPathCost:
+    """One vmapped cohort dispatch: A clients × s_pad local steps."""
+    from repro.sim.vectorized import cohort_vmap_fn
+
+    fn = cohort_vmap_fn(loss_fn, kind, mu)
+    batches = {
+        k: jax.ShapeDtypeStruct(
+            (A, s_pad, batch_size) + np.shape(v)[1:], jnp.result_type(v)
+        )
+        for k, v in data.items()
+    }
+    p32 = jax.tree.map(lambda l: jnp.asarray(l, jnp.float32), params)
+    I_a = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((A,) + jnp.shape(l), jnp.float32), p32
+    )
+    args = (
+        _sds(p32), I_a, batches,
+        jax.ShapeDtypeStruct((A,), jnp.float32),   # lrs
+        jax.ShapeDtypeStruct((A,), jnp.float32),   # ps
+        jax.ShapeDtypeStruct((A,), jnp.int32),     # n_valid
+    )
+    return path_cost(
+        "client_cohort", fn, args, cal, extra_key=(kind, float(mu))
+    )
+
+
+def consensus_cost(
+    params: Pytree, n_clients: int, A: int, ccfg, cal: Calibration
+) -> HotPathCost:
+    """One FedECADO server round (Algorithm 2 steps 12-16, adaptive BE)."""
+    from repro.core import init_server_state
+    from repro.core.fedecado import server_round
+
+    p32 = jax.tree.map(lambda l: jnp.asarray(l, jnp.float32), params)
+    state = jax.eval_shape(
+        lambda p: init_server_state(p, n_clients=n_clients), p32
+    )
+    x_new_a = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((A,) + jnp.shape(l), jnp.float32), p32
+    )
+    fn = lambda st, xn, T, idx: server_round(st, xn, T, idx, ccfg)
+    args = (
+        state, x_new_a,
+        jax.ShapeDtypeStruct((A,), jnp.float32),
+        jax.ShapeDtypeStruct((A,), jnp.int32),
+    )
+    return path_cost(
+        "consensus", fn, args, cal,
+        extra_key=(ccfg.max_substeps, ccfg.max_backtracks),
+    )
+
+
+def batch_agg_cost(
+    params: Pytree, A: int, cal: Calibration, use_kernel: bool = False
+) -> HotPathCost:
+    """The averaging-family cohort aggregation x_c + scale·Σ w·(x_a − x_c)."""
+    from repro.kernels.ops import batched_aggregate
+
+    p32 = jax.tree.map(lambda l: jnp.asarray(l, jnp.float32), params)
+    x_new_a = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((A,) + jnp.shape(l), jnp.float32), p32
+    )
+    fn = lambda xc, xn, w: batched_aggregate(
+        xc, xn, w, 1.0, use_kernel=use_kernel
+    )
+    args = (_sds(p32), x_new_a, jax.ShapeDtypeStruct((A,), jnp.float32))
+    return path_cost("batch_agg", fn, args, cal, extra_key=(use_kernel,))
+
+
+def anchor_rebase_cost(
+    params: Pytree, capacity: int, cal: Calibration, use_kernel: bool = False
+) -> HotPathCost:
+    """The event scheduler's masked Γ anchor-rebase over the flight table."""
+    from repro.kernels.ops import anchor_rebase_op
+
+    p32 = jax.tree.map(lambda l: jnp.asarray(l, jnp.float32), params)
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            (capacity,) + jnp.shape(l), jnp.float32
+        ),
+        p32,
+    )
+    fn = lambda xp, xn, frac, mask: anchor_rebase_op(
+        xp, xn, frac, mask, use_kernel=use_kernel
+    )
+    args = (
+        stacked, stacked,
+        jax.ShapeDtypeStruct((capacity,), jnp.float32),
+        jax.ShapeDtypeStruct((capacity,), jnp.float32),
+    )
+    return path_cost("anchor_rebase", fn, args, cal, extra_key=(use_kernel,))
+
+
+def flight_integrate_cost(
+    params: Pytree,
+    n_clients: int,
+    ccfg,
+    horizon_quantile: float,
+    max_waves: int,
+    cal: Calibration,
+) -> HotPathCost:
+    """One event round over a capacity-n flight table (multi-rate form)."""
+    from repro.core import init_server_state
+    from repro.core.multirate import init_flight_table, multirate_integrate
+
+    p32 = jax.tree.map(lambda l: jnp.asarray(l, jnp.float32), params)
+    state = jax.eval_shape(
+        lambda p: init_server_state(p, n_clients=n_clients), p32
+    )
+    table = jax.eval_shape(
+        lambda p: init_flight_table(p, capacity=n_clients), p32
+    )
+
+    def fn(x_c, I, g_inv, dt_last, t, tbl):
+        return multirate_integrate(
+            x_c, I, g_inv, dt_last, t, tbl, ccfg,
+            horizon_quantile, max_waves,
+        )
+
+    args = (
+        state.x_c, state.I, state.g_inv, state.dt_last, state.t, table,
+    )
+    return path_cost(
+        "flight_integrate", fn, args, cal,
+        extra_key=(
+            ccfg.max_substeps, ccfg.max_backtracks,
+            float(horizon_quantile), int(max_waves),
+        ),
+    )

@@ -1,0 +1,47 @@
+"""Shared HLO dtype byte-width table — the ONE copy.
+
+``launch/roofline.py`` and ``launch/hlocost.py`` historically carried two
+hand-copied (and already diverging: roofline's lacked ``s4``/``u4``/
+``token``) ``_DTYPE_BYTES`` tables. Both parsers now import this module, so
+adding a dtype (or fixing a width) propagates to every HLO cost consumer at
+once. ``SHAPE_RE`` is the companion shape-literal regex, built from the
+table so the two can never disagree about which dtypes are parseable.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# sub-byte dtypes round up to one byte: HLO buffers are byte-addressed
+DTYPE_BYTES: Dict[str, int] = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+
+# longest-first alternation so e.g. "s64" can never half-match as "s4";
+# "token" has no shape-literal form (token, not token[...]) so it is
+# excluded from the regex but kept in the table for completeness
+_SHAPE_DTYPES = sorted(
+    (k for k in DTYPE_BYTES if k != "token"), key=len, reverse=True
+)
+
+SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_SHAPE_DTYPES) + r")\[([\d,]*)\]"
+)
+
+
+def shape_literal_bytes(dtype: str, dims: str) -> int:
+    """Bytes of one ``dtype[dims]`` HLO shape literal (dims comma-joined)."""
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+def text_bytes(text: str) -> int:
+    """Total bytes of every array-shape literal in ``text`` (tuples sum)."""
+    return sum(
+        shape_literal_bytes(dt, dims) for dt, dims in SHAPE_RE.findall(text)
+    )

@@ -1,0 +1,257 @@
+"""BENCH_* regression gates: committed baselines become enforced floors.
+
+``compare_engine`` matches engine-bench rows on (algorithm, backend,
+n_clients) and flags any candidate whose machine-normalized rounds/sec
+falls more than ``threshold`` below the committed baseline. Normalization
+uses the ``machine.calibration`` block the shared emitter stamps on every
+report (``repro.tune.bench_io``): a candidate measured on a slower machine
+is scaled up by the ratio of the two machines' calibration scores before
+the comparison, so the gate tracks code regressions, not hardware
+differences. Baselines committed before calibration existed compare at
+scale 1.0 and the report says so.
+
+``compare_comm`` guards the bytes/accuracy frontier: wire bytes are
+deterministic accounting (repro/comm counts payload bytes, it does not
+time anything), so ANY per-round upstream-bytes growth for a matched
+(algorithm, scenario, compress, level) cell is erosion and fails at
+threshold 0; accuracy regressions use the rounds/sec-style threshold.
+
+CLI (wired into ``benchmarks/run.py --gate`` and the CI perf-gate job):
+
+    python -m repro.tune.gate --kind engine --baseline BENCH_engine.json \
+        --candidate /tmp/cand.json [--threshold 0.5] [--warn-only] \
+        [--report gate-report/engine.json]
+
+Exit status: 0 = pass (or --warn-only), 1 = regression, 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional
+
+from repro.tune.calibrate import calib_score
+
+DEFAULT_THRESHOLD = 0.5   # CI machines are noisy; the gate is a floor,
+                          # not a tight perf test (DESIGN.md §12)
+
+
+def _machine_scale(baseline: Dict, candidate: Dict) -> Dict[str, Any]:
+    """rps scale factor applied to CANDIDATE rows: >1 means the candidate
+    ran on a slower machine than the baseline and gets credit for it."""
+    b = calib_score((baseline.get("machine") or {}).get("calibration"))
+    c = calib_score((candidate.get("machine") or {}).get("calibration"))
+    calibrated = (
+        b != 1.0 and c != 1.0
+        and (baseline.get("machine") or {}).get("calibration") is not None
+        and (candidate.get("machine") or {}).get("calibration") is not None
+    )
+    return {
+        "scale": (b / c) if calibrated else 1.0,
+        "calibrated": calibrated,
+        "baseline_score": b,
+        "candidate_score": c,
+    }
+
+
+def _row_key(r: Dict) -> tuple:
+    return (r.get("algorithm"), r.get("backend"), int(r.get("n_clients", -1)))
+
+
+def compare_engine(
+    baseline: Dict, candidate: Dict, threshold: float = DEFAULT_THRESHOLD
+) -> Dict[str, Any]:
+    """-> report {ok, violations, checked, skipped, normalization, ...}."""
+    norm = _machine_scale(baseline, candidate)
+    scale = norm["scale"]
+    cand_rows = {_row_key(r): r for r in candidate.get("results", [])}
+    violations: List[Dict] = []
+    checked: List[Dict] = []
+    skipped: List[tuple] = []
+    for base in baseline.get("results", []):
+        key = _row_key(base)
+        cand = cand_rows.get(key)
+        if cand is None:
+            skipped.append(key)
+            continue
+        base_rps = float(base.get("rounds_per_sec", 0.0))
+        cand_rps = float(cand.get("rounds_per_sec", 0.0)) * scale
+        floor = base_rps * (1.0 - threshold)
+        row = {
+            "key": list(key),
+            "baseline_rps": base_rps,
+            "candidate_rps_normalized": cand_rps,
+            "floor": floor,
+            "ok": cand_rps >= floor,
+        }
+        checked.append(row)
+        if not row["ok"]:
+            violations.append(row)
+    return {
+        "kind": "engine",
+        "ok": not violations,
+        "threshold": threshold,
+        "normalization": norm,
+        "n_checked": len(checked),
+        "checked": checked,
+        "violations": violations,
+        "skipped_rows": [list(k) for k in skipped],
+    }
+
+
+def _comm_key(r: Dict) -> tuple:
+    return (
+        r.get("algorithm"), r.get("scenario"),
+        r.get("compress"), r.get("level"),
+    )
+
+
+def compare_comm(
+    baseline: Dict, candidate: Dict, threshold: float = DEFAULT_THRESHOLD
+) -> Dict[str, Any]:
+    """Bytes-frontier gate. Matched cells may never grow their PER-ROUND
+    wire bytes (bytes are deterministic accounting — no machine
+    normalization, no threshold; any growth is erosion; the per-round
+    normalization lets a short CI slice compare against the full committed
+    run). ``acc_ratio`` (accuracy relative to the run's own lossless
+    baseline, so it is comparable across round counts) may not drop more
+    than ``threshold``; losing the dirichlet01 acceptance criterion
+    (``criterion.ok``) while the baseline held it is a violation too."""
+    b_rounds = max(1, int(baseline.get("rounds", 1)))
+    c_rounds = max(1, int(candidate.get("rounds", 1)))
+    cand_rows = {_comm_key(r): r for r in candidate.get("results", [])}
+    violations: List[Dict] = []
+    checked: List[Dict] = []
+    skipped: List[tuple] = []
+    for base in baseline.get("results", []):
+        key = _comm_key(base)
+        cand = cand_rows.get(key)
+        if cand is None:
+            skipped.append(key)
+            continue
+        problems = []
+        for byte_col in ("bytes_up", "bytes_down"):
+            b, c = base.get(byte_col), cand.get(byte_col)
+            if b is None or c is None:
+                continue
+            b_pr, c_pr = float(b) / b_rounds, float(c) / c_rounds
+            if c_pr > b_pr * (1.0 + 1e-9):
+                problems.append(
+                    f"{byte_col}/round grew {b_pr:.1f} -> {c_pr:.1f}"
+                )
+        b_ar, c_ar = base.get("acc_ratio"), cand.get("acc_ratio")
+        if b_ar is not None and c_ar is not None:
+            if float(c_ar) < float(b_ar) * (1.0 - threshold):
+                problems.append(
+                    f"acc_ratio regressed {float(b_ar):.4f} -> "
+                    f"{float(c_ar):.4f}"
+                )
+        row = {"key": list(key), "ok": not problems, "problems": problems}
+        checked.append(row)
+        if problems:
+            violations.append(row)
+    crit_base = (baseline.get("criterion") or {}).get("ok")
+    crit_cand = (candidate.get("criterion") or {}).get("ok")
+    criterion_regressed = bool(crit_base) and crit_cand is False
+    if criterion_regressed:
+        violations.append({
+            "key": ["criterion", "dirichlet01"],
+            "ok": False,
+            "problems": [
+                "dirichlet01 acceptance criterion regressed: baseline "
+                "held >=95% accuracy at <=25% uplink bytes, candidate "
+                "has no witness"
+            ],
+        })
+    return {
+        "kind": "comm",
+        "ok": not violations,
+        "threshold": threshold,
+        "rounds": {"baseline": b_rounds, "candidate": c_rounds},
+        "criterion_regressed": criterion_regressed,
+        "n_checked": len(checked),
+        "checked": checked,
+        "violations": violations,
+        "skipped_rows": [list(k) for k in skipped],
+    }
+
+
+COMPARATORS = {"engine": compare_engine, "comm": compare_comm}
+
+
+def write_report(report: Dict, path: str) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+
+def run_gate(
+    kind: str,
+    baseline_path: str,
+    candidate_path: str,
+    threshold: float = DEFAULT_THRESHOLD,
+    report_path: Optional[str] = None,
+    warn_only: bool = False,
+    out=sys.stdout,
+) -> int:
+    if kind not in COMPARATORS:
+        print(
+            f"unknown gate kind {kind!r}; choose from "
+            f"{sorted(COMPARATORS)}", file=sys.stderr,
+        )
+        return 2
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+        with open(candidate_path) as f:
+            candidate = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"gate: cannot load inputs: {e}", file=sys.stderr)
+        return 2
+    report = COMPARATORS[kind](baseline, candidate, threshold)
+    report["warn_only"] = warn_only
+    if report_path:
+        write_report(report, report_path)
+    status = "PASS" if report["ok"] else ("WARN" if warn_only else "FAIL")
+    print(
+        f"[gate:{kind}] {status}: {len(report['violations'])} violation(s) "
+        f"over {report['n_checked']} matched row(s), "
+        f"threshold {threshold:.0%}",
+        file=out,
+    )
+    for v in report["violations"]:
+        detail = v.get("problems") or (
+            f"rps {v['candidate_rps_normalized']:.3f} < floor {v['floor']:.3f}"
+            f" (baseline {v['baseline_rps']:.3f})"
+        )
+        print(f"  - {v['key']}: {detail}", file=out)
+    if report["ok"] or warn_only:
+        return 0
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="BENCH_* perf regression gate (repro.tune.gate)"
+    )
+    ap.add_argument("--kind", choices=sorted(COMPARATORS), required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--candidate", required=True)
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    ap.add_argument("--warn-only", action="store_true")
+    ap.add_argument("--report", default=None)
+    args = ap.parse_args(argv)
+    return run_gate(
+        args.kind, args.baseline, args.candidate,
+        threshold=args.threshold, report_path=args.report,
+        warn_only=args.warn_only,
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,242 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD, per-device) HLO.
+
+Why: ``compiled.cost_analysis()`` counts while-loop bodies ONCE, but our
+models scan over layer periods / KV chunks / SSM time chunks, so FLOPs,
+bytes and collective traffic inside loops must be multiplied by trip counts.
+XLA records ``backend_config={"known_trip_count":{"n":...}}`` on while ops,
+which lets us attribute an execution multiplier to every computation.
+
+Cost model per executed computation (multiplied through the while nesting):
+  * flops: dot ops: 2·prod(output dims)·prod(lhs contracting dims);
+    convolution: 2·prod(output)·prod(kernel)·C_in (not used by our models).
+  * bytes (HBM traffic proxy): Σ over non-trivial instructions of
+    (output bytes + operand bytes); fusion internals are excluded (their
+    intermediates stay in registers/VMEM) — only fusion boundaries count.
+    This approximates each materialized tensor as read+written once.
+  * collective bytes: output bytes per collective op kind ("-done" halves
+    of async pairs are skipped to avoid double counting).
+
+Lives in ``repro.tune`` (the cost-model subsystem, DESIGN.md §12);
+``launch/hlocost.py`` is a thin re-export shim for old call sites.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.tune.dtypes import DTYPE_BYTES, SHAPE_RE, text_bytes
+
+# back-compat aliases: the dtype table and shape regex are owned by
+# repro.tune.dtypes — one copy for every HLO cost consumer
+_DTYPE_BYTES = DTYPE_BYTES
+_SHAPE_RE = SHAPE_RE
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_OPCODES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id",
+    # control flow: carried state is aliased in place; the bodies are
+    # visited and costed separately
+    "while", "call", "conditional",
+}
+
+
+def _shape_bytes(text: str) -> int:
+    return text_bytes(text)
+
+
+def _shape_dims(text: str) -> List[int]:
+    """Dims of the FIRST array shape in text."""
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+class Instr:
+    __slots__ = ("name", "shape_text", "opcode", "rest", "out_bytes")
+
+    def __init__(self, name, shape_text, opcode, rest):
+        self.name = name
+        self.shape_text = shape_text
+        self.opcode = opcode
+        self.rest = rest
+        self.out_bytes = _shape_bytes(shape_text)
+
+
+def parse_module(text: str):
+    """-> (computations: {name: [Instr]}, entry_name, root_ops {name: opcode})."""
+    comps: Dict[str, List[Instr]] = {}
+    root_ops: Dict[str, str] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                is_entry, name = m.group(1), m.group(2)
+                cur = name
+                comps[cur] = []
+                if is_entry:
+                    entry = name
+            continue
+        ls = line.strip()
+        if ls == "}" or ls.startswith("} //"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
+            if ls.startswith("ROOT"):
+                root_ops[cur] = m.group(3)
+    return comps, entry, root_ops
+
+
+_CALLED_SINGLE_RE = re.compile(r"(?:condition|body|to_apply)=%?([\w.\-]+)")
+_CALLED_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _called_comps(rest: str) -> List[str]:
+    out = list(_CALLED_SINGLE_RE.findall(rest))
+    for group in _CALLED_BRANCHES_RE.findall(rest):
+        out.extend(n.strip().lstrip("%") for n in group.split(",") if n.strip())
+    return out
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:
+    out_dims = _shape_dims(instr.shape_text)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    m = _CONTRACT_RE.search(instr.rest)
+    # first operand = lhs
+    ops = _OPERAND_RE.findall(instr.rest.split("),")[0])
+    if not ops:
+        return 0.0
+    lhs_shape = shapes.get(ops[0], "")
+    lhs_dims = _shape_dims(lhs_shape)
+    k = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            di = int(d)
+            if di < len(lhs_dims):
+                k *= lhs_dims[di]
+    return 2.0 * out_n * k
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps, entry, root_ops = parse_module(text)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+
+    # per-computation local shape tables
+    shape_tables = {
+        name: {i.name: i.shape_text for i in instrs} for name, instrs in comps.items()
+    }
+
+    # Build multipliers by walking the call graph from ENTRY.
+    mult: Dict[str, float] = {}
+    unknown_trips = 0
+
+    def visit(name: str, m: float):
+        nonlocal unknown_trips
+        mult[name] = mult.get(name, 0.0) + m
+        for instr in comps.get(name, []):
+            called: List[Tuple[str, float]] = []
+            if instr.opcode == "while":
+                tm = _TRIP_RE.search(instr.rest)
+                trip = float(tm.group(1)) if tm else 1.0
+                if not tm:
+                    unknown_trips += 1
+                # condition runs trip+1 times, body trip times; use trip
+                for cname in _called_comps(instr.rest):
+                    called.append((cname, trip))
+            elif instr.opcode in ("call", "conditional", "custom-call", "async-start"):
+                for cname in _called_comps(instr.rest):
+                    called.append((cname, 1.0))
+            for cname, factor in called:
+                if cname in comps:
+                    visit(cname, m * factor)
+
+    visit(entry, 1.0)
+
+    # fusion bodies are NOT executed standalone: exclude them from the walk
+    # (they're referenced via calls= on fusion instrs, which we don't visit).
+
+    flops = 0.0
+    bytes_traffic = 0.0
+    coll: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_KINDS}
+
+    for name, m in mult.items():
+        table = shape_tables[name]
+        for instr in comps[name]:
+            op = instr.opcode
+            if op in _SKIP_OPCODES:
+                continue
+            if op == "dot":
+                flops += m * _dot_flops(instr, table)
+            # collectives (skip -done halves of async pairs)
+            if not op.endswith("-done"):
+                for ck in COLLECTIVE_KINDS:
+                    if op == ck or op.startswith(ck + "-"):
+                        coll[ck] += m * instr.out_bytes
+                        break
+            # bytes: output + operands (operand shapes resolved locally)
+            if op == "dynamic-update-slice":
+                # in-place slice write: traffic = 2x the update slice, not
+                # the full buffer (operand 1 is the update)
+                refs = _OPERAND_RE.findall(instr.rest)
+                upd = _shape_bytes(table.get(refs[1], "")) if len(refs) > 1 else 0
+                bytes_traffic += m * 2 * upd
+                continue
+            if op == "dynamic-slice":
+                bytes_traffic += m * 2 * instr.out_bytes
+                continue
+            if op == "fusion":
+                # fusions whose root is a dynamic-(update-)slice operate
+                # in place: count slice traffic, not the carried buffer
+                # (the scan-ys stacking pattern — dominates recurrent archs)
+                fm = _CALLS_RE.search(instr.rest)
+                root = root_ops.get(fm.group(1)) if fm else None
+                if root == "dynamic-update-slice":
+                    upd = sum(
+                        _shape_bytes(table[r])
+                        for r in _OPERAND_RE.findall(instr.rest)
+                        if r in table
+                        and 16 < _shape_bytes(table[r]) != instr.out_bytes
+                    )
+                    bytes_traffic += m * 2 * upd
+                    continue
+                if root == "dynamic-slice":
+                    bytes_traffic += m * 2 * instr.out_bytes
+                    continue
+            ob = instr.out_bytes
+            operand_bytes = 0
+            for ref in _OPERAND_RE.findall(instr.rest):
+                if ref in table:
+                    operand_bytes += _shape_bytes(table[ref])
+            bytes_traffic += m * (ob + operand_bytes)
+
+    out = {
+        "flops": flops,
+        "bytes": bytes_traffic,
+        "collective_bytes": sum(coll.values()),
+        "unknown_trip_counts": unknown_trips,
+    }
+    out.update({f"coll_{k}": v for k, v in coll.items()})
+    return out

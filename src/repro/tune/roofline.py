@@ -1,0 +1,94 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. The compiled module is already SPMD-partitioned, so
+cost_analysis FLOPs/bytes and HLO operand sizes are PER-CHIP values —
+terms divide by the per-chip rates only.
+
+  compute    = flops / PEAK_FLOPS
+  memory     = bytes_accessed / HBM_BW
+  collective = Σ collective operand bytes / ICI_BW
+
+Lives in ``repro.tune`` (the cost-model subsystem, DESIGN.md §12);
+``launch/roofline.py`` is a thin re-export shim for old call sites.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.tune.dtypes import DTYPE_BYTES, SHAPE_RE, shape_literal_bytes
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# back-compat aliases: owned by repro.tune.dtypes since the roofline and
+# hlocost copies had already diverged (this one lacked s4/u4/token)
+_DTYPE_BYTES = DTYPE_BYTES
+_SHAPE_RE = SHAPE_RE
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return shape_literal_bytes(dtype, dims)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-tensor bytes of every collective op in the (post-SPMD,
+    per-device) HLO. Returns {collective_kind: bytes} (+ "total")."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # Match op assignments like: %x = f32[..] all-reduce(...), or tuples
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        shape_part, opname = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-"):
+                kind = c
+                break
+        if kind is None:
+            continue
+        nbytes = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(shape_part)
+        )
+        out[kind] += nbytes
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(
+    flops: float, bytes_accessed: float, collective_bytes: float
+) -> Dict[str, float]:
+    compute = flops / PEAK_FLOPS
+    memory = bytes_accessed / HBM_BW
+    collective = collective_bytes / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms
+
+
+def model_flops(cfg, shape, n_tokens: int = None) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) — the useful-compute yardstick.
+
+    For decode steps D = batch (one token per sequence); backward pass
+    multiplies by 3 for training shapes (6ND already includes it: 2ND fwd +
+    4ND bwd). For inference shapes we use 2·N_active·D.
+    """
+    n_active = cfg.active_param_count()
+    if n_tokens is None:
+        n_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * n_tokens

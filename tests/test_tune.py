@@ -1,0 +1,523 @@
+"""Tests for the repro.tune cost-model subsystem (DESIGN.md §12).
+
+Covers the satellite parser coverage (hlocost trip-count multiplication,
+collective "-done" dedup, fusion-boundary byte counting, roofline term
+math — all on canned HLO text, no compilation), the shared dtype table,
+the dryrun XLA_FLAGS merge, the bench emitter, the BENCH_* regression
+gate comparators + CLI exit codes, and the "auto" backend: selection for
+every flow-capable algorithm at n ∈ {10, 100, 1000} plus the FedSim
+end-to-end run-log decision record.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax  # noqa: F401 — lock the device topology before any env games
+import jax.numpy as jnp
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# hlocost parsers on canned HLO text (no compilation)
+# ---------------------------------------------------------------------------
+
+_WHILE_HLO = """\
+HloModule trip_test
+
+body.1 (p: (f32[8,16], f32[16,8])) -> (f32[8,16], f32[16,8]) {
+  p0 = (f32[8,16], f32[16,8]) parameter(0)
+  x = f32[8,16] get-tuple-element(%p0), index=0
+  y = f32[16,8] get-tuple-element(%p0), index=1
+  d = f32[8,8] dot(%x, %y), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT t = (f32[8,16], f32[16,8]) tuple(%x, %y)
+}
+
+cond.1 (p: (f32[8,16], f32[16,8])) -> pred[] {
+  p0 = (f32[8,16], f32[16,8]) parameter(0)
+  ROOT lt = pred[] constant(true)
+}
+
+ENTRY main (a: (f32[8,16], f32[16,8])) -> (f32[8,16], f32[16,8]) {
+  a0 = (f32[8,16], f32[16,8]) parameter(0)
+  ROOT w = (f32[8,16], f32[16,8]) while(%a0), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"TRIP"}}
+}
+"""
+
+
+def test_hlocost_trip_count_multiplies_loop_body():
+    from repro.tune import hlocost
+
+    one = hlocost.analyze(_WHILE_HLO.replace("TRIP", "1"))
+    five = hlocost.analyze(_WHILE_HLO.replace("TRIP", "5"))
+    # dot: 2 · prod(out 8x8) · contracting 16 = 2048 flops per iteration
+    assert one["flops"] == pytest.approx(2048.0)
+    assert five["flops"] == pytest.approx(5 * 2048.0)
+    assert five["bytes"] == pytest.approx(5 * one["bytes"])
+    assert one["unknown_trip_counts"] == 0
+
+
+def test_hlocost_unknown_trip_count_is_flagged():
+    from repro.tune import hlocost
+
+    text = _WHILE_HLO.replace(
+        ', backend_config={"known_trip_count":{"n":"TRIP"}}', ""
+    )
+    out = hlocost.analyze(text)
+    assert out["unknown_trip_counts"] == 1
+    assert out["flops"] == pytest.approx(2048.0)  # trip defaults to 1
+
+
+_COLLECTIVE_HLO = """\
+HloModule coll_test
+
+ENTRY main (a: f32[1024]) -> f32[1024] {
+  a0 = f32[1024] parameter(0)
+  ars = f32[1024] all-reduce-start(%a0), replica_groups={}
+  ard = f32[1024] all-reduce-done(%ars)
+  rs = f32[256] reduce-scatter(%ard), dimensions={0}
+  ROOT c = f32[1024] copy(%ard)
+}
+"""
+
+
+def test_hlocost_collective_done_halves_not_double_counted():
+    from repro.tune import hlocost
+
+    out = hlocost.analyze(_COLLECTIVE_HLO)
+    # the async pair counts ONCE (the -start), 1024 f32 = 4096 bytes;
+    # reduce-scatter output is 256 f32 = 1024 bytes
+    assert out["coll_all-reduce"] == pytest.approx(4096.0)
+    assert out["coll_reduce-scatter"] == pytest.approx(1024.0)
+    assert out["collective_bytes"] == pytest.approx(5120.0)
+
+
+_FUSION_HLO = """\
+HloModule fusion_test
+
+fused_computation (fp0: f32[128,64], fp1: f32[1,64], fp2: s32[]) -> f32[128,64] {
+  fp0 = f32[128,64] parameter(0)
+  fp1 = f32[1,64] parameter(1)
+  fp2 = s32[] parameter(2)
+  ROOT dus = f32[128,64] dynamic-update-slice(%fp0, %fp1, %fp2, %fp2)
+}
+
+ENTRY main (buf: f32[128,64], upd: f32[1,64]) -> f32[128,64] {
+  buf = f32[128,64] parameter(0)
+  upd = f32[1,64] parameter(1)
+  ROOT f = f32[128,64] fusion(%buf, %upd), kind=kLoop, calls=%fused_computation
+}
+"""
+
+
+def test_hlocost_fusion_boundary_in_place_update():
+    from repro.tune import hlocost
+
+    out = hlocost.analyze(_FUSION_HLO)
+    # a dus-rooted fusion is an in-place slice write: traffic = 2x the
+    # 1x64 f32 update slice (512 bytes), NOT the 32 KiB carried buffer —
+    # and the fusion body is never costed standalone
+    assert out["bytes"] == pytest.approx(2 * 64 * 4)
+    assert out["flops"] == 0.0
+
+
+def test_hlocost_fusion_body_not_walked():
+    from repro.tune import hlocost
+
+    comps, entry, root_ops = hlocost.parse_module(_FUSION_HLO)
+    assert entry == "main"
+    assert "fused_computation" in comps
+    assert root_ops["fused_computation"] == "dynamic-update-slice"
+
+
+# ---------------------------------------------------------------------------
+# roofline terms + shared dtype table
+# ---------------------------------------------------------------------------
+
+
+def test_roofline_terms_math():
+    from repro.tune.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, roofline_terms
+
+    t = roofline_terms(PEAK_FLOPS, HBM_BW / 2, ICI_BW / 4)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(0.5)
+    assert t["collective_s"] == pytest.approx(0.25)
+    assert t["dominant"] == "compute_s"
+    assert t["bound_s"] == pytest.approx(1.0)
+
+
+def test_parse_collective_bytes_counts_subbyte_dtypes():
+    from repro.tune.roofline import parse_collective_bytes
+
+    # s4 was missing from roofline's old private dtype table — the shared
+    # table (repro.tune.dtypes) parses it now; sub-byte rounds up to 1B
+    text = "  %ag = s4[100] all-gather(%x), dimensions={0}\n"
+    out = parse_collective_bytes(text)
+    assert out["all-gather"] == 100
+    assert out["total"] == 100
+
+
+def test_dtype_table_single_copy_across_shims():
+    from repro.launch import hlocost as launch_hlocost
+    from repro.launch import roofline as launch_roofline
+    from repro.tune import dtypes
+
+    assert launch_hlocost._DTYPE_BYTES is dtypes.DTYPE_BYTES
+    assert launch_roofline._DTYPE_BYTES is dtypes.DTYPE_BYTES
+    assert launch_hlocost._SHAPE_RE is dtypes.SHAPE_RE
+    assert launch_roofline._SHAPE_RE is dtypes.SHAPE_RE
+
+
+def test_shape_re_longest_match_wins():
+    from repro.tune.dtypes import SHAPE_RE, text_bytes
+
+    # "s64" must never half-match as "s4"
+    assert SHAPE_RE.findall("s64[2]") == [("s64", "2")]
+    assert text_bytes("s64[2]") == 16
+    assert text_bytes("s4[2]") == 2
+    assert text_bytes("(f32[4], bf16[8])") == 16 + 16
+
+
+# ---------------------------------------------------------------------------
+# dryrun XLA_FLAGS merge (satellite: the clobber fix)
+# ---------------------------------------------------------------------------
+
+
+def test_dryrun_import_does_not_mutate_xla_flags():
+    # the 512-device forcing must only fire when dryrun IS the program:
+    # importing the module for its helpers used to poison the whole
+    # process (and every subprocess) with 512 forced host devices
+    before = os.environ.get("XLA_FLAGS")
+    import repro.launch.dryrun  # noqa: F401
+
+    assert os.environ.get("XLA_FLAGS") == before
+
+
+def test_with_forced_device_count_preserves_existing_flags():
+    from repro.launch.dryrun import _with_forced_device_count
+
+    out = _with_forced_device_count(
+        "--xla_cpu_foo=1 --xla_force_host_platform_device_count=4 --bar=z",
+        512,
+    )
+    assert "--xla_cpu_foo=1" in out
+    assert "--bar=z" in out
+    assert out.count("--xla_force_host_platform_device_count") == 1
+    assert out.endswith("--xla_force_host_platform_device_count=512")
+    # empty env: just the forced flag
+    assert _with_forced_device_count("", 8) == (
+        "--xla_force_host_platform_device_count=8"
+    )
+
+
+# ---------------------------------------------------------------------------
+# bench emitter
+# ---------------------------------------------------------------------------
+
+
+def test_write_bench_report_envelope_and_machine_block(tmp_path):
+    from repro.tune.bench_io import write_bench_report
+
+    report = {"schema_version": 1, "benchmark": "test", "results": []}
+    path = str(tmp_path / "BENCH_test.json")
+    out = write_bench_report(report, path, calibrate=False)
+    assert out is report and "machine" in report
+    assert report["machine"]["platform"]
+    raw = open(path).read()
+    assert raw.endswith("\n")
+    assert json.loads(raw) == report
+
+    with pytest.raises(ValueError, match="envelope"):
+        write_bench_report({"results": []}, str(tmp_path / "bad.json"))
+
+
+# ---------------------------------------------------------------------------
+# gate comparators + CLI
+# ---------------------------------------------------------------------------
+
+
+def _engine_report(rps, machine=None):
+    rep = {
+        "schema_version": 5,
+        "benchmark": "engine",
+        "results": [
+            {
+                "algorithm": "fedecado", "backend": b, "n_clients": 10,
+                "rounds_per_sec": r,
+            }
+            for b, r in rps.items()
+        ],
+    }
+    if machine is not None:
+        rep["machine"] = machine
+    return rep
+
+
+def test_gate_engine_self_compare_passes():
+    from repro.tune.gate import compare_engine
+
+    base = _engine_report({"event": 100.0, "vectorized": 5.0})
+    rep = compare_engine(base, base, threshold=0.5)
+    assert rep["ok"] and rep["n_checked"] == 2 and not rep["violations"]
+
+
+def test_gate_engine_fails_on_regression_and_respects_threshold():
+    from repro.tune.gate import compare_engine
+
+    base = _engine_report({"event": 100.0})
+    cand = _engine_report({"event": 30.0})   # 70% slower
+    assert not compare_engine(base, cand, threshold=0.5)["ok"]
+    assert compare_engine(base, cand, threshold=0.8)["ok"]
+
+
+def test_gate_engine_machine_normalization():
+    from repro.tune.gate import compare_engine
+
+    fast = {"calibration": {"flops_per_s": 16e9, "bytes_per_s": 16e9}}
+    slow = {"calibration": {"flops_per_s": 1e9, "bytes_per_s": 1e9}}
+    base = _engine_report({"event": 100.0}, machine=fast)
+    cand = _engine_report({"event": 30.0}, machine=slow)
+    # candidate machine is 16x slower -> scale 16: no regression
+    rep = compare_engine(base, cand, threshold=0.5)
+    assert rep["normalization"]["calibrated"]
+    assert rep["normalization"]["scale"] == pytest.approx(16.0)
+    assert rep["ok"]
+    # without calibration blocks the same rows fail (scale 1, uncalibrated)
+    rep2 = compare_engine(
+        _engine_report({"event": 100.0}), _engine_report({"event": 30.0}),
+        threshold=0.5,
+    )
+    assert not rep2["normalization"]["calibrated"] and not rep2["ok"]
+
+
+def test_gate_engine_unmatched_rows_are_skipped_not_failed():
+    from repro.tune.gate import compare_engine
+
+    base = _engine_report({"event": 100.0, "sharded": 50.0})
+    cand = _engine_report({"event": 100.0})
+    rep = compare_engine(base, cand, threshold=0.5)
+    assert rep["ok"]
+    assert ["fedecado", "sharded", 10] in rep["skipped_rows"]
+
+
+def _comm_report(rounds, bytes_up, acc_ratio=1.0, criterion_ok=True):
+    return {
+        "schema_version": 1,
+        "benchmark": "comm",
+        "rounds": rounds,
+        "results": [{
+            "algorithm": "fedprox", "scenario": "dirichlet01",
+            "compress": "int8", "level": None,
+            "bytes_up": bytes_up, "bytes_down": bytes_up * 4,
+            "acc": 0.3, "acc_ratio": acc_ratio,
+        }],
+        "criterion": {"ok": criterion_ok},
+    }
+
+
+def test_gate_comm_per_round_bytes_erosion():
+    from repro.tune.gate import compare_comm
+
+    base = _comm_report(rounds=30, bytes_up=3000.0)
+    # shorter run, identical per-round bytes: fine
+    assert compare_comm(base, _comm_report(rounds=10, bytes_up=1000.0))["ok"]
+    # ANY per-round growth is erosion, regardless of threshold
+    rep = compare_comm(
+        base, _comm_report(rounds=10, bytes_up=1100.0), threshold=0.9
+    )
+    assert not rep["ok"]
+    assert "bytes_up" in rep["violations"][0]["problems"][0]
+
+
+def test_gate_comm_criterion_and_acc_ratio_regressions():
+    from repro.tune.gate import compare_comm
+
+    base = _comm_report(rounds=30, bytes_up=3000.0)
+    rep = compare_comm(
+        base,
+        _comm_report(rounds=30, bytes_up=3000.0, criterion_ok=False),
+    )
+    assert not rep["ok"] and rep["criterion_regressed"]
+    rep2 = compare_comm(
+        base,
+        _comm_report(rounds=30, bytes_up=3000.0, acc_ratio=0.2),
+        threshold=0.5,
+    )
+    assert not rep2["ok"]
+
+
+def test_gate_cli_exit_codes(tmp_path):
+    from repro.tune.gate import run_gate
+
+    base_p = str(tmp_path / "base.json")
+    good_p = str(tmp_path / "good.json")
+    bad_p = str(tmp_path / "bad.json")
+    json.dump(_engine_report({"event": 100.0}), open(base_p, "w"))
+    json.dump(_engine_report({"event": 95.0}), open(good_p, "w"))
+    json.dump(_engine_report({"event": 10.0}), open(bad_p, "w"))
+
+    report_p = str(tmp_path / "rep.json")
+    assert run_gate("engine", base_p, good_p, report_path=report_p) == 0
+    assert json.load(open(report_p))["ok"]
+    assert run_gate("engine", base_p, bad_p) == 1
+    assert run_gate("engine", base_p, bad_p, warn_only=True) == 0
+    assert run_gate("engine", base_p, str(tmp_path / "missing.json")) == 2
+    assert run_gate("nope", base_p, good_p) == 2
+
+
+def test_benchmarks_cli_rejects_unknown_only():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         "--only", "bogus"],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO,
+    )
+    assert proc.returncode != 0
+    assert "bogus" in proc.stderr
+    assert "engine" in proc.stderr  # actionable: lists the choices
+
+
+# ---------------------------------------------------------------------------
+# the "auto" backend
+# ---------------------------------------------------------------------------
+
+
+def _toy_problem(seed=0):
+    rng = np.random.RandomState(seed)
+    data = {
+        "x": rng.randn(512, 4).astype(np.float32),
+        "y": rng.randint(0, 3, 512).astype(np.int32),
+    }
+    params = {
+        "w": jnp.zeros((4, 3), jnp.float32),
+        "b": jnp.zeros((3,), jnp.float32),
+    }
+
+    def loss_fn(p, batch):
+        logits = batch["x"] @ p["w"] + p["b"]
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.mean(
+            jnp.take_along_axis(
+                lp, batch["y"][:, None].astype(jnp.int32), -1
+            )
+        )
+
+    return data, params, loss_fn
+
+
+def _flow_algorithms():
+    from repro.fed.algorithms import available_algorithms, get_algorithm
+
+    return [
+        a for a in available_algorithms()
+        if get_algorithm(a).has_flow_dynamics
+    ]
+
+
+@pytest.mark.parametrize("n", [10, 100, 1000])
+def test_resolve_auto_every_flow_algorithm(n):
+    from repro.fed import FedSimConfig
+    from repro.fed.algorithms import make_algorithm
+    from repro.sim.engine import BACKENDS
+    from repro.tune.autotune import candidate_backends, resolve_auto
+
+    data, params, loss_fn = _toy_problem()
+    algs = _flow_algorithms()
+    assert algs, "no flow-capable algorithms registered?"
+    for name in algs:
+        cfg = FedSimConfig(
+            algorithm=name, n_clients=n, participation=0.1,
+            backend="auto", batch_size=4, steps_per_epoch=1,
+            epochs_fixed=1,
+        )
+        alg = make_algorithm(cfg)
+        new_cfg, dec = resolve_auto(cfg, alg, loss_fn, params, data)
+        assert new_cfg.backend in BACKENDS
+        assert dec.chosen == new_cfg.backend
+        assert set(dec.scores) == set(candidate_backends(alg))
+        assert all(s > 0 for s in dec.scores.values())
+        assert dec.chosen == min(dec.scores, key=dec.scores.get)
+        assert dec.method in ("hlo", "measured")
+        assert "client_cohort" in dec.terms and "consensus" in dec.terms
+        assert "flight_integrate" in dec.terms
+
+
+def test_resolve_auto_averaging_family_skips_event():
+    from repro.fed import FedSimConfig
+    from repro.fed.algorithms import make_algorithm
+    from repro.tune.autotune import resolve_auto
+
+    data, params, loss_fn = _toy_problem()
+    cfg = FedSimConfig(
+        algorithm="fedavg", n_clients=10, participation=0.5,
+        backend="auto", batch_size=4, steps_per_epoch=1, epochs_fixed=1,
+    )
+    alg = make_algorithm(cfg)
+    new_cfg, dec = resolve_auto(cfg, alg, loss_fn, params, data)
+    assert "event" not in dec.scores
+    assert new_cfg.backend != "event"
+    assert "batch_agg" in dec.terms
+
+
+def test_fedsim_auto_end_to_end_with_runlog(tmp_path):
+    from repro.fed import FedSim, FedSimConfig, iid_partition
+    from repro.obs import validate_jsonl
+
+    data, params, loss_fn = _toy_problem()
+    parts = iid_partition(len(data["y"]), 10, seed=0)
+    log = str(tmp_path / "auto.jsonl")
+    cfg = FedSimConfig(
+        algorithm="fedecado", n_clients=10, participation=0.3,
+        rounds=2, backend="auto", batch_size=4, steps_per_epoch=1,
+        epochs_fixed=1, eval_every=1 << 30, log_jsonl=log,
+    )
+    sim = FedSim(loss_fn, params, data, parts, cfg)
+    assert sim.cfg.backend != "auto"
+    assert sim.tune_decision is not None
+    hist = sim.run(2)
+    assert len(hist.loss) == 2
+    recs = validate_jsonl(log)
+    header = recs[0]
+    assert header["kind"] == "run"
+    assert header["backend"] == sim.cfg.backend
+    tune = header["autotune"]
+    assert tune["chosen"] == sim.cfg.backend
+    assert set(tune["scores"]) >= {"sequential", "vectorized", "sharded"}
+    assert tune["calibration"]["dispatch_s"] > 0
+    # predicted-vs-measured audit trail: either the committed bench has no
+    # matching row (recorded as null) or agreement + gap are recorded
+    if tune["bench_reference"] is not None:
+        assert "agrees" in tune["bench_reference"]
+        assert "fastest_measured" in tune["bench_reference"]
+
+
+def test_get_backend_rejects_unresolved_auto():
+    from repro.fed import FedSimConfig
+    from repro.sim.engine import get_backend
+
+    with pytest.raises(ValueError, match="resolve_auto"):
+        get_backend(FedSimConfig(backend="auto"))
+
+
+def test_bench_reference_agreement_on_committed_baseline():
+    """At the committed bench sizes the decision record must either agree
+    with the empirically fastest backend or carry the gap audit trail."""
+    from repro.tune.autotune import _bench_reference
+
+    bench_path = os.path.join(REPO, "BENCH_engine.json")
+    if not os.path.exists(bench_path):
+        pytest.skip("no committed BENCH_engine.json")
+    scores = {
+        "sequential": 1.0, "vectorized": 0.5, "event": 0.1, "sharded": 0.2,
+    }
+    ref = _bench_reference("fedecado", 10, "event", scores)
+    assert ref is not None
+    assert ref["fastest_measured"] == "event"
+    assert ref["agrees"] is True
+    assert ref["measured_rounds_per_sec"]["event"] > 0
+    assert ref["chosen_gap_ratio"] is not None
