@@ -15,8 +15,10 @@ System benches:
                         {10, 100, 1000} on 8 forced host devices, with a
                         per-algorithm axis (--algorithms, names from the
                         fed/algorithms registry; event rows are flow-only)
-                        plus an n=10^4 heavy-traffic buffered cell;
-                        persists BENCH_engine.json (schema v5)
+                        plus an n=10^4 heavy-traffic buffered cell and the
+                        sparse client-cache cells (n=10^4 q=0.01,
+                        n=10^5 q=0.001); persists BENCH_engine.json
+                        (schema v6)
   scenarios           — a reduced algorithms × heterogeneity-scenarios
                         matrix through launch/sweep.py (the full
                         committed BENCH_scenarios.json is produced by
@@ -264,7 +266,16 @@ def adaptive_overhead_bench():
 # staleness-weighted merges), a max_stale column on every row, and the
 # heavy_traffic section (sustained buffered rounds/sec at n=10^4 under the
 # Poisson-arrival scenario, with the bounded max-staleness witness)
-ENGINE_BENCH_SCHEMA_VERSION = 5
+# v6: every row gains participation (cohort fraction; 1.0 on the dense
+# cells), peak_state_bytes (resident per-client state via
+# repro.sim.cache.state_nbytes — deterministic accounting, gated at 2x
+# growth by repro.tune.gate) and state_rows (leading-axis length of the
+# per-client arrays: cache capacity when the client-state cache is on,
+# else n); adds the sparse client-cache cells (n=10^4 q=0.01 and
+# n=10^5 q=0.001, fedecado on the sharded backend) where per-round state
+# scales with the cohort instead of the population, each carrying its
+# materialized-projection witness
+ENGINE_BENCH_SCHEMA_VERSION = 6
 
 
 def _heavy_traffic_cell(rounds=20, n=10_000, buffer_size=16, batch=8):
@@ -317,6 +328,72 @@ def _heavy_traffic_cell(rounds=20, n=10_000, buffer_size=16, batch=8):
     return row
 
 
+def _sparse_cell(n, participation, rounds=8, batch=4, algorithm="fedecado",
+                 backend="sharded"):
+    """Million-client-regime witness: participation q << 1 with the
+    client-state cache on (sim/cache.py, DESIGN.md §13). Per-round state
+    scales with the DISTINCT participants seen so far — ``state_rows`` is
+    the packed capacity, and ``peak_state_bytes`` sits orders of magnitude
+    below the materialized projection (the same arrays with leading axis
+    n). The dataset gives every client exactly ``batch`` samples so the
+    population-sized objects are the partitions and the cohort plans, both
+    cohort-streamed."""
+    from repro.fed import FedSim, FedSimConfig, iid_partition, last_finite_loss
+    from repro.sim.cache import state_nbytes
+
+    data, params0, loss_fn, _ = _mlp_problem(n=n * batch, seed=0)
+    parts = iid_partition(len(data["y"]), n, seed=0)
+    cfg = FedSimConfig(
+        algorithm=algorithm, n_clients=n, participation=participation,
+        rounds=rounds, batch_size=batch, steps_per_epoch=1,
+        hetero=None, seed=0, eval_every=1 << 30, backend=backend,
+        client_cache=True,
+    )
+    warm = FedSim(loss_fn, params0, data, parts, cfg)
+    tw = time.perf_counter()
+    warm.run(rounds)
+    warm_wall = time.perf_counter() - tw
+    sim = FedSim(loss_fn, params0, data, parts, cfg)
+    sim.backend = warm.backend        # keep the warmed jit caches (the
+    # fresh cache retraces the warm run's capacity trajectory — same seed,
+    # same admissions — so every segment shape is already compiled)
+    t0 = time.perf_counter()
+    hist = sim.run(rounds)
+    wall = time.perf_counter() - t0
+    state_bytes = int(state_nbytes(sim))
+    state_rows = int(sim.state_rows)
+    # the same arrays with the cache off: leading axis n instead of the
+    # packed capacity (row count dominates; scalar slack is negligible)
+    projected = int(round(state_bytes * (n / max(1, state_rows))))
+    summ = hist.summary()
+    row = {
+        "algorithm": algorithm,
+        "backend": backend,
+        "n_clients": int(n),
+        "participation": float(participation),
+        "client_cache": True,
+        "rounds_per_sec": float(rounds / wall),
+        "compile_seconds": max(0.0, warm_wall - wall),
+        "substeps_per_round": float(summ.get("substeps_per_round", 0.0)),
+        "waves_per_round": float(summ.get("waves_per_round", 0.0)),
+        "stale": int(summ.get("stale", 0)),
+        "dropped": int(summ.get("dropped", 0)),
+        "max_stale": int(getattr(sim.backend, "max_stale", 0) or 0),
+        "peak_state_bytes": state_bytes,
+        "state_rows": state_rows,
+        "materialized_state_bytes": projected,
+        "final_loss": last_finite_loss(hist.loss),
+    }
+    ratio = projected / max(1, state_bytes)
+    _row(
+        f"engine_sparse_{algorithm}_n{n}_q{participation:g}",
+        1e6 * wall / rounds,
+        f"rps={row['rounds_per_sec']:.3f};state_rows={state_rows};"
+        f"state_bytes={state_bytes};materialized_x={ratio:.0f}",
+    )
+    return row
+
+
 def engine_bench(
     rounds=10,
     sizes=(10, 100, 1000),
@@ -325,6 +402,7 @@ def engine_bench(
     algorithms=("fedecado",),
     json_path="BENCH_engine.json",
     heavy_traffic=None,
+    sparse=None,
 ):
     """Multi-rate execution engine: sequential (one jit dispatch per client,
     the seed hot path) vs vectorized (whole cohort in one vmap-over-scan
@@ -350,18 +428,23 @@ def engine_bench(
     the sustained n=10^4 Poisson-arrival cell with its bounded
     max-staleness witness.
 
+    ``sparse`` (a tuple of ``(n, participation)`` cells) appends the
+    client-cache rows where state_rows tracks the cohort, not n — the
+    n=10^5 q=0.001 cell is the million-client-engine acceptance witness.
+
     Emits the usual CSV rows AND persists a machine-readable
-    ``BENCH_engine.json`` (algorithm × backend × n_clients → rounds/sec +
-    compile_seconds + solver/async telemetry columns;
-    schema v5, pinned by tests/test_bench_engine.py). Returns the report
-    dict. Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-    (main() sets it for ``--only engine``) to give the sharded backend a
-    real device axis.
+    ``BENCH_engine.json`` (algorithm × backend × n_clients × participation
+    → rounds/sec + compile_seconds + peak_state_bytes + solver/async
+    telemetry columns; schema v6, pinned by tests/test_bench_engine.py).
+    Returns the report dict. Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (main() sets it
+    for ``--only engine``) to give the sharded backend a real device axis.
     """
     import jax as _jax
 
     from repro.fed import FedSim, FedSimConfig, HeteroConfig, iid_partition
     from repro.fed.algorithms import get_algorithm
+    from repro.sim.cache import state_nbytes
 
     assert algorithms, "engine_bench needs at least one algorithm"
     for a in algorithms:           # fail fast, before any warm-up work
@@ -454,6 +537,7 @@ def engine_bench(
                     "algorithm": algorithm,
                     "backend": backend,
                     "n_clients": int(n),
+                    "participation": float(cfg.participation),
                     "rounds_per_sec": float(rps[backend]),
                     "compile_seconds": max(0.0, warm_wall - timed_wall),
                     "substeps_per_round": float(summ.get("substeps_per_round", 0.0)),
@@ -463,6 +547,11 @@ def engine_bench(
                     # buffered-mode staleness witness (event backend only;
                     # 0 on barrier backends by construction)
                     "max_stale": int(getattr(sim.backend, "max_stale", 0) or 0),
+                    # resident per-client state (materialized here: the
+                    # dense cells run cache-off, so rows == n) — the
+                    # tune/gate 2x-growth memory floor
+                    "peak_state_bytes": int(state_nbytes(sim)),
+                    "state_rows": int(sim.state_rows),
                 })
             base = rps.get("sequential", next(iter(rps.values())))
             derived = ";".join(f"{b}_rps={v:.3f}" for b, v in rps.items())
@@ -474,6 +563,13 @@ def engine_bench(
             _row(f"engine_round_us_{algorithm}_n{n}", 1e6 / base, derived)
     if heavy_traffic:
         report["heavy_traffic"] = _heavy_traffic_cell(**heavy_traffic)
+    if sparse:
+        report["sparse_cells"] = [
+            {"n_clients": int(n), "participation": float(q)}
+            for n, q in sparse
+        ]
+        for n, q in sparse:
+            report["results"].append(_sparse_cell(n, q))
     if json_path:
         from repro.tune.bench_io import write_bench_report
 
@@ -895,6 +991,12 @@ def main() -> None:
             # persists the artifact — it would dominate a full bench sweep
             heavy_traffic=(
                 {"n": 10_000, "rounds": 20} if sel == {"engine"} else None
+            ),
+            # the client-cache sparse cells (incl. the n=10^5 q=0.001
+            # acceptance witness) only on the dedicated artifact run
+            sparse=(
+                ((10_000, 0.01), (100_000, 0.001))
+                if sel == {"engine"} else None
             ),
         )
     if want("comm"):

@@ -37,10 +37,28 @@ from repro.core.gamma import gamma_stacked
 Pytree = Any
 
 
-def _sum0(x: jax.Array, axis_name: Optional[str]) -> jax.Array:
+def _fold0(x: jax.Array) -> jax.Array:
+    """Strict left-fold Σ over the leading axis: the association is fixed
+    by position, so zero rows are exact no-ops and the result is invariant
+    to how many padding rows the layout carries — unlike ``jnp.sum``, whose
+    XLA reduction tree depends on the axis LENGTH. The client-state cache's
+    bitwise contract (sim/cache.py, DESIGN.md §13) rests on this for every
+    reduction over a capacity-sized axis."""
+    if x.shape[0] <= 1:
+        return jnp.sum(x, axis=0)
+    return jax.lax.scan(
+        lambda c, r: (c + r, None), jnp.zeros(x.shape[1:], x.dtype), x
+    )[0]
+
+
+def _sum0(x: jax.Array, axis_name: Optional[str],
+          fold: bool = False) -> jax.Array:
     """Σ over the leading (client) axis; cross-device ``psum`` when the
-    client axis is sharded under ``shard_map`` (sim/sharded.py)."""
-    s = jnp.sum(x, axis=0)
+    client axis is sharded under ``shard_map`` (sim/sharded.py). ``fold``
+    selects the layout-invariant left fold (event/table paths, where the
+    leading axis is capacity-sized and differs between cached and
+    materialized runs)."""
+    s = _fold0(x) if fold else jnp.sum(x, axis=0)
     return jax.lax.psum(s, axis_name) if axis_name else s
 
 
@@ -71,6 +89,7 @@ def be_step(
     L: float,
     axis_name: Optional[str] = None,
     mask: Optional[jax.Array] = None,
+    fold: bool = False,
 ):
     """One Backward-Euler consensus solve. Returns (x_c_new, I_a_new).
 
@@ -95,8 +114,8 @@ def be_step(
             mb = _bcast(mask, Ia)
             u = u * mb
             w = w * mb
-        num = xc + dt * (_sum0(u, axis_name) + Sf)
-        den = 1.0 + dt * _sum0(w, axis_name)
+        num = xc + dt * (_sum0(u, axis_name, fold) + Sf)
+        den = 1.0 + dt * _sum0(w, axis_name, fold)
         xc_new = num / den
         I_new = u - w * xc_new[None]
         return xc_new, I_new
@@ -137,6 +156,7 @@ def lte(
     x_c, I_a, x_c_new, I_new, J_a, gamma_tau, gamma_new, g_inv, dt, L,
     axis_name: Optional[str] = None,
     mask: Optional[jax.Array] = None,
+    fold: bool = False,
 ) -> jax.Array:
     """max|ε_BE| over both eq. 29 (central) and eq. 30 (flow) terms.
 
@@ -149,7 +169,7 @@ def lte(
         d = b - a
         if mask is not None:
             d = d * _bcast(mask, d)
-        return jnp.max(jnp.abs(_sum0(d, axis_name)))
+        return jnp.max(jnp.abs(_sum0(d, axis_name, fold)))
 
     eps_c = jax.tree.map(leaf_c, I_a, I_new)
     # ε_L = (Δt/2)·|İ(τ+Δt) − İ(τ)|
@@ -194,18 +214,23 @@ def adaptive_be_step(
     ccfg: ConsensusConfig,
     axis_name: Optional[str] = None,
     mask: Optional[jax.Array] = None,
+    fold: bool = False,
 ) -> StepResult:
     """Algorithm 1: backtrack Δt until max|ε_BE| ≤ δ, then take the BE step.
 
     ``x_prev_a``/``x_new_a``/``T_a`` feed the Γ operator at trial times.
     With ``axis_name`` the client axis is sharded (see ``be_step``); every
     scalar driving the backtracking loop is psum/pmax-replicated, so all
-    devices take the same trajectory through the while loop.
+    devices take the same trajectory through the while loop. ``fold``
+    pins the Schur/LTE client sums to the layout-invariant left fold
+    (capacity-axis callers, see ``_sum0``) — it also forces the non-kernel
+    path, since the fused kernel reduces with its own association.
     """
     use_kernel = (
         ccfg.use_kernels
         and isinstance(g_inv, jax.Array)
         and axis_name is None   # the fused kernel reduces densely, no psum
+        and not fold
     )
     if use_kernel:
         # Fused Pallas path: Γ + BE Schur + LTE in one pass over parameters,
@@ -229,11 +254,11 @@ def adaptive_be_step(
             g_new = gamma_stacked(x_prev_a, x_new_a, T_a, tau + dt)
             xc_n, I_n = be_step(
                 x_c, I_a, J_a, g_new, g_inv, S_frozen, dt, ccfg.L,
-                axis_name=axis_name, mask=mask,
+                axis_name=axis_name, mask=mask, fold=fold,
             )
             eps = lte(
                 x_c, I_a, xc_n, I_n, J_a, gamma_tau, g_new, g_inv, dt, ccfg.L,
-                axis_name=axis_name, mask=mask,
+                axis_name=axis_name, mask=mask, fold=fold,
             )
             return xc_n, I_n, eps
 

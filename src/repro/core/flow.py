@@ -49,8 +49,24 @@ def put_rows(tree: Pytree, idx: jax.Array, rows: Pytree) -> Pytree:
 
 
 def tree_sum_clients(tree: Pytree) -> Pytree:
-    """Σ over the leading client axis of every leaf."""
-    return jax.tree.map(lambda l: jnp.sum(l, axis=0), tree)
+    """Σ over the leading client axis of every leaf, as a strict left fold.
+
+    The fold order matters: ``jnp.sum`` lets XLA pick a reduction tree that
+    depends on the leading-axis LENGTH, so the same nonzero rows sum to
+    different bits in an (n, ...) materialized layout vs a (capacity, ...)
+    client-cache packed layout (sim/cache.py). A sequential left fold makes
+    interleaved zero rows exact no-ops, which is what the cached ==
+    materialized bitwise guarantee (DESIGN.md §13) rests on. Called once
+    per round, on (rows, |params|) arrays — the serialization is noise."""
+    def leaf(l):
+        if l.shape[0] <= 1:
+            return jnp.sum(l, axis=0)
+        return jax.lax.scan(
+            lambda c, r: (c + r, None),
+            jnp.zeros(l.shape[1:], l.dtype), l,
+        )[0]
+
+    return jax.tree.map(leaf, tree)
 
 
 def gather_active(state: ServerState, active_idx: jax.Array):

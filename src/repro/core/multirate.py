@@ -258,10 +258,15 @@ def masked_quantile(vals: jax.Array, mask: jax.Array, q) -> jax.Array:
 
 def _masked_sum_rows(tree: Pytree, mask: jax.Array,
                      axis_name: Optional[str]) -> Pytree:
-    """Σ over the capacity axis of mask-selected rows (+psum when sharded)."""
+    """Σ over the capacity axis of mask-selected rows (+psum when sharded).
+    Left-fold association (``consensus._fold0``): the capacity axis is
+    layout-dependent (n materialized vs cache capacity packed), so the sum
+    must be invariant to zero-row padding for the cached == materialized
+    bitwise contract (DESIGN.md §13)."""
+    from repro.core.consensus import _fold0
 
     def leaf(l):
-        s = jnp.sum(l * _bcast(mask, l), axis=0)
+        s = _fold0(l * _bcast(mask, l))
         return jax.lax.psum(s, axis_name) if axis_name else s
 
     return jax.tree.map(leaf, tree)
@@ -399,7 +404,7 @@ def multirate_integrate(
             res = adaptive_be_step(
                 xc_c, I_c, J_w, table.x_prev, x_new_eff, T, g_rows,
                 S_frozen, tau_c, dt_c, ccfg,
-                axis_name=axis_name, mask=active,
+                axis_name=axis_name, mask=active, fold=True,
             )
             grow = jnp.where(res.eps < 0.5 * ccfg.delta, 1.5, 1.0)
             new_dt = jnp.minimum(res.dt_used * grow, ccfg.dt_max)

@@ -102,6 +102,23 @@ class FederatedAlgorithm:
         shared telemetry record with one batched device_get."""
         return None
 
+    # ------------------------------------------- client-state cache hooks --
+    def on_cache_repack(self, sim, repack) -> None:
+        """Client-state-cache hook (sim/cache.py, DESIGN.md §13): the packed
+        per-client layout changed — permute every algorithm-owned packed
+        pytree to the new slot map. Fresh slots come back exactly zero;
+        ``on_cache_admit`` then fills any that need non-zero values."""
+        from repro.sim.cache import repack_rows  # lazy: fed↔sim
+
+        if self.comm_state is not None:
+            self.comm_state = repack_rows(self.comm_state, repack)
+
+    def on_cache_admit(self, sim, repack) -> None:
+        """Fill freshly admitted slots whose correct initial value is not
+        zero (FedECADO's gains). Default: zeros are already right — duals
+        and EF residuals start at zero by definition."""
+        return None
+
 
 # ---------------------------------------------------------------------------
 # the shared weighted-delta aggregation primitive
@@ -179,7 +196,16 @@ class WeightedDeltaAlgorithm(FederatedAlgorithm):
 
     def init_state(self, sim) -> None:
         if self.has_client_state:
-            self.client_state = self.init_client_state(sim.params, sim.n)
+            self.client_state = self.init_client_state(
+                sim.params, sim.state_rows
+            )
+
+    def on_cache_repack(self, sim, repack) -> None:
+        from repro.sim.cache import repack_rows  # lazy: fed↔sim
+
+        if getattr(self, "client_state", None) is not None:
+            self.client_state = repack_rows(self.client_state, repack)
+        super().on_cache_repack(sim, repack)
 
     def client_rows(self, sim, idx) -> Optional[Pytree]:
         if not self.has_client_state:

@@ -10,6 +10,7 @@ synchronous clients (no heterogeneity), unweighted local objectives.
 """
 from __future__ import annotations
 
+import weakref
 from functools import partial
 
 import jax
@@ -17,6 +18,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fed.algorithms.base import FederatedAlgorithm
+
+# jitted batched-Hutchinson maps, weakly keyed by loss_fn so repeated sims
+# over the same problem (e.g. a bench warm run + timed run) share the
+# compiled executable instead of re-tracing per FedSim instance
+_HMAPS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _hutchinson_map(loss_fn, probes: int):
+    from repro.core import hutchinson_scalar
+
+    per = _HMAPS.setdefault(loss_fn, {})
+    fn = per.get(probes)
+    if fn is None:
+        fn = jax.jit(
+            lambda p, bs, ks: jax.lax.map(
+                lambda bk: hutchinson_scalar(
+                    loss_fn, p, bk[0], bk[1], probes
+                ),
+                (bs, ks),
+            )
+        )
+        per[probes] = fn
+    return fn
 
 
 class FedECADO(FederatedAlgorithm):
@@ -37,7 +61,9 @@ class FedECADO(FederatedAlgorithm):
         from repro.core import init_server_state, server_round
 
         cfg = sim.cfg
-        sim.state = init_server_state(sim.params, sim.n, cfg.consensus.dt_init)
+        sim.state = init_server_state(
+            sim.params, sim.state_rows, cfg.consensus.dt_init
+        )
         self._round_fn = jax.jit(
             partial(server_round, ccfg=cfg.consensus), static_argnums=()
         )
@@ -46,12 +72,38 @@ class FedECADO(FederatedAlgorithm):
     def install_gains(self, sim, round_idx: int = 0) -> None:
         """(Re)compute Ḡ_th per client (paper §4.2, eq. 42). By default
         precomputed once before training (the paper's §5 setting); with
-        ``gain_update_every > 0`` re-estimated periodically."""
-        from repro.core import hutchinson_scalar, set_gains
-
+        ``gain_update_every > 0`` re-estimated periodically. In
+        client_cache mode only ADMITTED clients are estimated — the
+        (params, key) reference is stashed so late joiners get the exact
+        gain the materialized run would have given them (DESIGN.md §13)."""
         cfg = sim.cfg
         key = jax.random.PRNGKey(cfg.seed + 17 + round_idx)
         params = sim.state.x_c if round_idx else sim.params
+        # admission-time reference for lazily-admitted clients: frozen
+        # device values, so later x_c evolution cannot leak in
+        self._gain_ref = (params, key, round_idx)
+        if sim.cache is not None:
+            cids = sim.cache.cids
+            if len(cids):
+                self._set_gain_rows(
+                    sim, cids, np.arange(len(cids)), params, key, round_idx
+                )
+            return
+        ids = np.arange(sim.n)
+        self._set_gain_rows(sim, ids, ids, params, key, round_idx)
+
+    def _set_gain_rows(
+        self, sim, cids, slots, params, key, round_idx
+    ) -> None:
+        """Estimate Ḡ_th for ``cids`` and write 1/Ḡ into g_inv rows at
+        ``slots``. Per-client arithmetic is independent (deterministic
+        per-cid minibatch via ``sim._gain_batch`` + ``fold_in(key, cid)``),
+        so a lazily-admitted subset computes bitwise the same rows a full
+        materialized pass would."""
+        from repro.core import set_gains
+
+        cfg = sim.cfg
+        slots = jnp.asarray(np.asarray(slots, np.int64))
 
         if cfg.sensitivity == "diag":
             from repro.core import hutchinson_diag
@@ -62,32 +114,97 @@ class FedECADO(FederatedAlgorithm):
                 )
             )
             g_rows = []
-            for i in range(sim.n):
-                batch = sim._client_batch(i, cfg.batch_size)
-                diag = hfn(params, batch, jax.random.fold_in(key, i))
+            for i in cids:
+                batch = sim._gain_batch(int(i), cfg.batch_size, round_idx)
+                diag = hfn(params, batch, jax.random.fold_in(key, int(i)))
                 G_i = jax.tree.map(
-                    lambda h, p_i=float(sim.p_hat[i]): 1.0 / cfg.dt_ref
-                    + p_i * jnp.maximum(h, 0.0),
+                    lambda h, p_i=float(sim.p_hat_full[int(i)]):
+                    1.0 / cfg.dt_ref + p_i * jnp.maximum(h, 0.0),
                     diag,
                 )
                 g_rows.append(jax.tree.map(lambda g: 1.0 / g, G_i))
-            g_inv = jax.tree.map(lambda *rows: jnp.stack(rows), *g_rows)
+            rows = jax.tree.map(lambda *r: jnp.stack(r), *g_rows)
+            cur = sim.state.g_inv
+            mismatch = (
+                jax.tree.structure(cur) != jax.tree.structure(rows)
+                or any(
+                    c.shape[1:] != r.shape[1:]
+                    for c, r in zip(jax.tree.leaves(cur), jax.tree.leaves(rows))
+                )
+            )
+            if mismatch:
+                # first diag install: g_inv is still the scalar placeholder
+                # from init_server_state — allocate the per-parameter layout
+                cur = jax.tree.map(
+                    lambda r: jnp.zeros(
+                        (sim.state_rows,) + r.shape[1:], r.dtype
+                    ),
+                    rows,
+                )
+            g_inv = jax.tree.map(lambda c, r: c.at[slots].set(r), cur, rows)
             sim.state = set_gains(sim.state, g_inv)
             return
 
-        h_bars = np.zeros((sim.n,), np.float32)
-        hfn = jax.jit(
-            lambda p, b, k: hutchinson_scalar(
-                sim.loss_fn, p, b, k, cfg.hutchinson_probes
+        # Batched scalar path: one lax.map over the stacked per-cid
+        # minibatches instead of a jit dispatch + host sync per client —
+        # a cohort-sized admission (10^2-10^3 fresh cids per segment at
+        # sparse participation) would otherwise pay seconds of pure
+        # dispatch overhead. The map body is a single compiled function
+        # applied per element with no cross-element ops, so each h̄ is
+        # invariant to how admissions are grouped — the property the
+        # cached==materialized bitwise contract rests on. Stacks are
+        # grouped by batch shape (ragged partitions can't stack) and
+        # padded to the next power of two so recompiles stay O(log A).
+        h_bars = np.zeros((len(cids),), np.float32)
+        batches = [
+            sim._gain_batch(int(i), cfg.batch_size, round_idx) for i in cids
+        ]
+        by_shape: dict = {}
+        for j, b in enumerate(batches):
+            shp = tuple(sorted((k, v.shape) for k, v in b.items()))
+            by_shape.setdefault(shp, []).append(j)
+        hmap = _hutchinson_map(sim.loss_fn, cfg.hutchinson_probes)
+        for js in by_shape.values():
+            m = 1
+            while m < len(js):
+                m <<= 1
+            pad = [js[0]] * (m - len(js))
+            rows_j = js + pad
+            stacked = {
+                k: jnp.stack([batches[j][k] for j in rows_j])
+                for k in batches[js[0]]
+            }
+            ks = jnp.stack(
+                [jax.random.fold_in(key, int(cids[j])) for j in rows_j]
             )
+            hs = np.asarray(hmap(params, stacked, ks), np.float32)
+            h_bars[np.asarray(js, np.int64)] = np.maximum(
+                hs[: len(js)], 0.0
+            )
+        p_rows = sim.p_hat_full[np.asarray(cids, np.int64)]
+        G = 1.0 / cfg.dt_ref + p_rows * h_bars             # eq. 42
+        rows = np.asarray(1.0 / G, np.float32)
+        g = sim.state.g_inv.at[slots].set(jnp.asarray(rows))
+        sim.state = set_gains(sim.state, g)
+
+    # ------------------------------------------- client-state cache hooks --
+    def on_cache_repack(self, sim, repack) -> None:
+        from repro.sim.cache import repack_rows
+
+        st = sim.state
+        sim.state = st._replace(
+            I=repack_rows(st.I, repack),
+            g_inv=repack_rows(st.g_inv, repack),
         )
-        for i in range(sim.n):
-            batch = sim._client_batch(i, cfg.batch_size)
-            h = hfn(params, batch, jax.random.fold_in(key, i))
-            h_bars[i] = float(np.maximum(h, 0.0))
-        G = 1.0 / cfg.dt_ref + sim.p_hat * h_bars          # eq. 42
-        sim.state = set_gains(sim.state, jnp.asarray(1.0 / G, jnp.float32))
-        sim.h_bars = h_bars
+        super().on_cache_repack(sim, repack)
+
+    def on_cache_admit(self, sim, repack) -> None:
+        if repack.fresh_cids.size == 0:
+            return
+        params, key, round_idx = self._gain_ref
+        self._set_gain_rows(
+            sim, repack.fresh_cids, repack.fresh, params, key, round_idx
+        )
 
     # -------------------------------------------------------- aggregation --
     def aggregate(self, sim, plan, result) -> None:
@@ -119,5 +236,10 @@ class ECADO(FedECADO):
     def install_gains(self, sim, round_idx: int = 0) -> None:
         from repro.core import set_gains
 
-        g = jnp.ones((sim.n,), jnp.float32) / (1.0 / sim.cfg.dt_ref)
+        g = jnp.ones((sim.state_rows,), jnp.float32) / (1.0 / sim.cfg.dt_ref)
         sim.state = set_gains(sim.state, g)
+
+    def on_cache_admit(self, sim, repack) -> None:
+        # uniform gains: refill the whole (constant) array — fresh slots
+        # were zeroed by the repack
+        self.install_gains(sim)

@@ -142,6 +142,23 @@ class FedSimConfig:
     # (DESIGN.md §5.5) — lets tests exercise uneven client→device padding
     # even on a single-device host; None = pad to the device count
     sharded_pad_multiple: Optional[int] = None
+    # hierarchical tree aggregation (DESIGN.md §13): split the client mesh
+    # into a 2-D ("groups", "clients") mesh with this many device groups —
+    # cross-device reductions become intra-group psum then inter-group
+    # reduce. None/0 = the flat 1-D mesh. Numerics: association order of
+    # the staged reduction differs from the flat psum (rtol-level, not
+    # bitwise — see §13); sharded backend only.
+    sharded_groups: Optional[int] = None
+    # --- client-state cache (sim/cache.py, DESIGN.md §13) ---
+    # participants-only packed state: per-client rows (flow variables,
+    # gains, duals, EF residuals, flight table) live in a (capacity, ...)
+    # pytree over ADMITTED clients only — memory scales with the cohort,
+    # not n_clients. Histories are bitwise-identical to the materialized
+    # layout (pinned by tests/test_client_cache.py).
+    client_cache: bool = False
+    # initial packed capacity floor; 0 = max(2·cohort, event_buffer_size)
+    # rounded up to a power of two (min 64). Capacity doubles on demand.
+    cache_capacity: int = 0
     # --- heterogeneity scenario (repro/scenarios, DESIGN.md §7) ---
     # a registered scenario name or a Scenario instance; when set, FedSim
     # materializes partitions + per-client transforms from the raw dataset
@@ -202,7 +219,28 @@ class FedSim:
         self.rng = np.random.RandomState(cfg.seed)
 
         p = data_fractions(self.partitions)
-        self.p_hat = (p * self.n).astype(np.float32)   # mean-1 normalization
+        # p̂ over the POPULATION (mean-1 normalization); in client_cache
+        # mode ``self.p_hat`` below is the per-SLOT view of it (rebuilt on
+        # admission), which is what plan.idx — then holding slots — gathers
+        self.p_hat_full = (p * self.n).astype(np.float32)
+        self.p_hat = self.p_hat_full
+
+        # participants-only packed state (sim/cache.py, DESIGN.md §13):
+        # created BEFORE any per-client state allocation so everything
+        # downstream (EF residuals, algorithm state, flight table) sizes by
+        # ``state_rows`` = capacity instead of n
+        self.cache = None
+        if cfg.client_cache:
+            from repro.sim.cache import ClientStateCache  # lazy: sim↔fed
+
+            A0 = self.n if self.alg.full_participation_only else max(
+                1, int(round(cfg.participation * self.n))
+            )
+            floor = int(cfg.cache_capacity) or max(
+                2 * A0, int(cfg.event_buffer_size or 0)
+            )
+            self.cache = ClientStateCache(self.n, capacity=floor)
+            self.p_hat = np.zeros((self.cache.capacity,), np.float32)
 
         self.params = jax.tree.map(lambda l: l.astype(jnp.float32), params0)
         self.state = None
@@ -220,7 +258,9 @@ class FedSim:
             # error-feedback residual rows: averaging family only — the flow
             # family compresses EF-free on every backend so the dense and
             # event/sharded paths agree on what the wire carries
-            self.alg.comm_state = self.comm.init_ef_state(self.params, self.n)
+            self.alg.comm_state = self.comm.init_ef_state(
+                self.params, self.state_rows
+            )
         # algorithm-owned server state (flow variables + gains, dual rows,
         # ...); any host rng it draws (gain estimation batches) comes first
         # in the consumption order, exactly as the seed behaviour
@@ -243,6 +283,13 @@ class FedSim:
         self.backend = get_backend(cfg)
 
     # ------------------------------------------------------------------
+    @property
+    def state_rows(self) -> int:
+        """Leading-axis length of every per-client packed array: the cache
+        capacity in client_cache mode, else the full population n."""
+        return self.cache.capacity if self.cache is not None else self.n
+
+    # ------------------------------------------------------------------
     def _install_gains(self, round_idx: int = 0):
         self.alg.install_gains(self, round_idx=round_idx)
 
@@ -253,6 +300,87 @@ class FedSim:
         return {k: jnp.asarray(v[sel]) for k, v in self.data.items()}
 
     # ------------------------------------------------------------------
+    def _gain_batch(self, i: int, bs: int, round_idx: int = 0):
+        """Gain-estimation minibatch for client ``i``, keyed by
+        (seed, round_idx, cid) instead of consuming ``self.rng``
+        sequentially. Deterministic per client, so the cached engine can
+        estimate a late-admitted client's gain lazily and draw the SAME
+        batch the materialized run would have (DESIGN.md §13) — and the
+        materialized run no longer pays O(n) rng draws before round 0."""
+        part = self.partitions[int(i)]
+        r = np.random.RandomState(
+            (self.cfg.seed + 1_000_003 * int(round_idx) + 7919 * (int(i) + 1))
+            % (1 << 31)
+        )
+        sel = r.choice(part, size=min(bs, len(part)), replace=len(part) < bs)
+        return {k: jnp.asarray(v[sel]) for k, v in self.data.items()}
+
+    # ------------------------------------------------------------------
+    def _refresh_slot_weights(self) -> None:
+        """Rebuild the per-slot p̂ view after an admission or drift:
+        slot j carries p̂_full[cids[j]], padding slots 0."""
+        ph = np.zeros((self.cache.capacity,), np.float32)
+        ph[: self.cache.n_admitted] = self.p_hat_full[self.cache.cids]
+        self.p_hat = ph
+
+    # ------------------------------------------------------------------
+    def _admit_and_translate(self, plans):
+        """client_cache mode: two-phase segment admission (DESIGN.md §13).
+        Plans arrive holding REAL cids; admit the whole segment's union
+        (one repack of every packed consumer when the slot map changes),
+        then rewrite ``plan.idx`` to cache slots — ``plan.cids`` keeps the
+        real ids for participation accounting. No-op without a cache."""
+        if self.cache is None:
+            return plans
+        all_cids = (
+            np.concatenate([np.asarray(p.idx, np.int64) for p in plans])
+            if plans else np.empty((0,), np.int64)
+        )
+        rp = self.cache.admit(all_cids)
+        if rp is not None:
+            self.alg.on_cache_repack(self, rp)
+            self.alg.on_cache_admit(self, rp)
+            self.backend.on_cache_repack(self, rp)
+            self._refresh_slot_weights()
+        return [
+            dataclasses.replace(
+                p,
+                idx=self.cache.slots_of(np.asarray(p.idx, np.int64)),
+                cids=np.asarray(p.idx, np.int64),
+            )
+            for p in plans
+        ]
+
+    # ------------------------------------------------------------------
+    def _plan_stream(self, rnd: int, end: int, A: int):
+        """Streaming plan generation: yields one ``CohortPlan`` at a time,
+        so only cohort-sized plan data is ever alive per draw; ``run``
+        materializes at most one segment (≤ backend.max_segment_rounds
+        plans) for the jit-resident backends. Draws are identical to the
+        historical eager list comprehension (same rng consumption order;
+        pinned by tests/test_client_cache.py)."""
+        for r in range(rnd, end):
+            yield self._draw_plan(r, A)
+
+    # ------------------------------------------------------------------
+    def _sample_cohort(self, A: int) -> np.ndarray:
+        """A sorted uniform no-replacement cohort draw. ``RandomState.choice
+        (replace=False)`` permutes the WHOLE population — an O(n) host cost
+        per round that dwarfs the cohort at million-client n — so above the
+        lazy threshold the draw switches to Floyd's algorithm: exactly A
+        rng draws, O(A) work, still a pure function of the plan rng stream
+        (small populations keep the legacy consumption bit-for-bit)."""
+        from repro.scenarios.base import LAZY_N
+
+        n = self.n
+        if n <= LAZY_N:
+            return np.sort(self.rng.choice(n, A, replace=False))
+        chosen = set()
+        for j in range(n - A, n):
+            t = int(self.rng.randint(0, j + 1))
+            chosen.add(j if t in chosen else t)
+        return np.sort(np.fromiter(chosen, np.int64, len(chosen)))
+
     def _draw_plan(self, rnd: int, A: int):
         """Roll ALL host randomness for one round into a CohortPlan: cohort
         choice, lr_i/e_i heterogeneity, and per-step minibatch indices — in
@@ -272,7 +400,7 @@ class FedSim:
             # synchronous all-clients draw by definition
             idx = scn.draw_cohort(self.rng, rnd, self.n, A)
         else:
-            idx = np.sort(self.rng.choice(self.n, A, replace=False))
+            idx = self._sample_cohort(A)
         A = len(idx)
         if scn is not None and scn.spec.profiles and self.alg.supports_hetero:
             lrs, eps = scn.draw_rates(self.rng, idx)
@@ -318,7 +446,11 @@ class FedSim:
         )
         self.partitions = list(parts)
         p = data_fractions(self.partitions)
-        self.p_hat = (p * self.n).astype(np.float32)
+        self.p_hat_full = (p * self.n).astype(np.float32)
+        if self.cache is not None:
+            self._refresh_slot_weights()
+        else:
+            self.p_hat = self.p_hat_full
 
     # ------------------------------------------------------------------
     def _apply_round(self, plan, result) -> Dict[str, Any]:
@@ -436,9 +568,12 @@ class FedSim:
                 # consumption order as the per-round loop (run_round does
                 # not touch self.rng), so histories are backend-independent
                 with span("plan_draw", rounds=end - rnd):
-                    plans = [self._draw_plan(r, A) for r in range(rnd, end)]
+                    plans = self._admit_and_translate(
+                        list(self._plan_stream(rnd, end, A))
+                    )
                 for p in plans:
-                    part_plan[np.asarray(p.idx, np.int64)] += 1
+                    ids = p.cids if p.cids is not None else p.idx
+                    part_plan[np.asarray(ids, np.int64)] += 1
                 with span("segment", backend=self.backend.name,
                           rounds=end - rnd):
                     recs = self.backend.run_rounds(self, plans)

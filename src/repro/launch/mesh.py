@@ -33,20 +33,44 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, devices=devices[:n])
 
 
-def make_client_mesh(max_devices: int | None = None):
-    """1-D mesh over the local devices with a single ``"clients"`` axis.
+def make_client_mesh(max_devices: int | None = None,
+                     groups: int | None = None):
+    """Mesh over the local devices for the sharded execution backend.
 
-    This is the launch mesh of the sharded execution backend
-    (sim/sharded.py): the cohort axis is shard_map-ed over it and the
-    Schur-arrowhead consensus reductions run as psum along it. The federated
-    engine's smoke models are small enough that model dims stay replicated,
-    so every device goes to client parallelism (contrast the training meshes
-    above, which reserve a "model" axis). Under
+    Default: a 1-D mesh with a single ``"clients"`` axis — the cohort axis
+    is shard_map-ed over it and the Schur-arrowhead consensus reductions
+    run as psum along it. The federated engine's smoke models are small
+    enough that model dims stay replicated, so every device goes to client
+    parallelism (contrast the training meshes above, which reserve a
+    "model" axis). Under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` this yields an
     N-way CPU mesh for tests/benchmarks.
+
+    ``groups`` (hierarchical tree aggregation, DESIGN.md §13) splits the
+    same devices into a 2-D ``("groups", "clients")`` mesh of ``groups``
+    device groups — cohort arrays shard over BOTH axes (same shard count as
+    the 1-D mesh) and cross-device reductions run intra-group first, then
+    across groups. ``groups`` must divide the usable device count.
+
+    Uses the process-LOCAL devices: the sharded sim backend is a
+    single-controller component, and under ``jax.distributed`` (the
+    multi-host smoke, repro/launch/multihost.py) every process runs its
+    own replica of the sim over its own devices — global meshes would
+    pull in non-addressable devices the host-side data feed cannot
+    populate. Single-process runs see the identical device list.
     """
-    devices = jax.devices()
+    devices = jax.local_devices()
     n = len(devices) if max_devices is None else max(1, min(max_devices, len(devices)))
+    if groups and groups > 1:
+        if n % groups:
+            raise ValueError(
+                f"sharded_groups={groups} must divide the usable device "
+                f"count ({n})"
+            )
+        return jax.make_mesh(
+            (groups, n // groups), ("groups", "clients"),
+            devices=devices[:n],
+        )
     return jax.make_mesh((n,), ("clients",), devices=devices[:n])
 
 

@@ -55,6 +55,31 @@ from repro.fed.partition import (
 
 PARTITION_KINDS = ("iid", "dirichlet", "label_shard", "quantity_skew")
 
+# population size above which availability/tier draws switch from the exact
+# materialized-mask paths to the O(cohort) per-cid hash paths (million-client
+# engine, DESIGN.md §13). Below it the legacy rng consumption is preserved
+# bit-for-bit, so committed small-n trajectories never move.
+LAZY_N = 4096
+
+_MASK64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def _mix01(seed: int, salt: int, ids: np.ndarray) -> np.ndarray:
+    """Deterministic per-id uniform [0, 1): splitmix64 finalizer over
+    (seed, salt, id). Pure function of its arguments — no rng stream, no
+    n-length state — so any subset of clients can be evaluated lazily and
+    the answer never depends on who else was asked (DESIGN.md §13)."""
+    with np.errstate(over="ignore"):      # wraparound is the point
+        z = np.asarray(ids, np.uint64)
+        z = z + (
+            np.uint64(seed & 0x7FFFFFFF) * np.uint64(0x9E3779B97F4A7C15)
+            + np.uint64(salt & 0x7FFFFFFF) * np.uint64(0xD1B54A32D192ED03)
+        )
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        z = z ^ (z >> np.uint64(31))
+        return (z >> np.uint64(11)).astype(np.float64) * (1.0 / (1 << 53))
+
 
 @dataclasses.dataclass(frozen=True)
 class PartitionSpec:
@@ -223,7 +248,7 @@ class ScenarioRuntime:
     def __init__(self, spec: Scenario):
         self.spec = spec
         self.drift_count = 0
-        self._profile_of: Optional[np.ndarray] = None   # (n,) tier index
+        self._tier_seed: Optional[int] = None           # per-cid tier hashing
         self._markov_up: Optional[np.ndarray] = None    # (n,) bool chain state
 
     # ------------------------------------------------------ statistical --
@@ -259,16 +284,29 @@ class ScenarioRuntime:
                     y[part[flip]] = rng.randint(
                         0, n_classes, int(flip.sum())
                     ).astype(y.dtype)
-        if spec.profiles and self._profile_of is None:
-            # pinned once from a dedicated stream: device identity persists
-            # across drift re-draws (the data moves, the hardware doesn't)
-            prng = np.random.RandomState((seed + 9176) % (1 << 31))
-            w = np.asarray([p.weight for p in spec.profiles], np.float64)
-            self._profile_of = prng.choice(
-                len(spec.profiles), size=n_clients, p=w / w.sum()
-            )
+        if spec.profiles and self._tier_seed is None:
+            # pinned once from a dedicated seed: device identity persists
+            # across drift re-draws (the data moves, the hardware doesn't).
+            # The pinning itself is LAZY — ``tier_of`` hashes (seed, cid) on
+            # demand, so no n-length profile array is ever materialized
+            # (million-client engine, DESIGN.md §13).
+            self._tier_seed = (seed + 9176) % (1 << 31)
         self.drift_count += 1
         return out, parts
+
+    def tier_of(self, cids: np.ndarray) -> np.ndarray:
+        """Device-tier index of each cid, by deterministic per-cid hashing
+        against the pinned tier seed: client i lands in tier t with mass
+        weight_t / Σ weights, independently per client, and the answer for
+        a cid never depends on how many other clients exist or which subset
+        is asked — the lazy replacement of the old materialized (n,) pin."""
+        assert self._tier_seed is not None, "materialize() must run first"
+        w = np.asarray([p.weight for p in self.spec.profiles], np.float64)
+        cum = np.cumsum(w / w.sum())
+        u = _mix01(self._tier_seed, 0, np.asarray(cids, np.int64))
+        return np.minimum(
+            np.searchsorted(cum, u, side="right"), len(w) - 1
+        ).astype(np.int64)
 
     def drift_due(self, rnd: int) -> bool:
         return bool(self.spec.drift_every) and rnd > 0 and rnd % self.spec.drift_every == 0
@@ -288,6 +326,8 @@ class ScenarioRuntime:
         ar = self.spec.arrivals
         if av is None and ar is None:
             return np.sort(rng.choice(n, A, replace=False))
+        if av is not None and av.kind == "sine" and n > LAZY_N:
+            return self._draw_cohort_lazy_sine(rng, rnd, n, A)
         if av is None:
             up = np.ones(n, bool)
         elif av.kind == "sine":
@@ -295,8 +335,22 @@ class ScenarioRuntime:
             p = av.p_min + (av.p_max - av.p_min) * 0.5 * (1.0 + np.sin(phase))
             up = rng.rand(n) < p
         elif av.kind == "blocks":
-            up = (np.arange(n) * av.n_blocks // n) == (rnd % av.n_blocks)
+            # contiguous-block membership in closed form: block b holds
+            # exactly the cids in [ceil(b·n/nb), ceil((b+1)·n/nb)) — bitwise
+            # the same set as the materialized ``arange(n)·nb//n == b`` mask
+            # without ever allocating it (the subsequent rng consumption is
+            # identical, so small-n trajectories are unchanged)
+            nb = av.n_blocks
+            b = rnd % nb
+            lo, hi = -((-b * n) // nb), -((-(b + 1) * n) // nb)
+            up = None
+            ids = np.arange(lo, hi)
         elif av.kind == "markov":
+            # the churn chain is inherently sequential per-round state: each
+            # client's up/down bit depends on its whole history, so there is
+            # no per-cid closed form to hash. Documented O(n) exception
+            # (DESIGN.md §13) — one bool + one float draw per client per
+            # round, host-side only.
             if self._markov_up is None:
                 self._markov_up = np.ones(n, bool)
             u = rng.rand(n)
@@ -309,7 +363,8 @@ class ScenarioRuntime:
                 f"unknown availability kind {av.kind!r}; "
                 f"choose from {AVAILABILITY_KINDS}"
             )
-        ids = np.where(up)[0]
+        if up is not None:
+            ids = np.where(up)[0]
         if len(ids) == 0:
             ids = np.arange(n)       # never stall the server on an empty round
         if ar is not None:
@@ -328,16 +383,74 @@ class ScenarioRuntime:
             return np.sort(rng.choice(ids, k, replace=False))
         return np.sort(rng.choice(ids, min(A, len(ids)), replace=False))
 
+    def _sine_up(self, salt: int, rnd: int, n: int,
+                 cids: np.ndarray) -> np.ndarray:
+        """Hash-based diurnal availability of a cid subset: same p_i curve
+        as the materialized path, Bernoulli via the per-cid hash instead of
+        an n-length rng draw."""
+        av = self.spec.availability
+        cids = np.asarray(cids, np.int64)
+        phase = 2.0 * np.pi * (rnd / max(av.period, 1) + cids / n)
+        p = av.p_min + (av.p_max - av.p_min) * 0.5 * (1.0 + np.sin(phase))
+        return _mix01(salt, rnd, cids) < p
+
+    def _draw_cohort_lazy_sine(
+        self, rng: np.random.RandomState, rnd: int, n: int, A: int
+    ) -> np.ndarray:
+        """O(cohort) sine-availability cohort draw for large populations:
+        rejection-sample candidate cids uniformly and keep the up ones,
+        instead of materializing the n-length availability mask. One salt
+        scalar comes off the plan rng (so the trace stays a pure function
+        of the run seed and identical on every backend); up-ness is then
+        per-cid hashed. Expected cost O(A / p̄); if availability is so
+        scarce that the try budget runs out, falls back to the exact
+        materialized mask (rare, still correct)."""
+        ar = self.spec.arrivals
+        salt = int(rng.randint(1 << 31))
+        k = A
+        if ar is not None:
+            if ar.kind == "poisson":
+                lam = float(ar.rate)
+            elif ar.kind == "diurnal":
+                lam = ar.rate_min + (ar.rate - ar.rate_min) * 0.5 * (
+                    1.0 + np.sin(2.0 * np.pi * rnd / max(ar.period, 1))
+                )
+            else:
+                raise ValueError(
+                    f"unknown arrival kind {ar.kind!r}; "
+                    f"choose from {ARRIVAL_KINDS}"
+                )
+            k = int(np.clip(rng.poisson(lam), 1, n))
+        chosen: set = set()
+        budget = max(64, 60 * k)
+        while len(chosen) < k and budget > 0:
+            m = min(max(2 * (k - len(chosen)), 32), budget)
+            budget -= m
+            cand = rng.randint(0, n, size=m)
+            for c in cand[self._sine_up(salt, rnd, n, cand)]:
+                chosen.add(int(c))
+                if len(chosen) >= k:
+                    break
+        if len(chosen) < k:
+            # scarce availability: one exact pass over the same hash mask
+            ids = np.flatnonzero(self._sine_up(salt, rnd, n, np.arange(n)))
+            if len(ids) == 0:
+                ids = np.arange(n)
+            return np.sort(rng.choice(ids, min(k, len(ids)), replace=False))
+        return np.sort(np.fromiter(chosen, np.int64, len(chosen)))
+
     def draw_rates(
         self, rng: np.random.RandomState, idx: np.ndarray
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Per-client (lr_i, e_i) draws from each client's pinned device
-        profile — the stratified replacement of ``HeteroConfig.sample``."""
-        assert self._profile_of is not None, "materialize() must run first"
+        profile — the stratified replacement of ``HeteroConfig.sample``.
+        Tier lookup is the lazy per-cid hash (``tier_of``), evaluated for
+        the cohort only."""
+        tiers = self.tier_of(idx)
         lrs = np.empty(len(idx), np.float32)
         eps = np.empty(len(idx), np.int64)
-        for j, i in enumerate(idx):
-            p = self.spec.profiles[int(self._profile_of[int(i)])]
+        for j, t in enumerate(tiers):
+            p = self.spec.profiles[int(t)]
             lrs[j] = rng.uniform(p.lr_min, p.lr_max)
             eps[j] = rng.randint(p.epochs_min, p.epochs_max + 1)
         return lrs, eps

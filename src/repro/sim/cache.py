@@ -1,0 +1,163 @@
+"""Device-resident client-state cache: participants-only packed state.
+
+The million-client regime (DESIGN.md §13) has a huge registered population
+and a small active cohort per round. Materializing per-client state rows
+for the whole population — FedECADO's flow variables I_i and gains,
+FedADMM's duals, error-feedback residuals, the event backend's flight
+table — costs O(n_clients · |params|) device memory even when only
+O(cohort) rows are ever touched. This module packs all of it into
+``(capacity, ...)`` pytrees indexed by **slot**, with ``ClientStateCache``
+owning the cid→slot mapping.
+
+Contract (every consumer relies on all four properties):
+
+  * **sorted slots** — admitted cids occupy slots ``0..len(cids)-1`` in
+    increasing-cid order. Global reductions over the packed leading axis
+    (``tree_sum_clients``) then visit the same nonzero rows in the same
+    order as the materialized ``(n, ...)`` layout would, with exact
+    ``+0.0`` no-ops interleaved — which is what makes cached runs
+    bitwise-equal to materialized runs (pinned by
+    tests/test_client_cache.py).
+  * **eviction-free** — a cid admitted once keeps a slot forever; capacity
+    only grows. Federated state is tiny per client relative to the model,
+    and eviction would forget flow variables that the Σ_i I_i = 0
+    invariant still accounts for.
+  * **geometric growth** — capacity doubles (power-of-two, floor
+    ``MIN_CAPACITY``), so jit recompilations triggered by a new packed
+    shape are O(log participants) over a whole run, not O(rounds).
+  * **segment-boundary admission** — ``FedSim`` admits a whole segment's
+    cohorts at once (two-phase: draw plans with real cids, then admit +
+    repack, then translate plan ids to slots), so packed shapes are
+    stable inside every jit-resident segment.
+
+A repack (``RepackPlan``) is a gather: new slot ``j`` reads old slot
+``src[j]`` (or is freshly zeroed where ``src[j] < 0``). ``repack_rows``
+applies it to any packed pytree; fresh rows are exact zeros (the additive
+identity every all-clients reduction relies on) unless a consumer fills
+them itself (gains, flight-table sentinels).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+MIN_CAPACITY = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class RepackPlan:
+    """One capacity change/permutation of the packed state."""
+    src: np.ndarray          # (capacity,) int64: old slot feeding each new
+                             # slot, -1 = fresh (zero-filled) row
+    fresh: np.ndarray        # (k,) int64 new-slot positions of newly
+                             # admitted cids, in increasing-cid order
+    fresh_cids: np.ndarray   # (k,) int64 the cids admitted by this repack
+    capacity: int            # new packed leading-axis length
+    n_admitted: int          # admitted cids (<= capacity; tail is padding)
+
+
+def _grow(count: int, floor: int) -> int:
+    cap = MIN_CAPACITY
+    while cap < max(int(count), int(floor)):
+        cap *= 2
+    return cap
+
+
+class ClientStateCache:
+    """cid→slot mapping for the packed per-client state."""
+
+    def __init__(self, n_clients: int, capacity: int = 0):
+        self.n = int(n_clients)
+        self.cids = np.empty((0,), np.int64)    # sorted admitted cids
+        self._floor = int(capacity) or MIN_CAPACITY
+        # capacity is live from construction: per-client state is allocated
+        # (at this size) before the first admission ever happens
+        self.capacity = _grow(0, self._floor)
+
+    @property
+    def n_admitted(self) -> int:
+        return len(self.cids)
+
+    def slots_of(self, cids: np.ndarray) -> np.ndarray:
+        """Slots of already-admitted cids (callers admit first)."""
+        slots = np.searchsorted(self.cids, cids)
+        assert slots.size == 0 or (
+            slots.max(initial=0) < len(self.cids)
+            and (self.cids[slots] == np.asarray(cids)).all()
+        ), "slots_of called with unadmitted cids — admit the segment first"
+        return slots.astype(np.int64)
+
+    def admit(self, cand_cids: np.ndarray) -> Optional[RepackPlan]:
+        """Admit every cid in ``cand_cids``; None when all are already
+        cached (no repack needed), else the ``RepackPlan`` the caller must
+        apply to every packed consumer BEFORE resolving slots."""
+        cand = np.unique(np.asarray(cand_cids, np.int64))
+        if cand.size and (cand.min() < 0 or cand.max() >= self.n):
+            raise ValueError(
+                f"cids out of range [0, {self.n}): "
+                f"[{cand.min()}, {cand.max()}]"
+            )
+        fresh_cids = np.setdiff1d(cand, self.cids, assume_unique=True)
+        if fresh_cids.size == 0:
+            return None
+        merged = np.union1d(self.cids, fresh_cids)
+        capacity = _grow(len(merged), max(self._floor, self.capacity))
+        src = np.full((capacity,), -1, np.int64)
+        if len(self.cids):
+            src[np.searchsorted(merged, self.cids)] = np.arange(
+                len(self.cids), dtype=np.int64
+            )
+        fresh = np.searchsorted(merged, fresh_cids).astype(np.int64)
+        plan = RepackPlan(
+            src=src, fresh=fresh, fresh_cids=fresh_cids,
+            capacity=int(capacity), n_admitted=len(merged),
+        )
+        self.cids = merged
+        self.capacity = int(capacity)
+        return plan
+
+
+def repack_rows(tree: Pytree, plan: RepackPlan) -> Pytree:
+    """Apply a ``RepackPlan`` to a packed pytree (leaves ``(old_cap, ...)``):
+    gather surviving rows into their new slots, zero-fill fresh/padding
+    slots. A pure gather + select, so it composes with jit and preserves
+    row values bitwise."""
+    if tree is None:
+        return None
+    src = jnp.asarray(plan.src)
+    keep = src >= 0
+    safe = jnp.where(keep, src, 0)
+
+    def leaf(l):
+        rows = l[safe]
+        m = keep.reshape((-1,) + (1,) * (rows.ndim - 1))
+        return jnp.where(m, rows, jnp.zeros((), l.dtype))
+
+    return jax.tree.map(leaf, tree)
+
+
+def state_nbytes(sim) -> int:
+    """Resident per-client state bytes of a running sim: the packed (or
+    materialized) flow rows + gains, algorithm-owned client rows, comm
+    error-feedback residuals, and the event backend's flight table. The
+    BENCH_engine.json ``peak_state_bytes`` column (schema v6) — capacity
+    is monotone (eviction-free), so end-of-run == peak."""
+    trees = []
+    if sim.state is not None:
+        trees += [sim.state.I, sim.state.g_inv]
+    trees.append(getattr(sim.alg, "client_state", None))
+    trees.append(getattr(sim.alg, "comm_state", None))
+    trees.append(getattr(sim.backend, "_table", None))
+    total = 0
+    for t in trees:
+        if t is None:
+            continue
+        for l in jax.tree.leaves(t):
+            total += int(np.asarray(l.size)) * jnp.dtype(l.dtype).itemsize
+    return total

@@ -66,11 +66,17 @@ class CohortPlan:
     is smaller than the batch size).
     """
     rnd: int
-    idx: np.ndarray                 # (A,) participating client ids
+    idx: np.ndarray                 # (A,) participating client ids — or
+                                    # cache SLOTS once FedSim has translated
+                                    # the plan (client_cache mode); backends
+                                    # never distinguish the two
     lrs: np.ndarray                 # (A,) float32 local learning rates Δt_i
     epochs: np.ndarray              # (A,) int local epoch counts e_i
     n_steps: np.ndarray             # (A,) int e_i · steps_per_epoch
     batch_idx: List[np.ndarray]     # per client (n_steps_j, bs_j) indices
+    cids: Optional[np.ndarray] = None   # (A,) REAL client ids when ``idx``
+                                        # holds cache slots (participation
+                                        # accounting stays population-indexed)
 
     @property
     def cohort_size(self) -> int:
@@ -160,6 +166,7 @@ def stack_plans(
     arrival-process cohorts of varying size still run as one jit-resident
     segment. Mixed per-client batch sizes always refuse: padding cannot fix
     minibatch-mean arithmetic."""
+    plans = list(plans)   # accepts any iterable (streaming plan draw)
     bss = {p.batch_idx[j].shape[1] for p in plans for j in range(p.cohort_size)}
     if len(bss) != 1:
         return None
@@ -239,6 +246,13 @@ class ExecutionBackend:
         re-draws) need device-exact counts."""
         return None
 
+    def on_cache_repack(self, sim, repack) -> None:
+        """Client-state-cache hook (sim/cache.py, DESIGN.md §13): the packed
+        per-client capacity changed/permuted; backends holding capacity-
+        indexed device state (the event backend's flight table) must apply
+        the ``RepackPlan``. Default: nothing to move."""
+        return None
+
 
 CLIENT_AXIS = "clients"   # the 1-D launch mesh axis (launch/mesh.py)
 
@@ -255,9 +269,11 @@ class MeshedBackendMixin:
     implementation so the two backends cannot drift."""
 
     def _init_mesh_infra(self, pad_multiple: Optional[int],
-                         max_devices: Optional[int]) -> None:
+                         max_devices: Optional[int],
+                         groups: Optional[int] = None) -> None:
         self.pad_multiple = pad_multiple
         self.max_devices = max_devices
+        self.groups = groups
         self._mesh = None
         self._fns: Dict[Tuple, Any] = {}
         self._data_cache: Tuple[Optional[Dict], Optional[Dict]] = (None, None)
@@ -267,12 +283,14 @@ class MeshedBackendMixin:
         if self._mesh is None:
             from repro.launch.mesh import make_client_mesh
 
-            self._mesh = make_client_mesh(self.max_devices)
+            self._mesh = make_client_mesh(self.max_devices, groups=self.groups)
         return self._mesh
 
     @property
     def n_devices(self) -> int:
-        return self.mesh.shape[CLIENT_AXIS]
+        # total devices under the client-sharding axes (1 for the 1-D mesh,
+        # groups × per-group for the hierarchical 2-D mesh, DESIGN.md §13)
+        return int(self.mesh.devices.size)
 
     def _pad_unit(self) -> int:
         n_dev = self.n_devices
@@ -373,7 +391,10 @@ def get_backend(cfg) -> ExecutionBackend:
             stale_gamma=cfg.event_stale_gamma if cfg.event_buffered else 0.0,
         )
     if cfg.backend == "sharded":
-        return ShardedBackend(pad_multiple=cfg.sharded_pad_multiple)
+        return ShardedBackend(
+            pad_multiple=cfg.sharded_pad_multiple,
+            groups=getattr(cfg, "sharded_groups", None),
+        )
     if cfg.backend == "auto":
         raise ValueError(
             "backend='auto' is resolved at FedSim construction "

@@ -59,6 +59,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.flow import broadcast_clients
 from repro.core.multirate import (
+    DEAD_CID,
     FlightTable,
     flight_insert_checked,
     init_flight_table,
@@ -424,15 +425,46 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
         if self._owner is not sim:
             # a backend instance may be reused across sims (the bench/sweep
             # warm-up pattern keeps jit caches); the flight table is per-sim
-            # state and must reset with its owner
+            # state and must reset with its owner. Capacity follows the
+            # packed state size (== n materialized, cache capacity cached) —
+            # plan.idx rows index the table directly in both modes.
             self._owner = sim
             self._table = init_flight_table(
-                sim.state.x_c, self._a_pad(sim.n)
+                sim.state.x_c, self._a_pad(sim.state_rows)
             )
             self.round_stats = []
             self.total_dropped = 0
             self.max_stale = 0
-            self._part = np.zeros((sim.n,), np.int64)
+            self._part = np.zeros((sim.state_rows,), np.int64)
+
+    def on_cache_repack(self, sim, repack) -> None:
+        """Client-state-cache repack (DESIGN.md §13): the flight table is
+        slot-indexed in cached mode, so live flights must move with their
+        rows. The repack is a pure gather (exact — anchors/endpoints keep
+        their bits), the direct-index ``cid`` column is rewritten to the
+        new slot ids, and the host-side dispatch counters permute along."""
+        if self._owner is not sim or self._table is None:
+            return
+        from repro.sim.cache import RepackPlan, repack_rows
+
+        C_new = self._a_pad(repack.capacity)
+        src = np.full((C_new,), -1, np.int64)
+        src[: repack.capacity] = repack.src
+        plan2 = RepackPlan(
+            src=src, fresh=repack.fresh, fresh_cids=repack.fresh_cids,
+            capacity=int(C_new), n_admitted=repack.n_admitted,
+        )
+        moved = repack_rows(self._table, plan2)
+        cid = jnp.where(
+            moved.alive > 0,
+            jnp.arange(C_new, dtype=jnp.int32),
+            jnp.int32(DEAD_CID),
+        )
+        self._table = moved._replace(cid=cid)
+        part = np.zeros((repack.capacity,), np.int64)
+        keep = repack.src >= 0
+        part[np.flatnonzero(keep)] = self._part[repack.src[keep]]
+        self._part = part
 
     def _ccfg_key(self, sim):
         return (
@@ -454,7 +486,7 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
         # round to round; pad them into one dense segment so the whole
         # buffered loop stays jit-resident instead of falling back per-round
         A_pad = self._a_pad(max(p.cohort_size for p in plans))
-        sp = stack_plans(plans, sim.n, A_pad, S_pad,
+        sp = stack_plans(plans, sim.state_rows, A_pad, S_pad,
                          allow_uneven=self.buffered)
         if sp is None:
             # ragged / uneven cohorts: per-round fallback (grouped local
@@ -465,7 +497,8 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
     def run_round(self, sim, plan: CohortPlan) -> Dict[str, Any]:
         self._ensure(sim)
         S_pad = max(VectorizedBackend._pad_steps(sim), int(plan.n_steps.max()))
-        sp = stack_plans([plan], sim.n, self._a_pad(plan.cohort_size), S_pad)
+        sp = stack_plans([plan], sim.state_rows,
+                         self._a_pad(plan.cohort_size), S_pad)
         if sp is not None:
             return self._run_segment(sim, sp)[0]
         return self._run_ragged(sim, plan)
@@ -515,8 +548,12 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
     # ------------------------------------------------------------------
     def _run_ragged(self, sim, plan: CohortPlan) -> Dict[str, Any]:
         cfg = sim.cfg
-        alive = np.asarray(jax.device_get(self._table.alive))
-        busy = alive[plan.idx] > 0
+        # cohort-sized busy lookup: gather the A alive flags on device and
+        # pull only those — the old full-table device_get was an O(n) host
+        # transfer per ragged round at million-client n
+        busy = np.asarray(jax.device_get(
+            jnp.take(self._table.alive, jnp.asarray(plan.idx, jnp.int32))
+        )) > 0
         keep = [j for j in range(plan.cohort_size) if not busy[j]]
         dropped = plan.cohort_size - len(keep)
 
@@ -540,7 +577,8 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
 
         A = len(idx)
         A_pad = self._a_pad(A)
-        idx_p, _, mask_p = pad_cohort_ids(np.asarray(idx), A_pad, sim.n)
+        idx_p, _, mask_p = pad_cohort_ids(np.asarray(idx), A_pad,
+                                          sim.state_rows)
         if not keep:
             mask_p = np.zeros_like(mask_p)
         pad = A_pad - A
@@ -598,6 +636,12 @@ class EventBackend(MeshedBackendMixin, ExecutionBackend):
         if self._part is None:
             return None
         part, self._part = self._part, np.zeros_like(self._part)
+        cache = getattr(self._owner, "cache", None)
+        if cache is not None:
+            # slot-indexed counts → the (n,) per-client vector callers expect
+            full = np.zeros((cache.n,), np.int64)
+            full[cache.cids] = part[: cache.n_admitted]
+            return full
         return part
 
     def _emit_stats(self, rnd0: int, out: np.ndarray) -> List[Dict[str, Any]]:

@@ -80,26 +80,44 @@ from repro.sim.vectorized import VectorizedBackend, cohort_vmap_fn
 Pytree = Any
 
 AXIS = CLIENT_AXIS   # the 1-D launch mesh axis (launch/mesh.py)
+GROUP_AXIS = "groups"   # outer axis of the hierarchical 2-D mesh (§13)
 
 
 def _bcast(v: jax.Array, like: jax.Array) -> jax.Array:
     return v.reshape((-1,) + (1,) * (like.ndim - 1))
 
 
-def _scatter_rows(full, rows_loc, sidx_loc, mask_loc):
+def _psum_tree(x, axes):
+    """Cross-device sum over the client-sharding axes. On the flat 1-D mesh
+    this is ONE psum over "clients"; on the hierarchical 2-D mesh it stages
+    the reduction — intra-group psum first (cheap, local neighborhood),
+    then the inter-group reduce over the partial sums (DESIGN.md §13). The
+    staged association order differs from the flat all-reduce, which is why
+    hierarchical runs match at rtol rather than bitwise."""
+    if isinstance(axes, tuple):
+        for ax in reversed(axes):   # innermost (intra-group) first
+            x = jax.tree.map(lambda l, ax=ax: jax.lax.psum(l, ax), x)
+        return x
+    return jax.tree.map(lambda l: jax.lax.psum(l, axes), x)
+
+
+def _scatter_rows(full, rows_loc, sidx_loc, mask_loc, axes=AXIS):
     """Exact-set write-back of device-local per-client rows into the
     replicated (n, ...) tensor: every real cohort row is owned by exactly
     one device, so psum of the one-hot scatters reassembles the full
-    update; padding rows carry sidx = n and are dropped out of bounds."""
+    update; padding rows carry an out-of-bounds sidx and are dropped. On
+    the hierarchical mesh the one-hot scatters batch per device group:
+    each group psums its members' scatters first, then the group partials
+    reduce across groups (``_psum_tree``)."""
     n = jax.tree.leaves(full)[0].shape[0]
-    hit = jax.lax.psum(
+    hit = _psum_tree(
         jnp.zeros((n,), jnp.float32).at[sidx_loc].add(mask_loc, mode="drop"),
-        AXIS,
+        axes,
     )
     rows = jax.tree.map(
-        lambda l, r: jax.lax.psum(
+        lambda l, r: _psum_tree(
             jnp.zeros_like(l).at[sidx_loc].add(r * _bcast(mask_loc, r), mode="drop"),
-            AXIS,
+            axes,
         ),
         full, rows_loc,
     )
@@ -111,7 +129,7 @@ def _scatter_rows(full, rows_loc, sidx_loc, mask_loc):
 def _flow_round_core(
     x_c, I, g_inv, dt_last, t,
     x_new_loc, idx_loc, sidx_loc, mask_loc, T_loc, ccfg,
-    comm=None, rnd=0,
+    comm=None, rnd=0, axes=AXIS,
 ):
     """One flow-consensus round on a device-local cohort shard.
 
@@ -128,10 +146,13 @@ def _flow_round_core(
 
     J_loc = jax.tree.map(lambda l: l[idx_loc], I)
     # S_frozen = Σ_all I_i − Σ_active J_a; the active sum spans all shards
+    # (staged intra-group-then-inter-group on the hierarchical mesh)
     S_all = tree_sum_clients(I)
-    S_act = jax.tree.map(
-        lambda j: jax.lax.psum(jnp.sum(j * _bcast(mask_loc, j), axis=0), AXIS),
-        J_loc,
+    S_act = _psum_tree(
+        jax.tree.map(
+            lambda j: jnp.sum(j * _bcast(mask_loc, j), axis=0), J_loc
+        ),
+        axes,
     )
     S_frozen = jax.tree.map(jnp.subtract, S_all, S_act)
 
@@ -149,7 +170,7 @@ def _flow_round_core(
 
     x_c_f, I_f, tau_f, dt_f, stats = consensus_integrate(
         x_c, J_loc, J_loc, x_prev_loc, x_new_loc, T_loc, g_loc, S_frozen,
-        dt_last, ccfg, axis_name=AXIS, mask=mask_loc,
+        dt_last, ccfg, axis_name=axes, mask=mask_loc,
     )
     n_sub, n_back, _final_dt, _max_eps, dt_mn, dt_mx, dt_sm = stats
     tel = jnp.stack([
@@ -157,13 +178,13 @@ def _flow_round_core(
         dt_mn, dt_mx, dt_sm, tau_f,
     ])
 
-    I_new = _scatter_rows(I, I_f, sidx_loc, mask_loc)
+    I_new = _scatter_rows(I, I_f, sidx_loc, mask_loc, axes=axes)
     return x_c_f, I_new, dt_f, t + tau_f, tel
 
 
 def build_flow_segment(mesh, loss_fn: Callable, ccfg,
                        kind: str = "fedecado", mu: float = 0.0,
-                       comm=None) -> Callable:
+                       comm=None, axes=AXIS) -> Callable:
     """Jitted R-round flow-dynamics segment, shard_map-ed over ``mesh``.
 
     ``fn(x_c, I, g_inv, dt_last, t, data, idx, sidx, mask, lrs, ns, Ts,
@@ -187,7 +208,7 @@ def build_flow_segment(mesh, loss_fn: Callable, ccfg,
             x_c, I, dt_last, t, tel_r = _flow_round_core(
                 x_c, I, g_inv, dt_last, t,
                 x_new_loc, idx[r], sidx[r], mask[r], Ts[r], ccfg,
-                comm=comm, rnd=rnd0 + r,
+                comm=comm, rnd=rnd0 + r, axes=axes,
             )
             return (x_c, I, dt_last, t, losses.at[r].set(loss_loc),
                     tel.at[r].set(tel_r))
@@ -199,7 +220,7 @@ def build_flow_segment(mesh, loss_fn: Callable, ccfg,
         )
         return x_c, I, dt_last, t, losses, tel
 
-    c2 = P(None, AXIS)
+    c2 = P(None, axes)
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(), P(), P(), P(), P(),
@@ -211,7 +232,7 @@ def build_flow_segment(mesh, loss_fn: Callable, ccfg,
 
 
 def build_avg_segment(mesh, alg, loss_fn: Callable, use_kernel: bool,
-                      comm=None) -> Callable:
+                      comm=None, axes=AXIS) -> Callable:
     """Jitted R-round weighted-delta segment for the averaging family.
 
     ``fn(params, rows, ef, data, idx, sidx, mask, sel, lrs, ns, ps, w,
@@ -266,16 +287,18 @@ def build_avg_segment(mesh, alg, loss_fn: Callable, use_kernel: bool,
                     params, x_new_loc, ef_loc, rnd0 + r
                 )
                 if takes_ef:
-                    ef = _scatter_rows(ef, ef_new_loc, sidx[r], mask[r])
+                    ef = _scatter_rows(ef, ef_new_loc, sidx[r], mask[r],
+                                       axes=axes)
             y_loc, new_rows_loc = alg.agg_transform(params, x_new_loc, rows_loc)
             delta = batch_agg_psum(
-                params, y_loc, w[r], AXIS, use_kernel=use_kernel
+                params, y_loc, w[r], axes, use_kernel=use_kernel
             )
             params = jax.tree.map(
                 lambda xc, d: xc + scale[r] * d, params, delta
             )
             if takes_rows:
-                rows = _scatter_rows(rows, new_rows_loc, sidx[r], mask[r])
+                rows = _scatter_rows(rows, new_rows_loc, sidx[r], mask[r],
+                                     axes=axes)
             return (params, rows, ef, losses.at[r].set(loss_loc))
 
         losses0 = jnp.zeros((R, A_loc), jnp.float32)
@@ -283,7 +306,7 @@ def build_avg_segment(mesh, alg, loss_fn: Callable, use_kernel: bool,
             0, R, round_step, (params, rows, ef, losses0)
         )
 
-    c2 = P(None, AXIS)
+    c2 = P(None, axes)
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(), P(), P(),
@@ -294,7 +317,7 @@ def build_avg_segment(mesh, alg, loss_fn: Callable, use_kernel: bool,
     return jax.jit(fn)
 
 
-def build_flow_apply(mesh, ccfg) -> Callable:
+def build_flow_apply(mesh, ccfg, axes=AXIS) -> Callable:
     """Consensus-only sharded round (ragged fallback): local integration
     already happened on the gathered cohort; this applies the psum BE solve.
     ``fn(x_c, I, g_inv, dt_last, t, x_new_a, idx, sidx, mask, Ts) ->
@@ -303,10 +326,11 @@ def build_flow_apply(mesh, ccfg) -> Callable:
 
     def body(x_c, I, g_inv, dt_last, t, x_new_loc, idx, sidx, mask, Ts):
         return _flow_round_core(
-            x_c, I, g_inv, dt_last, t, x_new_loc, idx, sidx, mask, Ts, ccfg
+            x_c, I, g_inv, dt_last, t, x_new_loc, idx, sidx, mask, Ts, ccfg,
+            axes=axes,
         )
 
-    c1 = P(AXIS)
+    c1 = P(axes)
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(), P(), P(), P(), c1, c1, c1, c1, c1),
@@ -337,8 +361,13 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
     max_segment_rounds = 32
 
     def __init__(self, pad_multiple: Optional[int] = None,
-                 max_devices: Optional[int] = None):
-        self._init_mesh_infra(pad_multiple, max_devices)
+                 max_devices: Optional[int] = None,
+                 groups: Optional[int] = None):
+        self._init_mesh_infra(pad_multiple, max_devices, groups=groups)
+        # hierarchical tree aggregation (DESIGN.md §13): on the 2-D mesh
+        # the cohort shards over BOTH axes and every cross-device reduction
+        # stages intra-group psum → inter-group reduce
+        self._axes = (GROUP_AXIS, AXIS) if groups and groups > 1 else AXIS
         self._vec = VectorizedBackend()
         self.last_segment_stats: Dict[str, Any] = {}
 
@@ -374,7 +403,7 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
             int(max(int(p.n_steps.max()) for p in plans)),
         )
         A_pad = self._a_pad(plans[0].cohort_size)
-        sp = stack_plans(plans, sim.n, A_pad, S_pad)
+        sp = stack_plans(plans, sim.state_rows, A_pad, S_pad)
         if sp is None:
             # ragged cohort (|partition| < batch_size somewhere): per-round
             # fallback — grouped local integration + sharded reduction
@@ -387,7 +416,9 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
             S_pad = max(
                 VectorizedBackend._pad_steps(sim), int(plan.n_steps.max())
             )
-            sp = stack_plans([plan], sim.n, self._a_pad(plan.cohort_size), S_pad)
+            sp = stack_plans(
+                [plan], sim.state_rows, self._a_pad(plan.cohort_size), S_pad
+            )
             if sp is not None:
                 return self._run_segment(sim, sp)[0]
         result = self._vec.run_cohort(sim, plan)
@@ -410,11 +441,12 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
                 # bench warm-up pattern); the comm cache key separates
                 # compressor settings (different static closures)
                 ("flow_seg", id(sim.loss_fn), alg.client_kind,
-                 float(alg.client_mu()), cfg.consensus, comm.cache_key()),
+                 float(alg.client_mu()), cfg.consensus, comm.cache_key(),
+                 self._axes),
                 lambda: build_flow_segment(
                     self.mesh, sim.loss_fn, cfg.consensus,
                     kind=alg.client_kind, mu=float(alg.client_mu()),
-                    comm=comm,
+                    comm=comm, axes=self._axes,
                 ),
             )
             st = sim.state
@@ -437,10 +469,10 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
             fn = self._fn(
                 ("avg_seg", id(sim.loss_fn), alg.name,
                  float(alg.client_mu()), bool(cfg.agg_kernels),
-                 comm.cache_key()),
+                 comm.cache_key(), self._axes),
                 lambda: build_avg_segment(
                     self.mesh, alg, sim.loss_fn, bool(cfg.agg_kernels),
-                    comm=comm,
+                    comm=comm, axes=self._axes,
                 ),
             )
             sim.params, rows, ef, losses = fn(
@@ -524,14 +556,15 @@ class ShardedBackend(MeshedBackendMixin, ExecutionBackend):
             ),
             result.x_new_a, x_ref,
         )
-        idx, sidx, mask = pad_cohort_ids(plan.idx, A_pad, sim.n)
+        idx, sidx, mask = pad_cohort_ids(plan.idx, A_pad, sim.state_rows)
 
         Ts = np.concatenate(
             [np.asarray(result.Ts, np.float32), np.zeros(pad, np.float32)]
         )
         fn = self._fn(
-            ("flow_apply", cfg.consensus),
-            lambda: build_flow_apply(self.mesh, cfg.consensus),
+            ("flow_apply", cfg.consensus, self._axes),
+            lambda: build_flow_apply(self.mesh, cfg.consensus,
+                                     axes=self._axes),
         )
         st = sim.state
         x_c, I, dt_last, t, tel = fn(

@@ -32,6 +32,7 @@ import json
 import os
 from typing import Any, Callable, Dict, Optional
 
+import jax
 import numpy as np
 
 from repro.tune import costmodel
@@ -73,6 +74,10 @@ class TuneDecision:
     cohort: int
     algorithm: str
     bench_reference: Optional[Dict[str, Any]] = None
+    # peak-memory honesty (DESIGN.md §13): per-backend resident-bytes
+    # estimates, the machine budget they were judged against, and which
+    # candidates were penalized as OOM-bound — run-log header material
+    memory: Optional[Dict[str, Any]] = None
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -150,6 +155,97 @@ def _bench_reference(
             and measured[chosen] > 0 else None
         ),
     }
+
+
+def _phys_mem_bytes() -> Optional[int]:
+    """Physical RAM of this host, or None when the platform hides it."""
+    try:
+        pages = os.sysconf("SC_PHYS_PAGES")
+        page = os.sysconf("SC_PAGE_SIZE")
+        if pages > 0 and page > 0:
+            return int(pages) * int(page)
+    except (ValueError, OSError, AttributeError):
+        pass
+    return None
+
+
+def _pow2_capacity(count: int) -> int:
+    from repro.sim.cache import MIN_CAPACITY
+
+    cap = MIN_CAPACITY
+    while cap < count:
+        cap *= 2
+    return cap
+
+
+def estimate_memory(
+    cfg, alg, params: Pytree, data: Dict[str, np.ndarray],
+    n: int, A: int, flow: bool, candidates: list,
+) -> Dict[str, int]:
+    """Per-backend peak resident-bytes estimate for this concrete run —
+    the memory-honesty half of the cost model (DESIGN.md §13). Terms:
+
+      * the dataset, uploaded once, plus the fp32 params;
+      * per-client state rows: FedECADO's I + gains (or the averaging
+        family's client/comm rows) over ``state_rows`` — n materialized,
+        or the projected eviction-free cache capacity under
+        ``client_cache`` (expected distinct participants over the run,
+        pow2-rounded with 1.5x safety — capacity is monotone, so the
+        projection IS the peak);
+      * cohort working set: endpoint stacks + vmap grad intermediates,
+        ~4 param-rows per active client;
+      * jit-resident segments (sharded/event): the densified
+        ``StackedPlan`` minibatch tensor (R, A, S, bs);
+      * the event backend's flight table: two anchor stacks over capacity.
+    """
+    param_bytes = sum(
+        int(np.asarray(l.size)) * 4 for l in jax.tree.leaves(params)
+    )
+    data_bytes = sum(
+        int(np.asarray(v).nbytes) for v in data.values()
+        if isinstance(v, np.ndarray) or hasattr(v, "nbytes")
+    )
+    if cfg.client_cache and not alg.full_participation_only:
+        # expected distinct participants after R rounds of A-of-n draws
+        R = max(1, int(cfg.rounds))
+        expect = n * (1.0 - (1.0 - min(1.0, A / max(n, 1))) ** R)
+        floor = int(cfg.cache_capacity) or max(
+            2 * A, int(cfg.event_buffer_size or 0)
+        )
+        state_rows = _pow2_capacity(
+            min(n, max(floor, int(1.5 * expect) + 1))
+        )
+    else:
+        state_rows = n
+    # flow: I rows + scalar gains; averaging: client/comm rows when stateful
+    rows = 1 if flow else int(
+        getattr(alg, "has_client_state", False)
+    ) + int(not getattr(cfg, "comm", None) is None)
+    state_bytes = state_rows * param_bytes * max(rows, 0) + state_rows * 4
+    epochs_max = (
+        cfg.hetero.epochs_max if cfg.hetero is not None else cfg.epochs_fixed
+    )
+    s_pad = max(1, int(epochs_max) * int(cfg.steps_per_epoch))
+    cohort_bytes = 4 * A * param_bytes          # endpoints + grad temps
+    plan_row_bytes = A * s_pad * int(cfg.batch_size) * 8
+
+    est: Dict[str, int] = {}
+    for b in candidates:
+        total = data_bytes + param_bytes + state_bytes
+        if b == "sequential":
+            total += 4 * param_bytes + plan_row_bytes
+        elif b == "vectorized":
+            total += cohort_bytes + plan_row_bytes
+        elif b == "sharded":
+            total += cohort_bytes + plan_row_bytes * _segment_rounds("sharded")
+        elif b == "event":
+            total += (
+                cohort_bytes
+                + plan_row_bytes * _segment_rounds("event")
+                + 2 * state_rows * param_bytes   # flight-table anchors
+            )
+        est[b] = int(total)
+    return est
 
 
 def score_backends(
@@ -236,6 +332,27 @@ def resolve_auto(
 
     candidates = candidate_backends(alg)
     scores = score_backends(candidates, costs, cal, A, server_path)
+
+    # memory honesty: a backend predicted to blow past physical RAM cannot
+    # be the right answer however fast its hot path scores. The penalty is
+    # folded INTO the score (scaled by the overage) so ``chosen`` remains
+    # exactly argmin(scores) — and when every candidate is over budget the
+    # least-oversubscribed one still wins instead of an arbitrary refusal.
+    mem_est = estimate_memory(cfg, alg, params, data, n, A, flow, candidates)
+    phys = _phys_mem_bytes()
+    budget = int(0.8 * phys) if phys else None
+    refused = []
+    if budget:
+        for b, m in mem_est.items():
+            if m > budget:
+                refused.append(b)
+                scores[b] = scores[b] + 1e6 * (m / budget)
+    memory = {
+        "budget_bytes": budget,
+        "estimates_bytes": {b: int(m) for b, m in mem_est.items()},
+        "refused": sorted(refused),
+    }
+
     chosen = min(scores, key=scores.get)
 
     # Pallas kernels run in interpret mode off-accelerator, where they never
@@ -268,6 +385,7 @@ def resolve_auto(
         cohort=int(A),
         algorithm=alg.name,
         bench_reference=_bench_reference(alg.name, n, chosen, scores),
+        memory=memory,
     )
     new_cfg = dataclasses.replace(
         cfg, backend=chosen, agg_kernels=kernel_flags["agg_kernels"]

@@ -57,7 +57,13 @@ def _machine_scale(baseline: Dict, candidate: Dict) -> Dict[str, Any]:
 
 
 def _row_key(r: Dict) -> tuple:
-    return (r.get("algorithm"), r.get("backend"), int(r.get("n_clients", -1)))
+    # participation entered the schema at v6 (sparse-cohort rows); older
+    # baselines default to 1.0 so fully-dense rows keep matching across
+    # schema versions.
+    return (
+        r.get("algorithm"), r.get("backend"), int(r.get("n_clients", -1)),
+        float(r.get("participation", 1.0)),
+    )
 
 
 def compare_engine(
@@ -86,6 +92,31 @@ def compare_engine(
             "floor": floor,
             "ok": cand_rps >= floor,
         }
+        problems: List[str] = []
+        if not row["ok"]:
+            problems.append(
+                f"rps {cand_rps:.3f} < floor {floor:.3f} "
+                f"(baseline {base_rps:.3f})"
+            )
+        # Memory gate: peak_state_bytes is deterministic accounting (no
+        # machine normalization). At a fixed (alg, backend, n, q) cell any
+        # growth past 2x the committed baseline means per-client state
+        # stopped scaling with the cohort — the exact regression the
+        # client-state cache exists to prevent. Only enforced when BOTH
+        # rows carry the column (schema >= 6).
+        b_mem = base.get("peak_state_bytes")
+        c_mem = cand.get("peak_state_bytes")
+        if b_mem is not None and c_mem is not None and float(b_mem) > 0:
+            row["baseline_state_bytes"] = float(b_mem)
+            row["candidate_state_bytes"] = float(c_mem)
+            if float(c_mem) > 2.0 * float(b_mem):
+                row["ok"] = False
+                problems.append(
+                    f"peak_state_bytes grew >2x: "
+                    f"{float(b_mem):.0f} -> {float(c_mem):.0f}"
+                )
+        if problems:
+            row["problems"] = problems
         checked.append(row)
         if not row["ok"]:
             violations.append(row)

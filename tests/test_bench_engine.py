@@ -15,7 +15,13 @@ shared-telemetry columns substeps_per_round / waves_per_round / stale /
 dropped (repro/obs, DESIGN.md §9); v5 = adds the event_buffered backend
 axis (fully-asynchronous K-trigger buffered server, DESIGN.md §10), a
 max_stale column on every row, and the optional heavy_traffic section
-(n=10^4 Poisson-arrival cell with the bounded max-staleness witness)."""
+(n=10^4 Poisson-arrival cell with the bounded max-staleness witness);
+v6 = rows gain participation / peak_state_bytes / state_rows (resident
+per-client state accounting, repro.sim.cache.state_nbytes — gated at 2x
+growth by repro.tune.gate), plus the sparse client-cache cells
+(client_cache=True rows whose state_rows track the cohort, not the
+population, each with a materialized_state_bytes projection witness;
+DESIGN.md §13)."""
 import importlib.util
 import json
 import os
@@ -59,6 +65,9 @@ def test_engine_bench_runs_and_json_schema_is_stable(tmp_path):
         json_path=str(json_path),
         # tiny heavy-traffic cell so the n=10^4 code path stays covered
         heavy_traffic={"n": 32, "rounds": 3, "buffer_size": 4},
+        # tiny sparse client-cache cell so the million-client code path
+        # stays covered (n small enough to run cache growth in seconds)
+        sparse=((256, 0.05),),
     )
 
     assert json_path.exists()
@@ -67,7 +76,7 @@ def test_engine_bench_runs_and_json_schema_is_stable(tmp_path):
     assert persisted == report
 
     # -- schema: top level ------------------------------------------------
-    assert persisted["schema_version"] == bench.ENGINE_BENCH_SCHEMA_VERSION == 5
+    assert persisted["schema_version"] == bench.ENGINE_BENCH_SCHEMA_VERSION == 6
     assert persisted["benchmark"] == "engine"
     assert isinstance(persisted["n_devices"], int) and persisted["n_devices"] >= 1
     assert persisted["rounds"] == 2
@@ -94,25 +103,36 @@ def test_engine_bench_runs_and_json_schema_is_stable(tmp_path):
     # -- schema: results rows — full product minus flow-only event gaps ---
     rows = persisted["results"]
     assert isinstance(rows, list)
+    dense = [r for r in rows if not r.get("client_cache")]
+    sparse = [r for r in rows if r.get("client_cache")]
     seen = set()
-    for row in rows:
+    for row in dense:
         assert set(row) == {
-            "algorithm", "backend", "n_clients", "rounds_per_sec",
-            "compile_seconds", "substeps_per_round", "waves_per_round",
-            "stale", "dropped", "max_stale",
+            "algorithm", "backend", "n_clients", "participation",
+            "rounds_per_sec", "compile_seconds", "substeps_per_round",
+            "waves_per_round", "stale", "dropped", "max_stale",
+            "peak_state_bytes", "state_rows",
         }
         assert row["algorithm"] in persisted["algorithms"]
         assert row["backend"] in persisted["backends"]
         assert row["n_clients"] in persisted["sizes"]
+        assert row["participation"] == 1.0
         assert isinstance(row["rounds_per_sec"], float)
         assert row["rounds_per_sec"] > 0
         assert isinstance(row["compile_seconds"], float)
         assert row["compile_seconds"] >= 0
         assert isinstance(row["stale"], int) and isinstance(row["dropped"], int)
         assert isinstance(row["max_stale"], int) and row["max_stale"] >= 0
+        # dense cells run cache-off: the per-client arrays are materialized
+        # (stateless averaging algorithms legitimately report 0 bytes)
+        assert isinstance(row["peak_state_bytes"], int)
+        assert row["peak_state_bytes"] >= 0
+        assert row["state_rows"] == row["n_clients"]
         if row["algorithm"] == "fedecado":
-            # flow algorithms do adaptive-BE solver work every round
+            # flow algorithms do adaptive-BE solver work every round and
+            # carry per-client flow rows
             assert row["substeps_per_round"] > 0
+            assert row["peak_state_bytes"] > 0
         if row["backend"] in ("event", "event_buffered"):
             assert row["waves_per_round"] > 0
         if row["backend"] not in ("event", "event_buffered"):
@@ -120,6 +140,20 @@ def test_engine_bench_runs_and_json_schema_is_stable(tmp_path):
             assert row["max_stale"] == 0
         seen.add((row["algorithm"], row["backend"], row["n_clients"]))
     assert seen == _expected_rows(persisted)
+
+    # -- schema: sparse client-cache cells --------------------------------
+    assert persisted["sparse_cells"] == [
+        {"n_clients": 256, "participation": 0.05}
+    ]
+    assert len(sparse) == 1
+    srow = sparse[0]
+    assert srow["algorithm"] == "fedecado" and srow["backend"] == "sharded"
+    assert srow["n_clients"] == 256 and srow["participation"] == 0.05
+    assert srow["rounds_per_sec"] > 0
+    # participants-only state: packed rows stay below the population and
+    # the materialized projection scales them back up to n
+    assert 0 < srow["state_rows"] < srow["n_clients"]
+    assert srow["peak_state_bytes"] < srow["materialized_state_bytes"]
 
 
 def test_repo_bench_artifact_matches_schema():
@@ -141,14 +175,14 @@ def test_repo_bench_artifact_matches_schema():
         pytest.skip("no committed BENCH_engine.json")
     with open(path) as f:
         report = json.load(f)
-    assert report["schema_version"] == 5
+    assert report["schema_version"] == 6
     assert "fedecado" in report["algorithms"]
     assert "event" in report["backends"]
     assert "event_buffered" in report["backends"]
     rps = {
         (r["backend"], r["n_clients"]): r["rounds_per_sec"]
         for r in report["results"]
-        if r["algorithm"] == "fedecado"
+        if r["algorithm"] == "fedecado" and not r.get("client_cache")
     }
     n_max = max(report["sizes"])
     n_pin = 100 if 100 in report["sizes"] else n_max
@@ -167,3 +201,24 @@ def test_repo_bench_artifact_matches_schema():
     assert ht["n_clients"] == 10_000
     assert ht["rounds_per_sec"] > 0
     assert 0 <= ht["max_stale"] < ht["rounds"]
+    # sparse client-cache cells (schema v6): the million-client-engine
+    # acceptance witnesses. Both cells keep state_rows strictly under the
+    # population; the n=10^5 q=0.001 cell must sit >= 50x below its
+    # materialized projection AND clear the dense n=1000 sharded
+    # rounds/sec — at fixed cohort work the population size may no longer
+    # tax the round.
+    sparse = {
+        (r["n_clients"], r["participation"]): r
+        for r in report["results"] if r.get("client_cache")
+    }
+    assert (10_000, 0.01) in sparse and (100_000, 0.001) in sparse
+    for r in sparse.values():
+        assert r["algorithm"] == "fedecado" and r["backend"] == "sharded"
+        assert r["rounds_per_sec"] > 0
+        assert 0 < r["state_rows"] < r["n_clients"]
+        assert r["peak_state_bytes"] < r["materialized_state_bytes"]
+    big = sparse[(100_000, 0.001)]
+    assert big["peak_state_bytes"] * 50 <= big["materialized_state_bytes"]
+    assert big["state_rows"] * 50 <= big["n_clients"]
+    if ("sharded", 1000) in rps:
+        assert big["rounds_per_sec"] >= rps[("sharded", 1000)]

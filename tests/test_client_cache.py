@@ -1,0 +1,318 @@
+"""Client-state cache equivalence + unit properties (DESIGN.md §13).
+
+The million-client engine packs every per-client state row (FedECADO flow
+variables/gains, FedADMM duals, EF residuals, the event flight table) into
+``(capacity, ...)`` pytrees owned by ``sim/cache.py``. The load-bearing
+guarantee — what makes the cache safe to turn on for ANY registered
+algorithm — is **bitwise** equality with the materialized run: sorted
+slots + exact-zero padding + the strict left-fold reductions
+(``tree_sum_clients``, ``fold=True`` in consensus/multirate) mean the same
+nonzero rows are visited in the same order with ``+0.0`` no-ops
+interleaved, so not a single ULP may differ. This suite pins that across
+the full algorithm registry × backend matrix at sparse participation,
+through forced capacity growth (a mid-run repack), through the buffered
+event server (repack with live flights), and pins the streaming plan
+generator against the historical eager draw.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConsensusConfig
+from repro.data import make_classification
+from repro.fed import FedSim, FedSimConfig, HeteroConfig, iid_partition
+from repro.fed.algorithms import available_algorithms, get_algorithm
+from repro.sim.cache import (
+    MIN_CAPACITY, ClientStateCache, RepackPlan, repack_rows, state_nbytes,
+)
+
+ALGS = available_algorithms()
+FLOW_ALGS = [a for a in ALGS if get_algorithm(a).has_flow_dynamics]
+BACKENDS = ("sequential", "vectorized", "sharded", "event")
+
+_PROBLEMS = {}
+
+
+def _problem(n_clients=40):
+    """Tiny shared problem with a real population (n_clients partitions),
+    sized so sparse cohorts leave most clients untouched — the regime the
+    cache exists for."""
+    if n_clients not in _PROBLEMS:
+        data = make_classification(max(384, 8 * n_clients), dim=6,
+                                   n_classes=3, seed=11)
+        parts = iid_partition(len(data["y"]), n_clients, seed=11)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+        params0 = {
+            "w0": jax.random.normal(k1, (6, 8)) / 3.0,
+            "b0": jnp.zeros((8,)),
+            "w1": jax.random.normal(k2, (8, 3)) / np.sqrt(8),
+            "b1": jnp.zeros((3,)),
+        }
+
+        def loss_fn(p, batch):
+            h = jnp.tanh(batch["x"] @ p["w0"] + p["b0"]) @ p["w1"] + p["b1"]
+            lp = jax.nn.log_softmax(h)
+            return -jnp.mean(
+                jnp.take_along_axis(
+                    lp, batch["y"][:, None].astype(jnp.int32), -1
+                )
+            )
+
+        _PROBLEMS[n_clients] = (data, parts, params0, loss_fn)
+    return _PROBLEMS[n_clients]
+
+
+def _run(alg, backend, cached, n=40, participation=0.15, rounds=5, seed=7,
+         **extra):
+    data, parts, params0, loss_fn = _problem(n)
+    cfg = FedSimConfig(
+        algorithm=alg, n_clients=n, participation=participation,
+        rounds=rounds, batch_size=4, steps_per_epoch=1,
+        hetero=HeteroConfig(1e-3, 1e-2, 1, 2), seed=seed, backend=backend,
+        consensus=ConsensusConfig(max_substeps=6),
+        client_cache=cached, **extra,
+    )
+    sim = FedSim(loss_fn, params0, data, parts, cfg)
+    hist = sim.run()
+    return sim, hist
+
+
+def _assert_bitwise(alg, backend, ref, got):
+    sim_r, hist_r = ref
+    sim_c, hist_c = got
+    np.testing.assert_array_equal(
+        np.asarray(hist_r.loss), np.asarray(hist_c.loss),
+        err_msg=f"{alg}/{backend}: cached loss history not bitwise",
+    )
+    np.testing.assert_array_equal(
+        hist_r.participation, hist_c.participation,
+        err_msg=f"{alg}/{backend}: cached participation counts differ",
+    )
+    for (ka, a), (kb, b) in zip(
+        sorted(jax.device_get(sim_r.current_params()).items()),
+        sorted(jax.device_get(sim_c.current_params()).items()),
+    ):
+        assert ka == kb
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"{alg}/{backend}: cached params[{ka}] not bitwise"
+        )
+
+
+# ---------------------------------------------------------------------------
+# cached == materialized, bitwise, over the full registry × backend matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("alg", ALGS)
+def test_cached_matches_materialized_bitwise(alg, backend):
+    if backend == "event" and alg not in FLOW_ALGS:
+        pytest.skip("event scheduler is flow-only")
+    ref = _run(alg, backend, cached=False)
+    got = _run(alg, backend, cached=True)
+    assert got[0].cache is not None
+    # participants-only witness: the packed capacity stays at/near the
+    # cohort scale (full-participation algorithms admit everybody)
+    assert got[0].cache.capacity >= got[0].cache.n_admitted
+    _assert_bitwise(alg, backend, ref, got)
+
+
+def test_forced_growth_repack_stays_bitwise():
+    """n > MIN_CAPACITY with a cohort big enough that admissions cross the
+    capacity boundary mid-run: the repack (gather + zero-fill + gain
+    backfill for late admissions) must leave the trajectory untouched."""
+    kw = dict(n=80, participation=0.3, rounds=6)
+    ref = _run("fedecado", "vectorized", cached=False, **kw)
+    got = _run("fedecado", "vectorized", cached=True, **kw)
+    # the point of this test: capacity actually grew (a repack ran)
+    assert got[0].cache.capacity > MIN_CAPACITY
+    _assert_bitwise("fedecado", "vectorized", ref, got)
+
+
+def test_event_buffered_repack_with_live_flights_stays_bitwise():
+    """Buffered event server: flights survive across rounds, so a mid-run
+    repack moves a flight table with LIVE rows (x_prev/x_new anchors,
+    T_rem) to the new slot layout and rewrites the cid column. Still
+    bitwise."""
+    kw = dict(n=80, participation=0.3, rounds=6,
+              event_buffered=True, event_buffer_size=8)
+    ref = _run("fedecado", "event", cached=False, **kw)
+    got = _run("fedecado", "event", cached=True, **kw)
+    assert got[0].cache.capacity > MIN_CAPACITY
+    _assert_bitwise("fedecado", "event", ref, got)
+
+
+def test_peak_state_bytes_scales_with_cohort_not_population():
+    # n must sit well above MIN_CAPACITY (tiny populations pack into the
+    # 64-row floor, which is BIGGER than materializing n=40 rows)
+    kw = dict(n=200, participation=0.1, rounds=5)
+    sim_m, _ = _run("fedecado", "vectorized", cached=False, **kw)
+    sim_c, _ = _run("fedecado", "vectorized", cached=True, **kw)
+    assert 0 < state_nbytes(sim_c) < state_nbytes(sim_m)
+    assert sim_c.state_rows < sim_m.state_rows == sim_m.n
+
+
+# ---------------------------------------------------------------------------
+# streaming plan generation == the historical eager draw
+# ---------------------------------------------------------------------------
+
+
+def test_plan_stream_matches_eager_draw():
+    data, parts, params0, loss_fn = _problem(40)
+    cfg = FedSimConfig(
+        algorithm="fedecado", n_clients=40, participation=0.2, rounds=4,
+        batch_size=4, steps_per_epoch=1, hetero=HeteroConfig(1e-3, 1e-2, 1, 2),
+        seed=3, backend="vectorized",
+    )
+    A = max(1, int(round(cfg.participation * cfg.n_clients)))
+    stream_sim = FedSim(loss_fn, params0, data, parts, cfg)
+    streamed = list(stream_sim._plan_stream(0, 4, A))
+    eager_sim = FedSim(loss_fn, params0, data, parts, cfg)
+    eager = [eager_sim._draw_plan(r, A) for r in range(4)]
+    assert len(streamed) == len(eager) == 4
+    for s, e in zip(streamed, eager):
+        assert s.rnd == e.rnd
+        np.testing.assert_array_equal(s.idx, e.idx)
+        np.testing.assert_array_equal(s.lrs, e.lrs)
+        np.testing.assert_array_equal(s.epochs, e.epochs)
+        np.testing.assert_array_equal(s.n_steps, e.n_steps)
+        for sb, eb in zip(s.batch_idx, e.batch_idx):
+            np.testing.assert_array_equal(sb, eb)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical (tree-psum) aggregation on a 2-D mesh
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_groups_matches_flat_sharded():
+    """groups=2 over 4 forced host devices vs the flat 1-D mesh: the
+    two-stage psum re-associates the cross-device Σ_a, so the pin is
+    rtol 1e-6 (not bitwise — DESIGN.md §13). Runs in a subprocess because
+    the forced device count must precede jax initialization."""
+    script = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ConsensusConfig
+        from repro.data import make_classification
+        from repro.fed import FedSim, FedSimConfig, HeteroConfig, iid_partition
+
+        data = make_classification(384, dim=6, n_classes=3, seed=11)
+        parts = iid_partition(len(data["y"]), 24, seed=11)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+        params0 = {
+            "w0": jax.random.normal(k1, (6, 8)) / 3.0,
+            "b0": jnp.zeros((8,)),
+            "w1": jax.random.normal(k2, (8, 3)) / np.sqrt(8),
+            "b1": jnp.zeros((3,)),
+        }
+
+        def loss_fn(p, batch):
+            h = jnp.tanh(batch["x"] @ p["w0"] + p["b0"]) @ p["w1"] + p["b1"]
+            lp = jax.nn.log_softmax(h)
+            return -jnp.mean(jnp.take_along_axis(
+                lp, batch["y"][:, None].astype(jnp.int32), -1))
+
+        runs = {}
+        for groups in (None, 2):
+            cfg = FedSimConfig(
+                algorithm="fedecado", n_clients=24, participation=0.5,
+                rounds=3, batch_size=4, steps_per_epoch=1,
+                hetero=HeteroConfig(1e-3, 1e-2, 1, 2), seed=5,
+                backend="sharded", consensus=ConsensusConfig(max_substeps=6),
+                sharded_groups=groups,
+            )
+            sim = FedSim(loss_fn, params0, data, parts, cfg)
+            hist = sim.run()
+            runs[groups] = (np.asarray(hist.loss),
+                            jax.device_get(sim.current_params()))
+        flat_l, flat_p = runs[None]
+        tree_l, tree_p = runs[2]
+        np.testing.assert_allclose(tree_l, flat_l, rtol=1e-6, atol=1e-7)
+        for k in flat_p:
+            np.testing.assert_allclose(
+                tree_p[k], flat_p[k], rtol=1e-6, atol=1e-7)
+        print("HIERARCHICAL_OK", len(jax.devices()))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), os.pardir, "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "HIERARCHICAL_OK 4" in proc.stdout
+
+
+def test_sharded_groups_must_divide_devices():
+    with pytest.raises(ValueError, match="must divide"):
+        _run("fedecado", "sharded", cached=False, sharded_groups=3)
+
+
+# ---------------------------------------------------------------------------
+# ClientStateCache unit properties
+# ---------------------------------------------------------------------------
+
+
+def test_cache_admit_sorted_slots_and_growth():
+    c = ClientStateCache(1000)
+    assert c.capacity == MIN_CAPACITY and c.n_admitted == 0
+    plan = c.admit(np.asarray([7, 3, 900, 3]))   # dupes collapse
+    assert isinstance(plan, RepackPlan)
+    np.testing.assert_array_equal(c.cids, [3, 7, 900])
+    np.testing.assert_array_equal(c.slots_of([900, 3]), [2, 0])
+    # everything was fresh: slots in increasing-cid order, src all -1
+    np.testing.assert_array_equal(plan.fresh_cids, [3, 7, 900])
+    assert (plan.src == -1).all() and plan.capacity == MIN_CAPACITY
+
+    # re-admitting cached cids is a no-op
+    assert c.admit(np.asarray([3, 900])) is None
+
+    # crossing capacity doubles it and emits a full repack plan whose src
+    # maps every surviving cid's old slot to its new (still sorted) slot
+    plan2 = c.admit(np.arange(100, 100 + MIN_CAPACITY))
+    assert c.capacity == 2 * MIN_CAPACITY
+    assert plan2.n_admitted == 3 + MIN_CAPACITY
+    old = [3, 7, 900]
+    for old_slot, cid in enumerate(old):
+        new_slot = int(np.searchsorted(c.cids, cid))
+        assert plan2.src[new_slot] == old_slot
+
+
+def test_cache_rejects_out_of_range_cids():
+    c = ClientStateCache(10)
+    with pytest.raises(ValueError, match="out of range"):
+        c.admit(np.asarray([0, 10]))
+    with pytest.raises(ValueError, match="out of range"):
+        c.admit(np.asarray([-1]))
+
+
+def test_cache_floor_capacity_is_live_from_construction():
+    c = ClientStateCache(10_000, capacity=200)
+    assert c.capacity == 256           # pow2 >= floor, before any admit
+    c.admit(np.arange(10))
+    assert c.capacity == 256           # floor sticks
+
+
+def test_repack_rows_gathers_and_zero_fills():
+    plan = RepackPlan(
+        src=np.asarray([1, -1, 0, -1]), fresh=np.asarray([1]),
+        fresh_cids=np.asarray([42]), capacity=4, n_admitted=3,
+    )
+    tree = {"a": jnp.asarray([[1.0, 2.0], [3.0, 4.0]]),
+            "b": jnp.asarray([5, 6], jnp.int32)}
+    out = repack_rows(tree, plan)
+    np.testing.assert_array_equal(
+        out["a"], [[3.0, 4.0], [0.0, 0.0], [1.0, 2.0], [0.0, 0.0]]
+    )
+    np.testing.assert_array_equal(out["b"], [6, 0, 5, 0])
+    assert repack_rows(None, plan) is None

@@ -326,15 +326,17 @@ def test_device_profiles_draw_within_tier_ranges_and_persist_over_drift():
     rt = make_scenario("diurnal")
     data = _data()
     rt.materialize(data, 10, seed=0)
-    pin0 = rt._profile_of.copy()
+    pin0 = rt.tier_of(np.arange(10))
     rt.materialize(data, 10, seed=0)                # drift re-draw
-    np.testing.assert_array_equal(pin0, rt._profile_of)
+    np.testing.assert_array_equal(pin0, rt.tier_of(np.arange(10)))
+    # lazy pinning: any subset hashes to the same tiers as the full sweep
+    np.testing.assert_array_equal(pin0[[3, 7]], rt.tier_of([3, 7]))
 
     rng = np.random.RandomState(1)
     idx = np.arange(10)
     lrs, eps = rt.draw_rates(rng, idx)
     for j, i in enumerate(idx):
-        p = rt.spec.profiles[int(rt._profile_of[i])]
+        p = rt.spec.profiles[int(pin0[i])]
         assert p.lr_min <= lrs[j] <= p.lr_max
         assert p.epochs_min <= eps[j] <= p.epochs_max
 

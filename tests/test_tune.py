@@ -301,7 +301,9 @@ def test_gate_engine_unmatched_rows_are_skipped_not_failed():
     cand = _engine_report({"event": 100.0})
     rep = compare_engine(base, cand, threshold=0.5)
     assert rep["ok"]
-    assert ["fedecado", "sharded", 10] in rep["skipped_rows"]
+    # row keys gained the participation column in schema v6 (defaulted to
+    # 1.0 for pre-v6 rows, so dense cells keep matching across versions)
+    assert ["fedecado", "sharded", 10, 1.0] in rep["skipped_rows"]
 
 
 def _comm_report(rounds, bytes_up, acc_ratio=1.0, criterion_ok=True):
